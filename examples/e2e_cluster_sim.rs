@@ -1,0 +1,71 @@
+//! End-to-end driver: the full system on a realistic workload.
+//!
+//! This is the headline experiment (EXPERIMENTS.md §E2E): a 4-GPU MIG
+//! cluster serves a 200-job mixed trace under sustained contention; every
+//! scheduler — JASDA plus all baselines — runs on the *identical* trace,
+//! and the paper's headline metrics (utilization, JCT, fairness,
+//! starvation, deadline adherence) are reported side by side. When the
+//! AOT artifact is present, JASDA is additionally run with the
+//! PJRT-executed L1/L2 scoring pipeline to prove all three layers compose
+//! on the real decision path.
+//!
+//! Run with: `make artifacts && cargo run --release --example e2e_cluster_sim`
+
+use jasda::baselines::{by_name, ALL_SCHEDULERS};
+use jasda::config::SimConfig;
+use jasda::jasda::JasdaScheduler;
+use jasda::report::{comparison_headers, comparison_row, Table};
+use jasda::runtime::PjrtScorer;
+use jasda::sim::SimEngine;
+use jasda::workload::WorkloadGenerator;
+
+fn main() {
+    let mut cfg = SimConfig::default();
+    cfg.seed = 1;
+    cfg.cluster.num_gpus = 4;
+    cfg.cluster.layout = "heterogeneous".into();
+    cfg.workload.num_jobs = 200;
+    cfg.workload.arrival_rate_per_sec = 1.2; // ~1.5x offered load on 4 GPUs
+    cfg.workload.misreport_fraction = 0.1;
+
+    let jobs = WorkloadGenerator::new(cfg.workload.clone()).generate(cfg.seed);
+    let total_work: f64 = jobs.iter().map(|j| j.total_work()).sum();
+    println!(
+        "e2e: {} jobs, {:.0}s of full-GPU work, {} GPUs ({} slices), seed {}",
+        jobs.len(),
+        total_work / 1000.0,
+        cfg.cluster.num_gpus,
+        cfg.cluster.num_gpus * 3,
+        cfg.seed
+    );
+
+    let mut table = Table::new("End-to-end scheduler comparison", &comparison_headers());
+
+    let t0 = std::time::Instant::now();
+    for name in ALL_SCHEDULERS {
+        let sched = by_name(name, &cfg.jasda).expect("known scheduler");
+        let out = SimEngine::new(cfg.clone(), sched).run(jobs.clone());
+        println!(
+            "  ran {name:<12} makespan={:.0}s wall={:?}",
+            out.metrics.makespan as f64 / 1000.0,
+            t0.elapsed()
+        );
+        table.push_row(comparison_row(&out.metrics));
+    }
+
+    // PJRT-backed JASDA (all three layers on the decision path).
+    let artifact = jasda::runtime::artifacts_dir().join("scorer.hlo.txt");
+    if artifact.exists() {
+        let scorer = PjrtScorer::load(&artifact).expect("artifact compiles");
+        let sched = JasdaScheduler::with_scorer(cfg.jasda.clone(), Box::new(scorer));
+        let out = SimEngine::new(cfg.clone(), Box::new(sched)).run(jobs.clone());
+        let mut row = comparison_row(&out.metrics);
+        row[0] = "jasda(pjrt)".into();
+        table.push_row(row);
+        println!("  ran jasda(pjrt)  wall={:?}", t0.elapsed());
+    } else {
+        println!("  (skipping jasda(pjrt): run `make artifacts` first)");
+    }
+
+    println!("\n{}", table.to_markdown());
+}

@@ -1,0 +1,55 @@
+//! Quickstart: the smallest end-to-end JASDA run.
+//!
+//! Builds a one-GPU MIG cluster, generates a small mixed workload, runs
+//! the JASDA scheduler, and prints headline metrics plus the scheduler's
+//! internal interaction statistics.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use jasda::config::SimConfig;
+use jasda::jasda::JasdaScheduler;
+use jasda::sim::SimEngine;
+use jasda::workload::WorkloadGenerator;
+
+fn main() {
+    // 1. Configure: one A100-class GPU in the 4g+2g+1g layout, 20 jobs.
+    let mut cfg = SimConfig::default();
+    cfg.seed = 42;
+    cfg.cluster.num_gpus = 1;
+    cfg.cluster.layout = "heterogeneous".into();
+    cfg.workload.num_jobs = 20;
+
+    // 2. Generate the workload (deterministic in the seed).
+    let jobs = WorkloadGenerator::new(cfg.workload.clone()).generate(cfg.seed);
+    println!("generated {} jobs:", jobs.len());
+    for j in jobs.iter().take(5) {
+        println!(
+            "  job {:>2} [{}] arrival={} work={:.0} peak_mem={:.1} GiB atoms≈{:.0}",
+            j.id,
+            j.class,
+            j.arrival,
+            j.total_work(),
+            j.trp.peak_mem_gb(),
+            (j.total_work() / j.atom_work).ceil(),
+        );
+    }
+    println!("  ... ({} more)\n", jobs.len().saturating_sub(5));
+
+    // 3. Run the JASDA interaction cycle to completion.
+    let scheduler = JasdaScheduler::new(cfg.jasda.clone());
+    let out = SimEngine::new(cfg, Box::new(scheduler)).run(jobs);
+
+    // 4. Report.
+    let m = &out.metrics;
+    println!("== result ==");
+    println!("{}", m.summary());
+    println!(
+        "makespan {:.1}s  throughput {:.2} jobs/s  mean slowdown {:.2}  frag {:.3}",
+        m.makespan as f64 / 1000.0,
+        m.throughput_per_sec(),
+        m.mean_slowdown().unwrap_or(f64::NAN),
+        m.mean_fragmentation,
+    );
+    println!("scheduler stats: {}", out.scheduler_stats.to_string_pretty());
+    assert_eq!(m.unfinished, 0, "quickstart must complete all jobs");
+}

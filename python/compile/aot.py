@@ -1,0 +1,92 @@
+"""AOT lowering: JAX -> HLO text artifacts for the rust PJRT runtime.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly. See
+/opt/xla-example/README.md and gen_hlo.py there.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (what
+``make artifacts`` runs).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_scorer() -> str:
+    args = (
+        spec((model.M_PAD, model.T_BINS)),  # mu
+        spec((model.M_PAD, model.T_BINS)),  # sigma
+        spec((model.M_PAD, 4)),             # phi
+        spec((model.M_PAD, 3)),             # psi
+        spec((model.M_PAD,)),               # trust
+        spec((model.M_PAD,)),               # hist
+        spec((model.M_PAD,)),               # valid
+        spec((model.N_PARAMS,)),            # params
+    )
+    return to_hlo_text(jax.jit(model.scorer).lower(*args))
+
+
+def lower_calibrator() -> str:
+    args = (
+        spec((model.M_PAD, 4)),  # declared
+        spec((model.M_PAD, 4)),  # observed
+        spec((4,)),              # weights
+        spec((model.M_PAD,)),    # prev_mean_err
+        spec((model.M_PAD,)),    # prev_count
+        spec(()),                # kappa
+    )
+    return to_hlo_text(jax.jit(model.calibrator).lower(*args))
+
+
+def lower_safety() -> str:
+    args = (
+        spec((model.M_PAD, model.T_BINS)),  # mu
+        spec((model.M_PAD, model.T_BINS)),  # sigma
+        spec(()),                           # capacity
+    )
+    return to_hlo_text(jax.jit(model.safety).lower(*args))
+
+
+ARTIFACTS = {
+    "scorer.hlo.txt": lower_scorer,
+    "calibrator.hlo.txt": lower_calibrator,
+    "safety.hlo.txt": lower_safety,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name, lower in ARTIFACTS.items():
+        text = lower()
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text):>9} chars to {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Pure-jnp oracle for the JASDA variant-scoring pipeline.
+
+This is the correctness reference for the L1 Pallas kernel
+(``scoring.py``) and — transitively — for the rust ``NativeScorer`` and
+the PJRT-executed artifact, all of which implement the *same* math:
+
+1. probabilistic safety  ``viol = 1 - prod_t Phi((c - mu_t)/sigma_t)``
+   (paper §4.1(a), per-bin independence, log-space product);
+2. memory headroom       ``psi_mem = mean_t clip((c - mu_t)/c, 0, 1)``;
+3. calibrated utility    ``h_cal = trust*h_tilde + (1-trust)*hist``
+   with ``h_tilde = sum_i alpha_i phi_i`` (Eqs. (2) and (5));
+4. system utility        ``f = b0*psi_util + b1*psi_mem + b2*psi_frag
+   + b3*age`` (Eq. (3) + §4.3);
+5. composite score       ``lambda*h_cal + (1-lambda)*f`` (Eq. (4)),
+   zeroed for ineligible (viol > theta) or invalid (padded) lanes.
+
+The erf uses the Abramowitz–Stegun 7.1.26 polynomial — the same one the
+rust side hardcodes — so all implementations agree to f32 precision.
+"""
+
+import jax.numpy as jnp
+
+# Shared numerical floor for sigma (mirrors rust SIGMA_EPS).
+SIGMA_EPS = 1e-6
+
+
+def erf_as(x):
+    """Abramowitz–Stegun 7.1.26 erf approximation (|err| < 1.5e-7)."""
+    a1 = 0.254829592
+    a2 = -0.284496736
+    a3 = 1.421413741
+    a4 = -1.453152027
+    a5 = 1.061405429
+    p = 0.3275911
+    sign = jnp.sign(x)
+    # sign(0) = 0 but erf(0) ~ 0 anyway.
+    ax = jnp.abs(x)
+    t = 1.0 / (1.0 + p * ax)
+    y = 1.0 - (((((a5 * t + a4) * t) + a3) * t + a2) * t + a1) * t * jnp.exp(-ax * ax)
+    return jnp.where(x < 0, -y, y)
+
+
+def normal_cdf(x):
+    """Phi(x) clamped into (0, 1) for log safety (kernel-identical)."""
+    c = 0.5 * (1.0 + erf_as(x / jnp.sqrt(2.0).astype(x.dtype)))
+    return jnp.clip(c, 1e-12, 1.0)
+
+
+def score_ref(mu, sigma, phi, psi, trust, hist, valid, params):
+    """Reference scoring pipeline.
+
+    Args:
+      mu:     [M, T] f32 — FMP mean memory per bin (GiB).
+      sigma:  [M, T] f32 — FMP memory std per bin (GiB).
+      phi:    [M, 4] f32 — declared job features [jct, qos, energy, loc].
+      psi:    [M, 3] f32 — system features [util, frag, age].
+      trust:  [M]    f32 — calibration weight gamma*rho_J.
+      hist:   [M]    f32 — HistAvg(J) anchors.
+      valid:  [M]    f32 — 1 for real rows, 0 for padding.
+      params: [11]   f32 — [capacity, theta, lambda, alpha(4), beta(4)].
+
+    Returns:
+      (score [M], violation [M], headroom [M]) — score is 0 for
+      ineligible or padded lanes.
+    """
+    mu = mu.astype(jnp.float32)
+    sigma = sigma.astype(jnp.float32)
+    capacity = params[0]
+    theta = params[1]
+    lam = params[2]
+    alpha = params[3:7]
+    beta = params[7:11]
+
+    sig = jnp.maximum(sigma, SIGMA_EPS)
+    z = (capacity - mu) / sig
+    log_surv = jnp.sum(jnp.log(normal_cdf(z)), axis=-1)
+    viol = jnp.clip(1.0 - jnp.exp(log_surv), 0.0, 1.0)
+
+    headroom = jnp.mean(jnp.clip((capacity - mu) / capacity, 0.0, 1.0), axis=-1)
+
+    h_tilde = phi @ alpha
+    h_cal = trust * h_tilde + (1.0 - trust) * hist
+
+    f_sys = beta[0] * psi[:, 0] + beta[1] * headroom + beta[2] * psi[:, 1] + beta[3] * psi[:, 2]
+
+    score = lam * h_cal + (1.0 - lam) * f_sys
+    eligible = (viol <= theta) & (valid > 0.0)
+    score = jnp.where(eligible, jnp.clip(score, 0.0, 1.0), 0.0)
+    return score, viol, headroom

@@ -1,0 +1,64 @@
+"""L2: the JASDA scoring graph — the computation the rust coordinator
+executes on its hot path via PJRT.
+
+Three exported entry points (one HLO artifact each, see ``aot.py``):
+
+* ``scorer``      — the full variant-scoring pipeline (calls the L1
+  Pallas kernel); inputs are the padded ``[M_PAD, T]`` batch the rust
+  ``PjrtScorer`` stages.
+* ``calibrator``  — batched ex-post verification update (Eqs. (6)–(8)):
+  per-variant convex error, running-mean fold, reliability
+  ``rho = exp(-kappa * mean_err)``.
+* ``safety``      — standalone FMP violation probabilities (the job-side
+  eligibility check of §4.1(a)), usable by external agent
+  implementations.
+
+Python runs only at build time; ``make artifacts`` lowers these once.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import ref, scoring
+
+# Artifact shapes — must match rust/src/runtime/mod.rs constants.
+M_PAD = 256
+T_BINS = 64
+N_PARAMS = 11
+
+
+def scorer(mu, sigma, phi, psi, trust, hist, valid, params):
+    """Variant scoring: returns (score, violation, headroom), each [M_PAD].
+
+    Thin wrapper over the L1 Pallas kernel so the whole pipeline lowers
+    into a single HLO module.
+    """
+    return scoring.score_pallas(mu, sigma, phi, psi, trust, hist, valid, params)
+
+
+def calibrator(declared, observed, weights, prev_mean_err, prev_count, kappa):
+    """Batched ex-post verification (paper Eqs. (6)–(8)).
+
+    Args:
+      declared:      [M, 4] declared feature vectors of completed subjobs.
+      observed:      [M, 4] observed feature vectors.
+      weights:       [4]    convex error weights w_i (sum to 1).
+      prev_mean_err: [M]    each job's running mean error before this fold.
+      prev_count:    [M]    each job's verified-variant count before fold.
+      kappa:         []     reliability sensitivity.
+
+    Returns:
+      (eps [M], new_mean_err [M], rho [M]).
+    """
+    eps = jnp.sum(jnp.abs(declared - observed) * weights, axis=-1)
+    count = prev_count + 1.0
+    new_mean = prev_mean_err + (eps - prev_mean_err) / count
+    rho = jnp.exp(-kappa * new_mean)
+    return eps, new_mean, rho
+
+
+def safety(mu, sigma, capacity):
+    """Standalone FMP violation probabilities over a [M, T] batch."""
+    sig = jnp.maximum(sigma, ref.SIGMA_EPS)
+    z = (capacity - mu) / sig
+    log_surv = jnp.sum(jnp.log(ref.normal_cdf(z)), axis=-1)
+    return jnp.clip(1.0 - jnp.exp(log_surv), 0.0, 1.0)

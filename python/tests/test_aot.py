@@ -1,0 +1,45 @@
+"""AOT lowering tests: every artifact must lower to parseable HLO text
+with the exact parameter/result shapes the rust runtime expects."""
+
+import re
+
+from compile import aot, model
+
+
+class TestLowering:
+    def test_all_artifacts_lower(self):
+        for name, lower in aot.ARTIFACTS.items():
+            text = lower()
+            assert text.startswith("HloModule"), f"{name} is not HLO text"
+            assert "ENTRY" in text, f"{name} lacks an entry computation"
+
+    def test_scorer_signature(self):
+        text = aot.lower_scorer()
+        # 8 parameters with the staged shapes.
+        m, t = model.M_PAD, model.T_BINS
+        for shape in (
+            f"f32[{m},{t}]",
+            f"f32[{m},4]",
+            f"f32[{m},3]",
+            f"f32[{m}]",
+            f"f32[{model.N_PARAMS}]",
+        ):
+            assert shape in text, f"missing {shape} in scorer HLO"
+        # Tuple of three [M] outputs.
+        assert re.search(rf"tuple\(.*f32\[{m}\].*f32\[{m}\].*f32\[{m}\]", text.replace("\n", " ")) or \
+            f"(f32[{m}]" in text
+
+    def test_calibrator_signature(self):
+        text = aot.lower_calibrator()
+        assert f"f32[{model.M_PAD},4]" in text
+        assert "f32[4]" in text
+
+    def test_safety_signature(self):
+        text = aot.lower_safety()
+        assert f"f32[{model.M_PAD},{model.T_BINS}]" in text
+
+    def test_scorer_contains_no_custom_call(self):
+        """interpret=True must lower to plain HLO the CPU PJRT can run —
+        a Mosaic custom-call here would break the rust runtime."""
+        text = aot.lower_scorer()
+        assert "custom-call" not in text.lower() or "mosaic" not in text.lower()

@@ -1,0 +1,187 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+The Pallas kernel (interpret mode) must match the pure-jnp reference on
+every input in its domain; hypothesis sweeps shapes and value ranges.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref, scoring
+
+PARAMS = np.array(
+    [20.0, 0.05, 0.6, 0.45, 0.25, 0.15, 0.15, 0.45, 0.2, 0.15, 0.2], np.float32
+)
+
+
+def make_batch(rng, m, t, cap=20.0, theta=0.05, lam=0.6):
+    mu = rng.uniform(0.5, cap * 0.95, (m, t)).astype(np.float32)
+    sigma = rng.uniform(0.01, 3.0, (m, t)).astype(np.float32)
+    phi = rng.uniform(0, 1, (m, 4)).astype(np.float32)
+    psi = rng.uniform(0, 1, (m, 3)).astype(np.float32)
+    trust = rng.uniform(0, 1, m).astype(np.float32)
+    hist = rng.uniform(0, 1, m).astype(np.float32)
+    valid = (rng.uniform(0, 1, m) > 0.15).astype(np.float32)
+    params = PARAMS.copy()
+    params[0], params[1], params[2] = cap, theta, lam
+    return mu, sigma, phi, psi, trust, hist, valid, params
+
+
+def assert_match(args, atol=2e-6):
+    got = scoring.score_pallas(*args)
+    want = ref.score_ref(*args)
+    for g, w, name in zip(got, want, ["score", "violation", "headroom"]):
+        np.testing.assert_allclose(
+            np.array(g), np.array(w), atol=atol, err_msg=f"{name} mismatch"
+        )
+
+
+class TestKernelVsRef:
+    def test_basic_block(self):
+        rng = np.random.default_rng(0)
+        assert_match(make_batch(rng, scoring.BLOCK_M, 64))
+
+    def test_multi_block(self):
+        rng = np.random.default_rng(1)
+        assert_match(make_batch(rng, 4 * scoring.BLOCK_M, 64))
+
+    @pytest.mark.parametrize("t", [1, 4, 16, 64, 128])
+    def test_bin_counts(self, t):
+        rng = np.random.default_rng(t)
+        assert_match(make_batch(rng, scoring.BLOCK_M, t))
+
+    @pytest.mark.parametrize("cap", [5.0, 10.0, 20.0, 40.0])
+    def test_capacities(self, cap):
+        rng = np.random.default_rng(int(cap))
+        assert_match(make_batch(rng, scoring.BLOCK_M, 32, cap=cap))
+
+    @pytest.mark.parametrize("lam", [0.0, 0.3, 0.5, 0.7, 1.0])
+    def test_lambda_range(self, lam):
+        rng = np.random.default_rng(int(lam * 10))
+        assert_match(make_batch(rng, scoring.BLOCK_M, 32, lam=lam))
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        blocks=st.integers(1, 3),
+        t=st.integers(1, 96),
+        cap=st.floats(4.0, 40.0),
+        theta=st.floats(0.001, 0.5),
+        lam=st.floats(0.0, 1.0),
+    )
+    def test_hypothesis_sweep(self, seed, blocks, t, cap, theta, lam):
+        rng = np.random.default_rng(seed)
+        assert_match(
+            make_batch(rng, blocks * scoring.BLOCK_M, t, cap=cap, theta=theta, lam=lam)
+        )
+
+    def test_degenerate_sigma_floor(self):
+        """sigma == 0 hits the shared SIGMA_EPS floor in both paths."""
+        m, t = scoring.BLOCK_M, 8
+        mu = np.full((m, t), 4.0, np.float32)
+        sigma = np.zeros((m, t), np.float32)
+        ones = np.ones(m, np.float32)
+        feat = np.full((m, 4), 0.5, np.float32)
+        psi = np.full((m, 3), 0.5, np.float32)
+        assert_match((mu, sigma, feat, psi, ones, ones * 0.5, ones, PARAMS))
+
+    def test_padding_lanes_zeroed(self):
+        rng = np.random.default_rng(3)
+        args = list(make_batch(rng, scoring.BLOCK_M, 16))
+        args[6] = np.zeros(scoring.BLOCK_M, np.float32)  # all invalid
+        score, _, _ = scoring.score_pallas(*args)
+        assert np.all(np.array(score) == 0.0)
+
+
+class TestScoreSemantics:
+    """Semantic invariants of the reference (and thus the kernel)."""
+
+    def test_scores_in_unit_interval(self):
+        rng = np.random.default_rng(7)
+        score, viol, head = ref.score_ref(*make_batch(rng, 512, 64))
+        assert np.all((np.array(score) >= 0) & (np.array(score) <= 1))
+        assert np.all((np.array(viol) >= 0) & (np.array(viol) <= 1))
+        assert np.all((np.array(head) >= 0) & (np.array(head) <= 1))
+
+    def test_violation_monotone_in_capacity(self):
+        rng = np.random.default_rng(8)
+        args = list(make_batch(rng, 256, 32))
+        p_small = args[7].copy()
+        p_small[0] = 10.0
+        p_big = args[7].copy()
+        p_big[0] = 30.0
+        _, v_small, _ = ref.score_ref(*args[:7], p_small)
+        _, v_big, _ = ref.score_ref(*args[:7], p_big)
+        assert np.all(np.array(v_big) <= np.array(v_small) + 1e-6)
+
+    def test_unsafe_rows_get_zero_score(self):
+        m, t = 128, 16
+        mu = np.full((m, t), 19.9, np.float32)  # at capacity
+        sigma = np.full((m, t), 2.0, np.float32)
+        ones = np.ones(m, np.float32)
+        feat = np.full((m, 4), 1.0, np.float32)
+        psi = np.full((m, 3), 1.0, np.float32)
+        score, viol, _ = ref.score_ref(mu, sigma, feat, psi, ones, ones, ones, PARAMS)
+        assert np.all(np.array(viol) > 0.05)
+        assert np.all(np.array(score) == 0.0)
+
+    def test_calibration_pull(self):
+        """Lower trust pulls the score toward the historical anchor."""
+        m, t = 128, 8
+        mu = np.full((m, t), 2.0, np.float32)
+        sigma = np.full((m, t), 0.1, np.float32)
+        feat = np.full((m, 4), 1.0, np.float32)  # declared perfect
+        psi = np.zeros((m, 3), np.float32)
+        hist = np.zeros(m, np.float32)  # history says otherwise
+        valid = np.ones(m, np.float32)
+        full = np.ones(m, np.float32)
+        half = np.full(m, 0.5, np.float32)
+        s_full, _, _ = ref.score_ref(mu, sigma, feat, psi, full, hist, valid, PARAMS)
+        s_half, _, _ = ref.score_ref(mu, sigma, feat, psi, half, hist, valid, PARAMS)
+        assert np.all(np.array(s_half) < np.array(s_full))
+
+    def test_erf_against_numpy(self):
+        from math import erf as math_erf
+
+        xs = np.linspace(-5, 5, 201).astype(np.float32)
+        got = np.array(ref.erf_as(xs))
+        want = np.array([math_erf(float(x)) for x in xs])
+        np.testing.assert_allclose(got, want, atol=5e-6)  # A&S error + f32 rounding
+
+
+class TestModelHelpers:
+    def test_calibrator_math(self):
+        m = 16
+        rng = np.random.default_rng(5)
+        declared = rng.uniform(0, 1, (m, 4)).astype(np.float32)
+        observed = rng.uniform(0, 1, (m, 4)).astype(np.float32)
+        w = np.array([0.45, 0.25, 0.15, 0.15], np.float32) / 1.0
+        prev_err = np.zeros(m, np.float32)
+        prev_n = np.zeros(m, np.float32)
+        eps, mean_err, rho = model.calibrator(declared, observed, w, prev_err, prev_n, 4.0)
+        want_eps = np.sum(np.abs(declared - observed) * w, axis=-1)
+        np.testing.assert_allclose(np.array(eps), want_eps, atol=1e-6)
+        np.testing.assert_allclose(np.array(mean_err), want_eps, atol=1e-6)
+        np.testing.assert_allclose(np.array(rho), np.exp(-4.0 * want_eps), rtol=1e-5)
+
+    def test_calibrator_running_mean(self):
+        declared = np.zeros((1, 4), np.float32)
+        observed = np.ones((1, 4), np.float32)  # eps = 1
+        w = np.full(4, 0.25, np.float32)
+        # After 3 previous perfect verifications, mean goes 0 -> 1/4.
+        eps, mean_err, _ = model.calibrator(
+            declared, observed, w, np.zeros(1, np.float32), np.full(1, 3.0, np.float32), 1.0
+        )
+        assert abs(float(eps[0]) - 1.0) < 1e-6
+        assert abs(float(mean_err[0]) - 0.25) < 1e-6
+
+    def test_safety_standalone(self):
+        m, t = 32, 16
+        mu = np.full((m, t), 5.0, np.float32)
+        sigma = np.full((m, t), 0.5, np.float32)
+        safe = np.array(model.safety(mu, sigma, np.float32(10.0)))
+        unsafe = np.array(model.safety(mu, sigma, np.float32(5.5)))
+        assert np.all(safe < 1e-4)
+        assert np.all(unsafe > 0.5)

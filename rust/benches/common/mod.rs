@@ -1,0 +1,51 @@
+//! Shared workload/run helpers for the benchmark targets.
+//!
+//! Each bench regenerates one paper table or figure (see DESIGN.md §5);
+//! they all run schedulers through the same engine on identical traces so
+//! differences isolate scheduling policy.
+
+#![allow(dead_code)]
+
+use jasda::config::SimConfig;
+use jasda::job::Job;
+use jasda::metrics::RunMetrics;
+use jasda::sim::{Scheduler, SimEngine};
+use jasda::workload::WorkloadGenerator;
+
+/// A moderately contended single-GPU scenario (offered load ~1.3x).
+pub fn contended_cfg(seed: u64, num_jobs: usize) -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.seed = seed;
+    cfg.cluster.num_gpus = 1;
+    cfg.cluster.layout = "heterogeneous".into();
+    cfg.workload.num_jobs = num_jobs;
+    cfg.workload.arrival_rate_per_sec = 0.35;
+    cfg
+}
+
+/// A light scenario (offered load ~0.6x) where gaps dominate.
+pub fn light_cfg(seed: u64, num_jobs: usize) -> SimConfig {
+    let mut cfg = contended_cfg(seed, num_jobs);
+    cfg.workload.arrival_rate_per_sec = 0.12;
+    cfg
+}
+
+/// Generate the workload for a config.
+pub fn workload(cfg: &SimConfig) -> Vec<Job> {
+    WorkloadGenerator::new(cfg.workload.clone()).generate(cfg.seed)
+}
+
+/// Run one scheduler on a fixed trace.
+pub fn run(cfg: &SimConfig, sched: Box<dyn Scheduler>, jobs: &[Job]) -> RunMetrics {
+    SimEngine::new(cfg.clone(), sched).run(jobs.to_vec()).metrics
+}
+
+/// Format Option<f64> with 3 decimals or '-'.
+pub fn fmt(x: Option<f64>) -> String {
+    x.map_or("-".to_string(), |v| format!("{v:.3}"))
+}
+
+/// Format Option<f64> with 0 decimals or '-'.
+pub fn fmt0(x: Option<f64>) -> String {
+    x.map_or("-".to_string(), |v| format!("{v:.0}"))
+}

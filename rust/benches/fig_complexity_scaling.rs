@@ -1,0 +1,60 @@
+//! §4.6 per-iteration complexity — the O(M log M) clearing claim.
+//!
+//! Generates WIS pools of increasing size M and times
+//! `SelectBestCompatibleVariants`. The series should grow quasi-linearly
+//! (doubling M should roughly double time, with a slowly growing log
+//! factor), which we check numerically.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use jasda::jasda::clearing::{select_best_compatible, WisItem};
+use jasda::report::Table;
+use jasda::sim::Rng;
+use jasda::types::Interval;
+use jasda::util::bench::bench;
+
+fn pool(m: usize, seed: u64) -> Vec<WisItem> {
+    let mut rng = Rng::new(seed);
+    (0..m)
+        .map(|_| {
+            let s = rng.below(1_000_000);
+            let len = 1 + rng.below(5_000);
+            WisItem { interval: Interval::new(s, s + len), score: rng.uniform() }
+        })
+        .collect()
+}
+
+fn main() {
+    println!("Figure: clearing complexity — O(M log M) (paper §4.6)\n");
+    let mut table = Table::new(
+        "WIS clearing time vs pool size M",
+        &["M", "median", "ns/variant", "ns/(M log2 M)"],
+    );
+    let mut per_mlogm = Vec::new();
+    for &m in &[64usize, 256, 1024, 4096, 16384, 65536, 262144] {
+        let items = pool(m, 7 + m as u64);
+        let meas = bench(7, 5, || select_best_compatible(std::hint::black_box(&items)).total_score);
+        let ns = meas.ns_per_iter();
+        let norm = ns / (m as f64 * (m as f64).log2());
+        per_mlogm.push(norm);
+        table.push_row(vec![
+            format!("{m}"),
+            format!("{:.3} ms", ns / 1e6),
+            format!("{:.1}", ns / m as f64),
+            format!("{norm:.2}"),
+        ]);
+    }
+    println!("{}", table.to_markdown());
+
+    // O(M log M) check: the normalized column should be ~flat. Allow 4x
+    // spread for cache effects across 4 orders of magnitude of M.
+    let max = per_mlogm.iter().cloned().fold(f64::MIN, f64::max);
+    let min = per_mlogm.iter().cloned().fold(f64::MAX, f64::min);
+    println!("ns/(M log M) spread: {:.2}x (flat = perfectly M log M)", max / min);
+    assert!(
+        max / min < 12.0,
+        "clearing deviates badly from M log M: spread {:.1}",
+        max / min
+    );
+}

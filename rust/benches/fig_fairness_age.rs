@@ -1,0 +1,65 @@
+//! §4.3 temporal fairness — the age-aware prioritization ablation.
+//!
+//! Sweeps the age weight β_age (0 disables the mechanism entirely — the
+//! ablation) and the saturation scale, and reports starvation and
+//! waiting-time tails. Paper claim: the age term "mitigates starvation in
+//! practice" and promotes long-term stability without hard guarantees.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use jasda::jasda::JasdaScheduler;
+use jasda::report::Table;
+use jasda::sim::SimEngine;
+
+fn main() {
+    let cfg0 = common::contended_cfg(41, 80);
+    let jobs = common::workload(&cfg0);
+    println!("Figure: age-aware fairness ablation (§4.3), {} jobs\n", jobs.len());
+
+    let mut table = Table::new(
+        "β_age sweep",
+        &["beta_age", "age_scale", "max_starv", "p95_wait", "jain", "mean_jct", "util"],
+    );
+    let mut starv = Vec::new();
+    for &(beta_age, scale) in
+        &[(0.0, 30_000u64), (0.1, 30_000), (0.2, 30_000), (0.3, 30_000), (0.2, 5_000), (0.2, 120_000)]
+    {
+        let mut cfg = cfg0.clone();
+        // Keep Σβ ≤ 1 by scaling the other three weights into 1 − β_age.
+        let rest = 1.0 - beta_age;
+        let base = cfg.jasda.beta;
+        let s = (base.util + base.headroom + base.frag).max(1e-9);
+        cfg.jasda.beta.util = base.util / s * rest * 0.8;
+        cfg.jasda.beta.headroom = base.headroom / s * rest * 0.8;
+        cfg.jasda.beta.frag = base.frag / s * rest * 0.8;
+        cfg.jasda.beta.age = beta_age;
+        cfg.jasda.age_priority = beta_age > 0.0;
+        cfg.jasda.age_scale = scale;
+
+        let m = SimEngine::new(cfg.clone(), Box::new(JasdaScheduler::new(cfg.jasda.clone())))
+            .run(jobs.clone())
+            .metrics;
+        assert_eq!(m.unfinished, 0);
+        starv.push((beta_age, m.max_starvation()));
+        table.push_row(vec![
+            format!("{beta_age:.1}"),
+            format!("{scale}"),
+            format!("{}", m.max_starvation()),
+            common::fmt0(m.p95_wait()),
+            common::fmt(m.jain_fairness()),
+            common::fmt0(m.mean_jct()),
+            format!("{:.3}", m.utilization),
+        ]);
+    }
+    println!("{}", table.to_markdown());
+
+    let no_age = starv.iter().find(|(b, _)| *b == 0.0).unwrap().1;
+    let with_age = starv.iter().filter(|(b, _)| *b > 0.0).map(|(_, s)| *s).min().unwrap();
+    println!(
+        "max starvation: ablation {} vs best-with-age {} ({:.1}x reduction)",
+        no_age,
+        with_age,
+        no_age as f64 / with_age.max(1) as f64
+    );
+}

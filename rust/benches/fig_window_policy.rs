@@ -1,0 +1,47 @@
+//! §5.1(c) adaptive window selection — comparing announcement policies.
+//!
+//! The paper's prototype announces the earliest-starting window and
+//! names slack-aware / fragmentation-aware strategies as open
+//! alternatives. This bench runs all five implemented policies on the
+//! same trace under two load regimes.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use jasda::config::WindowPolicy;
+use jasda::jasda::JasdaScheduler;
+use jasda::report::Table;
+use jasda::sim::SimEngine;
+
+fn main() {
+    println!("Figure: window announcement policies (§3.1, §5.1(c))\n");
+    for (label, cfg0) in [
+        ("light load (~0.6x)", common::light_cfg(61, 60)),
+        ("contended (~1.3x)", common::contended_cfg(61, 60)),
+    ] {
+        let jobs = common::workload(&cfg0);
+        let mut table = Table::new(
+            format!("window policies — {label}"),
+            &["policy", "util", "mean_jct", "p95_jct", "jain", "starv", "frag", "subjobs"],
+        );
+        for policy in WindowPolicy::ALL {
+            let mut cfg = cfg0.clone();
+            cfg.jasda.window_policy = policy;
+            let m = SimEngine::new(cfg.clone(), Box::new(JasdaScheduler::new(cfg.jasda.clone())))
+                .run(jobs.clone())
+                .metrics;
+            assert_eq!(m.unfinished, 0, "{policy:?} left jobs unfinished");
+            table.push_row(vec![
+                policy.name().into(),
+                format!("{:.3}", m.utilization),
+                common::fmt0(m.mean_jct()),
+                common::fmt0(m.jct_percentile(0.95)),
+                common::fmt(m.jain_fairness()),
+                format!("{}", m.max_starvation()),
+                format!("{:.3}", m.mean_fragmentation),
+                common::fmt(m.mean_subjobs()),
+            ]);
+        }
+        println!("{}", table.to_markdown());
+    }
+}

@@ -1,0 +1,66 @@
+//! Headline comparison (§1/§6(a)) — JASDA vs every baseline on mixed
+//! workloads across load regimes and cluster shapes: the experiment the
+//! paper's promised follow-up study would lead with.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use jasda::baselines::{by_name, ALL_SCHEDULERS};
+use jasda::report::{comparison_headers, comparison_row, Table};
+use jasda::sim::SimEngine;
+use jasda::workload::WorkloadGenerator;
+
+fn main() {
+    println!("Headline: scheduler comparison across regimes\n");
+    let scenarios: [(&str, u32, &str, f64, usize); 3] = [
+        ("1 GPU heterogeneous, light", 1, "heterogeneous", 0.12, 60),
+        ("1 GPU heterogeneous, contended", 1, "heterogeneous", 0.35, 60),
+        ("2 GPUs 7x1g + balanced, contended", 2, "balanced", 0.6, 100),
+    ];
+    for (label, gpus, layout, rate, n) in scenarios {
+        let mut cfg = common::contended_cfg(71, n);
+        cfg.cluster.num_gpus = gpus;
+        cfg.cluster.layout = layout.into();
+        cfg.workload.arrival_rate_per_sec = rate;
+        let jobs = WorkloadGenerator::new(cfg.workload.clone()).generate(cfg.seed);
+
+        let mut table = Table::new(format!("headline — {label}"), &comparison_headers());
+        let mut jasda_starv = 0;
+        let mut best_other_starv = u64::MAX;
+        for name in ALL_SCHEDULERS {
+            let sched = by_name(name, &cfg.jasda).expect("known scheduler");
+            let m = SimEngine::new(cfg.clone(), sched).run(jobs.clone()).metrics;
+            if name == "jasda" {
+                jasda_starv = m.max_starvation();
+            } else if m.unfinished == 0 {
+                best_other_starv = best_other_starv.min(m.max_starvation());
+            }
+            table.push_row(comparison_row(&m));
+        }
+        // Extension row: duration-weighted clearing (EXPERIMENTS.md F6).
+        {
+            let mut jcfg = cfg.jasda.clone();
+            jcfg.duration_weighted_clearing = true;
+            let m = SimEngine::new(
+                cfg.clone(),
+                Box::new(jasda::jasda::JasdaScheduler::new(jcfg)),
+            )
+            .run(jobs.clone())
+            .metrics;
+            let mut row = comparison_row(&m);
+            row[0] = "jasda(dw)".into();
+            table.push_row(row);
+        }
+        println!("{}", table.to_markdown());
+        println!(
+            "starvation: jasda {} vs best baseline {} -> {}\n",
+            jasda_starv,
+            best_other_starv,
+            if jasda_starv <= best_other_starv {
+                "JASDA wins (paper's fairness claim holds)"
+            } else {
+                "baseline wins on this trace"
+            }
+        );
+    }
+}

@@ -1,0 +1,112 @@
+//! Hot-path performance: the batched scoring pipeline (native vs PJRT)
+//! and the end-to-end iteration cost (EXPERIMENTS.md §Perf).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use jasda::jasda::clearing::{select_best_compatible, WisItem};
+use jasda::jasda::scoring::{NativeScorer, ScoreBatch, ScorerBackend};
+use jasda::jasda::JasdaScheduler;
+use jasda::runtime::{PjrtScorer, T_BINS};
+use jasda::sim::{Rng, SimEngine};
+use jasda::types::Interval;
+use jasda::util::bench::{header, run_case};
+
+fn batch(m: usize, seed: u64) -> ScoreBatch {
+    let mut rng = Rng::new(seed);
+    let mut b = ScoreBatch::with_bins(T_BINS);
+    b.capacity = 20.0;
+    b.theta = 0.05;
+    b.lambda = 0.5;
+    b.alpha = [0.45, 0.25, 0.15, 0.15];
+    b.beta = [0.45, 0.2, 0.15, 0.2];
+    for _ in 0..m {
+        let base = rng.uniform_range(2.0, 16.0);
+        let mu: Vec<f64> = (0..T_BINS).map(|_| base + rng.uniform_range(-0.5, 0.5)).collect();
+        let sigma: Vec<f64> = (0..T_BINS).map(|_| rng.uniform_range(0.05, 1.0)).collect();
+        b.push(
+            &mu,
+            &sigma,
+            [rng.uniform(); 4],
+            [rng.uniform(), rng.uniform(), rng.uniform()],
+            0.7,
+            0.5,
+        );
+    }
+    b
+}
+
+fn main() {
+    header("L3 scoring backends (per batch, T=64 bins)");
+    let mut native = NativeScorer;
+    for &m in &[64usize, 256, 1024, 4096] {
+        let b = batch(m, m as u64);
+        let meas = run_case(&format!("native scorer M={m}"), 10, 5, || {
+            native.score(std::hint::black_box(&b)).unwrap().score[0]
+        });
+        println!(
+            "{:<48}   -> {:.0} variants/ms",
+            "",
+            m as f64 / (meas.ns_per_iter() / 1e6)
+        );
+    }
+
+    let artifact = jasda::runtime::artifacts_dir().join("scorer.hlo.txt");
+    if artifact.exists() {
+        let mut pjrt = PjrtScorer::load(&artifact).expect("artifact compiles");
+        for &m in &[256usize, 1024, 4096] {
+            let b = batch(m, m as u64);
+            let meas = run_case(&format!("pjrt scorer   M={m}"), 5, 10, || {
+                pjrt.score(std::hint::black_box(&b)).unwrap().score[0]
+            });
+            println!(
+                "{:<48}   -> {:.0} variants/ms",
+                "",
+                m as f64 / (meas.ns_per_iter() / 1e6)
+            );
+        }
+    } else {
+        println!("(pjrt rows skipped: run `make artifacts`)");
+    }
+
+    header("WIS clearing throughput");
+    for &m in &[1024usize, 16384] {
+        let mut rng = Rng::new(m as u64);
+        let items: Vec<WisItem> = (0..m)
+            .map(|_| {
+                let s = rng.below(100_000);
+                WisItem {
+                    interval: Interval::new(s, s + 1 + rng.below(500)),
+                    score: rng.uniform(),
+                }
+            })
+            .collect();
+        let meas = run_case(&format!("clearing M={m}"), 10, 5, || {
+            select_best_compatible(std::hint::black_box(&items)).total_score
+        });
+        println!(
+            "{:<48}   -> {:.2}M variants/s",
+            "",
+            m as f64 / (meas.ns_per_iter() / 1e9) / 1e6
+        );
+    }
+
+    header("end-to-end scheduler iteration (full simulation amortized)");
+    let cfg = common::contended_cfg(81, 50);
+    let jobs = common::workload(&cfg);
+    let meas = run_case("full 50-job simulation", 5, 50, || {
+        SimEngine::new(cfg.clone(), Box::new(JasdaScheduler::new(cfg.jasda.clone())))
+            .run(jobs.clone())
+            .metrics
+            .makespan
+    });
+    let m = SimEngine::new(cfg.clone(), Box::new(JasdaScheduler::new(cfg.jasda.clone())))
+        .run(jobs.clone())
+        .metrics;
+    println!(
+        "  iterations {}  sched {:.1} ns/iter  sim wall {:.1} ms",
+        m.iterations,
+        m.sched_ns_per_iteration(),
+        meas.ns_per_iter() / 1e6,
+    );
+}

@@ -1,0 +1,95 @@
+//! Table 2 — illustrative effects of the policy parameter λ.
+//!
+//! Paper: λ = 0.7 "QoS-first" favors job-centric metrics (latency,
+//! QoS adherence); λ = 0.5 balanced; λ = 0.3 "Utilization-first"
+//! emphasizes utilization/fragmentation at the cost of latency.
+//! We sweep a denser grid and report the measured trend.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use jasda::jasda::JasdaScheduler;
+use jasda::report::Table;
+use jasda::sim::SimEngine;
+
+fn main() {
+    // Average over several traces: per-seed deadline rates are noisy
+    // (few deadline-carrying jobs per trace).
+    const SEEDS: [u64; 4] = [22, 122, 222, 322];
+    println!("Table 2: λ sweep over {} traces x 70 jobs", SEEDS.len());
+
+    let mut table = Table::new(
+        "Table 2 — λ policy effects (measured, mean over traces)",
+        &["lambda", "policy", "util", "mean_jct", "p95_jct", "deadline_rate", "jain", "starv"],
+    );
+    let mut deadline_rates = Vec::new();
+    let mut jcts: Vec<f64> = Vec::new();
+    for &lambda in &[0.1, 0.3, 0.5, 0.7, 0.9] {
+        let policy = if lambda >= 0.65 {
+            "QoS-first"
+        } else if lambda <= 0.35 {
+            "Utilization-first"
+        } else {
+            "Balanced"
+        };
+        let (mut util, mut jct, mut p95, mut dl, mut jain, mut starv) =
+            (0.0, 0.0, 0.0, 0.0, 0.0, 0.0);
+        for &seed in &SEEDS {
+            let cfg = common::contended_cfg(seed, 70);
+            let jobs = common::workload(&cfg);
+            let mut jcfg = cfg.jasda.clone();
+            jcfg.lambda = lambda;
+            let m = SimEngine::new(cfg.clone(), Box::new(JasdaScheduler::new(jcfg)))
+                .run(jobs)
+                .metrics;
+            assert_eq!(m.unfinished, 0);
+            util += m.utilization;
+            jct += m.mean_jct().unwrap_or(0.0);
+            p95 += m.jct_percentile(0.95).unwrap_or(0.0);
+            dl += m.deadline_met_rate().unwrap_or(0.0);
+            jain += m.jain_fairness().unwrap_or(0.0);
+            starv += m.max_starvation() as f64;
+        }
+        let n = SEEDS.len() as f64;
+        deadline_rates.push(dl / n);
+        jcts.push(jct / n);
+        table.push_row(vec![
+            format!("{lambda:.2}"),
+            policy.into(),
+            format!("{:.3}", util / n),
+            format!("{:.0}", jct / n),
+            format!("{:.0}", p95 / n),
+            format!("{:.3}", dl / n),
+            format!("{:.3}", jain / n),
+            format!("{:.0}", starv / n),
+        ]);
+    }
+    println!("\n{}", table.to_markdown());
+
+    // Table 2's claim is that high λ "prioritizes job-centric metrics
+    // such as latency … and QoS adherence". Latency: directly testable.
+    let jct_low: f64 = jcts[..2].iter().sum::<f64>() / 2.0;
+    let jct_high: f64 = jcts[3..].iter().sum::<f64>() / 2.0;
+    println!(
+        "mean JCT (latency): utilization-first {:.0} vs QoS-first {:.0} -> {}",
+        jct_low,
+        jct_high,
+        if jct_high <= jct_low {
+            "matches Table 2 (QoS-first improves latency)"
+        } else {
+            "DIVERGES from Table 2"
+        }
+    );
+    // Deadline adherence: measured to *decrease* with λ in this system —
+    // a real coupling the paper does not anticipate: the age-fairness
+    // term (§4.3) lives on the system side of Eq. (4), so QoS-first
+    // (high λ) down-weights aging, and under contention deadline jobs
+    // lose more to starvation than they gain from their urgency scores.
+    // See EXPERIMENTS.md T2 for the discussion.
+    let dl_low = deadline_rates[..2].iter().sum::<f64>() / 2.0;
+    let dl_high = deadline_rates[3..].iter().sum::<f64>() / 2.0;
+    println!(
+        "deadline adherence: utilization-first {dl_low:.3} vs QoS-first {dl_high:.3} \
+         (age-term coupling; see EXPERIMENTS.md)"
+    );
+}

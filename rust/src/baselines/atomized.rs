@@ -1,0 +1,300 @@
+//! Atomized baseline schedulers: jobs are split into subjobs, but all
+//! decisions stay scheduler-side — no bidding, no job-declared scores.
+//!
+//! * [`SjaCentralScheduler`] — the SJA predecessor as the paper describes
+//!   it: jobs are decomposed opportunistically into eligible atoms that
+//!   fill announced windows, but "the scheduler alone performs global
+//!   evaluation and allocation" (§1). Selection is FCFS-among-safe, so
+//!   the delta between this and JASDA isolates the value of the
+//!   *job-aware* bidding/scoring layer.
+//! * [`ThemisLikeScheduler`] — a finish-time-fairness auction in the
+//!   spirit of Themis (§2): each window is leased to the job whose
+//!   projected finish-time fairness ratio is currently worst.
+
+use crate::baselines::common::BaselineConfig;
+use crate::job::{Job, JobSet};
+use crate::mig::{Cluster, Window};
+use crate::sim::{Commitment, Rng, Scheduler};
+use crate::types::{Interval, Time};
+
+/// Fill `window` with consecutive atoms of `job` (scheduler-side carving,
+/// same τ_min/safety contract as JASDA's job-side generation). Returns
+/// commitments for as much of the window as the job can safely use.
+fn carve_atoms(
+    job: &Job,
+    window: &Window,
+    cfg: &BaselineConfig,
+    max_atoms: usize,
+) -> Vec<Commitment> {
+    let mut out = Vec::new();
+    let mut t = window.t_min();
+    let mut offset = 0.0;
+    let pending = job.pending_work();
+    while out.len() < max_atoms {
+        let avail = window.interval.end.saturating_sub(t);
+        if avail < cfg.tau_min {
+            break;
+        }
+        // Work that fits the remaining window at the declared quantile.
+        let z = if job.trp.duration_cv > 0.0 {
+            crate::trp::math::normal_quantile(cfg.duration_quantile).max(0.0)
+        } else {
+            0.0
+        };
+        let w_fit = avail as f64 * window.speed / (1.0 + z * job.trp.duration_cv);
+        let w = w_fit.min(job.atom_work).min(pending - offset);
+        if w <= 1e-9 {
+            break;
+        }
+        let mut dur = job.trp.predicted_duration(w, window.speed, cfg.duration_quantile);
+        // Final slivers round up to τ_min (same anti-starvation rule as
+        // JASDA's job-side generation).
+        if dur < cfg.tau_min {
+            if offset + w >= pending - 1e-9 {
+                dur = cfg.tau_min;
+            } else {
+                break;
+            }
+        }
+        if t + dur > window.interval.end {
+            break;
+        }
+        // Safety over the atom's work range.
+        let w0 = job.work_cursor() + offset;
+        let fmp = job.trp.fmp_bins(w0, w0 + w, cfg.fmp_bins);
+        if fmp.violation_prob(window.capacity_gb) > cfg.theta {
+            break;
+        }
+        out.push(Commitment {
+            job: job.id,
+            slice: window.slice,
+            interval: Interval::new(t, t + dur),
+            work: w,
+            declared_phi: [0.5; 4],
+            score: 0.0,
+            window_len: window.delta_t(),
+        });
+        t += dur;
+        offset += w;
+        if offset >= pending - 1e-9 {
+            break;
+        }
+    }
+    out
+}
+
+/// Earliest candidate window across the cluster.
+fn earliest_window(cluster: &Cluster, now: Time, cfg: &BaselineConfig) -> Option<Window> {
+    cluster
+        .candidate_windows(now, cfg.horizon, cfg.tau_min)
+        .into_iter()
+        .min_by_key(|w| (w.interval.start, std::cmp::Reverse(w.delta_t()), w.slice))
+}
+
+/// SJA-style centralized atomizer: earliest window, FCFS job choice,
+/// scheduler-side carving.
+pub struct SjaCentralScheduler {
+    cfg: BaselineConfig,
+    /// Max atoms carved per window (mirrors JASDA's V_max).
+    max_atoms: usize,
+}
+
+impl SjaCentralScheduler {
+    /// Build with default knobs.
+    pub fn new() -> Self {
+        SjaCentralScheduler { cfg: BaselineConfig::default(), max_atoms: 4 }
+    }
+
+    /// Build with explicit knobs.
+    pub fn with_config(cfg: BaselineConfig, max_atoms: usize) -> Self {
+        SjaCentralScheduler { cfg, max_atoms }
+    }
+}
+
+impl Default for SjaCentralScheduler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for SjaCentralScheduler {
+    fn name(&self) -> &str {
+        "sja_central"
+    }
+
+    fn iterate(
+        &mut self,
+        now: Time,
+        cluster: &Cluster,
+        jobs: &mut JobSet,
+        _rng: &mut Rng,
+    ) -> Vec<Commitment> {
+        let Some(window) = earliest_window(cluster, now, &self.cfg) else {
+            return vec![];
+        };
+        // FCFS among jobs with any safe atom for this window.
+        let mut queue: Vec<u32> = jobs.bidders().map(|j| j.id).collect();
+        queue.sort_by_key(|&id| (jobs.get(id).arrival, id));
+        for id in queue {
+            let commits = carve_atoms(jobs.get(id), &window, &self.cfg, self.max_atoms);
+            if !commits.is_empty() {
+                return commits;
+            }
+        }
+        vec![]
+    }
+}
+
+/// Themis-like finish-time-fairness lease scheduler.
+pub struct ThemisLikeScheduler {
+    cfg: BaselineConfig,
+    max_atoms: usize,
+}
+
+impl ThemisLikeScheduler {
+    /// Build with default knobs.
+    pub fn new() -> Self {
+        ThemisLikeScheduler { cfg: BaselineConfig::default(), max_atoms: 4 }
+    }
+
+    /// Projected finish-time fairness ratio ρ of a job at `now`: the
+    /// job's age-plus-remaining runtime divided by its ideal dedicated
+    /// runtime, weighted by tenant weight. Higher = worse off.
+    fn ftf(job: &Job, now: Time) -> f64 {
+        let ideal = job.total_work().max(1.0);
+        let elapsed = now.saturating_sub(job.arrival) as f64;
+        let projected = elapsed + job.remaining_work();
+        (projected / ideal) * job.weight
+    }
+}
+
+impl Default for ThemisLikeScheduler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for ThemisLikeScheduler {
+    fn name(&self) -> &str {
+        "themis_like"
+    }
+
+    fn iterate(
+        &mut self,
+        now: Time,
+        cluster: &Cluster,
+        jobs: &mut JobSet,
+        _rng: &mut Rng,
+    ) -> Vec<Commitment> {
+        let Some(window) = earliest_window(cluster, now, &self.cfg) else {
+            return vec![];
+        };
+        // Lease the window to the worst-off job that can use it.
+        let mut order: Vec<u32> = jobs.bidders().map(|j| j.id).collect();
+        order.sort_by(|&a, &b| {
+            Self::ftf(jobs.get(b), now)
+                .total_cmp(&Self::ftf(jobs.get(a), now))
+                .then(a.cmp(&b))
+        });
+        for id in order {
+            let commits = carve_atoms(jobs.get(id), &window, &self.cfg, self.max_atoms);
+            if !commits.is_empty() {
+                return commits;
+            }
+        }
+        vec![]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::sim::SimEngine;
+    use crate::trp::{Phase, Trp};
+
+    fn jobs_spec(spec: &[(f64, f64, Time)]) -> Vec<Job> {
+        spec.iter()
+            .enumerate()
+            .map(|(i, &(mem, work, arrival))| {
+                let trp =
+                    Trp { phases: vec![Phase::new(work, mem, 0.15, 0.1)], duration_cv: 0.05 };
+                Job::new(i as u32, "t", arrival, trp, None, 1.0, work / 3.0, 0.0)
+            })
+            .collect()
+    }
+
+    fn cfg() -> SimConfig {
+        let mut c = SimConfig::default();
+        c.cluster.layout = "balanced".into();
+        c.engine.iteration_period = 25;
+        c
+    }
+
+    #[test]
+    fn sja_central_completes_and_atomizes() {
+        let spec = [(5.0, 1500.0, 0), (8.0, 900.0, 100), (15.0, 1200.0, 200)];
+        let m = SimEngine::new(cfg(), Box::new(SjaCentralScheduler::new()))
+            .run(jobs_spec(&spec))
+            .metrics;
+        assert_eq!(m.unfinished, 0, "{}", m.summary());
+        assert!(
+            m.jobs.iter().any(|j| j.subjobs > 1),
+            "atomization must split at least one job"
+        );
+    }
+
+    #[test]
+    fn themis_completes_and_balances() {
+        let spec = [(5.0, 2000.0, 0), (5.0, 2000.0, 0), (5.0, 2000.0, 0)];
+        let m = SimEngine::new(cfg(), Box::new(ThemisLikeScheduler::new()))
+            .run(jobs_spec(&spec))
+            .metrics;
+        assert_eq!(m.unfinished, 0, "{}", m.summary());
+        // Symmetric jobs -> high fairness.
+        assert!(m.jain_fairness().unwrap() > 0.8, "jain {}", m.jain_fairness().unwrap());
+    }
+
+    #[test]
+    fn ftf_prefers_older_jobs() {
+        let js = jobs_spec(&[(5.0, 1000.0, 0), (5.0, 1000.0, 500)]);
+        let f0 = ThemisLikeScheduler::ftf(&js[0], 1000);
+        let f1 = ThemisLikeScheduler::ftf(&js[1], 1000);
+        assert!(f0 > f1, "older job is worse off: {f0} vs {f1}");
+    }
+
+    #[test]
+    fn carve_respects_window_and_tau_min() {
+        let mut j = jobs_spec(&[(5.0, 10_000.0, 0)]).remove(0);
+        j.state = crate::job::JobState::Active;
+        let w = Window {
+            slice: 0,
+            capacity_gb: 10.0,
+            speed: 1.0,
+            interval: Interval::new(100, 600),
+        };
+        let cfg = BaselineConfig::default();
+        let commits = carve_atoms(&j, &w, &cfg, 8);
+        assert!(!commits.is_empty());
+        let mut prev_end = 100;
+        for c in &commits {
+            assert!(c.interval.start >= prev_end);
+            assert!(c.interval.end <= 600);
+            assert!(c.interval.len() >= cfg.tau_min);
+            prev_end = c.interval.end;
+        }
+    }
+
+    #[test]
+    fn carve_nothing_for_unsafe_window() {
+        let mut j = jobs_spec(&[(15.0, 1000.0, 0)]).remove(0);
+        j.state = crate::job::JobState::Active;
+        let w = Window {
+            slice: 0,
+            capacity_gb: 5.0,
+            speed: 1.0,
+            interval: Interval::new(0, 1000),
+        };
+        assert!(carve_atoms(&j, &w, &BaselineConfig::default(), 4).is_empty());
+    }
+}

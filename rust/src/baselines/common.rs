@@ -1,0 +1,168 @@
+//! Shared placement logic for the baseline schedulers.
+
+use crate::job::Job;
+use crate::mig::Cluster;
+use crate::sim::Commitment;
+use crate::types::{Duration, Interval, SliceId, Time};
+
+/// Baseline policy knobs (kept deliberately small: baselines are the
+/// paper's comparison strawmen, not the contribution).
+#[derive(Debug, Clone)]
+pub struct BaselineConfig {
+    /// Idle-window search horizon (ticks).
+    pub horizon: Duration,
+    /// Probabilistic safety bound θ (same contract as JASDA's §4.1(a)).
+    pub theta: f64,
+    /// Declared-duration quantile.
+    pub duration_quantile: f64,
+    /// FMP discretization bins for safety checks.
+    pub fmp_bins: usize,
+    /// Minimum placement duration (matches JASDA's τ_min for fairness).
+    pub tau_min: Duration,
+}
+
+impl Default for BaselineConfig {
+    fn default() -> Self {
+        BaselineConfig {
+            horizon: 200_000,
+            theta: 0.05,
+            duration_quantile: 0.9,
+            fmp_bins: 64,
+            tau_min: 20,
+        }
+    }
+}
+
+/// Is the whole remaining execution of `job` memory-safe on a slice of
+/// `capacity_gb` at bound `theta`?
+pub fn whole_job_safe(job: &Job, capacity_gb: f64, theta: f64, bins: usize) -> bool {
+    let w0 = job.work_cursor();
+    let w1 = job.total_work();
+    if w1 - w0 <= 0.0 {
+        return false;
+    }
+    job.trp.fmp_bins(w0, w1, bins).violation_prob(capacity_gb) <= theta
+}
+
+/// Earliest monolithic placement of the job's entire pending work across
+/// all slices: returns `(slice, interval, work)` of the earliest-starting
+/// feasible reservation, preferring faster slices on start ties.
+pub fn earliest_monolithic_placement(
+    job: &Job,
+    cluster: &Cluster,
+    now: Time,
+    cfg: &BaselineConfig,
+) -> Option<(SliceId, Interval, f64)> {
+    let work = job.pending_work();
+    if work <= 1e-9 {
+        return None;
+    }
+    let mut best: Option<(SliceId, Interval, f64, f64)> = None; // + speed
+    for s in cluster.slices() {
+        if !whole_job_safe(job, s.capacity_gb(), cfg.theta, cfg.fmp_bins) {
+            continue;
+        }
+        let dur = job
+            .trp
+            .predicted_duration(work, s.speed(), cfg.duration_quantile)
+            .max(cfg.tau_min);
+        if let Some(gap) = s.timeline.earliest_gap(now, now + cfg.horizon, dur) {
+            let iv = Interval::new(gap.interval.start, gap.interval.start + dur);
+            let better = match &best {
+                None => true,
+                Some((_, b, _, bs)) => {
+                    iv.start < b.start || (iv.start == b.start && s.speed() > *bs)
+                }
+            };
+            if better {
+                best = Some((s.id, iv, work, s.speed()));
+            }
+        }
+    }
+    best.map(|(id, iv, w, _)| (id, iv, w))
+}
+
+/// Wrap a placement into an engine commitment with neutral declared
+/// features (baselines have no bidding layer).
+pub fn placement_commitment(
+    job: &Job,
+    slice: SliceId,
+    interval: Interval,
+    work: f64,
+) -> Commitment {
+    let _ = job;
+    Commitment {
+        job: job.id,
+        slice,
+        interval,
+        work,
+        declared_phi: [0.5; 4],
+        score: 0.0,
+        window_len: interval.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::JobState;
+    use crate::mig::PartitionLayout;
+    use crate::trp::{Phase, Trp};
+
+    fn job(mem: f64, work: f64) -> Job {
+        let trp = Trp { phases: vec![Phase::new(work, mem, 0.2, 0.1)], duration_cv: 0.05 };
+        let mut j = Job::new(0, "t", 0, trp, None, 1.0, work, 0.0);
+        j.state = JobState::Active;
+        j
+    }
+
+    #[test]
+    fn placement_prefers_earliest_then_fastest() {
+        let cluster = Cluster::new(1, &PartitionLayout::balanced()); // 3g+2g+2g
+        let j = job(5.0, 700.0);
+        let (slice, iv, work) =
+            earliest_monolithic_placement(&j, &cluster, 0, &BaselineConfig::default()).unwrap();
+        assert_eq!(slice, 0, "all free at t=0; fastest (3g) wins the tie");
+        assert_eq!(iv.start, 0);
+        assert_eq!(work, 700.0);
+    }
+
+    #[test]
+    fn memory_unsafe_slices_skipped() {
+        let cluster = Cluster::new(1, &PartitionLayout::balanced());
+        let j = job(15.0, 700.0); // only the 3g.20gb slice is safe
+        let (slice, _, _) =
+            earliest_monolithic_placement(&j, &cluster, 0, &BaselineConfig::default()).unwrap();
+        assert_eq!(slice, 0);
+        let j = job(25.0, 700.0); // fits nothing on `balanced`
+        assert!(
+            earliest_monolithic_placement(&j, &cluster, 0, &BaselineConfig::default()).is_none()
+        );
+    }
+
+    #[test]
+    fn busy_fast_slice_falls_back_to_slow() {
+        use crate::mig::Reservation;
+        let mut cluster = Cluster::new(1, &PartitionLayout::balanced());
+        cluster
+            .slice_mut(0)
+            .timeline
+            .reserve(Reservation { job: 9, subjob_seq: 0, interval: Interval::new(0, 100_000) })
+            .unwrap();
+        let j = job(5.0, 700.0);
+        let (slice, iv, _) =
+            earliest_monolithic_placement(&j, &cluster, 0, &BaselineConfig::default()).unwrap();
+        assert_ne!(slice, 0);
+        assert_eq!(iv.start, 0);
+    }
+
+    #[test]
+    fn finished_job_has_no_placement() {
+        let cluster = Cluster::new(1, &PartitionLayout::balanced());
+        let mut j = job(5.0, 700.0);
+        j.done_work = 700.0;
+        assert!(
+            earliest_monolithic_placement(&j, &cluster, 0, &BaselineConfig::default()).is_none()
+        );
+    }
+}

@@ -1,0 +1,55 @@
+//! Baseline schedulers (the comparison points of Table 1 and §6(a)):
+//! monolithic disciplines (FCFS/SJF/EDF/backfill), the SJA-style
+//! centralized atomizer, and a Themis-like fairness auction.
+//!
+//! All baselines run on the identical simulator substrate and safety
+//! contract as JASDA, so measured deltas isolate scheduling-model
+//! differences — exactly what Table 1 compares conceptually.
+
+pub mod atomized;
+pub mod common;
+pub mod monolithic;
+
+pub use atomized::{SjaCentralScheduler, ThemisLikeScheduler};
+pub use common::BaselineConfig;
+pub use monolithic::{Discipline, MonolithicScheduler};
+
+use crate::sim::Scheduler;
+
+/// Instantiate a scheduler by name. Knows every baseline plus `jasda`
+/// (with the supplied JASDA config). Used by the CLI and benches.
+pub fn by_name(
+    name: &str,
+    jasda_cfg: &crate::config::JasdaConfig,
+) -> Option<Box<dyn Scheduler>> {
+    match name {
+        "jasda" => Some(Box::new(crate::jasda::JasdaScheduler::new(jasda_cfg.clone()))),
+        "fcfs" => Some(Box::new(MonolithicScheduler::new(Discipline::Fcfs))),
+        "sjf" => Some(Box::new(MonolithicScheduler::new(Discipline::Sjf))),
+        "edf" => Some(Box::new(MonolithicScheduler::new(Discipline::Edf))),
+        "backfill" => Some(Box::new(MonolithicScheduler::new(Discipline::Backfill))),
+        "sja_central" => Some(Box::new(SjaCentralScheduler::new())),
+        "themis_like" => Some(Box::new(ThemisLikeScheduler::new())),
+        _ => None,
+    }
+}
+
+/// All scheduler names, JASDA first.
+pub const ALL_SCHEDULERS: [&str; 7] =
+    ["jasda", "fcfs", "sjf", "edf", "backfill", "sja_central", "themis_like"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::JasdaConfig;
+
+    #[test]
+    fn by_name_knows_all() {
+        let cfg = JasdaConfig::default();
+        for name in ALL_SCHEDULERS {
+            let s = by_name(name, &cfg).unwrap_or_else(|| panic!("unknown {name}"));
+            assert_eq!(s.name(), name);
+        }
+        assert!(by_name("nope", &cfg).is_none());
+    }
+}

@@ -1,0 +1,266 @@
+//! Monolithic baseline schedulers: jobs are indivisible units (no
+//! atomization) — the "classical centralized scheduler" family that
+//! Table 1 contrasts JASDA against, and the "treat individual jobs as
+//! indivisible, monolithic entities" limitation §2 attributes to
+//! prior auction approaches.
+//!
+//! Four queue-ordering disciplines share one placement engine:
+//! * **FCFS** — arrival order, one placement per iteration (head of line);
+//! * **SJF** — shortest remaining work first;
+//! * **EDF** — earliest deadline first (deadline-less jobs last);
+//! * **Backfill** — FCFS head placement plus conservative backfilling of
+//!   later jobs into gaps that end before the head's start.
+
+use crate::baselines::common::{
+    earliest_monolithic_placement, placement_commitment, BaselineConfig,
+};
+use crate::job::JobSet;
+use crate::mig::Cluster;
+use crate::sim::{Commitment, Rng, Scheduler};
+use crate::types::Time;
+
+/// Queue ordering discipline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Discipline {
+    /// First come, first served.
+    Fcfs,
+    /// Shortest (remaining) job first.
+    Sjf,
+    /// Earliest deadline first.
+    Edf,
+    /// FCFS + conservative backfilling.
+    Backfill,
+}
+
+/// A monolithic scheduler with a fixed discipline.
+pub struct MonolithicScheduler {
+    discipline: Discipline,
+    cfg: BaselineConfig,
+    name: &'static str,
+}
+
+impl MonolithicScheduler {
+    /// Build with the given discipline and default baseline knobs.
+    pub fn new(discipline: Discipline) -> Self {
+        Self::with_config(discipline, BaselineConfig::default())
+    }
+
+    /// Build with explicit knobs.
+    pub fn with_config(discipline: Discipline, cfg: BaselineConfig) -> Self {
+        let name = match discipline {
+            Discipline::Fcfs => "fcfs",
+            Discipline::Sjf => "sjf",
+            Discipline::Edf => "edf",
+            Discipline::Backfill => "backfill",
+        };
+        MonolithicScheduler { discipline, cfg, name }
+    }
+
+    /// Bidder ids in discipline order.
+    fn ordered_queue(&self, jobs: &JobSet) -> Vec<u32> {
+        let mut q: Vec<u32> = jobs.bidders().map(|j| j.id).collect();
+        match self.discipline {
+            Discipline::Fcfs | Discipline::Backfill => {
+                q.sort_by_key(|&id| (jobs.get(id).arrival, id));
+            }
+            Discipline::Sjf => {
+                q.sort_by(|&a, &b| {
+                    jobs.get(a)
+                        .pending_work()
+                        .total_cmp(&jobs.get(b).pending_work())
+                        .then(a.cmp(&b))
+                });
+            }
+            Discipline::Edf => {
+                q.sort_by_key(|&id| (jobs.get(id).deadline.unwrap_or(Time::MAX), id));
+            }
+        }
+        q
+    }
+}
+
+impl Scheduler for MonolithicScheduler {
+    fn name(&self) -> &str {
+        self.name
+    }
+
+    fn iterate(
+        &mut self,
+        now: Time,
+        cluster: &Cluster,
+        jobs: &mut JobSet,
+        _rng: &mut Rng,
+    ) -> Vec<Commitment> {
+        let queue = self.ordered_queue(jobs);
+        let Some(&head) = queue.first() else {
+            return vec![];
+        };
+
+        let mut commits = Vec::new();
+        // A scratch cluster clone tracks intra-iteration reservations so
+        // backfilled placements don't collide (engine applies them later).
+        let mut scratch: Option<Cluster> = None;
+
+        let head_job = jobs.get(head);
+        let head_placement = earliest_monolithic_placement(head_job, cluster, now, &self.cfg);
+        let head_start = match &head_placement {
+            Some((slice, iv, work)) => {
+                commits.push(placement_commitment(head_job, *slice, *iv, *work));
+                if self.discipline == Discipline::Backfill {
+                    let mut c = cluster.clone();
+                    c.slice_mut(*slice)
+                        .timeline
+                        .reserve(crate::mig::Reservation {
+                            job: head,
+                            subjob_seq: u32::MAX, // scratch-only marker
+                            interval: *iv,
+                        })
+                        .expect("scratch reservation");
+                    scratch = Some(c);
+                }
+                iv.start
+            }
+            // Head can't be placed: strict disciplines head-of-line block;
+            // backfill may still slot later jobs anywhere (it cannot delay
+            // a head that has no start yet within the horizon).
+            None => {
+                if self.discipline != Discipline::Backfill {
+                    return vec![];
+                }
+                scratch = Some(cluster.clone());
+                Time::MAX
+            }
+        };
+
+        if self.discipline == Discipline::Backfill {
+            let scratch = scratch.as_mut().expect("scratch cluster set");
+            for &id in queue.iter().skip(1) {
+                let job = jobs.get(id);
+                if let Some((slice, iv, work)) =
+                    earliest_monolithic_placement(job, scratch, now, &self.cfg)
+                {
+                    // Conservative: never start at/after the head's start
+                    // (can't delay the head or jump its queue position).
+                    if iv.end <= head_start {
+                        commits.push(placement_commitment(job, slice, iv, work));
+                        scratch
+                            .slice_mut(slice)
+                            .timeline
+                            .reserve(crate::mig::Reservation {
+                                job: id,
+                                subjob_seq: u32::MAX,
+                                interval: iv,
+                            })
+                            .expect("scratch reservation");
+                    }
+                }
+            }
+        }
+        commits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::job::Job;
+    use crate::sim::SimEngine;
+    use crate::trp::{Phase, Trp};
+
+    fn jobs_spec(spec: &[(f64, f64, Time)]) -> Vec<Job> {
+        spec.iter()
+            .enumerate()
+            .map(|(i, &(mem, work, arrival))| {
+                let trp =
+                    Trp { phases: vec![Phase::new(work, mem, 0.15, 0.1)], duration_cv: 0.05 };
+                Job::new(i as u32, "t", arrival, trp, None, 1.0, work, 0.0)
+            })
+            .collect()
+    }
+
+    fn cfg() -> SimConfig {
+        let mut c = SimConfig::default();
+        c.cluster.layout = "balanced".into();
+        c.engine.iteration_period = 25;
+        c
+    }
+
+    fn run(d: Discipline, jobs: Vec<Job>) -> crate::metrics::RunMetrics {
+        SimEngine::new(cfg(), Box::new(MonolithicScheduler::new(d))).run(jobs).metrics
+    }
+
+    #[test]
+    fn all_disciplines_complete_simple_workload() {
+        let spec = [(5.0, 800.0, 0), (5.0, 400.0, 50), (5.0, 1200.0, 100), (12.0, 600.0, 150)];
+        for d in [Discipline::Fcfs, Discipline::Sjf, Discipline::Edf, Discipline::Backfill] {
+            let m = run(d, jobs_spec(&spec));
+            assert_eq!(m.unfinished, 0, "{d:?}: {}", m.summary());
+            // Monolithic: exactly one subjob per job.
+            for j in &m.jobs {
+                assert_eq!(j.subjobs, 1, "{d:?} split a job");
+            }
+        }
+    }
+
+    #[test]
+    fn sjf_beats_fcfs_on_mean_jct_for_skewed_sizes() {
+        // One huge and many small jobs contend at t=0 (all need the same
+        // 20 GiB slice): SJF should get a much better mean JCT.
+        let mut spec = vec![(15.0, 20_000.0, 0)];
+        for _ in 0..6 {
+            spec.push((15.0, 500.0, 0));
+        }
+        let fcfs = run(Discipline::Fcfs, jobs_spec(&spec));
+        let sjf = run(Discipline::Sjf, jobs_spec(&spec));
+        assert_eq!(fcfs.unfinished, 0);
+        assert_eq!(sjf.unfinished, 0);
+        assert!(
+            sjf.mean_jct().unwrap() < fcfs.mean_jct().unwrap(),
+            "sjf {} vs fcfs {}",
+            sjf.mean_jct().unwrap(),
+            fcfs.mean_jct().unwrap()
+        );
+    }
+
+    #[test]
+    fn edf_orders_by_deadline() {
+        let mut jobs = jobs_spec(&[(15.0, 1000.0, 0), (15.0, 1000.0, 0)]);
+        jobs[0].deadline = Some(1_000_000);
+        jobs[1].deadline = Some(2_000); // urgent
+        let m = run(Discipline::Edf, jobs);
+        assert_eq!(m.unfinished, 0);
+        // The urgent job (1) should complete before job 0 on the big slice.
+        let c0 = m.jobs[0].completed.unwrap();
+        let c1 = m.jobs[1].completed.unwrap();
+        assert!(c1 < c0, "urgent deadline job must finish first: {c1} vs {c0}");
+    }
+
+    #[test]
+    fn backfill_fills_ahead_of_blocked_head() {
+        // Head needs 15 GiB (only slice 0). Small jobs should backfill
+        // onto other slices rather than wait behind it.
+        let spec = [
+            (15.0, 4000.0, 0),  // head hog on slice 0
+            (15.0, 4000.0, 10), // queued behind on slice 0
+            (4.0, 500.0, 20),   // small, could run anywhere
+        ];
+        let fcfs = run(Discipline::Fcfs, jobs_spec(&spec));
+        let bf = run(Discipline::Backfill, jobs_spec(&spec));
+        assert_eq!(bf.unfinished, 0);
+        let small_fcfs = fcfs.jobs[2].jct().unwrap();
+        let small_bf = bf.jobs[2].jct().unwrap();
+        assert!(
+            small_bf <= small_fcfs,
+            "backfill should not hurt the small job: {small_bf} vs {small_fcfs}"
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let spec = [(5.0, 800.0, 0), (9.0, 700.0, 30)];
+        let a = run(Discipline::Backfill, jobs_spec(&spec));
+        let b = run(Discipline::Backfill, jobs_spec(&spec));
+        assert_eq!(a.makespan, b.makespan);
+    }
+}

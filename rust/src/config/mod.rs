@@ -1,0 +1,718 @@
+//! Typed configuration for the whole framework, loadable from JSON.
+//!
+//! Every policy parameter named in the paper is exposed here: the
+//! job/system trade-off `λ` and feature weights `α_i`, `β_j` (§4.2), the
+//! safety bound `θ` and minimum subjob duration `τ_min` (§4.1), the
+//! calibration smoothing `γ` and reliability sensitivity `κ` (§4.2.1),
+//! the age weight `β_age` (§4.3), the window-selection policy (§3.1 /
+//! §5.1(c)), and the announce-ahead lead time (§5.1(a) mitigation (i)).
+//!
+//! Config files are JSON (the offline build has no serde/toml; the JSON
+//! layer is the in-crate [`crate::util::json`]). Partial configs merge
+//! over defaults; unknown keys are rejected so typos surface.
+
+use crate::types::{Duration, Time};
+use crate::util::Json;
+use std::collections::BTreeMap;
+
+/// Which idle window the scheduler announces each iteration (§3.1, §5.1(c)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WindowPolicy {
+    /// Earliest start time first — the paper's prototype default.
+    EarliestStart,
+    /// Longest window first (greedy capacity exposure).
+    LongestFirst,
+    /// Largest slack (window length × slice speed) first.
+    SlackAware,
+    /// Prefer windows on the most fragmented slice (defrag pressure).
+    FragmentationAware,
+    /// Rotate across slices round-robin to equalize exposure.
+    RoundRobin,
+}
+
+impl Default for WindowPolicy {
+    fn default() -> Self {
+        WindowPolicy::EarliestStart
+    }
+}
+
+impl WindowPolicy {
+    /// Config-file name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            WindowPolicy::EarliestStart => "earliest_start",
+            WindowPolicy::LongestFirst => "longest_first",
+            WindowPolicy::SlackAware => "slack_aware",
+            WindowPolicy::FragmentationAware => "fragmentation_aware",
+            WindowPolicy::RoundRobin => "round_robin",
+        }
+    }
+
+    /// Parse from a config-file name.
+    pub fn parse(s: &str) -> Option<WindowPolicy> {
+        Self::ALL.iter().copied().find(|p| p.name() == s)
+    }
+
+    /// All policies.
+    pub const ALL: [WindowPolicy; 5] = [
+        WindowPolicy::EarliestStart,
+        WindowPolicy::LongestFirst,
+        WindowPolicy::SlackAware,
+        WindowPolicy::FragmentationAware,
+        WindowPolicy::RoundRobin,
+    ];
+}
+
+/// Which backend evaluates the batched scoring pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScoringBackend {
+    /// Pure-rust mirror of the L1/L2 pipeline (default; allocation-free).
+    Native,
+    /// AOT-compiled JAX/Pallas artifact executed via PJRT (L1/L2 on the
+    /// hot path). Requires `make artifacts`.
+    Pjrt,
+}
+
+impl Default for ScoringBackend {
+    fn default() -> Self {
+        ScoringBackend::Native
+    }
+}
+
+// --- small JSON plumbing helpers -----------------------------------------
+
+fn expect_obj<'a>(v: &'a Json, what: &str) -> anyhow::Result<&'a BTreeMap<String, Json>> {
+    match v {
+        Json::Obj(m) => Ok(m),
+        _ => anyhow::bail!("{what} must be a JSON object"),
+    }
+}
+
+fn need_f64(v: &Json, what: &str) -> anyhow::Result<f64> {
+    v.as_f64().ok_or_else(|| anyhow::anyhow!("{what} must be a number"))
+}
+
+fn need_u64(v: &Json, what: &str) -> anyhow::Result<u64> {
+    v.as_u64().ok_or_else(|| anyhow::anyhow!("{what} must be a non-negative integer"))
+}
+
+fn need_bool(v: &Json, what: &str) -> anyhow::Result<bool> {
+    v.as_bool().ok_or_else(|| anyhow::anyhow!("{what} must be a boolean"))
+}
+
+fn need_str<'a>(v: &'a Json, what: &str) -> anyhow::Result<&'a str> {
+    v.as_str().ok_or_else(|| anyhow::anyhow!("{what} must be a string"))
+}
+
+// --------------------------------------------------------------------------
+
+/// Job-side feature weights `α_i` (must sum to ≤ 1) — paper Eq. (2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AlphaWeights {
+    /// Weight of the JCT/progress feature φ_JCT.
+    pub jct: f64,
+    /// Weight of the QoS indicator φ_QoS.
+    pub qos: f64,
+    /// Weight of the energy feature φ_energy.
+    pub energy: f64,
+    /// Weight of the slice-affinity / locality feature φ_loc.
+    pub locality: f64,
+}
+
+impl Default for AlphaWeights {
+    fn default() -> Self {
+        AlphaWeights { jct: 0.45, qos: 0.25, energy: 0.15, locality: 0.15 }
+    }
+}
+
+impl AlphaWeights {
+    /// Weights as an array in kernel order `[jct, qos, energy, locality]`.
+    pub fn as_array(&self) -> [f64; 4] {
+        [self.jct, self.qos, self.energy, self.locality]
+    }
+
+    /// Sum of weights (normalization requires ≤ 1).
+    pub fn sum(&self) -> f64 {
+        self.jct + self.qos + self.energy + self.locality
+    }
+
+    fn merge_json(&mut self, v: &Json) -> anyhow::Result<()> {
+        for (k, val) in expect_obj(v, "alpha")? {
+            let x = need_f64(val, k)?;
+            match k.as_str() {
+                "jct" => self.jct = x,
+                "qos" => self.qos = x,
+                "energy" => self.energy = x,
+                "locality" => self.locality = x,
+                other => anyhow::bail!("unknown alpha key '{other}'"),
+            }
+        }
+        Ok(())
+    }
+
+    fn to_json(self) -> Json {
+        Json::obj(vec![
+            ("jct", self.jct.into()),
+            ("qos", self.qos.into()),
+            ("energy", self.energy.into()),
+            ("locality", self.locality.into()),
+        ])
+    }
+}
+
+/// System-side feature weights `β_j` (must sum to ≤ 1) — paper Eq. (3),
+/// including the age term β_age of §4.3.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BetaWeights {
+    /// Weight of the utilization-gain feature ψ_util.
+    pub util: f64,
+    /// Weight of the memory-headroom feature ψ_mem_headroom.
+    pub headroom: f64,
+    /// Weight of the fragmentation feature ψ_frag.
+    pub frag: f64,
+    /// Weight of the age factor A_i(t) (β_age; 0 disables §4.3).
+    pub age: f64,
+}
+
+impl Default for BetaWeights {
+    fn default() -> Self {
+        BetaWeights { util: 0.45, headroom: 0.2, frag: 0.15, age: 0.2 }
+    }
+}
+
+impl BetaWeights {
+    /// Weights as an array in kernel order `[util, headroom, frag, age]`.
+    pub fn as_array(&self) -> [f64; 4] {
+        [self.util, self.headroom, self.frag, self.age]
+    }
+
+    /// Sum of weights (normalization requires ≤ 1).
+    pub fn sum(&self) -> f64 {
+        self.util + self.headroom + self.frag + self.age
+    }
+
+    fn merge_json(&mut self, v: &Json) -> anyhow::Result<()> {
+        for (k, val) in expect_obj(v, "beta")? {
+            let x = need_f64(val, k)?;
+            match k.as_str() {
+                "util" => self.util = x,
+                "headroom" => self.headroom = x,
+                "frag" => self.frag = x,
+                "age" => self.age = x,
+                other => anyhow::bail!("unknown beta key '{other}'"),
+            }
+        }
+        Ok(())
+    }
+
+    fn to_json(self) -> Json {
+        Json::obj(vec![
+            ("util", self.util.into()),
+            ("headroom", self.headroom.into()),
+            ("frag", self.frag.into()),
+            ("age", self.age.into()),
+        ])
+    }
+}
+
+/// All JASDA policy parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JasdaConfig {
+    /// Job/system trade-off λ ∈ [0,1] — Eq. (1)/(4); Table 2 sweeps this.
+    pub lambda: f64,
+    /// Job-side feature weights α.
+    pub alpha: AlphaWeights,
+    /// System-side feature weights β.
+    pub beta: BetaWeights,
+    /// Probabilistic safety bound θ — §4.1(a).
+    pub theta: f64,
+    /// Minimum subjob duration τ_min (ticks) — §4.1.
+    pub tau_min: Duration,
+    /// Calibration smoothing γ ∈ [0,1] — Eq. (5). 1 = trust declaration.
+    pub gamma: f64,
+    /// Reliability sensitivity κ > 0 — Eq. (8).
+    pub kappa: f64,
+    /// Enable ex-ante calibration + ex-post verification (§4.2.1).
+    pub calibration: bool,
+    /// Enable the age-aware fairness term (§4.3); if false the β_age
+    /// weight is ignored.
+    pub age_priority: bool,
+    /// Waiting time (ticks) at which the age factor A_i(t) saturates at 1.
+    pub age_scale: Duration,
+    /// Quantile at which jobs declare predicted durations.
+    pub duration_quantile: f64,
+    /// Window announcement policy.
+    pub window_policy: WindowPolicy,
+    /// Announce-ahead lead (ticks): windows are announced this far before
+    /// their start so jobs have generation time — §5.1(a) mitigation (i).
+    pub announce_lead: Duration,
+    /// How far ahead (ticks) the scheduler looks for idle windows.
+    pub announce_horizon: Duration,
+    /// Max variants a single job may bid per iteration (V_max, §4.6).
+    pub max_variants_per_job: usize,
+    /// FMP discretization bins per variant (T of the scoring kernel).
+    pub fmp_bins: usize,
+    /// Enable the rolling repack pass (§3.5).
+    pub repack: bool,
+    /// Extension (EXPERIMENTS.md F6): weight each variant's WIS score by
+    /// the fraction of the window it occupies. The paper's sum-based
+    /// objective (§4.4) structurally favors many short variants (each
+    /// contributes its constant feature terms to the sum); duration
+    /// weighting makes the clearing objective approximate score-weighted
+    /// *busy time* instead.
+    pub duration_weighted_clearing: bool,
+    /// Scoring backend (native mirror vs PJRT artifact).
+    pub backend: ScoringBackend,
+}
+
+impl Default for JasdaConfig {
+    fn default() -> Self {
+        JasdaConfig {
+            lambda: 0.5,
+            alpha: AlphaWeights::default(),
+            beta: BetaWeights::default(),
+            theta: 0.05,
+            tau_min: 250,
+            gamma: 0.7,
+            kappa: 4.0,
+            calibration: true,
+            age_priority: true,
+            age_scale: 30_000,
+            duration_quantile: 0.9,
+            window_policy: WindowPolicy::EarliestStart,
+            announce_lead: 0,
+            announce_horizon: 20_000,
+            max_variants_per_job: 4,
+            fmp_bins: 64,
+            repack: false,
+            duration_weighted_clearing: false,
+            backend: ScoringBackend::Native,
+        }
+    }
+}
+
+impl JasdaConfig {
+    /// Validate parameter ranges the paper's equations assume.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if !(0.0..=1.0).contains(&self.lambda) {
+            anyhow::bail!("lambda must be in [0,1], got {}", self.lambda);
+        }
+        if self.alpha.sum() > 1.0 + 1e-9 {
+            anyhow::bail!("alpha weights must sum to <= 1, got {}", self.alpha.sum());
+        }
+        if self.beta.sum() > 1.0 + 1e-9 {
+            anyhow::bail!("beta weights must sum to <= 1, got {}", self.beta.sum());
+        }
+        if !(0.0..=1.0).contains(&self.theta) {
+            anyhow::bail!("theta must be in [0,1], got {}", self.theta);
+        }
+        if !(0.0..=1.0).contains(&self.gamma) {
+            anyhow::bail!("gamma must be in [0,1], got {}", self.gamma);
+        }
+        if self.kappa <= 0.0 {
+            anyhow::bail!("kappa must be > 0, got {}", self.kappa);
+        }
+        if self.tau_min == 0 {
+            anyhow::bail!("tau_min must be > 0 (paper requires tau_min > 0)");
+        }
+        if !(0.0 < self.duration_quantile && self.duration_quantile < 1.0) {
+            anyhow::bail!("duration_quantile must be in (0,1)");
+        }
+        if self.fmp_bins == 0 || self.max_variants_per_job == 0 {
+            anyhow::bail!("fmp_bins and max_variants_per_job must be > 0");
+        }
+        Ok(())
+    }
+
+    fn merge_json(&mut self, v: &Json) -> anyhow::Result<()> {
+        for (k, val) in expect_obj(v, "jasda")? {
+            match k.as_str() {
+                "lambda" => self.lambda = need_f64(val, k)?,
+                "alpha" => self.alpha.merge_json(val)?,
+                "beta" => self.beta.merge_json(val)?,
+                "theta" => self.theta = need_f64(val, k)?,
+                "tau_min" => self.tau_min = need_u64(val, k)?,
+                "gamma" => self.gamma = need_f64(val, k)?,
+                "kappa" => self.kappa = need_f64(val, k)?,
+                "calibration" => self.calibration = need_bool(val, k)?,
+                "age_priority" => self.age_priority = need_bool(val, k)?,
+                "age_scale" => self.age_scale = need_u64(val, k)?,
+                "duration_quantile" => self.duration_quantile = need_f64(val, k)?,
+                "window_policy" => {
+                    let name = need_str(val, k)?;
+                    self.window_policy = WindowPolicy::parse(name)
+                        .ok_or_else(|| anyhow::anyhow!("unknown window_policy '{name}'"))?;
+                }
+                "announce_lead" => self.announce_lead = need_u64(val, k)?,
+                "announce_horizon" => self.announce_horizon = need_u64(val, k)?,
+                "max_variants_per_job" => {
+                    self.max_variants_per_job = need_u64(val, k)? as usize
+                }
+                "fmp_bins" => self.fmp_bins = need_u64(val, k)? as usize,
+                "repack" => self.repack = need_bool(val, k)?,
+                "duration_weighted_clearing" => {
+                    self.duration_weighted_clearing = need_bool(val, k)?
+                }
+                "backend" => {
+                    self.backend = match need_str(val, k)? {
+                        "native" => ScoringBackend::Native,
+                        "pjrt" => ScoringBackend::Pjrt,
+                        other => anyhow::bail!("unknown backend '{other}'"),
+                    }
+                }
+                other => anyhow::bail!("unknown jasda key '{other}'"),
+            }
+        }
+        Ok(())
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("lambda", self.lambda.into()),
+            ("alpha", self.alpha.to_json()),
+            ("beta", self.beta.to_json()),
+            ("theta", self.theta.into()),
+            ("tau_min", self.tau_min.into()),
+            ("gamma", self.gamma.into()),
+            ("kappa", self.kappa.into()),
+            ("calibration", self.calibration.into()),
+            ("age_priority", self.age_priority.into()),
+            ("age_scale", self.age_scale.into()),
+            ("duration_quantile", self.duration_quantile.into()),
+            ("window_policy", self.window_policy.name().into()),
+            ("announce_lead", self.announce_lead.into()),
+            ("announce_horizon", self.announce_horizon.into()),
+            ("max_variants_per_job", self.max_variants_per_job.into()),
+            ("fmp_bins", self.fmp_bins.into()),
+            ("repack", self.repack.into()),
+            ("duration_weighted_clearing", self.duration_weighted_clearing.into()),
+            (
+                "backend",
+                match self.backend {
+                    ScoringBackend::Native => "native",
+                    ScoringBackend::Pjrt => "pjrt",
+                }
+                .into(),
+            ),
+        ])
+    }
+}
+
+/// Cluster shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    /// Number of GPUs.
+    pub num_gpus: u32,
+    /// Stock partition layout name: `7x1g`, `balanced`, `heterogeneous`,
+    /// `whole`.
+    pub layout: String,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig { num_gpus: 1, layout: "heterogeneous".into() }
+    }
+}
+
+impl ClusterConfig {
+    fn merge_json(&mut self, v: &Json) -> anyhow::Result<()> {
+        for (k, val) in expect_obj(v, "cluster")? {
+            match k.as_str() {
+                "num_gpus" => self.num_gpus = need_u64(val, k)? as u32,
+                "layout" => self.layout = need_str(val, k)?.to_string(),
+                other => anyhow::bail!("unknown cluster key '{other}'"),
+            }
+        }
+        Ok(())
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("num_gpus", self.num_gpus.into()),
+            ("layout", self.layout.clone().into()),
+        ])
+    }
+}
+
+/// Workload generation parameters (details in [`crate::workload`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadConfig {
+    /// Number of jobs to generate.
+    pub num_jobs: usize,
+    /// Mean arrival rate in jobs per simulated second.
+    pub arrival_rate_per_sec: f64,
+    /// Job-class mix weights: (class name, relative weight).
+    pub mix: Vec<(String, f64)>,
+    /// Fraction of jobs that misreport utilities.
+    pub misreport_fraction: f64,
+    /// Multiplicative inflation misreporting jobs apply to declared
+    /// utilities (e.g. 0.5 declares 1.5× the honest value, clamped).
+    pub misreport_bias: f64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            num_jobs: 40,
+            arrival_rate_per_sec: 0.15,
+            mix: vec![
+                ("train_small".into(), 0.3),
+                ("train_large".into(), 0.15),
+                ("inference_burst".into(), 0.3),
+                ("analytics".into(), 0.15),
+                ("agri_pipeline".into(), 0.1),
+            ],
+            misreport_fraction: 0.0,
+            misreport_bias: 0.5,
+        }
+    }
+}
+
+impl WorkloadConfig {
+    fn merge_json(&mut self, v: &Json) -> anyhow::Result<()> {
+        for (k, val) in expect_obj(v, "workload")? {
+            match k.as_str() {
+                "num_jobs" => self.num_jobs = need_u64(val, k)? as usize,
+                "arrival_rate_per_sec" => self.arrival_rate_per_sec = need_f64(val, k)?,
+                "misreport_fraction" => self.misreport_fraction = need_f64(val, k)?,
+                "misreport_bias" => self.misreport_bias = need_f64(val, k)?,
+                "mix" => {
+                    let arr = val
+                        .as_arr()
+                        .ok_or_else(|| anyhow::anyhow!("mix must be an array"))?;
+                    let mut mix = Vec::new();
+                    for item in arr {
+                        let pair = item
+                            .as_arr()
+                            .filter(|p| p.len() == 2)
+                            .ok_or_else(|| anyhow::anyhow!("mix entries are [name, weight]"))?;
+                        mix.push((
+                            need_str(&pair[0], "mix name")?.to_string(),
+                            need_f64(&pair[1], "mix weight")?,
+                        ));
+                    }
+                    self.mix = mix;
+                }
+                other => anyhow::bail!("unknown workload key '{other}'"),
+            }
+        }
+        Ok(())
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("num_jobs", self.num_jobs.into()),
+            ("arrival_rate_per_sec", self.arrival_rate_per_sec.into()),
+            (
+                "mix",
+                Json::Arr(
+                    self.mix
+                        .iter()
+                        .map(|(n, w)| Json::Arr(vec![n.clone().into(), (*w).into()]))
+                        .collect(),
+                ),
+            ),
+            ("misreport_fraction", self.misreport_fraction.into()),
+            ("misreport_bias", self.misreport_bias.into()),
+        ])
+    }
+}
+
+/// Simulation-engine parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EngineConfig {
+    /// Scheduler iteration period in ticks (one announcement per tick).
+    pub iteration_period: Duration,
+    /// Hard simulated-time stop (safety net against livelock).
+    pub max_time: Time,
+    /// Compact reservation history older than this many ticks (0 = never).
+    pub compact_after: Duration,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { iteration_period: 50, max_time: 50_000_000, compact_after: 200_000 }
+    }
+}
+
+impl EngineConfig {
+    fn merge_json(&mut self, v: &Json) -> anyhow::Result<()> {
+        for (k, val) in expect_obj(v, "engine")? {
+            match k.as_str() {
+                "iteration_period" => self.iteration_period = need_u64(val, k)?,
+                "max_time" => self.max_time = need_u64(val, k)?,
+                "compact_after" => self.compact_after = need_u64(val, k)?,
+                other => anyhow::bail!("unknown engine key '{other}'"),
+            }
+        }
+        Ok(())
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("iteration_period", self.iteration_period.into()),
+            ("max_time", self.max_time.into()),
+            ("compact_after", self.compact_after.into()),
+        ])
+    }
+}
+
+/// Top-level configuration.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SimConfig {
+    /// Master RNG seed; a run is fully reproducible from this.
+    pub seed: u64,
+    /// Cluster shape.
+    pub cluster: ClusterConfig,
+    /// Engine parameters.
+    pub engine: EngineConfig,
+    /// JASDA policy parameters.
+    pub jasda: JasdaConfig,
+    /// Workload generation.
+    pub workload: WorkloadConfig,
+}
+
+impl SimConfig {
+    /// Load from a JSON config file. Missing fields keep their defaults;
+    /// unknown keys are rejected so typos surface immediately.
+    pub fn from_json_file(path: &std::path::Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading config {}: {e}", path.display()))?;
+        let cfg = Self::from_json_str(&text)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Parse from JSON text (defaults fill missing fields).
+    pub fn from_json_str(text: &str) -> anyhow::Result<Self> {
+        let v = Json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut cfg = SimConfig::default();
+        for (key, val) in expect_obj(&v, "top level")? {
+            match key.as_str() {
+                "seed" => cfg.seed = need_u64(val, "seed")?,
+                "cluster" => cfg.cluster.merge_json(val)?,
+                "engine" => cfg.engine.merge_json(val)?,
+                "jasda" => cfg.jasda.merge_json(val)?,
+                "workload" => cfg.workload.merge_json(val)?,
+                other => anyhow::bail!("unknown config key '{other}'"),
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Serialize to JSON (round-trips through [`Self::from_json_str`]).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seed", self.seed.into()),
+            ("cluster", self.cluster.to_json()),
+            ("engine", self.engine.to_json()),
+            ("jasda", self.jasda.to_json()),
+            ("workload", self.workload.to_json()),
+        ])
+    }
+
+    /// Validate all sections.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        self.jasda.validate()?;
+        if crate::mig::PartitionLayout::stock(&self.cluster.layout).is_none() {
+            anyhow::bail!("unknown partition layout '{}'", self.cluster.layout);
+        }
+        if self.cluster.num_gpus == 0 {
+            anyhow::bail!("num_gpus must be > 0");
+        }
+        if self.workload.arrival_rate_per_sec <= 0.0 {
+            anyhow::bail!("arrival_rate_per_sec must be > 0");
+        }
+        if self.engine.iteration_period == 0 {
+            anyhow::bail!("iteration_period must be > 0");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        SimConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn default_weights_sum_leq_one() {
+        assert!(AlphaWeights::default().sum() <= 1.0 + 1e-12);
+        assert!(BetaWeights::default().sum() <= 1.0 + 1e-12);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let mut cfg = SimConfig::default();
+        cfg.seed = 1234;
+        cfg.jasda.window_policy = WindowPolicy::SlackAware;
+        cfg.jasda.backend = ScoringBackend::Pjrt;
+        cfg.workload.mix = vec![("analytics".into(), 1.0)];
+        let text = cfg.to_json().to_string_pretty();
+        let back = SimConfig::from_json_str(&text).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let cfg =
+            SimConfig::from_json_str(r#"{"seed": 7, "jasda": {"lambda": 0.3}}"#).unwrap();
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.jasda.lambda, 0.3);
+        assert_eq!(cfg.jasda.theta, JasdaConfig::default().theta);
+        assert_eq!(cfg.cluster, ClusterConfig::default());
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        assert!(SimConfig::from_json_str(r#"{"sede": 7}"#).is_err());
+        assert!(SimConfig::from_json_str(r#"{"jasda": {"lambada": 0.3}}"#).is_err());
+        assert!(SimConfig::from_json_str(r#"{"jasda": {"window_policy": "bogus"}}"#).is_err());
+        assert!(SimConfig::from_json_str(r#"{"workload": {"mix": [["a"]]}}"#).is_err());
+    }
+
+    #[test]
+    fn window_policy_name_round_trip() {
+        for p in WindowPolicy::ALL {
+            assert_eq!(WindowPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(WindowPolicy::parse("zzz"), None);
+    }
+
+    #[test]
+    fn invalid_params_rejected() {
+        let mut cfg = SimConfig::default();
+        cfg.jasda.lambda = 1.5;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = SimConfig::default();
+        cfg.jasda.alpha.jct = 0.9; // pushes sum over 1
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = SimConfig::default();
+        cfg.jasda.tau_min = 0;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = SimConfig::default();
+        cfg.cluster.layout = "nonsense".into();
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = SimConfig::default();
+        cfg.jasda.kappa = 0.0;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = SimConfig::default();
+        cfg.jasda.gamma = -0.1;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn from_json_file_missing_path_errors() {
+        let r = SimConfig::from_json_file(std::path::Path::new("/nonexistent/x.json"));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,69 @@
+//! Protocol messages between the leader and job agents.
+//!
+//! The message vocabulary is intentionally minimal — it is exactly the
+//! information flow of the paper's interaction cycle (Fig. Algorithm 1):
+//! announcements flow down, bids flow up, awards and completion reports
+//! flow down. Agents never see other agents' bids or the global schedule
+//! (§5.1(d) information-visibility contract).
+
+use crate::job::Variant;
+use crate::mig::Window;
+use crate::types::Time;
+
+/// Leader → agent messages.
+#[derive(Debug, Clone)]
+pub enum ToAgent {
+    /// Step 1: a window `w*` is open for bidding in `round`.
+    Announce {
+        /// Round (iteration) counter.
+        round: u64,
+        /// Current scheduler time.
+        now: Time,
+        /// The announced window.
+        window: Window,
+    },
+    /// Step 5: some of the agent's variants were selected.
+    Awarded(Award),
+    /// A previously awarded subjob finished executing.
+    Completed(CompletionReport),
+    /// Tear down the agent task.
+    Shutdown,
+}
+
+/// Award notice (subset of the agent's last bid).
+#[derive(Debug, Clone)]
+pub struct Award {
+    /// Round the bid was placed in.
+    pub round: u64,
+    /// Ids (bid-local) of the winning variants.
+    pub variant_ids: Vec<u32>,
+    /// Commit time.
+    pub now: Time,
+}
+
+/// Completion report for one subjob.
+#[derive(Debug, Clone)]
+pub struct CompletionReport {
+    /// Work that was committed.
+    pub planned_work: f64,
+    /// Work actually realized (≤ planned).
+    pub realized_work: f64,
+    /// Completion time.
+    pub at: Time,
+}
+
+/// Agent → leader messages.
+#[derive(Debug, Clone)]
+pub enum AgentReply {
+    /// Step 3: the agent's bid for `round` (empty `variants` = silent).
+    Bid {
+        /// Bidding job.
+        job: u32,
+        /// Round being answered.
+        round: u64,
+        /// Eligible scored variants (may be empty).
+        variants: Vec<Variant>,
+        /// Whether the job has completed all work.
+        done: bool,
+    },
+}

@@ -1,0 +1,427 @@
+//! The bidirectional bid–response protocol runtime (paper §5.1(f) /
+//! §6(e)): JASDA as an actual distributed negotiation between a leader
+//! thread (the scheduler) and autonomous job-agent threads, over message
+//! channels (std::sync::mpsc; the offline build has no tokio, and the
+//! protocol is synchronous-round anyway — see DESIGN.md).
+//!
+//! The [`SimEngine`](crate::sim::SimEngine) calls job-side code as plain
+//! functions; this module is the deployment-shaped variant where jobs are
+//! *threads*: each agent owns its private job state and replies to
+//! window announcements with bids; the leader owns the cluster, trust
+//! state, clearing, and ground-truth realization. Messages are the only
+//! coupling — exactly the information-visibility contract of §5.1(d)
+//! (jobs see announced windows and their own awards, nothing else).
+
+pub mod messages;
+
+use crate::config::SimConfig;
+use crate::jasda::calibration::Calibration;
+use crate::jasda::clearing::{select_best_compatible, WisItem};
+use crate::jasda::scoring::{NativeScorer, ScoreBatch, ScorerBackend};
+use crate::jasda::window::WindowSelector;
+use crate::job::variants::generate_variants;
+use crate::job::{Job, JobState};
+use crate::mig::{Cluster, PartitionLayout, Reservation};
+use crate::sim::Rng;
+use crate::types::{JobId, Time};
+use messages::{AgentReply, Award, CompletionReport, ToAgent};
+use std::collections::BinaryHeap;
+use std::sync::mpsc;
+
+/// Outcome of a protocol run.
+#[derive(Debug, Clone)]
+pub struct ProtocolOutcome {
+    /// Rounds (announcement cycles) executed.
+    pub rounds: u64,
+    /// Announcements broadcast.
+    pub announcements: u64,
+    /// Bid messages received (silent replies excluded).
+    pub bids: u64,
+    /// Variants received in bids.
+    pub variants: u64,
+    /// Awards granted.
+    pub awards: u64,
+    /// Jobs completed.
+    pub completed_jobs: usize,
+    /// Total jobs.
+    pub total_jobs: usize,
+    /// Final virtual time.
+    pub final_time: Time,
+    /// Wall-clock duration of the run.
+    pub wall: std::time::Duration,
+}
+
+/// Job-agent thread: owns its job, answers announcements autonomously.
+fn agent_task(
+    mut job: Job,
+    cfg: crate::config::JasdaConfig,
+    rx: mpsc::Receiver<ToAgent>,
+    tx: mpsc::Sender<AgentReply>,
+) {
+    // Variants proposed in the current round, kept so awards can be
+    // resolved to work amounts (the leader echoes variant ids back).
+    let mut last_bid: Vec<crate::job::Variant> = Vec::new();
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            ToAgent::Announce { round, now, window } => {
+                if job.state == JobState::Future && job.arrival <= now {
+                    job.state = JobState::Active;
+                }
+                last_bid = generate_variants(&job, &window, &cfg);
+                let reply = AgentReply::Bid {
+                    job: job.id,
+                    round,
+                    variants: last_bid.clone(),
+                    done: job.state == JobState::Completed,
+                };
+                if tx.send(reply).is_err() {
+                    return;
+                }
+            }
+            ToAgent::Awarded(Award { round: _, variant_ids, now }) => {
+                for vid in variant_ids {
+                    if let Some(v) = last_bid.iter().find(|v| v.id == vid) {
+                        job.reserved_work += v.work.min(job.pending_work());
+                        job.last_selected = now;
+                        job.last_slice = Some(v.slice);
+                    }
+                }
+            }
+            ToAgent::Completed(CompletionReport { planned_work, realized_work, at }) => {
+                job.reserved_work = (job.reserved_work - planned_work).max(0.0);
+                job.done_work += realized_work;
+                if job.remaining_work() <= 1e-6 && job.state == JobState::Active {
+                    job.state = JobState::Completed;
+                    job.completed_at = Some(at);
+                }
+            }
+            ToAgent::Shutdown => return,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct PendingKey(Time, u64);
+
+struct PendingDone {
+    job: JobId,
+    slice: u32,
+    seq: u32,
+    reserved: crate::types::Interval,
+    realized_end: Time,
+    planned_work: f64,
+    realized_work: f64,
+    declared_phi: [f64; 4],
+}
+
+/// Run the full protocol: spawn one agent thread per job, drive
+/// announcement rounds until all jobs complete (or `max_rounds`).
+pub fn run_protocol(cfg: SimConfig, jobs: Vec<Job>, max_rounds: u64) -> ProtocolOutcome {
+    let wall0 = std::time::Instant::now();
+    let n_jobs = jobs.len();
+    let layout = PartitionLayout::stock(&cfg.cluster.layout).expect("layout");
+    let mut cluster = Cluster::new(cfg.cluster.num_gpus, &layout);
+    let mut rng = Rng::new(cfg.seed).fork(0xC00D);
+    let mut calibration =
+        Calibration::new(n_jobs, cfg.jasda.kappa, cfg.jasda.gamma, cfg.jasda.alpha.as_array());
+    let mut scorer = NativeScorer;
+    let mut selector = WindowSelector::new();
+
+    // Leader-side read-only job facts + bookkeeping.
+    let trps: Vec<crate::trp::Trp> = jobs.iter().map(|j| j.trp.clone()).collect();
+    let arrivals: Vec<Time> = jobs.iter().map(|j| j.arrival).collect();
+    let totals: Vec<f64> = jobs.iter().map(|j| j.total_work()).collect();
+    let mut remaining: Vec<f64> = totals.clone();
+    let mut last_selected: Vec<Time> = arrivals.clone();
+    let mut seq: Vec<u32> = vec![0; n_jobs];
+    let mut done: Vec<bool> = vec![false; n_jobs];
+
+    // Spawn agents.
+    let (reply_tx, reply_rx) = mpsc::channel::<AgentReply>();
+    let mut agent_tx: Vec<mpsc::Sender<ToAgent>> = Vec::with_capacity(n_jobs);
+    let mut handles = Vec::with_capacity(n_jobs);
+    for job in jobs {
+        let (tx, rx) = mpsc::channel::<ToAgent>();
+        agent_tx.push(tx);
+        let jcfg = cfg.jasda.clone();
+        let rtx = reply_tx.clone();
+        handles.push(std::thread::spawn(move || agent_task(job, jcfg, rx, rtx)));
+    }
+    drop(reply_tx);
+
+    let mut out = ProtocolOutcome {
+        rounds: 0,
+        announcements: 0,
+        bids: 0,
+        variants: 0,
+        awards: 0,
+        completed_jobs: 0,
+        total_jobs: n_jobs,
+        final_time: 0,
+        wall: std::time::Duration::ZERO,
+    };
+
+    let period = cfg.engine.iteration_period;
+    let mut now: Time = arrivals.iter().min().copied().unwrap_or(0);
+    let mut events: BinaryHeap<std::cmp::Reverse<(PendingKey, usize)>> = BinaryHeap::new();
+    let mut pending: Vec<PendingDone> = Vec::new();
+    let mut event_seq = 0u64;
+
+    for round in 0..max_rounds {
+        out.rounds = round + 1;
+        // 1. Fire due completions; report to agents + verify trust.
+        while let Some(&std::cmp::Reverse((PendingKey(t, _), idx))) = events.peek() {
+            if t > now {
+                break;
+            }
+            events.pop();
+            let p = &pending[idx];
+            remaining[p.job as usize] -= p.realized_work;
+            if p.realized_end < p.reserved.end {
+                cluster.slice_mut(p.slice).timeline.truncate(p.job, p.seq, p.realized_end);
+            }
+            // Ex-post verification (leader-side ground truth).
+            let observed = [
+                (p.realized_work / p.planned_work.max(1e-9)).clamp(0.0, 1.0)
+                    * p.declared_phi[0],
+                p.declared_phi[1],
+                p.declared_phi[2],
+                p.declared_phi[3],
+            ];
+            let h_obs: f64 = cfg
+                .jasda
+                .alpha
+                .as_array()
+                .iter()
+                .zip(&observed)
+                .map(|(a, o)| a * o)
+                .sum();
+            calibration.verify(p.job, &p.declared_phi, &observed, h_obs);
+            let report = ToAgent::Completed(CompletionReport {
+                planned_work: p.planned_work,
+                realized_work: p.realized_work,
+                at: p.realized_end,
+            });
+            let _ = agent_tx[p.job as usize].send(report);
+            if remaining[p.job as usize] <= 1e-6 && !done[p.job as usize] {
+                done[p.job as usize] = true;
+                out.completed_jobs += 1;
+            }
+        }
+        if out.completed_jobs == n_jobs {
+            break;
+        }
+
+        // 2. Announce one window to every agent.
+        let candidates = cluster.candidate_windows(
+            now + cfg.jasda.announce_lead,
+            cfg.jasda.announce_horizon,
+            cfg.jasda.tau_min,
+        );
+        let window = match selector.select(
+            cfg.jasda.window_policy,
+            &candidates,
+            &cluster,
+            now,
+            cfg.jasda.announce_horizon,
+        ) {
+            Some(w) => w,
+            None => {
+                now += period;
+                continue;
+            }
+        };
+        out.announcements += 1;
+        for tx in &agent_tx {
+            let _ = tx.send(ToAgent::Announce { round, now, window });
+        }
+
+        // 3. Collect one reply per agent (silent = empty variants).
+        let mut pool: Vec<crate::job::Variant> = Vec::new();
+        let mut replies = 0;
+        while replies < n_jobs {
+            match reply_rx.recv() {
+                Ok(AgentReply::Bid { job: _, round: r, variants, done: _ }) => {
+                    if r == round {
+                        replies += 1;
+                        if !variants.is_empty() {
+                            out.bids += 1;
+                            pool.extend(variants);
+                        }
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+        for (i, v) in pool.iter_mut().enumerate() {
+            v.id = i as u32;
+        }
+        out.variants += pool.len() as u64;
+        if pool.is_empty() {
+            now += period;
+            continue;
+        }
+
+        // 4. Score + clear (same pipeline as the in-process scheduler).
+        let mut batch = ScoreBatch::with_bins(cfg.jasda.fmp_bins);
+        batch.capacity = window.capacity_gb as f32;
+        batch.theta = cfg.jasda.theta as f32;
+        batch.lambda = cfg.jasda.lambda as f32;
+        let alpha = cfg.jasda.alpha.as_array();
+        let beta = cfg.jasda.beta.as_array();
+        batch.alpha = alpha.map(|x| x as f32);
+        batch.beta = beta.map(|x| x as f32);
+        for v in &pool {
+            let j = v.job as usize;
+            let age = if cfg.jasda.age_priority {
+                let waited = now.saturating_sub(last_selected[j]);
+                (waited as f64 / cfg.jasda.age_scale.max(1) as f64).min(1.0)
+            } else {
+                0.0
+            };
+            let (trust, hist) = if cfg.jasda.calibration {
+                (calibration.trust_weight(v.job), calibration.hist_avg(v.job))
+            } else {
+                (1.0, 0.0)
+            };
+            batch.push(
+                &v.fmp.mu,
+                &v.fmp.sigma,
+                [v.declared.phi[0], v.declared.phi[1], v.declared.phi[2], v.declared.phi[3]],
+                [v.sys.util, v.sys.frag, age],
+                trust,
+                hist,
+            );
+        }
+        let scored = scorer.score(&batch).expect("native scorer");
+        let mut items = Vec::new();
+        let mut item_to_pool = Vec::new();
+        for (i, v) in pool.iter().enumerate() {
+            if scored.eligible[i] && scored.score[i] > 0.0 {
+                items.push(WisItem { interval: v.interval, score: scored.score[i] as f64 });
+                item_to_pool.push(i);
+            }
+        }
+        let sol = select_best_compatible(&items);
+
+        // 5. Award + reserve + realize.
+        let mut per_job_awards: std::collections::HashMap<JobId, Vec<u32>> =
+            std::collections::HashMap::new();
+        for &k in &sol.selected {
+            let v = &pool[item_to_pool[k]];
+            let j = v.job as usize;
+            let work = v.work.min(remaining[j].max(0.0));
+            if work <= 1e-9 {
+                continue;
+            }
+            let s = seq[j];
+            seq[j] += 1;
+            cluster
+                .slice_mut(v.slice)
+                .timeline
+                .reserve(Reservation { job: v.job, subjob_seq: s, interval: v.interval })
+                .expect("cleared variants are non-overlapping");
+            last_selected[j] = now;
+            out.awards += 1;
+            per_job_awards.entry(v.job).or_default().push(v.id);
+
+            let speed = cluster.slice(v.slice).speed();
+            let realized_duration = trps[j].sample_duration(&mut rng, work, speed);
+            let reserved_len = v.interval.len();
+            let (realized_end, realized_work) = if realized_duration <= reserved_len {
+                (v.interval.start + realized_duration, work)
+            } else {
+                (v.interval.end, work * reserved_len as f64 / realized_duration as f64)
+            };
+            let idx = pending.len();
+            pending.push(PendingDone {
+                job: v.job,
+                slice: v.slice,
+                seq: s,
+                reserved: v.interval,
+                realized_end,
+                planned_work: work,
+                realized_work,
+                declared_phi: v.declared.phi,
+            });
+            event_seq += 1;
+            events.push(std::cmp::Reverse((PendingKey(realized_end, event_seq), idx)));
+        }
+        for (job, variant_ids) in per_job_awards {
+            let _ =
+                agent_tx[job as usize].send(ToAgent::Awarded(Award { round, variant_ids, now }));
+        }
+
+        now += period;
+    }
+
+    // Drain outstanding completions for accounting.
+    while let Some(std::cmp::Reverse((PendingKey(t, _), idx))) = events.pop() {
+        let p = &pending[idx];
+        remaining[p.job as usize] -= p.realized_work;
+        now = now.max(t);
+        if remaining[p.job as usize] <= 1e-6 && !done[p.job as usize] {
+            done[p.job as usize] = true;
+            out.completed_jobs += 1;
+        }
+    }
+
+    for tx in &agent_tx {
+        let _ = tx.send(ToAgent::Shutdown);
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    out.final_time = now;
+    out.wall = wall0.elapsed();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trp::{Phase, Trp};
+
+    fn jobs(n: u32) -> Vec<Job> {
+        (0..n)
+            .map(|i| {
+                let trp = Trp {
+                    phases: vec![Phase::new(800.0, 4.0, 0.2, 0.1)],
+                    duration_cv: 0.05,
+                };
+                Job::new(i, "p", (i as u64) * 100, trp, None, 1.0, 300.0, 0.0)
+            })
+            .collect()
+    }
+
+    fn cfg() -> SimConfig {
+        let mut c = SimConfig::default();
+        c.cluster.layout = "balanced".into();
+        c.engine.iteration_period = 25;
+        c.jasda.fmp_bins = 16;
+        c
+    }
+
+    #[test]
+    fn protocol_completes_all_jobs() {
+        let out = run_protocol(cfg(), jobs(5), 100_000);
+        assert_eq!(out.completed_jobs, 5, "{out:?}");
+        assert!(out.announcements > 0);
+        assert!(out.bids > 0);
+        assert!(out.awards >= 5);
+        assert!(out.variants >= out.bids);
+    }
+
+    #[test]
+    fn protocol_with_no_jobs_terminates() {
+        let out = run_protocol(cfg(), vec![], 10);
+        assert_eq!(out.completed_jobs, 0);
+        assert_eq!(out.total_jobs, 0);
+    }
+
+    #[test]
+    fn round_cap_respected() {
+        let out = run_protocol(cfg(), jobs(3), 5);
+        assert!(out.rounds <= 5);
+    }
+}

@@ -1,0 +1,249 @@
+//! Ex-ante calibration, ex-post verification, and reliability feedback
+//! (paper §4.2.1, Eqs. (5)–(8)).
+//!
+//! Per job the scheduler maintains:
+//! * `HistAvg(J)` — an exponentially weighted moving average of *verified*
+//!   job-side scores (scores recomputed from observed features), used as
+//!   the smoothing anchor in Eq. (5);
+//! * the expected per-variant error `E_v[ε(v)]` (Eq. (7)), a running mean
+//!   of convex per-feature deviations (Eq. (6));
+//! * the reliability coefficient `ρ_J = exp(−κ·E_v[ε(v)])` (Eq. (8)).
+//!
+//! The scheduler folds `ρ_J` into the calibration weight: the declared
+//! utility enters the composite score as
+//! `ĥ = (γ·ρ_J)·h̃ + (1 − γ·ρ_J)·HistAvg(J)` — the "feedback and
+//! long-term stability" variant described at the end of §4.2.1.
+
+use crate::sim::SubjobRecord;
+
+/// Per-job trust state.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct JobTrust {
+    /// EWMA of verified job-side scores (HistAvg in Eq. (5)).
+    pub hist_avg: f64,
+    /// Running mean of per-variant errors ε(v) (Eq. (7)).
+    pub mean_error: f64,
+    /// Number of verified variants |V_J^verified|.
+    pub verified: u64,
+    /// Reliability ρ_J ∈ (0,1] (Eq. (8)).
+    pub rho: f64,
+}
+
+impl Default for JobTrust {
+    fn default() -> Self {
+        // Neutral prior: no history, full trust, mid-scale anchor.
+        JobTrust { hist_avg: 0.5, mean_error: 0.0, verified: 0, rho: 1.0 }
+    }
+}
+
+/// Calibration engine shared by all of a scheduler's jobs.
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    /// Reliability sensitivity κ (Eq. (8)).
+    kappa: f64,
+    /// Ex-ante smoothing γ (Eq. (5)).
+    gamma: f64,
+    /// α-derived feature weights w_i for the convex error (Eq. (6));
+    /// normalized to sum to 1.
+    w: [f64; 4],
+    /// EWMA rate for HistAvg (adaptability/stability trade-off the paper
+    /// leaves open; 0.25 favors adaptation).
+    ewma: f64,
+    per_job: Vec<JobTrust>,
+}
+
+impl Calibration {
+    /// Build for `n_jobs` jobs with policy parameters `kappa`, `gamma` and
+    /// job-side weights `alpha` (normalized into the error weights w_i).
+    pub fn new(n_jobs: usize, kappa: f64, gamma: f64, alpha: [f64; 4]) -> Self {
+        let s: f64 = alpha.iter().sum();
+        let w = if s > 0.0 {
+            [alpha[0] / s, alpha[1] / s, alpha[2] / s, alpha[3] / s]
+        } else {
+            [0.25; 4]
+        };
+        Calibration { kappa, gamma, w, ewma: 0.25, per_job: vec![JobTrust::default(); n_jobs] }
+    }
+
+    /// Trust state of a job.
+    pub fn trust(&self, job: u32) -> &JobTrust {
+        &self.per_job[job as usize]
+    }
+
+    /// Calibration weight `γ·ρ_J` the scoring pipeline applies to the
+    /// declared utility (Eq. (5) with reliability feedback).
+    pub fn trust_weight(&self, job: u32) -> f64 {
+        self.gamma * self.per_job[job as usize].rho
+    }
+
+    /// Historical anchor HistAvg(J).
+    pub fn hist_avg(&self, job: u32) -> f64 {
+        self.per_job[job as usize].hist_avg
+    }
+
+    /// Per-variant error ε(v) = Σ w_i |φ_i − φ_i^observed| (Eqs. (6)–(7)
+    /// inner term). Bounded in [0,1] by convexity.
+    pub fn variant_error(&self, declared: &[f64; 4], observed: &[f64; 4]) -> f64 {
+        declared
+            .iter()
+            .zip(observed)
+            .zip(&self.w)
+            .map(|((d, o), w)| w * (d - o).abs())
+            .sum()
+    }
+
+    /// Ex-post verification of a completed subjob (Eqs. (6)–(8)): update
+    /// the job's error statistics, reliability, and HistAvg.
+    /// `h_observed` is the job-side score recomputed from observed
+    /// features (the "verified score" anchoring HistAvg).
+    pub fn verify(&mut self, job: u32, declared: &[f64; 4], observed: &[f64; 4], h_observed: f64) {
+        let eps = self.variant_error(declared, observed);
+        let t = &mut self.per_job[job as usize];
+        t.verified += 1;
+        // Running mean of ε(v) — exactly Eq. (7).
+        t.mean_error += (eps - t.mean_error) / t.verified as f64;
+        // Eq. (8).
+        t.rho = (-self.kappa * t.mean_error).exp();
+        // HistAvg: EWMA of verified scores.
+        t.hist_avg += self.ewma * (h_observed - t.hist_avg);
+    }
+
+    /// Convenience: verify from an engine [`SubjobRecord`], computing the
+    /// observed job-side score with the given α weights.
+    pub fn verify_record(&mut self, rec: &SubjobRecord, alpha: &[f64; 4]) {
+        let declared = [
+            rec.declared_phi[0],
+            rec.declared_phi[1],
+            rec.declared_phi[2],
+            rec.declared_phi[3],
+        ];
+        let observed = [
+            rec.observed_phi[0],
+            rec.observed_phi[1],
+            rec.observed_phi[2],
+            rec.observed_phi[3],
+        ];
+        let h_obs: f64 = alpha.iter().zip(&observed).map(|(a, o)| a * o).sum();
+        self.verify(rec.job, &declared, &observed, h_obs);
+    }
+
+    /// Mean reliability across jobs with history (diagnostics).
+    pub fn mean_rho(&self) -> f64 {
+        let with: Vec<f64> =
+            self.per_job.iter().filter(|t| t.verified > 0).map(|t| t.rho).collect();
+        if with.is_empty() {
+            1.0
+        } else {
+            with.iter().sum::<f64>() / with.len() as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cal() -> Calibration {
+        Calibration::new(3, 4.0, 0.7, [0.45, 0.25, 0.15, 0.15])
+    }
+
+    #[test]
+    fn error_weights_normalized() {
+        let c = cal();
+        let s: f64 = c.w.iter().sum();
+        assert!((s - 1.0).abs() < 1e-12);
+        // Degenerate alpha falls back to uniform.
+        let c0 = Calibration::new(1, 1.0, 0.5, [0.0; 4]);
+        assert_eq!(c0.w, [0.25; 4]);
+    }
+
+    #[test]
+    fn variant_error_bounds() {
+        let c = cal();
+        assert_eq!(c.variant_error(&[0.5; 4], &[0.5; 4]), 0.0);
+        let e = c.variant_error(&[1.0; 4], &[0.0; 4]);
+        assert!((e - 1.0).abs() < 1e-12, "max error is 1 by convexity");
+        let e = c.variant_error(&[0.8, 0.5, 0.5, 0.5], &[0.4, 0.5, 0.5, 0.5]);
+        assert!((e - 0.45 * 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn honest_job_keeps_full_trust() {
+        let mut c = cal();
+        for _ in 0..20 {
+            c.verify(0, &[0.6, 1.0, 0.4, 0.5], &[0.6, 1.0, 0.4, 0.5], 0.55);
+        }
+        let t = c.trust(0);
+        assert_eq!(t.verified, 20);
+        assert_eq!(t.mean_error, 0.0);
+        assert_eq!(t.rho, 1.0);
+        assert!((c.trust_weight(0) - 0.7).abs() < 1e-12, "gamma*1");
+        // HistAvg converges toward the verified score.
+        assert!((t.hist_avg - 0.55).abs() < 0.01);
+    }
+
+    #[test]
+    fn misreporter_loses_trust_monotonically() {
+        let mut c = cal();
+        let mut rhos = vec![c.trust(1).rho];
+        for _ in 0..10 {
+            // Declares 0.9 on features that realize at 0.4.
+            c.verify(1, &[0.9, 1.0, 0.9, 0.5], &[0.4, 1.0, 0.4, 0.5], 0.35);
+            rhos.push(c.trust(1).rho);
+        }
+        assert!(rhos.windows(2).all(|w| w[1] <= w[0] + 1e-12), "{rhos:?}");
+        let t = c.trust(1);
+        assert!(t.rho < 0.5, "rho should decay well below 1, got {}", t.rho);
+        assert!(t.rho > 0.0, "rho stays in (0,1]");
+        // Expected error = .45*.5 + .15*.5 = 0.30 -> rho = exp(-1.2)
+        assert!((t.mean_error - 0.30).abs() < 1e-9);
+        assert!((t.rho - (-4.0f64 * 0.30).exp()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn recovery_after_honesty() {
+        let mut c = cal();
+        for _ in 0..5 {
+            c.verify(2, &[0.9, 0.5, 0.9, 0.5], &[0.1, 0.5, 0.1, 0.5], 0.1);
+        }
+        let low = c.trust(2).rho;
+        for _ in 0..50 {
+            c.verify(2, &[0.5, 0.5, 0.5, 0.5], &[0.5, 0.5, 0.5, 0.5], 0.5);
+        }
+        let recovered = c.trust(2).rho;
+        assert!(recovered > low, "honest behavior must rebuild trust: {low} -> {recovered}");
+    }
+
+    #[test]
+    fn mean_rho_ignores_unverified() {
+        let mut c = cal();
+        assert_eq!(c.mean_rho(), 1.0);
+        c.verify(0, &[0.9; 4], &[0.1; 4], 0.1);
+        let m = c.mean_rho();
+        assert!(m < 1.0);
+        assert!((m - c.trust(0).rho).abs() < 1e-12, "only job 0 has history");
+    }
+
+    #[test]
+    fn verify_record_path() {
+        use crate::types::Interval;
+        let mut c = cal();
+        let rec = SubjobRecord {
+            job: 1,
+            slice: 0,
+            subjob_seq: 0,
+            reserved: Interval::new(0, 100),
+            realized_end: 90,
+            planned_work: 50.0,
+            realized_work: 50.0,
+            declared_phi: [0.8, 1.0, 0.6, 0.5],
+            observed_phi: [0.8, 1.0, 0.6, 0.5],
+            committed_at: 0,
+        };
+        c.verify_record(&rec, &[0.45, 0.25, 0.15, 0.15]);
+        assert_eq!(c.trust(1).verified, 1);
+        assert_eq!(c.trust(1).rho, 1.0);
+        let h_obs = 0.45 * 0.8 + 0.25 + 0.15 * 0.6 + 0.15 * 0.5;
+        assert!((c.trust(1).hist_avg - (0.5 + 0.25 * (h_obs - 0.5))).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,258 @@
+//! Per-window clearing: optimal Weighted Interval Scheduling (paper §4.4).
+//!
+//! `SelectBestCompatibleVariants` — given the pooled bid set V of one
+//! announced window, select the maximum-total-score subset of pairwise
+//! temporally non-overlapping variants. Classical DP after sorting by end
+//! time, with binary-search predecessor lookup: `O(M log M)` for `M = |V|`
+//! exactly as §4.6 claims.
+//!
+//! Intervals are half-open, so a variant ending at `t` is compatible with
+//! one starting at `t` (back-to-back chains like the worked example's
+//! `v_A1=[40,47), v_A2=[47,50)` are allowed).
+
+use crate::types::Interval;
+
+/// A scored interval entering the WIS instance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WisItem {
+    /// Execution interval `I(v)`.
+    pub interval: Interval,
+    /// Composite score `Score(v)` (must be ≥ 0; negatives are never
+    /// selected anyway under a sum objective, so we reject them).
+    pub score: f64,
+}
+
+/// Result of one clearing pass.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WisSolution {
+    /// Indices into the *input* slice, in increasing start order.
+    pub selected: Vec<usize>,
+    /// Total score of the selected set.
+    pub total_score: f64,
+}
+
+/// Solve weighted interval scheduling over `items`.
+///
+/// Returns the optimal subset as indices into `items`. Deterministic
+/// tie-breaking: when including or excluding an item yields the same
+/// total, the item is *excluded* (later-ending bids don't displace earlier
+/// structure without strict improvement).
+pub fn select_best_compatible(items: &[WisItem]) -> WisSolution {
+    let m = items.len();
+    if m == 0 {
+        return WisSolution { selected: vec![], total_score: 0.0 };
+    }
+    debug_assert!(items.iter().all(|it| it.score >= 0.0), "scores must be non-negative");
+
+    // Order by end time (stable tie-break on start then input index).
+    let mut order: Vec<usize> = (0..m).collect();
+    order.sort_by(|&a, &b| {
+        items[a]
+            .interval
+            .end
+            .cmp(&items[b].interval.end)
+            .then(items[a].interval.start.cmp(&items[b].interval.start))
+            .then(a.cmp(&b))
+    });
+    let ends: Vec<u64> = order.iter().map(|&i| items[i].interval.end).collect();
+
+    // p[k] = number of sorted items strictly before k that are compatible
+    // with item k, i.e. the count of items with end <= start_k.
+    // (half-open intervals: end == start is compatible).
+    let p: Vec<usize> = order
+        .iter()
+        .map(|&i| ends.partition_point(|&e| e <= items[i].interval.start))
+        .collect();
+
+    // dp[k] = best total using the first k sorted items.
+    let mut dp = vec![0.0f64; m + 1];
+    for k in 1..=m {
+        let item = &items[order[k - 1]];
+        let include = dp[p[k - 1]] + item.score;
+        dp[k] = if include > dp[k - 1] { include } else { dp[k - 1] };
+    }
+
+    // Backtrack.
+    let mut selected = Vec::new();
+    let mut k = m;
+    while k > 0 {
+        let item = &items[order[k - 1]];
+        let include = dp[p[k - 1]] + item.score;
+        if include > dp[k - 1] {
+            selected.push(order[k - 1]);
+            k = p[k - 1];
+        } else {
+            k -= 1;
+        }
+    }
+    selected.reverse();
+    selected.sort_by_key(|&i| items[i].interval.start);
+    WisSolution { selected, total_score: dp[m] }
+}
+
+/// Exhaustive reference solver for verification (exponential; tests only).
+#[cfg(test)]
+pub fn brute_force(items: &[WisItem]) -> f64 {
+    let m = items.len();
+    assert!(m <= 20, "brute force is exponential");
+    let mut best = 0.0f64;
+    'subset: for mask in 0u32..(1 << m) {
+        let mut total = 0.0;
+        let mut chosen: Vec<&WisItem> = Vec::new();
+        for i in 0..m {
+            if mask & (1 << i) != 0 {
+                for c in &chosen {
+                    if c.interval.overlaps(&items[i].interval) {
+                        continue 'subset;
+                    }
+                }
+                chosen.push(&items[i]);
+                total += items[i].score;
+            }
+        }
+        if total > best {
+            best = total;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn item(s: u64, e: u64, score: f64) -> WisItem {
+        WisItem { interval: Interval::new(s, e), score }
+    }
+
+    #[test]
+    fn empty_pool() {
+        let sol = select_best_compatible(&[]);
+        assert!(sol.selected.is_empty());
+        assert_eq!(sol.total_score, 0.0);
+    }
+
+    #[test]
+    fn single_item() {
+        let sol = select_best_compatible(&[item(0, 10, 0.7)]);
+        assert_eq!(sol.selected, vec![0]);
+        assert!((sol.total_score - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_worked_example_table3() {
+        // Table 3: v_A1=[40,47) score .67, v_A2=[47,50) score .64,
+        // v_B1=[40,50) score .72. Optimal = {v_A1, v_A2}, total 1.31.
+        let pool = [item(40, 47, 0.67), item(47, 50, 0.64), item(40, 50, 0.72)];
+        let sol = select_best_compatible(&pool);
+        assert_eq!(sol.selected, vec![0, 1], "must pick the A-chain over B");
+        assert!((sol.total_score - 1.31).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prefers_single_big_when_it_wins() {
+        let pool = [item(40, 47, 0.3), item(47, 50, 0.3), item(40, 50, 0.72)];
+        let sol = select_best_compatible(&pool);
+        assert_eq!(sol.selected, vec![2]);
+        assert!((sol.total_score - 0.72).abs() < 1e-12);
+    }
+
+    #[test]
+    fn back_to_back_is_compatible() {
+        let pool = [item(0, 10, 1.0), item(10, 20, 1.0), item(20, 30, 1.0)];
+        let sol = select_best_compatible(&pool);
+        assert_eq!(sol.selected, vec![0, 1, 2]);
+        assert!((sol.total_score - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn identical_intervals_take_best() {
+        let pool = [item(0, 10, 0.4), item(0, 10, 0.9), item(0, 10, 0.6)];
+        let sol = select_best_compatible(&pool);
+        assert_eq!(sol.selected, vec![1]);
+    }
+
+    #[test]
+    fn selected_indices_point_into_input_and_are_start_sorted() {
+        let pool = [item(50, 60, 0.5), item(0, 10, 0.5), item(20, 30, 0.5)];
+        let sol = select_best_compatible(&pool);
+        assert_eq!(sol.selected, vec![1, 2, 0]);
+        let starts: Vec<u64> = sol.selected.iter().map(|&i| pool[i].interval.start).collect();
+        assert!(starts.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn no_overlap_in_solution() {
+        let pool = [
+            item(0, 10, 0.9),
+            item(5, 15, 0.9),
+            item(10, 20, 0.9),
+            item(15, 25, 0.9),
+            item(20, 30, 0.9),
+        ];
+        let sol = select_best_compatible(&pool);
+        for w in sol.selected.windows(2) {
+            assert!(!pool[w[0]].interval.overlaps(&pool[w[1]].interval));
+        }
+        assert_eq!(sol.selected, vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn matches_brute_force_exhaustive_random() {
+        // Deterministic pseudo-random pools checked against brute force.
+        let mut state = 0x1234_5678_9abc_def0u64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        for trial in 0..200 {
+            let n = 1 + (next() % 12) as usize;
+            let items: Vec<WisItem> = (0..n)
+                .map(|_| {
+                    let s = next() % 80;
+                    let len = 1 + next() % 30;
+                    let score = (next() % 1000) as f64 / 1000.0;
+                    item(s, s + len, score)
+                })
+                .collect();
+            let sol = select_best_compatible(&items);
+            let best = brute_force(&items);
+            assert!(
+                (sol.total_score - best).abs() < 1e-9,
+                "trial {trial}: dp {} vs brute {best} on {items:?}",
+                sol.total_score
+            );
+            // And the reported selection is consistent + feasible.
+            let sum: f64 = sol.selected.iter().map(|&i| items[i].score).sum();
+            assert!((sum - sol.total_score).abs() < 1e-9);
+            for i in 0..sol.selected.len() {
+                for j in (i + 1)..sol.selected.len() {
+                    assert!(!items[sol.selected[i]]
+                        .interval
+                        .overlaps(&items[sol.selected[j]].interval));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn large_pool_scales() {
+        // 100k items solved quickly — the O(M log M) claim in practice.
+        let items: Vec<WisItem> = (0..100_000u64)
+            .map(|i| {
+                let s = (i * 7919) % 1_000_000;
+                item(s, s + 50 + (i % 97), 0.1 + ((i % 89) as f64) / 100.0)
+            })
+            .collect();
+        let t0 = std::time::Instant::now();
+        let sol = select_best_compatible(&items);
+        assert!(sol.total_score > 0.0);
+        assert!(
+            t0.elapsed().as_millis() < 2000,
+            "100k-item WIS took {:?}",
+            t0.elapsed()
+        );
+    }
+}

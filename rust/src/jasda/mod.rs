@@ -1,0 +1,21 @@
+//! The JASDA core: the paper's contribution.
+//!
+//! * [`window`] — window announcement policies (§3.1, §5.1(c));
+//! * [`scoring`] — the normalized composite scoring pipeline (§4.2) and
+//!   the pluggable backend abstraction (native mirror vs PJRT artifact);
+//! * [`calibration`] — ex-ante calibration, ex-post verification, and
+//!   reliability feedback (§4.2.1);
+//! * [`clearing`] — optimal per-window WIS selection (§4.4);
+//! * [`scheduler`] — the full interaction cycle (Algorithm 1).
+
+pub mod calibration;
+pub mod clearing;
+pub mod scheduler;
+pub mod scoring;
+pub mod window;
+
+pub use calibration::{Calibration, JobTrust};
+pub use clearing::{select_best_compatible, WisItem, WisSolution};
+pub use scheduler::JasdaScheduler;
+pub use scoring::{NativeScorer, ScoreBatch, ScoreOutput, ScorerBackend};
+pub use window::WindowSelector;

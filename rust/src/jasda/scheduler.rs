@@ -1,0 +1,423 @@
+//! The JASDA scheduling loop — paper Algorithm 1, one full interaction
+//! cycle per engine iteration:
+//!
+//! 1. **Window announcement** (§3.1): pick one idle time–capacity window
+//!    via the configured [`WindowSelector`] policy.
+//! 2. **Job-side variant generation** (§3.2): every active job
+//!    autonomously generates eligible, safe-by-construction variants
+//!    (or stays silent).
+//! 3. **Bid submission** (§3.3): variants with declared utilities pool
+//!    into the iteration's bid set V.
+//! 4. **Scheduler clearing** (§3.4/§4.4): the scoring backend evaluates
+//!    the normalized composite score (Eq. (4)) with calibration (Eq. (5))
+//!    and age fairness (§4.3); WIS selects the optimal non-overlapping
+//!    subset.
+//! 5. **Commit and advance** (§3.5): selected variants become engine
+//!    commitments; ex-post verification feeds back on completion.
+
+use crate::config::JasdaConfig;
+use crate::jasda::calibration::Calibration;
+use crate::jasda::clearing::{select_best_compatible, WisItem};
+use crate::jasda::scoring::{NativeScorer, ScoreBatch, ScorerBackend};
+use crate::jasda::window::WindowSelector;
+use crate::job::variants::{generate_variants, Variant};
+use crate::job::JobSet;
+use crate::mig::{Cluster, Window};
+use crate::sim::{Commitment, Rng, Scheduler, SubjobRecord};
+use crate::types::{JobId, Time};
+
+/// Internal counters exposed through [`Scheduler::stats`].
+#[derive(Debug, Default, Clone)]
+struct JasdaStats {
+    iterations: u64,
+    windows_announced: u64,
+    iterations_with_bids: u64,
+    variants_submitted: u64,
+    variants_eligible: u64,
+    variants_selected: u64,
+    scoring_ns: u64,
+    clearing_ns: u64,
+    max_pool: usize,
+    repack_iterations: u64,
+}
+
+/// The JASDA scheduler.
+pub struct JasdaScheduler {
+    cfg: JasdaConfig,
+    selector: WindowSelector,
+    scorer: Box<dyn ScorerBackend>,
+    calibration: Option<Calibration>,
+    stats: JasdaStats,
+}
+
+impl JasdaScheduler {
+    /// Build with the default native scoring backend.
+    pub fn new(cfg: JasdaConfig) -> Self {
+        Self::with_scorer(cfg, Box::new(NativeScorer))
+    }
+
+    /// Build with an explicit scoring backend (e.g. the PJRT artifact).
+    pub fn with_scorer(cfg: JasdaConfig, scorer: Box<dyn ScorerBackend>) -> Self {
+        cfg.validate().expect("invalid JASDA config");
+        JasdaScheduler {
+            cfg,
+            selector: WindowSelector::new(),
+            scorer,
+            calibration: None,
+            stats: JasdaStats::default(),
+        }
+    }
+
+    /// Access the policy config.
+    pub fn config(&self) -> &JasdaConfig {
+        &self.cfg
+    }
+
+    /// Current mean reliability across verified jobs (diagnostics).
+    pub fn mean_rho(&self) -> f64 {
+        self.calibration.as_ref().map_or(1.0, |c| c.mean_rho())
+    }
+
+    /// Per-job reliability ρ_J (1.0 until the job has verified history).
+    pub fn rho(&self, job: JobId) -> f64 {
+        self.calibration.as_ref().map_or(1.0, |c| c.trust(job).rho)
+    }
+
+    fn ensure_calibration(&mut self, n_jobs: usize) {
+        if self.calibration.is_none() {
+            self.calibration = Some(Calibration::new(
+                n_jobs,
+                self.cfg.kappa,
+                self.cfg.gamma,
+                self.cfg.alpha.as_array(),
+            ));
+        }
+    }
+
+    /// Steps 2–3: collect the iteration's bid pool for `window`.
+    fn collect_bids(&mut self, window: &Window, jobs: &mut JobSet) -> Vec<Variant> {
+        let bidder_ids: Vec<JobId> = jobs.bidders().map(|j| j.id).collect();
+        let mut pool = Vec::new();
+        for id in bidder_ids {
+            let vs = generate_variants(jobs.get(id), window, &self.cfg);
+            if !vs.is_empty() {
+                jobs.get_mut(id).bids_submitted += 1;
+                pool.extend(vs);
+            }
+        }
+        for (i, v) in pool.iter_mut().enumerate() {
+            v.id = i as u32;
+        }
+        pool
+    }
+
+    /// Step 4a: score the pool with the configured backend.
+    fn score_pool(&mut self, window: &Window, pool: &[Variant], jobs: &JobSet, now: Time) -> ScoreBatch {
+        let mut batch = ScoreBatch::with_bins(self.cfg.fmp_bins);
+        batch.capacity = window.capacity_gb as f32;
+        batch.theta = self.cfg.theta as f32;
+        batch.lambda = self.cfg.lambda as f32;
+        let alpha = self.cfg.alpha.as_array();
+        let beta = self.cfg.beta.as_array();
+        batch.alpha = [alpha[0] as f32, alpha[1] as f32, alpha[2] as f32, alpha[3] as f32];
+        batch.beta = [beta[0] as f32, beta[1] as f32, beta[2] as f32, beta[3] as f32];
+
+        for v in pool {
+            let job = jobs.get(v.job);
+            let age = if self.cfg.age_priority {
+                job.age_factor(now, self.cfg.age_scale)
+            } else {
+                0.0
+            };
+            let (trust, hist) = if self.cfg.calibration {
+                let cal = self.calibration.as_ref().expect("calibration initialized");
+                (cal.trust_weight(v.job), cal.hist_avg(v.job))
+            } else {
+                (1.0, 0.0)
+            };
+            let phi = [
+                v.declared.phi[0],
+                v.declared.phi[1],
+                v.declared.phi[2],
+                v.declared.phi[3],
+            ];
+            batch.push(
+                &v.fmp.mu,
+                &v.fmp.sigma,
+                phi,
+                [v.sys.util, v.sys.frag, age],
+                trust,
+                hist,
+            );
+        }
+        batch
+    }
+}
+
+impl Scheduler for JasdaScheduler {
+    fn name(&self) -> &str {
+        "jasda"
+    }
+
+    fn iterate(
+        &mut self,
+        now: Time,
+        cluster: &Cluster,
+        jobs: &mut JobSet,
+        _rng: &mut Rng,
+    ) -> Vec<Commitment> {
+        self.stats.iterations += 1;
+        self.ensure_calibration(jobs.len());
+
+        // Step 1: window announcement. If an announced window draws no
+        // bids at all (the "sparsity" failure mode of §5.1(a)), the
+        // scheduler immediately announces the next candidate window in
+        // policy order rather than idling the whole iteration — otherwise
+        // a policy like earliest-start can livelock on a slice no waiting
+        // job fits. Cost stays bounded by the candidate count.
+        let from = now + self.cfg.announce_lead;
+        let mut candidates =
+            cluster.candidate_windows(from, self.cfg.announce_horizon, self.cfg.tau_min);
+        // Rolling repack (§3.5): the paper triggers a defragmentation
+        // step "when residual gaps become too small for further
+        // allocation". We count idle residues shorter than τ_min across
+        // the announce horizon (they can never be allocated); when
+        // several have accumulated, announcements are redirected to the
+        // most fragmented slice so bids consolidate its gaps.
+        let policy = if self.cfg.repack {
+            let to = now.saturating_add(self.cfg.announce_horizon);
+            let unusable: usize = cluster
+                .slices()
+                .iter()
+                .map(|s| {
+                    s.timeline
+                        .idle_gaps(now, to, 1)
+                        .iter()
+                        .filter(|g| g.interval.len() < self.cfg.tau_min)
+                        .count()
+                })
+                .sum();
+            if unusable >= 3 {
+                self.stats.repack_iterations += 1;
+                crate::config::WindowPolicy::FragmentationAware
+            } else {
+                self.cfg.window_policy
+            }
+        } else {
+            self.cfg.window_policy
+        };
+        let (window, pool) = loop {
+            let window = match self.selector.select(
+                policy,
+                &candidates,
+                cluster,
+                now,
+                self.cfg.announce_horizon,
+            ) {
+                Some(w) => w,
+                None => return vec![],
+            };
+            self.stats.windows_announced += 1;
+
+            // Steps 2–3: job-side generation + bid pooling.
+            let pool = self.collect_bids(&window, jobs);
+            if !pool.is_empty() {
+                break (window, pool);
+            }
+            // Silent window: drop it and try the next candidate.
+            candidates.retain(|c| !(c.slice == window.slice && c.interval == window.interval));
+        };
+        self.stats.iterations_with_bids += 1;
+        self.stats.variants_submitted += pool.len() as u64;
+        self.stats.max_pool = self.stats.max_pool.max(pool.len());
+
+        // Step 4a: composite scoring (Eq. (4) + calibration + age).
+        let t0 = std::time::Instant::now();
+        let batch = self.score_pool(&window, &pool, jobs, now);
+        let out = self.scorer.score(&batch).expect("scoring backend failed");
+        self.stats.scoring_ns += t0.elapsed().as_nanos() as u64;
+
+        // Step 4b: optimal per-window clearing (WIS).
+        let t1 = std::time::Instant::now();
+        let mut items = Vec::with_capacity(pool.len());
+        let mut item_to_pool = Vec::with_capacity(pool.len());
+        let wlen = window.delta_t().max(1) as f64;
+        for (i, v) in pool.iter().enumerate() {
+            if out.eligible[i] && out.score[i] > 0.0 {
+                // Optional duration weighting (EXPERIMENTS.md F6): under
+                // the paper's plain sum objective, many short variants
+                // dominate few long ones; weighting by window share makes
+                // the objective score-weighted busy time.
+                let w = if self.cfg.duration_weighted_clearing {
+                    v.duration() as f64 / wlen
+                } else {
+                    1.0
+                };
+                items.push(WisItem { interval: v.interval, score: out.score[i] as f64 * w });
+                item_to_pool.push(i);
+            }
+        }
+        self.stats.variants_eligible += items.len() as u64;
+        let sol = select_best_compatible(&items);
+        self.stats.clearing_ns += t1.elapsed().as_nanos() as u64;
+        self.stats.variants_selected += sol.selected.len() as u64;
+
+        // Step 5: commit.
+        sol.selected
+            .iter()
+            .map(|&k| {
+                let v = &pool[item_to_pool[k]];
+                Commitment {
+                    job: v.job,
+                    slice: v.slice,
+                    interval: v.interval,
+                    work: v.work,
+                    declared_phi: v.declared.phi,
+                    score: out.score[item_to_pool[k]] as f64,
+                    window_len: window.delta_t(),
+                }
+            })
+            .collect()
+    }
+
+    fn on_subjob_complete(&mut self, rec: &SubjobRecord) {
+        if self.cfg.calibration {
+            if let Some(cal) = self.calibration.as_mut() {
+                cal.verify_record(rec, &self.cfg.alpha.as_array());
+            }
+        }
+    }
+
+    fn stats(&self) -> crate::util::Json {
+        crate::util::Json::obj(vec![
+            ("scorer", self.scorer.name().into()),
+            ("iterations", self.stats.iterations.into()),
+            ("windows_announced", self.stats.windows_announced.into()),
+            ("iterations_with_bids", self.stats.iterations_with_bids.into()),
+            ("variants_submitted", self.stats.variants_submitted.into()),
+            ("variants_eligible", self.stats.variants_eligible.into()),
+            ("variants_selected", self.stats.variants_selected.into()),
+            ("scoring_ns", self.stats.scoring_ns.into()),
+            ("clearing_ns", self.stats.clearing_ns.into()),
+            ("max_pool", self.stats.max_pool.into()),
+            ("repack_iterations", self.stats.repack_iterations.into()),
+            ("mean_rho", self.mean_rho().into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::job::Job;
+    use crate::sim::SimEngine;
+    use crate::trp::{Phase, Trp};
+
+    fn jobs(n: u32, mem: f64, work: f64) -> Vec<Job> {
+        (0..n)
+            .map(|i| {
+                let trp = Trp {
+                    phases: vec![
+                        Phase::new(work * 0.2, mem * 0.7, 0.2, 0.5),
+                        Phase::new(work * 0.8, mem, 0.3, 0.1),
+                    ],
+                    duration_cv: 0.08,
+                };
+                Job::new(i, "test", (i as u64) * 200, trp, None, 1.0, work / 4.0, 0.0)
+            })
+            .collect()
+    }
+
+    fn cfg() -> SimConfig {
+        let mut c = SimConfig::default();
+        c.cluster.layout = "balanced".into();
+        c.engine.iteration_period = 25;
+        c.jasda.fmp_bins = 16;
+        c
+    }
+
+    #[test]
+    fn jasda_completes_workload() {
+        let c = cfg();
+        let sched = JasdaScheduler::new(c.jasda.clone());
+        let out = SimEngine::new(c, Box::new(sched)).run(jobs(6, 6.0, 2000.0));
+        assert_eq!(out.metrics.unfinished, 0, "summary: {}", out.metrics.summary());
+        assert!(out.metrics.utilization > 0.0);
+        let stats = &out.scheduler_stats;
+        let g = |k: &str| stats.get(k).unwrap().as_u64().unwrap();
+        assert!(g("variants_submitted") > 0);
+        assert!(g("variants_selected") >= 6);
+        assert!(g("variants_eligible") <= g("variants_submitted"));
+    }
+
+    #[test]
+    fn jasda_deterministic() {
+        let run = || {
+            let c = cfg();
+            let sched = JasdaScheduler::new(c.jasda.clone());
+            SimEngine::new(c, Box::new(sched)).run(jobs(5, 6.0, 1500.0)).metrics
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.total_commits, b.total_commits);
+    }
+
+    #[test]
+    fn memory_hungry_jobs_avoid_small_slices() {
+        // 18 GiB jobs can only run on the 3g.20gb slice of `balanced`.
+        let c = cfg();
+        let sched = JasdaScheduler::new(c.jasda.clone());
+        let out = SimEngine::new(c, Box::new(sched)).run(jobs(3, 17.0, 1200.0));
+        assert_eq!(out.metrics.unfinished, 0);
+        // All reservations must be on slice 0 (the 20 GiB one).
+        for s in out.cluster.slices() {
+            if s.capacity_gb() < 17.0 {
+                assert!(
+                    s.timeline.is_empty(),
+                    "unsafe slice {} ({} GiB) received work",
+                    s.id,
+                    s.capacity_gb()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn age_priority_rescues_starved_class() {
+        // Two heavy jobs + one light job contending on one small cluster;
+        // with age priority the light job cannot be starved forever.
+        let mut c = cfg();
+        c.jasda.age_priority = true;
+        c.jasda.age_scale = 2_000;
+        let sched = JasdaScheduler::new(c.jasda.clone());
+        let out = SimEngine::new(c, Box::new(sched)).run(jobs(8, 8.0, 3000.0));
+        assert_eq!(out.metrics.unfinished, 0);
+        assert!(out.metrics.max_starvation() < 1_000_000);
+    }
+
+    #[test]
+    fn calibration_runs_and_reports_rho() {
+        let c = cfg();
+        let mut js = jobs(4, 6.0, 1500.0);
+        js[1].misreport_bias = 0.8; // one liar
+        let sched = JasdaScheduler::new(c.jasda.clone());
+        let out = SimEngine::new(c, Box::new(sched)).run(js);
+        assert_eq!(out.metrics.unfinished, 0);
+        let rho = out.scheduler_stats.get("mean_rho").unwrap().as_f64().unwrap();
+        assert!(rho > 0.0 && rho <= 1.0);
+        assert!(rho < 1.0, "a misreporting job must dent mean reliability, got {rho}");
+    }
+
+    #[test]
+    fn no_bids_no_commitments() {
+        let c = cfg();
+        let mut sched = JasdaScheduler::new(c.jasda.clone());
+        let layout = crate::mig::PartitionLayout::balanced();
+        let cluster = Cluster::new(1, &layout);
+        let mut empty = JobSet::new(vec![]);
+        let mut rng = Rng::new(1);
+        let commits = sched.iterate(0, &cluster, &mut empty, &mut rng);
+        assert!(commits.is_empty());
+    }
+}

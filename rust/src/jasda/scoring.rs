@@ -1,0 +1,328 @@
+//! The composite scoring pipeline (paper §4.2, Eqs. (1)–(5)) as a batched
+//! computation, plus the pluggable backend abstraction.
+//!
+//! One scheduling iteration pools M variant bids; each variant carries a
+//! T-bin FMP `(μ, σ)` matrix and its normalized feature vectors. The
+//! pipeline computes, per variant:
+//!
+//! 1. **Safety** — `viol = 1 − Π_t Φ((c_k − μ_t)/σ_t)` (eligibility §4.1a);
+//! 2. **Headroom** — `ψ_mem = mean_t clip((c_k − μ_t)/c_k, 0, 1)`;
+//! 3. **Calibrated job utility** — `ĥ = trust·h̃ + (1−trust)·HistAvg`
+//!    with `h̃ = Σ α_i φ_i` and `trust = γ·ρ_J` (Eq. (5) with the ρ_J
+//!    feedback of §4.2.1 folded into the smoothing weight);
+//! 4. **System utility** — `f̃ = β·[ψ_util, ψ_mem, ψ_frag, A_i(t)]`;
+//! 5. **Score** — `λ·ĥ + (1−λ)·f̃`, zeroed for ineligible/padded lanes.
+//!
+//! This exact pipeline (same erf polynomial, f32 arithmetic) is what the
+//! L1 Pallas kernel computes; [`NativeScorer`] is the rust mirror used by
+//! default and in parity tests against the PJRT artifact.
+
+
+/// Numerical floor for σ, shared with the kernel.
+pub const SIGMA_EPS: f32 = 1e-6;
+
+/// One batch of variants to score. Row-major `[M, T]` FMP matrices plus
+/// per-variant feature vectors; scalar policy parameters ride along.
+#[derive(Debug, Clone, Default)]
+pub struct ScoreBatch {
+    /// Number of (real) variants M.
+    pub m: usize,
+    /// FMP bins per variant T.
+    pub t: usize,
+    /// Mean memory per bin, `[M*T]` row-major (GiB).
+    pub mu: Vec<f32>,
+    /// Memory std per bin, `[M*T]` row-major (GiB).
+    pub sigma: Vec<f32>,
+    /// Declared job features φ = [jct, qos, energy, locality], `[M*4]`.
+    pub phi: Vec<f32>,
+    /// System features [ψ_util, ψ_frag, A_i(t)], `[M*3]` (headroom is
+    /// computed in-pipeline from the FMP).
+    pub psi: Vec<f32>,
+    /// Per-variant calibration weight `trust = γ·ρ_J ∈ [0,1]`, `[M]`.
+    pub trust: Vec<f32>,
+    /// Per-variant historical average of verified scores, `[M]`.
+    pub hist: Vec<f32>,
+    /// Slice capacity c_k (GiB).
+    pub capacity: f32,
+    /// Safety bound θ.
+    pub theta: f32,
+    /// Job/system trade-off λ.
+    pub lambda: f32,
+    /// Job-side weights α (order [jct, qos, energy, locality]).
+    pub alpha: [f32; 4],
+    /// System-side weights β (order [util, headroom, frag, age]).
+    pub beta: [f32; 4],
+}
+
+impl ScoreBatch {
+    /// Allocate an empty batch with the given FMP bin count.
+    pub fn with_bins(t: usize) -> Self {
+        ScoreBatch { t, ..Default::default() }
+    }
+
+    /// Append one variant row. `fmp_mu`/`fmp_sigma` must have length `t`.
+    pub fn push(
+        &mut self,
+        fmp_mu: &[f64],
+        fmp_sigma: &[f64],
+        phi: [f64; 4],
+        psi: [f64; 3],
+        trust: f64,
+        hist: f64,
+    ) {
+        assert_eq!(fmp_mu.len(), self.t, "FMP bin mismatch");
+        assert_eq!(fmp_sigma.len(), self.t);
+        self.mu.extend(fmp_mu.iter().map(|&x| x as f32));
+        self.sigma.extend(fmp_sigma.iter().map(|&x| x as f32));
+        self.phi.extend(phi.iter().map(|&x| x as f32));
+        self.psi.extend(psi.iter().map(|&x| x as f32));
+        self.trust.push(trust as f32);
+        self.hist.push(hist as f32);
+        self.m += 1;
+    }
+
+    /// True when the batch has no rows.
+    pub fn is_empty(&self) -> bool {
+        self.m == 0
+    }
+}
+
+/// Scores and diagnostics for a batch, row-aligned with the input.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ScoreOutput {
+    /// Composite scores `Score(v) ∈ [0,1]`; 0 for ineligible rows.
+    pub score: Vec<f32>,
+    /// Safety violation probabilities.
+    pub violation: Vec<f32>,
+    /// Mean memory headroom ψ_mem per row.
+    pub headroom: Vec<f32>,
+    /// Eligibility mask (violation ≤ θ).
+    pub eligible: Vec<bool>,
+}
+
+/// A scoring backend: either the native mirror or the PJRT-executed
+/// AOT artifact (see `runtime::PjrtScorer`).
+pub trait ScorerBackend {
+    /// Backend name for reports.
+    fn name(&self) -> &str;
+    /// Score a batch.
+    fn score(&mut self, batch: &ScoreBatch) -> anyhow::Result<ScoreOutput>;
+}
+
+/// erf via Abramowitz–Stegun 7.1.26 in f32 — the *same* polynomial the
+/// Pallas kernel and jnp oracle use, so backends agree to float precision.
+#[inline]
+pub fn erf_f32(x: f32) -> f32 {
+    const A1: f32 = 0.254829592;
+    const A2: f32 = -0.284496736;
+    const A3: f32 = 1.421413741;
+    const A4: f32 = -1.453152027;
+    const A5: f32 = 1.061405429;
+    const P: f32 = 0.3275911;
+    let sign = if x < 0.0 { -1.0f32 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + P * x);
+    let y = 1.0 - (((((A5 * t + A4) * t) + A3) * t + A2) * t + A1) * t * (-x * x).exp();
+    sign * y
+}
+
+/// Φ(x) in f32, clamped into (0,1) for log safety — kernel-identical.
+#[inline]
+pub fn normal_cdf_f32(x: f32) -> f32 {
+    let c = 0.5 * (1.0 + erf_f32(x / std::f32::consts::SQRT_2));
+    c.clamp(1e-12, 1.0)
+}
+
+/// Pure-rust scoring backend mirroring the L1/L2 pipeline bit-for-bit
+/// (same formulas, f32 arithmetic, same clamps).
+#[derive(Debug, Default)]
+pub struct NativeScorer;
+
+impl ScorerBackend for NativeScorer {
+    fn name(&self) -> &str {
+        "native"
+    }
+
+    fn score(&mut self, b: &ScoreBatch) -> anyhow::Result<ScoreOutput> {
+        let (m, t) = (b.m, b.t);
+        anyhow::ensure!(b.mu.len() == m * t, "mu shape mismatch");
+        anyhow::ensure!(b.sigma.len() == m * t, "sigma shape mismatch");
+        anyhow::ensure!(b.phi.len() == m * 4 && b.psi.len() == m * 3, "feature shape mismatch");
+        anyhow::ensure!(b.trust.len() == m && b.hist.len() == m, "calibration shape mismatch");
+
+        let mut out = ScoreOutput {
+            score: vec![0.0; m],
+            violation: vec![0.0; m],
+            headroom: vec![0.0; m],
+            eligible: vec![false; m],
+        };
+        let c = b.capacity;
+        let inv_c = 1.0 / c;
+        for i in 0..m {
+            let row = i * t;
+            // 1) safety. The survival product Π Φ(z_t) is accumulated
+            // directly in f64 instead of summing f32 logs: mathematically
+            // identical (Φ is clamped ≥ 1e-12, so 64 bins bottom out at
+            // 1e-768 ≫ f64::MIN_POSITIVE), and it removes one `ln` per
+            // bin from the hot loop (§Perf iteration 1).
+            let mut surv = 1.0f64;
+            let mut head = 0.0f32;
+            let mus = &b.mu[row..row + t];
+            let sigmas = &b.sigma[row..row + t];
+            for (&mu, &sigma) in mus.iter().zip(sigmas) {
+                let gap = c - mu;
+                let sig = sigma.max(SIGMA_EPS);
+                // Deep-safe shortcut (§Perf iteration 2): Φ(z) ≥ 1−4e-9
+                // for z ≥ 6, so the factor is 1.0 to beyond f32
+                // precision — skip the erf. Most bins of healthy
+                // variants take this branch.
+                if gap < 6.0 * sig {
+                    surv *= normal_cdf_f32(gap / sig) as f64;
+                }
+                head += (gap * inv_c).clamp(0.0, 1.0);
+            }
+            let viol = ((1.0 - surv) as f32).clamp(0.0, 1.0);
+            let headroom = head / t as f32;
+
+            // 2) calibrated job utility.
+            let phi = &b.phi[i * 4..i * 4 + 4];
+            let h_tilde: f32 = (0..4).map(|j| b.alpha[j] * phi[j]).sum();
+            let trust = b.trust[i];
+            let h_cal = trust * h_tilde + (1.0 - trust) * b.hist[i];
+
+            // 3) system utility with in-pipeline headroom.
+            let psi = &b.psi[i * 3..i * 3 + 3];
+            let f_sys =
+                b.beta[0] * psi[0] + b.beta[1] * headroom + b.beta[2] * psi[1] + b.beta[3] * psi[2];
+
+            // 4) composite + eligibility gating.
+            let score = b.lambda * h_cal + (1.0 - b.lambda) * f_sys;
+            let eligible = viol <= b.theta;
+            out.violation[i] = viol;
+            out.headroom[i] = headroom;
+            out.eligible[i] = eligible;
+            out.score[i] = if eligible { score.clamp(0.0, 1.0) } else { 0.0 };
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batch_one(mu: f64, sigma: f64, capacity: f32) -> ScoreBatch {
+        let mut b = ScoreBatch::with_bins(8);
+        b.capacity = capacity;
+        b.theta = 0.05;
+        b.lambda = 0.6;
+        b.alpha = [0.45, 0.25, 0.15, 0.15];
+        b.beta = [0.45, 0.2, 0.15, 0.2];
+        b.push(
+            &[mu; 8],
+            &[sigma; 8],
+            [0.8, 1.0, 0.5, 0.5],
+            [0.7, 1.0, 0.0],
+            1.0,
+            0.5,
+        );
+        b
+    }
+
+    #[test]
+    fn safe_variant_scores_in_unit_interval() {
+        let b = batch_one(4.0, 0.3, 10.0);
+        let out = NativeScorer.score(&b).unwrap();
+        assert!(out.eligible[0]);
+        assert!(out.violation[0] < 1e-4);
+        assert!(out.score[0] > 0.0 && out.score[0] <= 1.0);
+        // headroom = (10-4)/10 = 0.6
+        assert!((out.headroom[0] - 0.6).abs() < 1e-5);
+    }
+
+    #[test]
+    fn unsafe_variant_zeroed() {
+        let b = batch_one(9.8, 1.0, 10.0); // mean just below cap, fat sigma
+        let out = NativeScorer.score(&b).unwrap();
+        assert!(!out.eligible[0]);
+        assert!(out.violation[0] > 0.05);
+        assert_eq!(out.score[0], 0.0);
+    }
+
+    #[test]
+    fn score_matches_hand_computation() {
+        let b = batch_one(4.0, 0.1, 10.0);
+        let out = NativeScorer.score(&b).unwrap();
+        // h = .45*.8+.25*1+.15*.5+.15*.5 = .36+.25+.075+.075 = .76
+        // trust=1 -> h_cal = .76
+        // f = .45*.7 + .2*.6 + .15*1.0 + .2*0 = .315+.12+.15 = .585
+        // score = .6*.76 + .4*.585 = .456+.234 = .690
+        assert!((out.score[0] - 0.690).abs() < 1e-4, "score {}", out.score[0]);
+    }
+
+    #[test]
+    fn calibration_pulls_toward_history() {
+        let mut b = batch_one(4.0, 0.1, 10.0);
+        b.trust[0] = 0.5;
+        b.hist[0] = 0.2;
+        let out = NativeScorer.score(&b).unwrap();
+        // h_cal = .5*.76 + .5*.2 = .48 ; score = .6*.48+.4*.585 = .522
+        assert!((out.score[0] - 0.522).abs() < 1e-4, "score {}", out.score[0]);
+    }
+
+    #[test]
+    fn lambda_extremes() {
+        let mut b = batch_one(4.0, 0.1, 10.0);
+        b.lambda = 1.0;
+        let j = NativeScorer.score(&b).unwrap().score[0];
+        assert!((j - 0.76).abs() < 1e-4, "pure job-side {j}");
+        b.lambda = 0.0;
+        let s = NativeScorer.score(&b).unwrap().score[0];
+        assert!((s - 0.585).abs() < 1e-4, "pure system-side {s}");
+    }
+
+    #[test]
+    fn batch_rows_independent() {
+        let mut b = ScoreBatch::with_bins(4);
+        b.capacity = 10.0;
+        b.theta = 0.05;
+        b.lambda = 0.5;
+        b.alpha = [0.25; 4];
+        b.beta = [0.25; 4];
+        b.push(&[4.0; 4], &[0.2; 4], [1.0; 4], [1.0, 1.0, 1.0], 1.0, 0.0);
+        b.push(&[9.9; 4], &[1.0; 4], [1.0; 4], [1.0, 1.0, 1.0], 1.0, 0.0);
+        b.push(&[2.0; 4], &[0.1; 4], [0.0; 4], [0.0, 0.0, 0.0], 1.0, 0.0);
+        let out = NativeScorer.score(&b).unwrap();
+        assert!(out.eligible[0] && !out.eligible[1] && out.eligible[2]);
+        assert!(out.score[0] > 0.5);
+        assert_eq!(out.score[1], 0.0);
+        // Row 2: all features zero -> only headroom contributes.
+        let expected = 0.5 * (0.25 * out.headroom[2]);
+        assert!((out.score[2] - expected).abs() < 1e-5);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let mut b = batch_one(4.0, 0.1, 10.0);
+        b.mu.pop();
+        assert!(NativeScorer.score(&b).is_err());
+    }
+
+    #[test]
+    fn erf_f32_matches_f64_reference() {
+        for x in [-3.0f32, -1.5, -0.2, 0.0, 0.7, 2.5] {
+            let r = crate::trp::math::erf(x as f64);
+            assert!((erf_f32(x) as f64 - r).abs() < 1e-6, "x={x}");
+        }
+    }
+
+    #[test]
+    fn monotone_in_violation() {
+        // Increasing sigma increases violation, decreases nothing else.
+        let outs: Vec<f32> = [0.1, 0.5, 1.0, 2.0]
+            .iter()
+            .map(|&s| NativeScorer.score(&batch_one(8.0, s, 10.0)).unwrap().violation[0])
+            .collect();
+        assert!(outs.windows(2).all(|w| w[0] <= w[1] + 1e-6), "{outs:?}");
+    }
+}

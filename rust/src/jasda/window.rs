@@ -1,0 +1,199 @@
+//! Window selection policies (paper §3.1 "Window Selection Policy" and
+//! §5.1(c) "Adaptive window selection").
+//!
+//! Each iteration the scheduler announces exactly **one** window. The
+//! paper's prototype announces the earliest-starting idle window; the
+//! alternatives sketched in §5.1(c) (slack-aware, fragmentation-aware)
+//! are implemented too and compared by `benches/fig_window_policy`.
+
+use crate::config::WindowPolicy;
+use crate::mig::{Cluster, Window};
+use crate::types::Time;
+
+/// Stateful window selector (round-robin needs a cursor).
+#[derive(Debug, Clone, Default)]
+pub struct WindowSelector {
+    rr_cursor: usize,
+}
+
+impl WindowSelector {
+    /// Create a selector.
+    pub fn new() -> Self {
+        WindowSelector { rr_cursor: 0 }
+    }
+
+    /// Pick the window to announce from `candidates` (must be non-empty to
+    /// return Some). `now`/`horizon` give the fragmentation scoring span.
+    pub fn select(
+        &mut self,
+        policy: WindowPolicy,
+        candidates: &[Window],
+        cluster: &Cluster,
+        now: Time,
+        horizon: u64,
+    ) -> Option<Window> {
+        if candidates.is_empty() {
+            return None;
+        }
+        let w = match policy {
+            WindowPolicy::EarliestStart => candidates
+                .iter()
+                .min_by(|a, b| {
+                    a.interval
+                        .start
+                        .cmp(&b.interval.start)
+                        .then(b.delta_t().cmp(&a.delta_t())) // tie: longer first
+                        .then(a.slice.cmp(&b.slice))
+                })
+                .copied(),
+            WindowPolicy::LongestFirst => candidates
+                .iter()
+                .max_by(|a, b| {
+                    a.delta_t()
+                        .cmp(&b.delta_t())
+                        .then(b.interval.start.cmp(&a.interval.start))
+                        .then(b.slice.cmp(&a.slice))
+                })
+                .copied(),
+            WindowPolicy::SlackAware => candidates
+                .iter()
+                .max_by(|a, b| {
+                    let sa = a.delta_t() as f64 * a.speed;
+                    let sb = b.delta_t() as f64 * b.speed;
+                    sa.total_cmp(&sb)
+                        .then(b.interval.start.cmp(&a.interval.start))
+                        .then(b.slice.cmp(&a.slice))
+                })
+                .copied(),
+            WindowPolicy::FragmentationAware => candidates
+                .iter()
+                .max_by(|a, b| {
+                    let fa = cluster
+                        .slice(a.slice)
+                        .timeline
+                        .fragmentation(now, now.saturating_add(horizon));
+                    let fb = cluster
+                        .slice(b.slice)
+                        .timeline
+                        .fragmentation(now, now.saturating_add(horizon));
+                    fa.total_cmp(&fb)
+                        .then(b.interval.start.cmp(&a.interval.start))
+                        .then(b.slice.cmp(&a.slice))
+                })
+                .copied(),
+            WindowPolicy::RoundRobin => {
+                // Advance over slices until one with a candidate is found.
+                let n_slices = cluster.num_slices();
+                for step in 0..n_slices {
+                    let slice = ((self.rr_cursor + step) % n_slices) as u32;
+                    if let Some(w) = candidates
+                        .iter()
+                        .filter(|w| w.slice == slice)
+                        .min_by_key(|w| w.interval.start)
+                    {
+                        self.rr_cursor = (slice as usize + 1) % n_slices;
+                        return Some(*w);
+                    }
+                }
+                None
+            }
+        };
+        w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::{PartitionLayout, Reservation};
+    use crate::types::Interval;
+
+    fn w(slice: u32, start: u64, len: u64, speed: f64) -> Window {
+        Window {
+            slice,
+            capacity_gb: 10.0,
+            speed,
+            interval: Interval::new(start, start + len),
+        }
+    }
+
+    fn cluster() -> Cluster {
+        Cluster::new(1, &PartitionLayout::seven_small())
+    }
+
+    #[test]
+    fn empty_candidates_none() {
+        let mut s = WindowSelector::new();
+        assert!(s
+            .select(WindowPolicy::EarliestStart, &[], &cluster(), 0, 1000)
+            .is_none());
+    }
+
+    #[test]
+    fn earliest_start_picks_min_start_then_longest() {
+        let mut s = WindowSelector::new();
+        let c = cluster();
+        let cands = [w(0, 50, 10, 1.0), w(1, 20, 10, 1.0), w(2, 20, 40, 1.0)];
+        let got = s.select(WindowPolicy::EarliestStart, &cands, &c, 0, 1000).unwrap();
+        assert_eq!(got.slice, 2, "tie on start=20 broken by longer window");
+    }
+
+    #[test]
+    fn longest_first() {
+        let mut s = WindowSelector::new();
+        let c = cluster();
+        let cands = [w(0, 0, 100, 1.0), w(1, 5, 300, 1.0), w(2, 10, 200, 1.0)];
+        let got = s.select(WindowPolicy::LongestFirst, &cands, &c, 0, 1000).unwrap();
+        assert_eq!(got.slice, 1);
+    }
+
+    #[test]
+    fn slack_aware_weights_speed() {
+        let mut s = WindowSelector::new();
+        let c = cluster();
+        // 100 ticks at speed 1.0 beats 300 ticks at 1/7.
+        let cands = [w(0, 0, 300, 1.0 / 7.0), w(1, 0, 100, 1.0)];
+        let got = s.select(WindowPolicy::SlackAware, &cands, &c, 0, 1000).unwrap();
+        assert_eq!(got.slice, 1);
+    }
+
+    #[test]
+    fn fragmentation_aware_prefers_shattered_slice() {
+        let mut c = cluster();
+        // Slice 0: two reservations -> fragmented idle. Slice 1: empty.
+        c.slice_mut(0)
+            .timeline
+            .reserve(Reservation { job: 1, subjob_seq: 0, interval: Interval::new(100, 200) })
+            .unwrap();
+        c.slice_mut(0)
+            .timeline
+            .reserve(Reservation { job: 1, subjob_seq: 1, interval: Interval::new(400, 500) })
+            .unwrap();
+        let cands = [w(0, 0, 100, 1.0 / 7.0), w(1, 0, 1000, 1.0 / 7.0)];
+        let mut s = WindowSelector::new();
+        let got =
+            s.select(WindowPolicy::FragmentationAware, &cands, &c, 0, 1000).unwrap();
+        assert_eq!(got.slice, 0);
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let c = cluster();
+        let cands =
+            [w(0, 0, 100, 1.0), w(2, 0, 100, 1.0), w(5, 0, 100, 1.0)];
+        let mut s = WindowSelector::new();
+        let picks: Vec<u32> = (0..6)
+            .map(|_| s.select(WindowPolicy::RoundRobin, &cands, &c, 0, 1000).unwrap().slice)
+            .collect();
+        assert_eq!(picks, vec![0, 2, 5, 0, 2, 5]);
+    }
+
+    #[test]
+    fn round_robin_earliest_within_slice() {
+        let c = cluster();
+        let cands = [w(0, 500, 100, 1.0), w(0, 100, 100, 1.0)];
+        let mut s = WindowSelector::new();
+        let got = s.select(WindowPolicy::RoundRobin, &cands, &c, 0, 1000).unwrap();
+        assert_eq!(got.interval.start, 100);
+    }
+}

@@ -1,0 +1,298 @@
+//! Job model: the agent side of the JASDA interaction (paper §3.2–§3.3).
+//!
+//! A [`Job`] owns a [`Trp`] resource profile, tracks its work progress,
+//! and — through [`variants::generate_variants`] — autonomously turns
+//! scheduler window announcements into scored subjob bids. Jobs are
+//! independent agents (assumption A2): nothing in this module reads
+//! another job's state.
+
+pub mod utility;
+pub mod variants;
+
+use crate::trp::Trp;
+use crate::types::{JobId, SliceId, Time};
+
+pub use variants::{DeclaredFeatures, SysFeatures, Variant};
+
+/// Lifecycle state of a job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Not yet arrived (exists in the workload trace only).
+    Future,
+    /// Arrived and has unfinished work.
+    Active,
+    /// All work completed.
+    Completed,
+}
+
+/// A job: static description + dynamic progress state.
+#[derive(Debug, Clone)]
+pub struct Job {
+    /// Unique id (admission order).
+    pub id: JobId,
+    /// Job-class name (from the workload generator).
+    pub class: String,
+    /// Arrival time.
+    pub arrival: Time,
+    /// Temporal resource profile (drives durations, memory, safety).
+    pub trp: Trp,
+    /// Optional QoS deadline (absolute tick) for the φ_QoS feature.
+    pub deadline: Option<Time>,
+    /// Tenant weight (used by fairness metrics and Themis-like baseline).
+    pub weight: f64,
+    /// Maximum work per subjob — the spacing of the job's natural
+    /// preemption points (SJA atomization granularity).
+    pub atom_work: f64,
+    /// Multiplicative inflation this job applies to its declared
+    /// utilities (0 = honest). Exercises §4.2.1.
+    pub misreport_bias: f64,
+
+    // ---- dynamic state ----
+    /// Lifecycle state.
+    pub state: JobState,
+    /// Work already executed and credited (full-GPU tick equivalents).
+    pub done_work: f64,
+    /// Work committed to reservations but not yet completed.
+    pub reserved_work: f64,
+    /// Completion time, once finished.
+    pub completed_at: Option<Time>,
+    /// Last time any variant of this job was selected (age baseline).
+    /// Initialized to the arrival time.
+    pub last_selected: Time,
+    /// Slice of the most recent committed subjob (locality feature).
+    pub last_slice: Option<SliceId>,
+    /// Monotone subjob sequence counter.
+    pub subjob_seq: u32,
+    /// Number of completed subjobs.
+    pub subjobs_done: u32,
+    /// Number of iterations in which this job submitted ≥1 bid.
+    pub bids_submitted: u64,
+    /// Number of variants of this job ever selected.
+    pub variants_won: u64,
+}
+
+impl Job {
+    /// Create a freshly arrived-in-the-future job.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        id: JobId,
+        class: impl Into<String>,
+        arrival: Time,
+        trp: Trp,
+        deadline: Option<Time>,
+        weight: f64,
+        atom_work: f64,
+        misreport_bias: f64,
+    ) -> Self {
+        Job {
+            id,
+            class: class.into(),
+            arrival,
+            trp,
+            deadline,
+            weight,
+            atom_work,
+            misreport_bias,
+            state: JobState::Future,
+            done_work: 0.0,
+            reserved_work: 0.0,
+            completed_at: None,
+            last_selected: arrival,
+            last_slice: None,
+            subjob_seq: 0,
+            subjobs_done: 0,
+            bids_submitted: 0,
+            variants_won: 0,
+        }
+    }
+
+    /// Total work of the job.
+    #[inline]
+    pub fn total_work(&self) -> f64 {
+        self.trp.total_work()
+    }
+
+    /// Work not yet committed to any reservation — what the job bids with.
+    #[inline]
+    pub fn pending_work(&self) -> f64 {
+        (self.total_work() - self.done_work - self.reserved_work).max(0.0)
+    }
+
+    /// Work not yet completed (committed-but-running counts as remaining).
+    #[inline]
+    pub fn remaining_work(&self) -> f64 {
+        (self.total_work() - self.done_work).max(0.0)
+    }
+
+    /// Cursor into the TRP work axis where the next *bid* chunk starts.
+    #[inline]
+    pub fn work_cursor(&self) -> f64 {
+        self.done_work + self.reserved_work
+    }
+
+    /// True if the job can bid: active with uncommitted work left.
+    #[inline]
+    pub fn can_bid(&self) -> bool {
+        self.state == JobState::Active && self.pending_work() > 1e-9
+    }
+
+    /// Normalized age factor `A_i(t) ∈ [0,1]` (paper §4.3): waiting time
+    /// since the last successful selection, saturating at `age_scale`.
+    pub fn age_factor(&self, now: Time, age_scale: u64) -> f64 {
+        if age_scale == 0 {
+            return 0.0;
+        }
+        let waited = now.saturating_sub(self.last_selected);
+        (waited as f64 / age_scale as f64).min(1.0)
+    }
+
+    /// Job completion time, if finished.
+    pub fn jct(&self) -> Option<u64> {
+        self.completed_at.map(|c| c.saturating_sub(self.arrival))
+    }
+}
+
+/// The population of jobs in a run, indexed by [`JobId`].
+#[derive(Debug, Clone, Default)]
+pub struct JobSet {
+    jobs: Vec<Job>,
+}
+
+impl JobSet {
+    /// Build from a workload (jobs must be id-ordered 0..n).
+    pub fn new(jobs: Vec<Job>) -> Self {
+        for (i, j) in jobs.iter().enumerate() {
+            assert_eq!(j.id as usize, i, "jobs must be dense and id-ordered");
+        }
+        JobSet { jobs }
+    }
+
+    /// Number of jobs (all states).
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// True if there are no jobs at all.
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    /// Job by id.
+    pub fn get(&self, id: JobId) -> &Job {
+        &self.jobs[id as usize]
+    }
+
+    /// Mutable job by id.
+    pub fn get_mut(&mut self, id: JobId) -> &mut Job {
+        &mut self.jobs[id as usize]
+    }
+
+    /// All jobs.
+    pub fn iter(&self) -> impl Iterator<Item = &Job> {
+        self.jobs.iter()
+    }
+
+    /// All jobs, mutable.
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = &mut Job> {
+        self.jobs.iter_mut()
+    }
+
+    /// Jobs currently able to bid.
+    pub fn bidders(&self) -> impl Iterator<Item = &Job> {
+        self.jobs.iter().filter(|j| j.can_bid())
+    }
+
+    /// Mark arrivals: flip `Future -> Active` for jobs with
+    /// `arrival <= now`. Returns how many jobs arrived.
+    pub fn admit_until(&mut self, now: Time) -> usize {
+        let mut n = 0;
+        for j in &mut self.jobs {
+            if j.state == JobState::Future && j.arrival <= now {
+                j.state = JobState::Active;
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// True when every job has completed.
+    pub fn all_completed(&self) -> bool {
+        self.jobs.iter().all(|j| j.state == JobState::Completed)
+    }
+
+    /// Count of jobs in a given state.
+    pub fn count_state(&self, s: JobState) -> usize {
+        self.jobs.iter().filter(|j| j.state == s).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trp::Phase;
+
+    fn mini_job(id: JobId, arrival: Time) -> Job {
+        let trp =
+            Trp { phases: vec![Phase::new(1000.0, 4.0, 0.2, 0.1)], duration_cv: 0.05 };
+        Job::new(id, "t", arrival, trp, None, 1.0, 300.0, 0.0)
+    }
+
+    #[test]
+    fn work_accounting() {
+        let mut j = mini_job(0, 0);
+        assert_eq!(j.total_work(), 1000.0);
+        assert_eq!(j.pending_work(), 1000.0);
+        j.reserved_work = 300.0;
+        assert_eq!(j.pending_work(), 700.0);
+        assert_eq!(j.work_cursor(), 300.0);
+        j.done_work = 300.0;
+        j.reserved_work = 0.0;
+        assert_eq!(j.remaining_work(), 700.0);
+        assert_eq!(j.pending_work(), 700.0);
+    }
+
+    #[test]
+    fn can_bid_requires_active_and_pending() {
+        let mut j = mini_job(0, 10);
+        assert!(!j.can_bid(), "future job cannot bid");
+        j.state = JobState::Active;
+        assert!(j.can_bid());
+        j.reserved_work = 1000.0;
+        assert!(!j.can_bid(), "fully reserved job has nothing to bid");
+    }
+
+    #[test]
+    fn age_factor_saturates() {
+        let mut j = mini_job(0, 0);
+        j.state = JobState::Active;
+        assert_eq!(j.age_factor(0, 1000), 0.0);
+        assert_eq!(j.age_factor(500, 1000), 0.5);
+        assert_eq!(j.age_factor(5000, 1000), 1.0);
+        j.last_selected = 400;
+        assert_eq!(j.age_factor(900, 1000), 0.5);
+        assert_eq!(j.age_factor(900, 0), 0.0, "age disabled");
+    }
+
+    #[test]
+    fn jobset_admission_and_completion() {
+        let mut set = JobSet::new(vec![mini_job(0, 0), mini_job(1, 100), mini_job(2, 200)]);
+        assert_eq!(set.admit_until(50), 1);
+        assert_eq!(set.admit_until(50), 0, "idempotent");
+        assert_eq!(set.admit_until(150), 1);
+        assert_eq!(set.count_state(JobState::Active), 2);
+        assert_eq!(set.bidders().count(), 2);
+        assert!(!set.all_completed());
+        for j in set.iter_mut() {
+            j.state = JobState::Completed;
+            j.completed_at = Some(1000);
+        }
+        assert!(set.all_completed());
+        assert_eq!(set.get(1).jct(), Some(900));
+    }
+
+    #[test]
+    #[should_panic]
+    fn jobset_rejects_sparse_ids() {
+        JobSet::new(vec![mini_job(1, 0)]);
+    }
+}

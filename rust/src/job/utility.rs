@@ -1,0 +1,186 @@
+//! Job-side utility features φ_i (paper §4.2, Eq. (2)).
+//!
+//! Each feature is normalized to `[0,1]` with "higher = more desirable"
+//! orientation, exactly as the paper's normalization scheme requires. The
+//! same formulas are re-evaluated on *observed* quantities after execution
+//! for the ex-post verification step (Eq. (6)).
+
+use crate::job::Job;
+use crate::mig::Window;
+use crate::types::Time;
+
+/// Relative idle power of a slice (fraction of full-GPU dynamic power).
+pub const P_IDLE: f64 = 0.25;
+/// Relative dynamic power coefficient (scales with slice speed).
+pub const P_DYN: f64 = 0.75;
+
+/// φ_JCT — expected completion-progress gain: the fraction of the job's
+/// remaining work this chunk covers (paper: `1 − ΔJCT/ΔJCT_max`; covering
+/// more remaining work is the discrete equivalent).
+pub fn phi_jct(work: f64, remaining_work: f64) -> f64 {
+    if remaining_work <= 0.0 {
+        return 0.0;
+    }
+    (work / remaining_work).clamp(0.0, 1.0)
+}
+
+/// φ_QoS — urgency-graded deadline adherence. Jobs without a deadline
+/// report a low-stakes 0.25; deadline-carrying jobs report between 0.5
+/// (plenty of slack) and 1.0 (slack nearly exhausted) while the subjob
+/// still finishes in time, and 0 once the deadline is already blown.
+/// Grading by urgency is what lets a QoS-first policy (λ high, Table 2)
+/// actually prioritize the jobs whose deadlines are at risk.
+pub fn phi_qos(job: &Job, predicted_end: Time) -> f64 {
+    match job.deadline {
+        None => 0.25,
+        Some(d) => {
+            if predicted_end > d {
+                return 0.0;
+            }
+            let total = d.saturating_sub(job.arrival).max(1) as f64;
+            let slack = d.saturating_sub(predicted_end) as f64;
+            let urgency = (1.0 - slack / total).clamp(0.0, 1.0);
+            0.5 + 0.5 * urgency
+        }
+    }
+}
+
+/// Normalized energy of running a subjob of `duration` ticks on a slice of
+/// the given `speed`: `E(v) = duration · (P_idle + P_dyn·speed)`, with
+/// `E_max = window_len · (P_idle + P_dyn)` (a full-GPU slice busy for the
+/// whole window).
+pub fn energy(duration: u64, speed: f64) -> f64 {
+    duration as f64 * (P_IDLE + P_DYN * speed)
+}
+
+/// φ_energy — `1 − E(v)/E_max` (paper §4.2's ψ_energy transformation,
+/// applied job-side as an energy-cost preference).
+pub fn phi_energy(duration: u64, speed: f64, window_len: u64) -> f64 {
+    if window_len == 0 {
+        return 0.0;
+    }
+    let e_max = energy(window_len, 1.0);
+    (1.0 - energy(duration, speed) / e_max).clamp(0.0, 1.0)
+}
+
+/// φ_loc — slice-affinity feature (§4.1(b) data-reuse preference): 1 when
+/// the announced window is on the slice of the previous subjob (warm
+/// caches / resident data), 0.5 for the first subjob, 0 otherwise.
+pub fn phi_locality(job: &Job, window: &Window) -> f64 {
+    match job.last_slice {
+        None => 0.5,
+        Some(s) if s == window.slice => 1.0,
+        Some(_) => 0.0,
+    }
+}
+
+/// Combine features with the α weights: `h̃(v) = Σ α_i φ_i` (Eq. (2),
+/// normalized form). With Σα ≤ 1 and φ ∈ [0,1], h̃ ∈ [0,1].
+pub fn h_tilde(alpha: &[f64; 4], phi: &[f64; 4]) -> f64 {
+    alpha.iter().zip(phi).map(|(a, p)| a * p).sum()
+}
+
+/// Apply a misreport bias to a (honest) feature vector: inflates the
+/// self-assessed features the scheduler cannot immediately check (JCT
+/// gain, energy), leaving exact features (QoS indicator, locality)
+/// untouched. Clamped to [0,1] so declared scores stay normalized.
+pub fn misreport(phi: &[f64; 4], bias: f64) -> [f64; 4] {
+    if bias == 0.0 {
+        return *phi;
+    }
+    [
+        (phi[0] * (1.0 + bias)).clamp(0.0, 1.0),
+        phi[1],
+        (phi[2] * (1.0 + bias)).clamp(0.0, 1.0),
+        phi[3],
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trp::{Phase, Trp};
+
+    fn job_with_deadline(deadline: Option<Time>) -> Job {
+        let trp = Trp { phases: vec![Phase::new(1000.0, 4.0, 0.2, 0.1)], duration_cv: 0.05 };
+        Job::new(0, "t", 0, trp, deadline, 1.0, 300.0, 0.0)
+    }
+
+    fn window_on(slice: u32) -> Window {
+        Window {
+            slice,
+            capacity_gb: 10.0,
+            speed: 2.0 / 7.0,
+            interval: crate::types::Interval::new(100, 200),
+        }
+    }
+
+    #[test]
+    fn phi_jct_fraction_of_remaining() {
+        assert_eq!(phi_jct(250.0, 1000.0), 0.25);
+        assert_eq!(phi_jct(2000.0, 1000.0), 1.0, "clamped");
+        assert_eq!(phi_jct(10.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn phi_qos_deadline_logic() {
+        let j = job_with_deadline(Some(500));
+        // In time, 80% of slack consumed -> high urgency.
+        let tight = phi_qos(&j, 400);
+        // In time, barely any slack consumed -> low urgency.
+        let loose = phi_qos(&j, 50);
+        assert!(tight > loose, "{tight} vs {loose}");
+        assert!((0.5..=1.0).contains(&tight));
+        assert!((0.5..=1.0).contains(&loose));
+        assert_eq!(phi_qos(&j, 500), 1.0, "zero slack left, still in time");
+        assert_eq!(phi_qos(&j, 600), 0.0, "deadline blown");
+        let j = job_with_deadline(None);
+        assert_eq!(phi_qos(&j, 600), 0.25, "no deadline -> low stakes");
+    }
+
+    #[test]
+    fn phi_energy_monotone() {
+        // Shorter run on a slower slice costs less energy -> higher phi.
+        let short = phi_energy(20, 1.0 / 7.0, 100);
+        let long = phi_energy(90, 1.0, 100);
+        assert!(short > long, "{short} vs {long}");
+        assert!((0.0..=1.0).contains(&short));
+        assert!((0.0..=1.0).contains(&long));
+        assert_eq!(phi_energy(10, 1.0, 0), 0.0);
+        // Full window on the full GPU = max energy -> phi 0.
+        assert_eq!(phi_energy(100, 1.0, 100), 0.0);
+    }
+
+    #[test]
+    fn phi_locality_cases() {
+        let mut j = job_with_deadline(None);
+        assert_eq!(phi_locality(&j, &window_on(3)), 0.5, "first subjob is neutral");
+        j.last_slice = Some(3);
+        assert_eq!(phi_locality(&j, &window_on(3)), 1.0);
+        assert_eq!(phi_locality(&j, &window_on(4)), 0.0);
+    }
+
+    #[test]
+    fn h_tilde_stays_normalized() {
+        let alpha = [0.45, 0.25, 0.15, 0.15];
+        assert!(h_tilde(&alpha, &[1.0; 4]) <= 1.0 + 1e-12);
+        assert_eq!(h_tilde(&alpha, &[0.0; 4]), 0.0);
+        let h = h_tilde(&alpha, &[0.5, 1.0, 0.2, 0.0]);
+        assert!((h - (0.45 * 0.5 + 0.25 + 0.15 * 0.2)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn misreport_inflates_only_soft_features() {
+        let honest = [0.4, 1.0, 0.6, 0.5];
+        let lied = misreport(&honest, 0.5);
+        assert!((lied[0] - 0.6).abs() < 1e-12);
+        assert_eq!(lied[1], 1.0, "QoS indicator is exact, not inflatable");
+        assert!((lied[2] - 0.9).abs() < 1e-12);
+        assert_eq!(lied[3], 0.5, "locality is exact");
+        // Clamping.
+        let lied = misreport(&[0.9, 0.0, 0.9, 0.0], 1.0);
+        assert_eq!(lied[0], 1.0);
+        // Zero bias is identity.
+        assert_eq!(misreport(&honest, 0.0), honest);
+    }
+}

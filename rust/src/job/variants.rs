@@ -1,0 +1,379 @@
+//! Job-side variant generation (paper §3.2, §4.1).
+//!
+//! Upon a window announcement `w* = (s_k, c_k, t_min, Δt)`, each job
+//! autonomously generates up to `V_max` *eligible* subjob variants:
+//! work chunks bounded by the job's atomization granularity, placed
+//! back-to-back from the window start (a chain of candidate subjobs, as in
+//! the paper's worked example where J_A fills the window with two
+//! consecutive variants), plus a shorter alternative first chunk that
+//! trades progress for a better energy/fragmentation profile.
+//!
+//! Every emitted variant is **safe-by-construction**: its FMP violation
+//! probability over the predicted interval is ≤ θ, its duration respects
+//! τ_min, and its interval lies inside the announced window. Ineligible
+//! candidates are silently dropped — jobs that can produce nothing stay
+//! silent (§3.2).
+
+use crate::config::JasdaConfig;
+use crate::job::{utility, Job};
+use crate::mig::Window;
+use crate::trp::math::normal_quantile;
+use crate::trp::Fmp;
+use crate::types::{Interval, JobId, SliceId, Time, VariantId};
+
+/// The φ feature vector a job declares with a bid, plus its aggregate h̃.
+///
+/// Order matches the scoring kernel: `[jct, qos, energy, locality]`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeclaredFeatures {
+    /// Honest feature values (kept for ex-post comparison in tests; the
+    /// scheduler never reads these).
+    pub phi_honest: [f64; 4],
+    /// Declared (possibly misreported) feature values — what the
+    /// scheduler sees.
+    pub phi: [f64; 4],
+    /// Declared aggregate job utility `h̃(v) = Σ α_i φ_i`.
+    pub h_tilde: f64,
+}
+
+/// System-side features the variant itself determines (ψ_util, ψ_frag).
+/// Headroom and age are filled in by the scheduler/scoring backend.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SysFeatures {
+    /// ψ_util — fraction of the announced window this variant occupies.
+    pub util: f64,
+    /// ψ_frag — 1 minus the unusable residue the variant would leave
+    /// (a leftover gap shorter than τ_min counts as wasted).
+    pub frag: f64,
+}
+
+/// One subjob variant `v_{i,k,w*} = (s_k, t_start, Δt̃_i, TRP_i)` (§3.2).
+#[derive(Debug, Clone)]
+pub struct Variant {
+    /// Pool-local id, assigned by the scheduler when bids are collected.
+    pub id: VariantId,
+    /// Proposing job.
+    pub job: JobId,
+    /// Slice of the announced window.
+    pub slice: SliceId,
+    /// Predicted execution interval `I(v) = [t_start, t_start + Δt̃)`.
+    pub interval: Interval,
+    /// Work chunk (full-GPU tick equivalents) the subjob covers.
+    pub work: f64,
+    /// Work-axis offset of the chunk relative to the job's cursor at
+    /// generation time (0 for the first chunk of a chain).
+    pub work_offset: f64,
+    /// Discretized FMP over the chunk (input to the scoring kernel).
+    pub fmp: Fmp,
+    /// Job's own safety estimate `Pr(max RAM > c_k | FMP)`.
+    pub violation_prob: f64,
+    /// Declared job-side features.
+    pub declared: DeclaredFeatures,
+    /// Variant-determined system features.
+    pub sys: SysFeatures,
+}
+
+impl Variant {
+    /// Declared duration Δt̃ in ticks.
+    #[inline]
+    pub fn duration(&self) -> u64 {
+        self.interval.len()
+    }
+}
+
+/// Maximum work chunk whose *declared* (quantile-inflated) duration fits
+/// into `avail` ticks on a slice of `speed`.
+fn max_work_for(avail: u64, speed: f64, cv: f64, quantile: f64) -> f64 {
+    let z = if cv > 0.0 { normal_quantile(quantile) } else { 0.0 };
+    let inflation = 1.0 + z.max(0.0) * cv;
+    (avail as f64) * speed / inflation
+}
+
+/// ψ_frag for a variant ending `leftover` ticks before the window end:
+/// residues shorter than τ_min are unusable and penalized.
+fn psi_frag(leftover: u64, window_len: u64, tau_min: u64) -> f64 {
+    if window_len == 0 {
+        return 0.0;
+    }
+    let wasted = if leftover > 0 && leftover < tau_min { leftover } else { 0 };
+    (1.0 - wasted as f64 / window_len as f64).clamp(0.0, 1.0)
+}
+
+/// Build one candidate variant for `job` covering `work` starting at
+/// `t_start`, or `None` if it is ineligible.
+#[allow(clippy::too_many_arguments)]
+fn make_variant(
+    job: &Job,
+    window: &Window,
+    cfg: &JasdaConfig,
+    work: f64,
+    work_offset: f64,
+    t_start: Time,
+) -> Option<Variant> {
+    if work <= 1e-9 {
+        return None;
+    }
+    let mut duration = job.trp.predicted_duration(work, window.speed, cfg.duration_quantile);
+    // Eligibility: τ_min and window containment. A chunk that finishes
+    // the job's remaining work may round its reservation *up* to τ_min —
+    // otherwise a sub-τ_min tail could never be scheduled and the job
+    // would starve on its last sliver of work.
+    if duration < cfg.tau_min {
+        let is_final = work_offset + work >= job.pending_work() - 1e-9;
+        if is_final {
+            duration = cfg.tau_min;
+        } else {
+            return None;
+        }
+    }
+    let t_end = t_start.checked_add(duration)?;
+    let interval = Interval::new(t_start, t_end);
+    if !window.interval.contains(&interval) {
+        return None;
+    }
+    // Safe-by-construction (§4.1(a)): FMP violation probability ≤ θ.
+    let w0 = job.work_cursor() + work_offset;
+    let fmp = job.trp.fmp_bins(w0, w0 + work, cfg.fmp_bins);
+    let violation_prob = fmp.violation_prob(window.capacity_gb);
+    if violation_prob > cfg.theta {
+        return None;
+    }
+
+    // Job-side features (honest), then the declared (possibly inflated)
+    // copy the scheduler actually sees.
+    let phi_honest = [
+        utility::phi_jct(work, job.remaining_work() - work_offset),
+        utility::phi_qos(job, t_end),
+        utility::phi_energy(duration, window.speed, window.delta_t()),
+        utility::phi_locality(job, window),
+    ];
+    let phi = utility::misreport(&phi_honest, job.misreport_bias);
+    let h = utility::h_tilde(&cfg.alpha.as_array(), &phi);
+
+    let window_len = window.delta_t();
+    let leftover = window.interval.end.saturating_sub(t_end);
+    let sys = SysFeatures {
+        util: (duration as f64 / window_len as f64).clamp(0.0, 1.0),
+        frag: psi_frag(leftover, window_len, cfg.tau_min),
+    };
+
+    Some(Variant {
+        id: 0, // assigned at pool assembly
+        job: job.id,
+        slice: window.slice,
+        interval,
+        work,
+        work_offset,
+        fmp,
+        violation_prob,
+        declared: DeclaredFeatures { phi_honest, phi, h_tilde: h },
+        sys,
+    })
+}
+
+/// Generate the job's eligible variant portfolio for an announced window
+/// (paper §3.2 "GenerateVariants"). Returns an empty vec when the job
+/// stays silent.
+///
+/// Strategy (each candidate is still subjected to full eligibility):
+/// 1. *Chain fill*: consecutive chunks of at most `atom_work`, placed
+///    back-to-back from the window start until work, window, or `V_max`
+///    runs out — this is what lets a job occupy a whole window through
+///    several short atoms (Table 3's J_A pattern).
+/// 2. *Alternative half chunk*: a half-size first chunk, giving the
+///    clearing phase a lower-utilization / lower-energy alternative.
+pub fn generate_variants(job: &Job, window: &Window, cfg: &JasdaConfig) -> Vec<Variant> {
+    let mut out = Vec::new();
+    if !job.can_bid() || window.interval.is_empty() {
+        return out;
+    }
+
+    let mut t = window.t_min();
+    let mut offset = 0.0;
+    let pending = job.pending_work();
+
+    // 1. Chain fill.
+    while out.len() < cfg.max_variants_per_job {
+        let avail = window.interval.end.saturating_sub(t);
+        if avail < cfg.tau_min {
+            break;
+        }
+        let w_fit = max_work_for(avail, window.speed, job.trp.duration_cv, cfg.duration_quantile);
+        let w = w_fit.min(job.atom_work).min(pending - offset);
+        match make_variant(job, window, cfg, w, offset, t) {
+            Some(v) => {
+                t = v.interval.end;
+                offset += v.work;
+                out.push(v);
+            }
+            None => break,
+        }
+        if offset >= pending - 1e-9 {
+            break;
+        }
+    }
+
+    // 2. Alternative half-size first chunk (distinct duration only).
+    if out.len() < cfg.max_variants_per_job {
+        if let Some(first) = out.first() {
+            let half = first.work / 2.0;
+            if let Some(v) = make_variant(job, window, cfg, half, 0.0, window.t_min()) {
+                if v.duration() != first.duration() {
+                    out.push(v);
+                }
+            }
+        }
+    }
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::JobState;
+    use crate::trp::{Phase, Trp};
+
+    fn test_cfg() -> JasdaConfig {
+        JasdaConfig { tau_min: 10, fmp_bins: 16, ..JasdaConfig::default() }
+    }
+
+    fn test_job(mem_gb: f64, total_work: f64, atom: f64) -> Job {
+        let trp = Trp {
+            phases: vec![Phase::new(total_work, mem_gb, 0.3, 0.1)],
+            duration_cv: 0.05,
+        };
+        let mut j = Job::new(1, "t", 0, trp, None, 1.0, atom, 0.0);
+        j.state = JobState::Active;
+        j
+    }
+
+    fn test_window(cap: f64, speed: f64, start: Time, len: u64) -> Window {
+        Window { slice: 2, capacity_gb: cap, speed, interval: Interval::new(start, start + len) }
+    }
+
+    #[test]
+    fn silent_when_memory_unsafe() {
+        // Job needs ~18 GiB; window slice has 10 GiB -> no eligible variant.
+        let job = test_job(18.0, 1000.0, 500.0);
+        let w = test_window(10.0, 1.0, 100, 200);
+        assert!(generate_variants(&job, &w, &test_cfg()).is_empty());
+    }
+
+    #[test]
+    fn silent_when_window_below_tau_min() {
+        let job = test_job(4.0, 1000.0, 500.0);
+        let w = test_window(10.0, 1.0, 100, 5); // 5 < tau_min=10
+        assert!(generate_variants(&job, &w, &test_cfg()).is_empty());
+    }
+
+    #[test]
+    fn silent_when_not_active() {
+        let mut job = test_job(4.0, 1000.0, 500.0);
+        job.state = JobState::Future;
+        let w = test_window(10.0, 1.0, 0, 1000);
+        assert!(generate_variants(&job, &w, &test_cfg()).is_empty());
+    }
+
+    #[test]
+    fn chain_fills_window_with_atoms() {
+        // atom=100 work at speed 1.0 -> ~109-tick chunks (0.9-quantile
+        // margin); window 400 ticks -> expect a chain of ~3 + alternative.
+        let job = test_job(4.0, 10_000.0, 100.0);
+        let w = test_window(10.0, 1.0, 50, 400);
+        let cfg = test_cfg();
+        let vs = generate_variants(&job, &w, &cfg);
+        assert!(vs.len() >= 3, "expected a chain, got {}", vs.len());
+        assert!(vs.len() <= cfg.max_variants_per_job + 1);
+        // Chain variants are back-to-back from the window start.
+        assert_eq!(vs[0].interval.start, 50);
+        assert_eq!(vs[1].interval.start, vs[0].interval.end);
+        // All inside the window, all >= tau_min, all safe.
+        for v in &vs {
+            assert!(w.interval.contains(&v.interval));
+            assert!(v.duration() >= cfg.tau_min);
+            assert!(v.violation_prob <= cfg.theta);
+            assert!(v.declared.h_tilde >= 0.0 && v.declared.h_tilde <= 1.0);
+            assert!(v.sys.util > 0.0 && v.sys.util <= 1.0);
+        }
+        // Work offsets are consecutive.
+        assert!((vs[1].work_offset - vs[0].work).abs() < 1e-9);
+    }
+
+    #[test]
+    fn respects_pending_work_cap() {
+        // Job with only 50 work left: one small variant (plus maybe a
+        // half alternative), never exceeding pending work.
+        let mut job = test_job(4.0, 1000.0, 400.0);
+        job.done_work = 950.0;
+        let w = test_window(10.0, 1.0, 0, 1000);
+        let vs = generate_variants(&job, &w, &test_cfg());
+        assert!(!vs.is_empty());
+        let total: f64 = vs.iter().filter(|v| v.work_offset == 0.0).map(|v| v.work).sum();
+        // first-chunk variants each cover <= pending work
+        for v in &vs {
+            assert!(v.work <= 50.0 + 1e-9, "variant work {} exceeds pending", v.work);
+        }
+        assert!(total > 0.0);
+    }
+
+    #[test]
+    fn slower_slice_longer_duration() {
+        let job = test_job(4.0, 10_000.0, 100.0);
+        let cfg = test_cfg();
+        let fast = generate_variants(&job, &test_window(10.0, 1.0, 0, 2000), &cfg);
+        let slow = generate_variants(&job, &test_window(10.0, 1.0 / 7.0, 0, 2000), &cfg);
+        assert!(!fast.is_empty() && !slow.is_empty());
+        assert!(
+            slow[0].duration() > fast[0].duration() * 6,
+            "1/7-speed slice should take ~7x: {} vs {}",
+            slow[0].duration(),
+            fast[0].duration()
+        );
+    }
+
+    #[test]
+    fn misreporting_inflates_declared_only() {
+        let mut job = test_job(4.0, 10_000.0, 100.0);
+        job.misreport_bias = 0.5;
+        let w = test_window(10.0, 1.0, 0, 500);
+        let vs = generate_variants(&job, &w, &test_cfg());
+        assert!(!vs.is_empty());
+        let v = &vs[0];
+        assert!(v.declared.phi[0] >= v.declared.phi_honest[0]);
+        assert!(
+            v.declared.phi != v.declared.phi_honest,
+            "bias must change the declared vector"
+        );
+    }
+
+    #[test]
+    fn variant_count_bounded_by_vmax() {
+        let job = test_job(4.0, 100_000.0, 50.0);
+        let w = test_window(10.0, 1.0, 0, 100_000);
+        let mut cfg = test_cfg();
+        cfg.max_variants_per_job = 3;
+        let vs = generate_variants(&job, &w, &cfg);
+        assert!(vs.len() <= 4, "V_max chain + 1 alternative, got {}", vs.len());
+        assert!(vs.iter().filter(|v| v.work_offset > 0.0).count() <= 2);
+    }
+
+    #[test]
+    fn psi_frag_penalizes_unusable_residue() {
+        assert_eq!(psi_frag(0, 100, 10), 1.0, "exact fill leaves nothing");
+        assert_eq!(psi_frag(50, 100, 10), 1.0, "usable leftover is fine");
+        assert!((psi_frag(5, 100, 10) - 0.95).abs() < 1e-12, "5-tick residue wasted");
+        assert_eq!(psi_frag(5, 0, 10), 0.0);
+    }
+
+    #[test]
+    fn max_work_for_inflation() {
+        // cv=0 -> no inflation.
+        assert!((max_work_for(100, 1.0, 0.0, 0.9) - 100.0).abs() < 1e-9);
+        // cv>0 at 0.9 quantile -> less work fits.
+        let w = max_work_for(100, 1.0, 0.1, 0.9);
+        assert!(w < 100.0 && w > 80.0, "w = {w}");
+        // Speed scales linearly.
+        assert!((max_work_for(100, 0.5, 0.0, 0.9) - 50.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,57 @@
+//! # JASDA — Job-Aware Scheduling in Scheduler-Driven Job Atomization
+//!
+//! A complete reproduction of the JASDA scheduling framework (Konopa, Fesl,
+//! Beránek, 2025): a market-inspired, bidirectional scheduling loop for
+//! MIG-partitioned GPUs in which jobs act as autonomous agents that bid
+//! scored *subjob variants* into scheduler-announced execution windows, and
+//! the scheduler clears each window optimally via Weighted Interval
+//! Scheduling (WIS).
+//!
+//! ## Architecture (three layers)
+//!
+//! * **L3 (this crate)** — the coordinator: the JASDA interaction cycle,
+//!   scoring/calibration/fairness policies, WIS clearing, a discrete-event
+//!   MIG cluster simulator substrate, baseline schedulers, workload
+//!   generators, metrics, and a tokio-based bid–response protocol runtime.
+//! * **L2 (python/compile/model.py)** — the batched variant-scoring
+//!   pipeline expressed in JAX, AOT-lowered to HLO text at build time.
+//! * **L1 (python/compile/kernels/scoring.py)** — the scoring hot-spot as a
+//!   Pallas kernel (interpret mode for CPU-PJRT execution).
+//!
+//! Python never runs on the scheduling path: `make artifacts` lowers the
+//! L2/L1 pipeline once; [`runtime::PjrtScorer`] loads and executes the
+//! resulting artifact via the PJRT C API.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use jasda::config::SimConfig;
+//! use jasda::jasda::JasdaScheduler;
+//! use jasda::sim::SimEngine;
+//! use jasda::workload::WorkloadGenerator;
+//!
+//! let cfg = SimConfig::default();
+//! let workload = WorkloadGenerator::new(cfg.workload.clone()).generate(42);
+//! let scheduler = JasdaScheduler::new(cfg.jasda.clone());
+//! let mut engine = SimEngine::new(cfg.clone(), Box::new(scheduler));
+//! let outcome = engine.run(workload);
+//! println!("utilization = {:.3}", outcome.metrics.utilization());
+//! ```
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod jasda;
+pub mod job;
+pub mod metrics;
+pub mod mig;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod trp;
+pub mod types;
+pub mod workload;
+
+pub mod util;
+
+pub use types::{Duration, GpuId, JobId, SliceId, Time, VariantId};

@@ -1,0 +1,238 @@
+//! `jasda` — the framework launcher.
+//!
+//! Subcommands:
+//! * `run` — simulate one scheduler on a generated (or traced) workload;
+//! * `compare` — run every scheduler on the same workload, print the
+//!   comparison table (the Table-1 / headline experiment);
+//! * `sweep` — sweep the λ policy parameter (the Table-2 experiment);
+//! * `protocol` — drive the threaded bid–response protocol runtime;
+//! * `gen-trace` — generate and save a workload trace;
+//! * `example` — print the paper's §4.5 worked example step by step.
+
+use jasda::baselines::{by_name, ALL_SCHEDULERS};
+use jasda::config::{ScoringBackend, SimConfig};
+use jasda::jasda::JasdaScheduler;
+use jasda::report::{comparison_headers, comparison_row, Table};
+use jasda::sim::SimEngine;
+use jasda::util::cli::Args;
+use jasda::workload::{load_trace, save_trace, WorkloadGenerator};
+use std::path::{Path, PathBuf};
+
+const USAGE: &str = "\
+jasda — JASDA: job-aware scheduling on MIG GPUs
+
+USAGE:
+  jasda <COMMAND> [OPTIONS]
+
+COMMANDS:
+  run        Run one scheduler and print its metrics
+  compare    Run all schedulers on the identical workload; print the table
+  sweep      Sweep the λ policy parameter (paper Table 2)
+  protocol   Drive the threaded bid–response protocol runtime
+  gen-trace  Generate a workload trace file (positional: output path)
+  example    Reproduce the paper's §4.5 worked example
+
+OPTIONS:
+  --config <file.json>   JSON config (defaults apply if omitted)
+  --seed <u64>           Override the RNG seed
+  --scheduler <name>     run: jasda|fcfs|sjf|edf|backfill|sja_central|themis_like
+  --trace <file.jsonl>   run/compare: load workload from a trace
+  --lambdas <a,b,c>      sweep: λ values (default 0.3,0.5,0.7)
+  --max-rounds <n>       protocol: round cap (default 200000)
+  --pjrt                 run: use the PJRT scoring backend (needs `make artifacts`)
+  --json                 run: emit full metrics as JSON
+  --csv                  compare: emit CSV instead of markdown
+";
+
+fn load_config(args: &Args) -> anyhow::Result<SimConfig> {
+    let mut cfg = match args.opt("config") {
+        Some(p) => SimConfig::from_json_file(Path::new(p))?,
+        None => SimConfig::default(),
+    };
+    if let Some(seed) = args.opt("seed") {
+        cfg.seed = seed.parse().map_err(|_| anyhow::anyhow!("bad --seed '{seed}'"))?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn workload(cfg: &SimConfig, trace: Option<&str>) -> anyhow::Result<Vec<jasda::job::Job>> {
+    match trace {
+        Some(p) => load_trace(Path::new(p)),
+        None => Ok(WorkloadGenerator::new(cfg.workload.clone()).generate(cfg.seed)),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(
+        std::env::args().skip(1),
+        &["config", "seed", "scheduler", "trace", "lambdas", "max-rounds"],
+        &["pjrt", "json", "csv", "help"],
+    )
+    .map_err(|e| anyhow::anyhow!("{e}\n\n{USAGE}"))?;
+
+    if args.flag("help") || args.positional.is_empty() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let cfg = load_config(&args)?;
+
+    match args.positional[0].as_str() {
+        "run" => cmd_run(&args, cfg),
+        "compare" => cmd_compare(&args, cfg),
+        "sweep" => cmd_sweep(&args, cfg),
+        "protocol" => cmd_protocol(&args, cfg),
+        "gen-trace" => cmd_gen_trace(&args, cfg),
+        "example" => {
+            print_worked_example();
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command '{other}'\n\n{USAGE}"),
+    }
+}
+
+fn cmd_run(args: &Args, cfg: SimConfig) -> anyhow::Result<()> {
+    let scheduler = args.opt("scheduler").unwrap_or("jasda");
+    let jobs = workload(&cfg, args.opt("trace"))?;
+    let sched: Box<dyn jasda::sim::Scheduler> = if args.flag("pjrt") && scheduler == "jasda" {
+        let mut jcfg = cfg.jasda.clone();
+        jcfg.backend = ScoringBackend::Pjrt;
+        let scorer = jasda::runtime::PjrtScorer::from_default_artifacts()?;
+        Box::new(JasdaScheduler::with_scorer(jcfg, Box::new(scorer)))
+    } else {
+        by_name(scheduler, &cfg.jasda)
+            .ok_or_else(|| anyhow::anyhow!("unknown scheduler '{scheduler}'"))?
+    };
+    let out = SimEngine::new(cfg, sched).run(jobs);
+    if args.flag("json") {
+        println!("{}", out.metrics.to_json().to_string_pretty());
+    } else {
+        println!("{}", out.metrics.summary());
+        println!("scheduler stats: {}", out.scheduler_stats);
+    }
+    Ok(())
+}
+
+fn cmd_compare(args: &Args, cfg: SimConfig) -> anyhow::Result<()> {
+    let jobs = workload(&cfg, args.opt("trace"))?;
+    let mut table = Table::new(
+        format!(
+            "Scheduler comparison — {} jobs, {} GPU(s) '{}' layout, seed {}",
+            jobs.len(),
+            cfg.cluster.num_gpus,
+            cfg.cluster.layout,
+            cfg.seed
+        ),
+        &comparison_headers(),
+    );
+    for name in ALL_SCHEDULERS {
+        let sched = by_name(name, &cfg.jasda).expect("known scheduler");
+        let out = SimEngine::new(cfg.clone(), sched).run(jobs.clone());
+        table.push_row(comparison_row(&out.metrics));
+    }
+    if args.flag("csv") {
+        print!("{}", table.to_csv());
+    } else {
+        print!("{}", table.to_markdown());
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args, cfg: SimConfig) -> anyhow::Result<()> {
+    let lambdas =
+        args.opt_list_f64("lambdas", &[0.3, 0.5, 0.7]).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let jobs = workload(&cfg, None)?;
+    let mut table = Table::new(
+        "λ policy sweep (paper Table 2)",
+        &["lambda", "policy", "util", "mean_jct", "p95_jct", "deadline_rate", "jain"],
+    );
+    for &l in &lambdas {
+        let mut jcfg = cfg.jasda.clone();
+        jcfg.lambda = l;
+        let policy = if l >= 0.65 {
+            "QoS-first"
+        } else if l <= 0.35 {
+            "Utilization-first"
+        } else {
+            "Balanced"
+        };
+        let out =
+            SimEngine::new(cfg.clone(), Box::new(JasdaScheduler::new(jcfg))).run(jobs.clone());
+        let m = &out.metrics;
+        let f = |x: Option<f64>| x.map_or("-".to_string(), |v| format!("{v:.3}"));
+        table.push_row(vec![
+            format!("{l:.2}"),
+            policy.into(),
+            format!("{:.3}", m.utilization),
+            f(m.mean_jct()),
+            f(m.jct_percentile(0.95)),
+            f(m.deadline_met_rate()),
+            f(m.jain_fairness()),
+        ]);
+    }
+    print!("{}", table.to_markdown());
+    Ok(())
+}
+
+fn cmd_protocol(args: &Args, cfg: SimConfig) -> anyhow::Result<()> {
+    let max_rounds =
+        args.opt_parse("max-rounds", 200_000u64).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let jobs = workload(&cfg, None)?;
+    let out = jasda::coordinator::run_protocol(cfg, jobs, max_rounds);
+    println!(
+        "protocol: rounds={} announcements={} bids={} variants={} awards={} \
+         completed={}/{} vtime={} wall={:?}",
+        out.rounds,
+        out.announcements,
+        out.bids,
+        out.variants,
+        out.awards,
+        out.completed_jobs,
+        out.total_jobs,
+        out.final_time,
+        out.wall
+    );
+    Ok(())
+}
+
+fn cmd_gen_trace(args: &Args, cfg: SimConfig) -> anyhow::Result<()> {
+    let out: PathBuf = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("gen-trace needs an output path"))?
+        .into();
+    let jobs = workload(&cfg, None)?;
+    save_trace(&out, &jobs)?;
+    println!("wrote {} jobs to {}", jobs.len(), out.display());
+    Ok(())
+}
+
+/// Reproduce §4.5: the deterministic single-iteration example.
+fn print_worked_example() {
+    use jasda::jasda::clearing::{select_best_compatible, WisItem};
+    use jasda::types::Interval;
+
+    println!("Paper §4.5 worked example — window w* = (s2, 20 GB, t_min=40, Δt=10)\n");
+    let names = ["v_A1", "v_A2", "v_B1"];
+    let items = [
+        (Interval::new(40, 47), 0.75, 0.55),
+        (Interval::new(47, 50), 0.60, 0.70),
+        (Interval::new(40, 50), 0.80, 0.60),
+    ];
+    let lambda = 0.6;
+    println!("{:<6} {:>5} {:>4} {:>6} {:>6} {:>7}", "bid", "start", "end", "h", "f_sys", "Score");
+    let wis: Vec<WisItem> = items
+        .iter()
+        .map(|&(iv, h, f)| WisItem { interval: iv, score: lambda * h + (1.0 - lambda) * f })
+        .collect();
+    for (n, (&(iv, h, f), w)) in names.iter().zip(items.iter().zip(&wis)) {
+        println!(
+            "{:<6} {:>5} {:>4} {:>6.2} {:>6.2} {:>7.2}",
+            n, iv.start, iv.end, h, f, w.score
+        );
+    }
+    let sol = select_best_compatible(&wis);
+    let chosen: Vec<&str> = sol.selected.iter().map(|&i| names[i]).collect();
+    println!("\nWIS selection: {{{}}}, total score {:.2}", chosen.join(", "), sol.total_score);
+    println!("(paper: {{v_A1, v_A2}} with total 1.31)");
+}

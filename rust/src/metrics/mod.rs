@@ -1,0 +1,358 @@
+//! Run metrics: the quantities the paper's evaluation agenda names —
+//! utilization, job completion time, temporal fairness / starvation,
+//! fragmentation, and scheduling overhead (§4.6, §6(a)).
+
+use crate::types::{Duration, JobId, Time};
+
+/// Per-job outcome record.
+#[derive(Debug, Clone)]
+pub struct JobMetrics {
+    /// Job id.
+    pub job: JobId,
+    /// Job class name.
+    pub class: String,
+    /// Arrival time.
+    pub arrival: Time,
+    /// Completion time (None = never finished within the run).
+    pub completed: Option<Time>,
+    /// Total work of the job (full-GPU tick equivalents) — the job's
+    /// ideal JCT on a dedicated full GPU.
+    pub work: f64,
+    /// Number of subjobs the job was split into.
+    pub subjobs: u32,
+    /// Longest gap (ticks) between consecutive selections while the job
+    /// was waiting — the starvation indicator of §4.3.
+    pub max_wait: Duration,
+    /// Whether the job had a deadline and met it.
+    pub deadline_met: Option<bool>,
+    /// Tenant weight.
+    pub weight: f64,
+}
+
+impl JobMetrics {
+    /// Job completion time (ticks), if finished.
+    pub fn jct(&self) -> Option<u64> {
+        self.completed.map(|c| c.saturating_sub(self.arrival))
+    }
+
+    /// Finish-time-fairness style slowdown: JCT / ideal dedicated-GPU
+    /// runtime. 1.0 = as fast as exclusive use of a full GPU.
+    pub fn slowdown(&self) -> Option<f64> {
+        let jct = self.jct()? as f64;
+        if self.work <= 0.0 {
+            return None;
+        }
+        Some(jct / self.work)
+    }
+}
+
+/// Aggregate metrics for one simulation run.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    /// Scheduler name that produced the run.
+    pub scheduler: String,
+    /// Last completion time (or last event) of the run.
+    pub makespan: Time,
+    /// Compute-weighted cluster utilization over [first arrival, makespan].
+    pub utilization: f64,
+    /// Mean per-slice fragmentation over the run span.
+    pub mean_fragmentation: f64,
+    /// Per-job records.
+    pub jobs: Vec<JobMetrics>,
+    /// Scheduler iterations executed.
+    pub iterations: u64,
+    /// Iterations in which at least one bid was received.
+    pub iterations_with_bids: u64,
+    /// Total variants submitted across all iterations (Σ M).
+    pub total_variants: u64,
+    /// Total subjobs committed.
+    pub total_commits: u64,
+    /// Wall-clock nanoseconds spent inside `Scheduler::iterate`.
+    pub sched_wall_ns: u64,
+    /// Jobs that never completed within the run.
+    pub unfinished: usize,
+}
+
+fn percentile(sorted: &[f64], p: f64) -> Option<f64> {
+    if sorted.is_empty() {
+        return None;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    Some(sorted[idx.min(sorted.len() - 1)])
+}
+
+impl RunMetrics {
+    /// Compute-weighted utilization (0..1).
+    pub fn utilization(&self) -> f64 {
+        self.utilization
+    }
+
+    /// Mean JCT in ticks over completed jobs.
+    pub fn mean_jct(&self) -> Option<f64> {
+        let jcts: Vec<f64> = self.jobs.iter().filter_map(|j| j.jct()).map(|x| x as f64).collect();
+        if jcts.is_empty() {
+            None
+        } else {
+            Some(jcts.iter().sum::<f64>() / jcts.len() as f64)
+        }
+    }
+
+    /// JCT percentile (p in [0,1]) over completed jobs.
+    pub fn jct_percentile(&self, p: f64) -> Option<f64> {
+        let mut jcts: Vec<f64> =
+            self.jobs.iter().filter_map(|j| j.jct()).map(|x| x as f64).collect();
+        jcts.sort_by(|a, b| a.total_cmp(b));
+        percentile(&jcts, p)
+    }
+
+    /// Mean slowdown (finish-time fairness ratio) over completed jobs.
+    pub fn mean_slowdown(&self) -> Option<f64> {
+        let s: Vec<f64> = self.jobs.iter().filter_map(|j| j.slowdown()).collect();
+        if s.is_empty() {
+            None
+        } else {
+            Some(s.iter().sum::<f64>() / s.len() as f64)
+        }
+    }
+
+    /// Jain fairness index over per-job slowdowns:
+    /// `(Σx)² / (n·Σx²)` with x = slowdown. 1 = perfectly equal slowdowns.
+    pub fn jain_fairness(&self) -> Option<f64> {
+        let xs: Vec<f64> = self.jobs.iter().filter_map(|j| j.slowdown()).collect();
+        if xs.is_empty() {
+            return None;
+        }
+        let s1: f64 = xs.iter().sum();
+        let s2: f64 = xs.iter().map(|x| x * x).sum();
+        if s2 == 0.0 {
+            return None;
+        }
+        Some(s1 * s1 / (xs.len() as f64 * s2))
+    }
+
+    /// Worst (max) slowdown — the tail unfairness the age term targets.
+    pub fn max_slowdown(&self) -> Option<f64> {
+        self.jobs.iter().filter_map(|j| j.slowdown()).max_by(f64::total_cmp)
+    }
+
+    /// Maximum waiting gap between selections across all jobs (ticks):
+    /// the starvation headline of §4.3.
+    pub fn max_starvation(&self) -> Duration {
+        self.jobs.iter().map(|j| j.max_wait).max().unwrap_or(0)
+    }
+
+    /// p95 of per-job max waiting gaps.
+    pub fn p95_wait(&self) -> Option<f64> {
+        let mut ws: Vec<f64> = self.jobs.iter().map(|j| j.max_wait as f64).collect();
+        ws.sort_by(|a, b| a.total_cmp(b));
+        percentile(&ws, 0.95)
+    }
+
+    /// Fraction of deadline-carrying jobs that met their deadline.
+    pub fn deadline_met_rate(&self) -> Option<f64> {
+        let with: Vec<bool> = self.jobs.iter().filter_map(|j| j.deadline_met).collect();
+        if with.is_empty() {
+            None
+        } else {
+            Some(with.iter().filter(|&&m| m).count() as f64 / with.len() as f64)
+        }
+    }
+
+    /// Jobs completed per simulated second.
+    pub fn throughput_per_sec(&self) -> f64 {
+        let done = self.jobs.iter().filter(|j| j.completed.is_some()).count();
+        if self.makespan == 0 {
+            return 0.0;
+        }
+        done as f64 / (self.makespan as f64 / 1000.0)
+    }
+
+    /// Mean subjobs per completed job (atomization degree).
+    pub fn mean_subjobs(&self) -> Option<f64> {
+        let done: Vec<f64> = self
+            .jobs
+            .iter()
+            .filter(|j| j.completed.is_some())
+            .map(|j| j.subjobs as f64)
+            .collect();
+        if done.is_empty() {
+            None
+        } else {
+            Some(done.iter().sum::<f64>() / done.len() as f64)
+        }
+    }
+
+    /// Mean wall-clock scheduler overhead per iteration (ns).
+    pub fn sched_ns_per_iteration(&self) -> f64 {
+        if self.iterations == 0 {
+            return 0.0;
+        }
+        self.sched_wall_ns as f64 / self.iterations as f64
+    }
+
+    /// Full metrics as JSON (for `jasda run --json`).
+    pub fn to_json(&self) -> crate::util::Json {
+        use crate::util::Json;
+        let opt = |x: Option<f64>| x.map_or(Json::Null, Json::Num);
+        Json::obj(vec![
+            ("scheduler", self.scheduler.clone().into()),
+            ("makespan", self.makespan.into()),
+            ("utilization", self.utilization.into()),
+            ("mean_fragmentation", self.mean_fragmentation.into()),
+            ("iterations", self.iterations.into()),
+            ("total_commits", self.total_commits.into()),
+            ("sched_wall_ns", self.sched_wall_ns.into()),
+            ("unfinished", self.unfinished.into()),
+            ("mean_jct", opt(self.mean_jct())),
+            ("p95_jct", opt(self.jct_percentile(0.95))),
+            ("mean_slowdown", opt(self.mean_slowdown())),
+            ("max_slowdown", opt(self.max_slowdown())),
+            ("jain_fairness", opt(self.jain_fairness())),
+            ("max_starvation", self.max_starvation().into()),
+            ("deadline_met_rate", opt(self.deadline_met_rate())),
+            ("throughput_per_sec", self.throughput_per_sec().into()),
+            ("mean_subjobs", opt(self.mean_subjobs())),
+            (
+                "jobs",
+                Json::Arr(
+                    self.jobs
+                        .iter()
+                        .map(|j| {
+                            Json::obj(vec![
+                                ("job", j.job.into()),
+                                ("class", j.class.clone().into()),
+                                ("arrival", j.arrival.into()),
+                                ("completed", j.completed.map_or(Json::Null, |c| c.into())),
+                                ("work", j.work.into()),
+                                ("subjobs", j.subjobs.into()),
+                                ("max_wait", j.max_wait.into()),
+                                (
+                                    "deadline_met",
+                                    j.deadline_met.map_or(Json::Null, Json::Bool),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: util={:.3} meanJCT={:.0} p95JCT={:.0} jain={:.3} maxSlow={:.2} starv={} commits={} unfinished={}",
+            self.scheduler,
+            self.utilization,
+            self.mean_jct().unwrap_or(f64::NAN),
+            self.jct_percentile(0.95).unwrap_or(f64::NAN),
+            self.jain_fairness().unwrap_or(f64::NAN),
+            self.max_slowdown().unwrap_or(f64::NAN),
+            self.max_starvation(),
+            self.total_commits,
+            self.unfinished,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn jm(job: JobId, arrival: Time, completed: Option<Time>, work: f64, max_wait: u64) -> JobMetrics {
+        JobMetrics {
+            job,
+            class: "t".into(),
+            arrival,
+            completed,
+            work,
+            subjobs: 2,
+            max_wait,
+            deadline_met: None,
+            weight: 1.0,
+        }
+    }
+
+    fn sample() -> RunMetrics {
+        RunMetrics {
+            scheduler: "test".into(),
+            makespan: 10_000,
+            utilization: 0.8,
+            mean_fragmentation: 0.1,
+            jobs: vec![
+                jm(0, 0, Some(2000), 1000.0, 100),
+                jm(1, 0, Some(4000), 1000.0, 700),
+                jm(2, 1000, Some(3000), 500.0, 300),
+                jm(3, 2000, None, 800.0, 4000),
+            ],
+            iterations: 100,
+            iterations_with_bids: 80,
+            total_variants: 500,
+            total_commits: 7,
+            sched_wall_ns: 1_000_000,
+            unfinished: 1,
+        }
+    }
+
+    #[test]
+    fn jct_and_slowdown() {
+        let m = sample();
+        assert_eq!(m.jobs[0].jct(), Some(2000));
+        assert_eq!(m.jobs[3].jct(), None);
+        assert_eq!(m.jobs[0].slowdown(), Some(2.0));
+        assert_eq!(m.jobs[2].slowdown(), Some(4.0));
+    }
+
+    #[test]
+    fn aggregates() {
+        let m = sample();
+        // completed jcts: 2000, 4000, 2000 -> mean 2666.67
+        assert!((m.mean_jct().unwrap() - 8000.0 / 3.0).abs() < 1e-9);
+        // slowdowns: 2, 4, 4
+        assert!((m.mean_slowdown().unwrap() - 10.0 / 3.0).abs() < 1e-9);
+        assert_eq!(m.max_slowdown(), Some(4.0));
+        let jain = m.jain_fairness().unwrap();
+        let expect = (10.0f64 * 10.0) / (3.0 * (4.0 + 16.0 + 16.0));
+        assert!((jain - expect).abs() < 1e-12);
+        assert_eq!(m.max_starvation(), 4000);
+        assert_eq!(m.throughput_per_sec(), 0.3);
+        assert_eq!(m.mean_subjobs(), Some(2.0));
+        assert_eq!(m.sched_ns_per_iteration(), 10_000.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let m = sample();
+        // sorted jcts [2000, 2000, 4000]; p95 -> index round(2*0.95)=2
+        assert_eq!(m.jct_percentile(0.95), Some(4000.0));
+        assert_eq!(m.jct_percentile(0.0), Some(2000.0));
+        assert!(m.p95_wait().unwrap() >= 700.0);
+    }
+
+    #[test]
+    fn empty_metrics_are_none() {
+        let m = RunMetrics::default();
+        assert_eq!(m.mean_jct(), None);
+        assert_eq!(m.jain_fairness(), None);
+        assert_eq!(m.deadline_met_rate(), None);
+        assert_eq!(m.mean_subjobs(), None);
+        assert_eq!(m.max_starvation(), 0);
+        assert_eq!(m.throughput_per_sec(), 0.0);
+    }
+
+    #[test]
+    fn deadline_rate() {
+        let mut m = sample();
+        m.jobs[0].deadline_met = Some(true);
+        m.jobs[1].deadline_met = Some(false);
+        m.jobs[2].deadline_met = Some(true);
+        assert!((m.deadline_met_rate().unwrap() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_contains_key_fields() {
+        let s = sample().summary();
+        assert!(s.contains("util=0.800"));
+        assert!(s.contains("test:"));
+    }
+}

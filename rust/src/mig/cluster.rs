@@ -1,0 +1,264 @@
+//! Cluster model: GPUs, their MIG slices, and cluster-wide window queries.
+//!
+//! The cluster is the shared state both JASDA and the baseline schedulers
+//! operate on. A [`Slice`] couples a [`SliceProfile`] with a reservation
+//! [`Timeline`]; a [`Cluster`] owns every slice across every GPU and
+//! answers the queries the announcement phase needs: candidate idle
+//! windows, utilization, and fragmentation.
+
+use crate::mig::profile::{PartitionLayout, SliceProfile};
+use crate::mig::timeline::{IdleGap, Timeline};
+use crate::types::{Duration, GpuId, Interval, SliceId, Time};
+
+/// One MIG slice: profile + committed reservation timeline.
+#[derive(Debug, Clone)]
+pub struct Slice {
+    /// Cluster-unique slice id.
+    pub id: SliceId,
+    /// Owning GPU.
+    pub gpu: GpuId,
+    /// MIG profile (capacity + compute fraction).
+    pub profile: SliceProfile,
+    /// Committed subjob reservations.
+    pub timeline: Timeline,
+}
+
+impl Slice {
+    /// Memory capacity `c_k` in GiB.
+    #[inline]
+    pub fn capacity_gb(&self) -> f64 {
+        self.profile.mem_gb()
+    }
+
+    /// Relative execution speed (full GPU = 1.0).
+    #[inline]
+    pub fn speed(&self) -> f64 {
+        self.profile.speed()
+    }
+}
+
+/// A candidate announcement window `w* = (s_k, c_k, t_min, Δt)` (paper §3.1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Window {
+    /// Slice the window lives on.
+    pub slice: SliceId,
+    /// Slice memory capacity `c_k` in GiB.
+    pub capacity_gb: f64,
+    /// Slice execution speed (full GPU = 1.0) — exposed so jobs can
+    /// predict subjob durations on this slice.
+    pub speed: f64,
+    /// Window interval `[t_min, t_min + Δt)`.
+    pub interval: Interval,
+}
+
+impl Window {
+    /// Window start `t_min`.
+    #[inline]
+    pub fn t_min(&self) -> Time {
+        self.interval.start
+    }
+
+    /// Window length `Δt`.
+    #[inline]
+    pub fn delta_t(&self) -> Duration {
+        self.interval.len()
+    }
+}
+
+/// The full MIG cluster: every slice of every GPU.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    slices: Vec<Slice>,
+    gpus: u32,
+}
+
+impl Cluster {
+    /// Build a cluster of `num_gpus` GPUs, each partitioned with `layout`.
+    pub fn new(num_gpus: u32, layout: &PartitionLayout) -> Self {
+        let mut slices = Vec::new();
+        let mut next_id: SliceId = 0;
+        for gpu in 0..num_gpus {
+            for &profile in &layout.slices {
+                slices.push(Slice { id: next_id, gpu, profile, timeline: Timeline::new() });
+                next_id += 1;
+            }
+        }
+        Cluster { slices, gpus: num_gpus }
+    }
+
+    /// Build a heterogeneous cluster from per-GPU layouts.
+    pub fn heterogeneous(layouts: &[PartitionLayout]) -> Self {
+        let mut slices = Vec::new();
+        let mut next_id: SliceId = 0;
+        for (gpu, layout) in layouts.iter().enumerate() {
+            for &profile in &layout.slices {
+                slices.push(Slice {
+                    id: next_id,
+                    gpu: gpu as GpuId,
+                    profile,
+                    timeline: Timeline::new(),
+                });
+                next_id += 1;
+            }
+        }
+        Cluster { slices, gpus: layouts.len() as u32 }
+    }
+
+    /// Number of GPUs.
+    pub fn num_gpus(&self) -> u32 {
+        self.gpus
+    }
+
+    /// Number of slices.
+    pub fn num_slices(&self) -> usize {
+        self.slices.len()
+    }
+
+    /// All slices.
+    pub fn slices(&self) -> &[Slice] {
+        &self.slices
+    }
+
+    /// Mutable access to a slice by id.
+    pub fn slice_mut(&mut self, id: SliceId) -> &mut Slice {
+        &mut self.slices[id as usize]
+    }
+
+    /// Slice by id.
+    pub fn slice(&self, id: SliceId) -> &Slice {
+        &self.slices[id as usize]
+    }
+
+    /// Enumerate every candidate window across all slices: idle gaps in
+    /// `[from, from + horizon)` of at least `min_len` ticks.
+    pub fn candidate_windows(
+        &self,
+        from: Time,
+        horizon: Duration,
+        min_len: Duration,
+    ) -> Vec<Window> {
+        let to = from.saturating_add(horizon);
+        let mut windows = Vec::new();
+        for s in &self.slices {
+            for IdleGap { interval } in s.timeline.idle_gaps(from, to, min_len) {
+                windows.push(Window {
+                    slice: s.id,
+                    capacity_gb: s.capacity_gb(),
+                    speed: s.speed(),
+                    interval,
+                });
+            }
+        }
+        windows
+    }
+
+    /// Compute-weighted utilization of the cluster over `[from, to)`:
+    /// busy-ticks weighted by slice compute fraction, normalized by the
+    /// cluster's total compute-time capacity. This is the "utilization"
+    /// headline metric (a 1g slice busy contributes 1/7 of a GPU).
+    pub fn utilization(&self, from: Time, to: Time) -> f64 {
+        if to <= from {
+            return 0.0;
+        }
+        let span = (to - from) as f64;
+        let mut busy_weighted = 0.0;
+        let mut cap_weighted = 0.0;
+        for s in &self.slices {
+            let w = s.speed();
+            busy_weighted += w * s.timeline.busy_ticks(from, to) as f64;
+            cap_weighted += w * span;
+        }
+        if cap_weighted == 0.0 {
+            0.0
+        } else {
+            busy_weighted / cap_weighted
+        }
+    }
+
+    /// Mean per-slice fragmentation over `[from, to)` (paper §3.5 repack
+    /// trigger metric).
+    pub fn mean_fragmentation(&self, from: Time, to: Time) -> f64 {
+        if self.slices.is_empty() {
+            return 0.0;
+        }
+        let sum: f64 = self.slices.iter().map(|s| s.timeline.fragmentation(from, to)).sum();
+        sum / self.slices.len() as f64
+    }
+
+    /// Drop reservation history ending at or before `t` on all slices.
+    pub fn compact_before(&mut self, t: Time) -> usize {
+        self.slices.iter_mut().map(|s| s.timeline.compact_before(t)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::timeline::Reservation;
+
+    #[test]
+    fn cluster_construction_assigns_unique_ids() {
+        let c = Cluster::new(2, &PartitionLayout::balanced());
+        assert_eq!(c.num_gpus(), 2);
+        assert_eq!(c.num_slices(), 6);
+        let ids: Vec<SliceId> = c.slices().iter().map(|s| s.id).collect();
+        assert_eq!(ids, (0..6).collect::<Vec<_>>());
+        assert_eq!(c.slice(0).gpu, 0);
+        assert_eq!(c.slice(3).gpu, 1);
+    }
+
+    #[test]
+    fn heterogeneous_cluster() {
+        let c = Cluster::heterogeneous(&[PartitionLayout::whole(), PartitionLayout::seven_small()]);
+        assert_eq!(c.num_gpus(), 2);
+        assert_eq!(c.num_slices(), 8);
+        assert_eq!(c.slice(0).profile, SliceProfile::P7g40gb);
+        assert_eq!(c.slice(1).profile, SliceProfile::P1g5gb);
+    }
+
+    #[test]
+    fn candidate_windows_cover_all_slices() {
+        let mut c = Cluster::new(1, &PartitionLayout::balanced());
+        c.slice_mut(0)
+            .timeline
+            .reserve(Reservation { job: 1, subjob_seq: 0, interval: Interval::new(0, 50) })
+            .unwrap();
+        let ws = c.candidate_windows(0, 100, 1);
+        // slice 0 has gap [50,100); slices 1,2 each have [0,100)
+        assert_eq!(ws.len(), 3);
+        let w0 = ws.iter().find(|w| w.slice == 0).unwrap();
+        assert_eq!(w0.interval, Interval::new(50, 100));
+        assert_eq!(w0.capacity_gb, 20.0);
+        let w1 = ws.iter().find(|w| w.slice == 1).unwrap();
+        assert_eq!(w1.delta_t(), 100);
+        assert_eq!(w1.capacity_gb, 10.0);
+    }
+
+    #[test]
+    fn utilization_weights_by_compute() {
+        let mut c = Cluster::new(1, &PartitionLayout::balanced()); // 3g+2g+2g
+        // Fill the 3g slice fully for [0,100).
+        c.slice_mut(0)
+            .timeline
+            .reserve(Reservation { job: 1, subjob_seq: 0, interval: Interval::new(0, 100) })
+            .unwrap();
+        let u = c.utilization(0, 100);
+        // busy 3/7 * 100 of capacity 7/7 * 100 = 3/7.
+        assert!((u - 3.0 / 7.0).abs() < 1e-12, "u = {u}");
+        assert_eq!(c.utilization(100, 100), 0.0);
+    }
+
+    #[test]
+    fn mean_fragmentation_and_compact() {
+        let mut c = Cluster::new(1, &PartitionLayout::seven_small());
+        for (i, t) in [(0u32, 10u64), (1, 20), (2, 30)] {
+            c.slice_mut(i)
+                .timeline
+                .reserve(Reservation { job: i, subjob_seq: 0, interval: Interval::new(t, t + 5) })
+                .unwrap();
+        }
+        assert!(c.mean_fragmentation(0, 100) > 0.0);
+        assert_eq!(c.compact_before(40), 3);
+        assert_eq!(c.compact_before(40), 0);
+    }
+}

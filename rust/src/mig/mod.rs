@@ -1,0 +1,16 @@
+//! MIG substrate: slice profiles, partition layouts, per-slice reservation
+//! timelines, and the cluster model the schedulers operate on.
+//!
+//! The paper evaluates JASDA on MIG-enabled GPUs; since no physical MIG
+//! hardware is available here, this module provides a behaviorally
+//! faithful simulated substrate (see DESIGN.md §4): the NVIDIA profile
+//! table fixes slice capacities and compute fractions, and timelines
+//! enforce the non-overlap invariant the clearing phase relies on.
+
+pub mod cluster;
+pub mod profile;
+pub mod timeline;
+
+pub use cluster::{Cluster, Slice, Window};
+pub use profile::{PartitionLayout, SliceProfile};
+pub use timeline::{IdleGap, Reservation, Timeline};

@@ -1,0 +1,219 @@
+//! NVIDIA MIG slice profiles (A100-40GB generation).
+//!
+//! A MIG-capable GPU is partitioned into isolated *GPU instances* whose
+//! sizes are drawn from a fixed profile table. The unit of compute is one
+//! seventh of the GPU's SM complement ("1g"); memory comes in 5 GiB steps
+//! on the 40 GiB part. JASDA's decisions depend on exactly two profile
+//! attributes: the slice's memory capacity `c_k` (the safety bound of
+//! paper §4.1(a)) and its compute fraction (which sets subjob execution
+//! speed in the simulator).
+
+
+/// A MIG slice profile, named after the NVIDIA `Ng.Mgb` convention.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SliceProfile {
+    /// 1g.5gb — 1/7 compute, 5 GiB.
+    P1g5gb,
+    /// 2g.10gb — 2/7 compute, 10 GiB.
+    P2g10gb,
+    /// 3g.20gb — 3/7 compute, 20 GiB.
+    P3g20gb,
+    /// 4g.20gb — 4/7 compute, 20 GiB.
+    P4g20gb,
+    /// 7g.40gb — full GPU, 40 GiB.
+    P7g40gb,
+}
+
+impl SliceProfile {
+    /// All profiles, smallest first.
+    pub const ALL: [SliceProfile; 5] = [
+        SliceProfile::P1g5gb,
+        SliceProfile::P2g10gb,
+        SliceProfile::P3g20gb,
+        SliceProfile::P4g20gb,
+        SliceProfile::P7g40gb,
+    ];
+
+    /// Memory capacity `c_k` in GiB.
+    pub fn mem_gb(&self) -> f64 {
+        match self {
+            SliceProfile::P1g5gb => 5.0,
+            SliceProfile::P2g10gb => 10.0,
+            SliceProfile::P3g20gb => 20.0,
+            SliceProfile::P4g20gb => 20.0,
+            SliceProfile::P7g40gb => 40.0,
+        }
+    }
+
+    /// Compute capacity in sevenths of the full GPU.
+    pub fn compute_sevenths(&self) -> u32 {
+        match self {
+            SliceProfile::P1g5gb => 1,
+            SliceProfile::P2g10gb => 2,
+            SliceProfile::P3g20gb => 3,
+            SliceProfile::P4g20gb => 4,
+            SliceProfile::P7g40gb => 7,
+        }
+    }
+
+    /// Relative execution speed of the slice (full GPU = 1.0).
+    ///
+    /// Work units in the simulator are defined as "full-GPU tick
+    /// equivalents": a subjob carrying `w` work occupies a slice for
+    /// `w / speed()` ticks.
+    #[inline]
+    pub fn speed(&self) -> f64 {
+        self.compute_sevenths() as f64 / 7.0
+    }
+
+    /// Canonical NVIDIA profile name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SliceProfile::P1g5gb => "1g.5gb",
+            SliceProfile::P2g10gb => "2g.10gb",
+            SliceProfile::P3g20gb => "3g.20gb",
+            SliceProfile::P4g20gb => "4g.20gb",
+            SliceProfile::P7g40gb => "7g.40gb",
+        }
+    }
+
+    /// Parse a profile from its NVIDIA name.
+    pub fn parse(s: &str) -> Option<SliceProfile> {
+        Self::ALL.iter().copied().find(|p| p.name() == s)
+    }
+}
+
+impl std::fmt::Display for SliceProfile {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A named GPU partition layout: the multiset of slice profiles carved out
+/// of one physical GPU. Valid layouts keep the compute total ≤ 7 sevenths
+/// (memory follows automatically on the 40 GiB part for the standard
+/// layouts used here).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PartitionLayout {
+    /// Human-readable layout name (e.g. `"balanced"`).
+    pub name: String,
+    /// Slice profiles carved out of the GPU.
+    pub slices: Vec<SliceProfile>,
+}
+
+impl PartitionLayout {
+    /// Build and validate a layout.
+    pub fn new(name: impl Into<String>, slices: Vec<SliceProfile>) -> anyhow::Result<Self> {
+        let layout = PartitionLayout { name: name.into(), slices };
+        layout.validate()?;
+        Ok(layout)
+    }
+
+    /// Check MIG feasibility: total compute ≤ 7/7 and at least one slice.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.slices.is_empty() {
+            anyhow::bail!("partition layout '{}' has no slices", self.name);
+        }
+        let total: u32 = self.slices.iter().map(|p| p.compute_sevenths()).sum();
+        if total > 7 {
+            anyhow::bail!(
+                "partition layout '{}' oversubscribes compute: {total}/7 sevenths",
+                self.name
+            );
+        }
+        Ok(())
+    }
+
+    /// Total memory across slices in GiB.
+    pub fn total_mem_gb(&self) -> f64 {
+        self.slices.iter().map(|p| p.mem_gb()).sum()
+    }
+
+    /// The `1g×7` layout: seven small slices.
+    pub fn seven_small() -> Self {
+        PartitionLayout::new("7x1g", vec![SliceProfile::P1g5gb; 7]).unwrap()
+    }
+
+    /// A balanced mixed layout: 3g + 2g + 2g (the common "3-way" split).
+    pub fn balanced() -> Self {
+        PartitionLayout::new(
+            "balanced",
+            vec![SliceProfile::P3g20gb, SliceProfile::P2g10gb, SliceProfile::P2g10gb],
+        )
+        .unwrap()
+    }
+
+    /// Heterogeneous layout 4g + 2g + 1g covering small-to-large demand.
+    pub fn heterogeneous() -> Self {
+        PartitionLayout::new(
+            "heterogeneous",
+            vec![SliceProfile::P4g20gb, SliceProfile::P2g10gb, SliceProfile::P1g5gb],
+        )
+        .unwrap()
+    }
+
+    /// Whole-GPU layout (no slicing): one 7g slice.
+    pub fn whole() -> Self {
+        PartitionLayout::new("whole", vec![SliceProfile::P7g40gb]).unwrap()
+    }
+
+    /// Look up a named stock layout.
+    pub fn stock(name: &str) -> Option<Self> {
+        match name {
+            "7x1g" => Some(Self::seven_small()),
+            "balanced" => Some(Self::balanced()),
+            "heterogeneous" => Some(Self::heterogeneous()),
+            "whole" => Some(Self::whole()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profile_table_matches_nvidia_spec() {
+        assert_eq!(SliceProfile::P1g5gb.mem_gb(), 5.0);
+        assert_eq!(SliceProfile::P2g10gb.mem_gb(), 10.0);
+        assert_eq!(SliceProfile::P3g20gb.mem_gb(), 20.0);
+        assert_eq!(SliceProfile::P4g20gb.mem_gb(), 20.0);
+        assert_eq!(SliceProfile::P7g40gb.mem_gb(), 40.0);
+        assert_eq!(SliceProfile::P7g40gb.compute_sevenths(), 7);
+        assert!((SliceProfile::P1g5gb.speed() - 1.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn profile_name_round_trip() {
+        for p in SliceProfile::ALL {
+            assert_eq!(SliceProfile::parse(p.name()), Some(p));
+        }
+        assert_eq!(SliceProfile::parse("8g.80gb"), None);
+    }
+
+    #[test]
+    fn stock_layouts_are_valid() {
+        for name in ["7x1g", "balanced", "heterogeneous", "whole"] {
+            let l = PartitionLayout::stock(name).unwrap();
+            l.validate().unwrap();
+        }
+        assert!(PartitionLayout::stock("nope").is_none());
+    }
+
+    #[test]
+    fn oversubscribed_layout_rejected() {
+        let r = PartitionLayout::new("bad", vec![SliceProfile::P4g20gb, SliceProfile::P4g20gb]);
+        assert!(r.is_err());
+        let r = PartitionLayout::new("empty", vec![]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn seven_small_fills_gpu() {
+        let l = PartitionLayout::seven_small();
+        let total: u32 = l.slices.iter().map(|p| p.compute_sevenths()).sum();
+        assert_eq!(total, 7);
+        assert_eq!(l.total_mem_gb(), 35.0);
+    }
+}

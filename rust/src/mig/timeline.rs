@@ -1,0 +1,347 @@
+//! Per-slice reservation timeline and idle-window extraction.
+//!
+//! Each MIG slice owns a [`Timeline`]: a sorted, non-overlapping list of
+//! committed subjob reservations. The scheduler's *window announcement*
+//! step (paper §3.1) queries the timeline for contiguous idle regions; the
+//! *commit* step (paper §3.5) inserts the reservations selected by the WIS
+//! clearing phase. Overlap is rejected structurally, so a committed
+//! schedule can never violate the non-preemption invariant.
+
+use crate::types::{Duration, Interval, JobId, Time};
+
+/// A committed, non-preemptive reservation of a slice by one subjob.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Reservation {
+    /// Job the subjob belongs to.
+    pub job: JobId,
+    /// Monotone per-job subjob sequence number (0-based).
+    pub subjob_seq: u32,
+    /// Reserved execution interval.
+    pub interval: Interval,
+}
+
+/// Sorted, non-overlapping reservation list for one slice.
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    /// Reservations sorted by start time; pairwise non-overlapping.
+    entries: Vec<Reservation>,
+}
+
+/// An idle gap on a slice, as announced to jobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IdleGap {
+    /// Gap interval (clipped to the query horizon).
+    pub interval: Interval,
+}
+
+impl Timeline {
+    /// Empty timeline.
+    pub fn new() -> Self {
+        Timeline { entries: Vec::new() }
+    }
+
+    /// Number of reservations.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True if no reservations exist.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// All reservations in start order.
+    pub fn entries(&self) -> &[Reservation] {
+        &self.entries
+    }
+
+    /// Position of the first entry whose end is after `t` (binary search).
+    fn first_ending_after(&self, t: Time) -> usize {
+        self.entries.partition_point(|r| r.interval.end <= t)
+    }
+
+    /// True if `interval` overlaps no existing reservation.
+    pub fn is_free(&self, interval: &Interval) -> bool {
+        if interval.is_empty() {
+            return true;
+        }
+        let i = self.first_ending_after(interval.start);
+        match self.entries.get(i) {
+            Some(r) => !r.interval.overlaps(interval),
+            None => true,
+        }
+    }
+
+    /// Insert a reservation; fails if it overlaps any existing one.
+    pub fn reserve(&mut self, res: Reservation) -> anyhow::Result<()> {
+        if res.interval.is_empty() {
+            anyhow::bail!("empty reservation interval {}", res.interval);
+        }
+        if !self.is_free(&res.interval) {
+            anyhow::bail!(
+                "reservation {} for job {} overlaps an existing commitment",
+                res.interval,
+                res.job
+            );
+        }
+        let pos = self.entries.partition_point(|r| r.interval.start < res.interval.start);
+        self.entries.insert(pos, res);
+        Ok(())
+    }
+
+    /// Remove a reservation (used by the rolling-repack pass). Returns the
+    /// removed entry if found.
+    pub fn release(&mut self, job: JobId, subjob_seq: u32) -> Option<Reservation> {
+        let pos = self
+            .entries
+            .iter()
+            .position(|r| r.job == job && r.subjob_seq == subjob_seq)?;
+        Some(self.entries.remove(pos))
+    }
+
+    /// Truncate a reservation's end (the realized subjob finished early).
+    /// Returns false if the reservation was not found or `new_end` does not
+    /// shrink it.
+    pub fn truncate(&mut self, job: JobId, subjob_seq: u32, new_end: Time) -> bool {
+        for r in &mut self.entries {
+            if r.job == job && r.subjob_seq == subjob_seq {
+                if new_end > r.interval.start && new_end < r.interval.end {
+                    r.interval.end = new_end;
+                    return true;
+                }
+                return false;
+            }
+        }
+        false
+    }
+
+    /// Drop reservations that end at or before `t` (history compaction).
+    /// Returns how many entries were removed.
+    pub fn compact_before(&mut self, t: Time) -> usize {
+        let keep_from = self.first_ending_after(t);
+        if keep_from == 0 {
+            return 0;
+        }
+        self.entries.drain(..keep_from).count()
+    }
+
+    /// Enumerate idle gaps in `[from, horizon)`, each at least `min_len`
+    /// ticks long. This is the raw material of window announcement.
+    pub fn idle_gaps(&self, from: Time, horizon: Time, min_len: Duration) -> Vec<IdleGap> {
+        let mut gaps = Vec::new();
+        if from >= horizon {
+            return gaps;
+        }
+        let mut cursor = from;
+        for r in &self.entries[self.first_ending_after(from)..] {
+            if r.interval.start >= horizon {
+                break;
+            }
+            if r.interval.start > cursor {
+                let gap = Interval::new(cursor, r.interval.start.min(horizon));
+                if gap.len() >= min_len {
+                    gaps.push(IdleGap { interval: gap });
+                }
+            }
+            cursor = cursor.max(r.interval.end);
+        }
+        if cursor < horizon {
+            let gap = Interval::new(cursor, horizon);
+            if gap.len() >= min_len {
+                gaps.push(IdleGap { interval: gap });
+            }
+        }
+        gaps
+    }
+
+    /// Earliest idle gap in `[from, horizon)` of at least `min_len`, if any.
+    pub fn earliest_gap(&self, from: Time, horizon: Time, min_len: Duration) -> Option<IdleGap> {
+        // Same walk as idle_gaps but returns at the first hit.
+        if from >= horizon {
+            return None;
+        }
+        let mut cursor = from;
+        for r in &self.entries[self.first_ending_after(from)..] {
+            if r.interval.start >= horizon {
+                break;
+            }
+            if r.interval.start > cursor {
+                let gap = Interval::new(cursor, r.interval.start.min(horizon));
+                if gap.len() >= min_len {
+                    return Some(IdleGap { interval: gap });
+                }
+            }
+            cursor = cursor.max(r.interval.end);
+        }
+        if cursor < horizon {
+            let gap = Interval::new(cursor, horizon);
+            if gap.len() >= min_len {
+                return Some(IdleGap { interval: gap });
+            }
+        }
+        None
+    }
+
+    /// Total busy ticks within `[from, to)`.
+    pub fn busy_ticks(&self, from: Time, to: Time) -> Duration {
+        if from >= to {
+            return 0;
+        }
+        let window = Interval::new(from, to);
+        self.entries[self.first_ending_after(from)..]
+            .iter()
+            .take_while(|r| r.interval.start < to)
+            .filter_map(|r| r.interval.intersect(&window))
+            .map(|iv| iv.len())
+            .sum()
+    }
+
+    /// Fragmentation in `[from, to)`: 1 − (largest idle gap / total idle).
+    ///
+    /// 0 means all idle time is one contiguous block (no fragmentation);
+    /// values near 1 mean idle time is shattered into many small gaps.
+    /// Returns 0 when there is no idle time at all.
+    pub fn fragmentation(&self, from: Time, to: Time) -> f64 {
+        let gaps = self.idle_gaps(from, to, 1);
+        let total: u64 = gaps.iter().map(|g| g.interval.len()).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let largest = gaps.iter().map(|g| g.interval.len()).max().unwrap_or(0);
+        1.0 - largest as f64 / total as f64
+    }
+
+    /// The reservation active at tick `t`, if any.
+    pub fn active_at(&self, t: Time) -> Option<&Reservation> {
+        let i = self.first_ending_after(t);
+        self.entries.get(i).filter(|r| r.interval.contains_tick(t))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn res(job: JobId, seq: u32, s: Time, e: Time) -> Reservation {
+        Reservation { job, subjob_seq: seq, interval: Interval::new(s, e) }
+    }
+
+    #[test]
+    fn reserve_keeps_sorted_and_rejects_overlap() {
+        let mut tl = Timeline::new();
+        tl.reserve(res(1, 0, 50, 60)).unwrap();
+        tl.reserve(res(2, 0, 10, 20)).unwrap();
+        tl.reserve(res(3, 0, 30, 40)).unwrap();
+        let starts: Vec<Time> = tl.entries().iter().map(|r| r.interval.start).collect();
+        assert_eq!(starts, vec![10, 30, 50]);
+        // Overlapping inserts fail in every overlap configuration.
+        assert!(tl.reserve(res(4, 0, 15, 25)).is_err()); // tail overlap
+        assert!(tl.reserve(res(4, 0, 5, 15)).is_err()); // head overlap
+        assert!(tl.reserve(res(4, 0, 0, 100)).is_err()); // containing
+        assert!(tl.reserve(res(4, 0, 52, 58)).is_err()); // contained
+        assert!(tl.reserve(res(4, 0, 20, 30)).is_ok()); // exactly adjacent ok
+        assert_eq!(tl.len(), 4);
+    }
+
+    #[test]
+    fn empty_reservation_rejected() {
+        let mut tl = Timeline::new();
+        assert!(tl.reserve(res(1, 0, 10, 10)).is_err());
+    }
+
+    #[test]
+    fn idle_gaps_basic() {
+        let mut tl = Timeline::new();
+        tl.reserve(res(1, 0, 10, 20)).unwrap();
+        tl.reserve(res(2, 0, 40, 50)).unwrap();
+        let gaps = tl.idle_gaps(0, 100, 1);
+        let ivs: Vec<(Time, Time)> =
+            gaps.iter().map(|g| (g.interval.start, g.interval.end)).collect();
+        assert_eq!(ivs, vec![(0, 10), (20, 40), (50, 100)]);
+    }
+
+    #[test]
+    fn idle_gaps_min_len_filters() {
+        let mut tl = Timeline::new();
+        tl.reserve(res(1, 0, 10, 20)).unwrap();
+        tl.reserve(res(2, 0, 25, 50)).unwrap();
+        let gaps = tl.idle_gaps(0, 60, 8);
+        let ivs: Vec<(Time, Time)> =
+            gaps.iter().map(|g| (g.interval.start, g.interval.end)).collect();
+        assert_eq!(ivs, vec![(0, 10), (50, 60)], "the 5-tick gap must be filtered");
+    }
+
+    #[test]
+    fn idle_gaps_clip_to_horizon_and_from() {
+        let mut tl = Timeline::new();
+        tl.reserve(res(1, 0, 10, 20)).unwrap();
+        let gaps = tl.idle_gaps(15, 18, 1);
+        assert!(gaps.is_empty(), "query window fully inside a reservation");
+        let gaps = tl.idle_gaps(12, 30, 1);
+        assert_eq!(gaps.len(), 1);
+        assert_eq!(gaps[0].interval, Interval::new(20, 30));
+    }
+
+    #[test]
+    fn earliest_gap_matches_idle_gaps_head() {
+        let mut tl = Timeline::new();
+        tl.reserve(res(1, 0, 0, 30)).unwrap();
+        tl.reserve(res(2, 0, 35, 60)).unwrap();
+        let g = tl.earliest_gap(0, 100, 4).unwrap();
+        assert_eq!(g.interval, Interval::new(30, 35));
+        let g = tl.earliest_gap(0, 100, 6).unwrap();
+        assert_eq!(g.interval, Interval::new(60, 100));
+        assert!(tl.earliest_gap(0, 30, 31).is_none());
+    }
+
+    #[test]
+    fn busy_ticks_and_fragmentation() {
+        let mut tl = Timeline::new();
+        assert_eq!(tl.busy_ticks(0, 100), 0);
+        assert_eq!(tl.fragmentation(0, 100), 0.0, "one big idle gap -> 0 frag");
+        tl.reserve(res(1, 0, 10, 20)).unwrap();
+        tl.reserve(res(2, 0, 40, 80)).unwrap();
+        assert_eq!(tl.busy_ticks(0, 100), 50);
+        assert_eq!(tl.busy_ticks(15, 45), 10);
+        // gaps: [0,10) len 10, [20,40) len 20, [80,100) len 20 -> total 50, largest 20
+        let f = tl.fragmentation(0, 100);
+        assert!((f - (1.0 - 20.0 / 50.0)).abs() < 1e-12);
+        // Fully busy window -> no idle -> 0 by convention.
+        assert_eq!(tl.fragmentation(40, 80), 0.0);
+    }
+
+    #[test]
+    fn release_and_truncate() {
+        let mut tl = Timeline::new();
+        tl.reserve(res(1, 0, 10, 20)).unwrap();
+        tl.reserve(res(1, 1, 30, 40)).unwrap();
+        assert!(tl.truncate(1, 1, 35));
+        assert_eq!(tl.entries()[1].interval, Interval::new(30, 35));
+        assert!(!tl.truncate(1, 1, 45), "cannot grow via truncate");
+        assert!(!tl.truncate(1, 1, 30), "cannot empty via truncate");
+        let r = tl.release(1, 0).unwrap();
+        assert_eq!(r.interval, Interval::new(10, 20));
+        assert_eq!(tl.len(), 1);
+        assert!(tl.release(9, 9).is_none());
+    }
+
+    #[test]
+    fn compact_before_drops_history() {
+        let mut tl = Timeline::new();
+        tl.reserve(res(1, 0, 0, 10)).unwrap();
+        tl.reserve(res(2, 0, 10, 20)).unwrap();
+        tl.reserve(res(3, 0, 30, 40)).unwrap();
+        assert_eq!(tl.compact_before(20), 2);
+        assert_eq!(tl.len(), 1);
+        assert_eq!(tl.compact_before(20), 0);
+    }
+
+    #[test]
+    fn active_at_finds_running_reservation() {
+        let mut tl = Timeline::new();
+        tl.reserve(res(7, 3, 10, 20)).unwrap();
+        assert_eq!(tl.active_at(15).map(|r| r.job), Some(7));
+        assert_eq!(tl.active_at(20), None, "end is exclusive");
+        assert_eq!(tl.active_at(5), None);
+    }
+}

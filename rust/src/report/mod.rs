@@ -1,0 +1,166 @@
+//! Table renderers: markdown and CSV output for benches, examples, and
+//! the CLI — the machinery that regenerates the paper's tables.
+
+use crate::metrics::RunMetrics;
+
+/// A simple column-aligned table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    /// Table title (printed above).
+    pub title: String,
+    /// Column headers.
+    pub headers: Vec<String>,
+    /// Rows of cells.
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New empty table.
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (must match header arity).
+    pub fn push_row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render as aligned markdown.
+    pub fn to_markdown(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                s.push_str(&format!(" {:<w$} |", cells[i], w = widths[i]));
+            }
+            s
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("### {}\n\n", self.title));
+        }
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as CSV (RFC-4180-ish; quotes cells containing commas).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(&self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// The standard per-scheduler comparison row used across benches.
+pub fn comparison_headers() -> Vec<&'static str> {
+    vec![
+        "scheduler",
+        "util",
+        "mean_jct",
+        "p95_jct",
+        "mean_slowdown",
+        "jain",
+        "max_starv",
+        "deadline_rate",
+        "frag",
+        "subjobs/job",
+        "unfinished",
+    ]
+}
+
+/// Format one run's metrics as a comparison row.
+pub fn comparison_row(m: &RunMetrics) -> Vec<String> {
+    let f = |x: Option<f64>| x.map_or("-".to_string(), |v| format!("{v:.3}"));
+    let f0 = |x: Option<f64>| x.map_or("-".to_string(), |v| format!("{v:.0}"));
+    vec![
+        m.scheduler.clone(),
+        format!("{:.3}", m.utilization),
+        f0(m.mean_jct()),
+        f0(m.jct_percentile(0.95)),
+        f(m.mean_slowdown()),
+        f(m.jain_fairness()),
+        format!("{}", m.max_starvation()),
+        f(m.deadline_met_rate()),
+        format!("{:.3}", m.mean_fragmentation),
+        f(m.mean_subjobs()),
+        format!("{}", m.unfinished),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_alignment() {
+        let mut t = Table::new("T", &["a", "long_header"]);
+        t.push_row(vec!["x".into(), "1".into()]);
+        t.push_row(vec!["yyyy".into(), "22".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("### T"));
+        assert!(md.contains("| a    | long_header |"));
+        let lines: Vec<&str> = md.lines().collect();
+        // All table lines equal width.
+        let widths: Vec<usize> =
+            lines.iter().filter(|l| l.starts_with('|')).map(|l| l.len()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]), "{md}");
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.push_row(vec!["x,y".into(), "q\"q".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"q\"\"q\""));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new("", &["a"]);
+        t.push_row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn comparison_row_shapes() {
+        let m = RunMetrics { scheduler: "x".into(), utilization: 0.5, ..Default::default() };
+        let row = comparison_row(&m);
+        assert_eq!(row.len(), comparison_headers().len());
+        assert_eq!(row[0], "x");
+        assert_eq!(row[2], "-", "no completed jobs -> dash");
+    }
+}

@@ -1,0 +1,599 @@
+//! Discrete-event simulation engine.
+//!
+//! The engine owns the cluster, the job population, simulated time, and
+//! the realization of committed subjobs (sampling actual durations and
+//! memory trajectories from each job's TRP — the "ground truth" the
+//! paper's ex-post verification step compares declarations against).
+//! Schedulers plug in through the [`Scheduler`] trait; JASDA and every
+//! baseline implement it, so all comparisons share identical substrate
+//! dynamics.
+//!
+//! Operation is iteration-driven (assumption A3 of §4.1): the engine
+//! advances in fixed scheduler periods; before each iteration it admits
+//! arrivals and processes subjob completions that occurred since the last
+//! tick, then calls [`Scheduler::iterate`] and applies the returned
+//! commitments.
+
+use crate::config::SimConfig;
+use crate::job::{utility, JobSet, JobState};
+use crate::metrics::{JobMetrics, RunMetrics};
+use crate::mig::{Cluster, PartitionLayout, Reservation};
+use crate::sim::rng::Rng;
+use crate::types::{Interval, JobId, SliceId, Time};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// A scheduling decision: reserve `interval` on `slice` for a subjob of
+/// `job` covering `work` (full-GPU tick equivalents).
+#[derive(Debug, Clone)]
+pub struct Commitment {
+    /// Job receiving the reservation.
+    pub job: JobId,
+    /// Target slice.
+    pub slice: SliceId,
+    /// Reserved interval (declared duration).
+    pub interval: Interval,
+    /// Planned work chunk.
+    pub work: f64,
+    /// Declared job-side feature vector (what the job claimed).
+    pub declared_phi: [f64; 4],
+    /// Composite score at selection time (diagnostics).
+    pub score: f64,
+    /// Length of the announced window the variant was selected from
+    /// (needed to re-evaluate the energy feature ex post).
+    pub window_len: u64,
+}
+
+/// Everything known about a subjob after it finished: the input to the
+/// ex-post verification step (paper Eq. (6)) and to metrics.
+#[derive(Debug, Clone)]
+pub struct SubjobRecord {
+    /// Owning job.
+    pub job: JobId,
+    /// Slice it ran on.
+    pub slice: SliceId,
+    /// Per-job subjob sequence number.
+    pub subjob_seq: u32,
+    /// Originally reserved interval.
+    pub reserved: Interval,
+    /// Actual end time (≤ reserved.end; ≥ start).
+    pub realized_end: Time,
+    /// Planned work.
+    pub planned_work: f64,
+    /// Work actually completed (< planned if the reservation ran out).
+    pub realized_work: f64,
+    /// Declared feature vector φ (possibly misreported).
+    pub declared_phi: [f64; 4],
+    /// Observed feature vector φ^observed, measured from the realization.
+    pub observed_phi: [f64; 4],
+    /// Commit time.
+    pub committed_at: Time,
+}
+
+/// A pluggable scheduler. JASDA and all baselines implement this.
+pub trait Scheduler {
+    /// Human-readable scheduler name (used in reports).
+    fn name(&self) -> &str;
+
+    /// One scheduling iteration at time `now`. May inspect the cluster
+    /// and mutate per-job bookkeeping (e.g. bid counters), and returns
+    /// the commitments to apply. Returned intervals must start at or
+    /// after `now` and must be reservable (non-overlapping).
+    fn iterate(
+        &mut self,
+        now: Time,
+        cluster: &Cluster,
+        jobs: &mut JobSet,
+        rng: &mut Rng,
+    ) -> Vec<Commitment>;
+
+    /// Post-execution feedback (drives JASDA's calibration loop §4.2.1).
+    fn on_subjob_complete(&mut self, _rec: &SubjobRecord) {}
+
+    /// Scheduler-internal diagnostics for reports.
+    fn stats(&self) -> crate::util::Json {
+        crate::util::Json::Obj(Default::default())
+    }
+}
+
+/// Pending completion event.
+#[derive(Debug, Clone)]
+struct PendingCompletion {
+    fire_at: Time,
+    rec: SubjobRecord,
+    /// remaining_work of the job at commit time (for observed φ_JCT).
+    speed: f64,
+    window_len: u64,
+    realized_duration: u64,
+}
+
+/// Heap key: (time, seq) so simultaneous completions pop deterministically.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct HeapKey(Time, u64);
+
+/// Result of a full simulation run.
+#[derive(Debug)]
+pub struct RunOutcome {
+    /// Aggregated metrics.
+    pub metrics: RunMetrics,
+    /// Final cluster state (timelines retain uncompacted history).
+    pub cluster: Cluster,
+    /// Final job states.
+    pub jobs: JobSet,
+    /// Scheduler diagnostics (`Scheduler::stats`).
+    pub scheduler_stats: crate::util::Json,
+}
+
+/// The simulation engine.
+pub struct SimEngine {
+    cfg: SimConfig,
+    scheduler: Box<dyn Scheduler>,
+    events: BinaryHeap<Reverse<(HeapKey, usize)>>,
+    pending: Vec<PendingCompletion>,
+    event_seq: u64,
+}
+
+impl SimEngine {
+    /// Build an engine for `cfg` driving the given scheduler.
+    pub fn new(cfg: SimConfig, scheduler: Box<dyn Scheduler>) -> Self {
+        SimEngine {
+            cfg,
+            scheduler,
+            events: BinaryHeap::new(),
+            pending: Vec::new(),
+            event_seq: 0,
+        }
+    }
+
+    /// Run the simulation over a job population until every job
+    /// completes (or `engine.max_time` elapses). Returns the outcome.
+    pub fn run(&mut self, jobs: Vec<crate::job::Job>) -> RunOutcome {
+        let layout = PartitionLayout::stock(&self.cfg.cluster.layout)
+            .expect("validated layout name");
+        let mut cluster = Cluster::new(self.cfg.cluster.num_gpus, &layout);
+        let mut jobs = JobSet::new(jobs);
+        let mut rng = Rng::new(self.cfg.seed).fork(0xE46); // engine realization stream
+        let mut sched_rng = Rng::new(self.cfg.seed).fork(0x5C4E); // scheduler stream
+
+        let mut metrics = RunMetrics {
+            scheduler: self.scheduler.name().to_string(),
+            ..RunMetrics::default()
+        };
+        let mut max_waits: Vec<u64> = vec![0; jobs.len()];
+        let mut last_progress: Vec<Time> =
+            jobs.iter().map(|j| j.arrival).collect();
+        let mut last_event_time: Time = 0;
+
+        let period = self.cfg.engine.iteration_period;
+        let mut now: Time = jobs.iter().map(|j| j.arrival).min().unwrap_or(0);
+        let mut last_compact: Time = now;
+        // Utilization accounting survives history compaction: busy time in
+        // compacted regions is folded into `busy_acc` before entries drop.
+        let mut busy_acc: f64 = 0.0;
+        let mut compact_base: Time = now;
+
+        loop {
+            // 1. Fire completions due by `now`.
+            while let Some(Reverse((HeapKey(t, _), idx))) = self.events.peek().copied() {
+                if t > now {
+                    break;
+                }
+                self.events.pop();
+                let pc = self.pending[idx].clone();
+                self.handle_completion(&pc, &mut cluster, &mut jobs, &mut metrics);
+                last_event_time = last_event_time.max(pc.rec.realized_end);
+            }
+
+            // 2. Admit arrivals.
+            jobs.admit_until(now);
+
+            // 3. Scheduler iteration.
+            let t0 = std::time::Instant::now();
+            let commitments = self.scheduler.iterate(now, &cluster, &mut jobs, &mut sched_rng);
+            metrics.sched_wall_ns += t0.elapsed().as_nanos() as u64;
+            metrics.iterations += 1;
+
+            // 4. Apply commitments: reserve, track waits, sample realization.
+            for c in commitments {
+                self.apply_commitment(&c, now, &mut cluster, &mut jobs, &mut rng, &mut metrics);
+                let j = c.job as usize;
+                let wait = now.saturating_sub(last_progress[j]);
+                max_waits[j] = max_waits[j].max(wait);
+                last_progress[j] = now;
+            }
+
+            // 5. Track waiting (starvation) for still-waiting active jobs.
+            // (max_wait is finalized lazily; see final pass below.)
+
+            // 6. Compact old history (accumulating busy time first).
+            if self.cfg.engine.compact_after > 0
+                && now > last_compact + self.cfg.engine.compact_after
+            {
+                let keep_from = now.saturating_sub(self.cfg.engine.compact_after);
+                for s in cluster.slices() {
+                    busy_acc += s.speed() * s.timeline.busy_ticks(compact_base, keep_from) as f64;
+                }
+                cluster.compact_before(keep_from);
+                compact_base = keep_from;
+                last_compact = now;
+            }
+
+            // 7. Termination.
+            if jobs.all_completed() && self.events.is_empty() {
+                break;
+            }
+            if now >= self.cfg.engine.max_time {
+                break;
+            }
+            now += period;
+        }
+
+        // Drain outstanding completions past the horizon.
+        while let Some(Reverse((HeapKey(t, _), idx))) = self.events.pop() {
+            let _ = t;
+            let pc = self.pending[idx].clone();
+            self.handle_completion(&pc, &mut cluster, &mut jobs, &mut metrics);
+            last_event_time = last_event_time.max(pc.rec.realized_end);
+        }
+
+        // Finalize waiting gaps for unfinished jobs.
+        for j in jobs.iter() {
+            if j.state == JobState::Active {
+                let idx = j.id as usize;
+                let wait = now.saturating_sub(last_progress[idx]);
+                max_waits[idx] = max_waits[idx].max(wait);
+            }
+        }
+
+        let first_arrival = jobs.iter().map(|j| j.arrival).min().unwrap_or(0);
+        let makespan = jobs
+            .iter()
+            .filter_map(|j| j.completed_at)
+            .max()
+            .unwrap_or(last_event_time.max(now));
+        metrics.makespan = makespan;
+        // Utilization over [first_arrival, busy_end): accumulated busy time
+        // from compacted history plus what the timelines still hold.
+        let busy_end = makespan.max(last_event_time).max(first_arrival + 1);
+        let mut busy_total = busy_acc;
+        let mut cap_per_tick = 0.0;
+        for s in cluster.slices() {
+            busy_total += s.speed() * s.timeline.busy_ticks(compact_base, busy_end) as f64;
+            cap_per_tick += s.speed();
+        }
+        let cap = cap_per_tick * (busy_end - first_arrival) as f64;
+        metrics.utilization = if cap > 0.0 { (busy_total / cap).clamp(0.0, 1.0) } else { 0.0 };
+        // Fragmentation over the retained (uncompacted) span.
+        metrics.mean_fragmentation = cluster.mean_fragmentation(compact_base.max(first_arrival), busy_end);
+        metrics.unfinished = jobs.iter().filter(|j| j.state != JobState::Completed).count();
+        metrics.jobs = jobs
+            .iter()
+            .map(|j| JobMetrics {
+                job: j.id,
+                class: j.class.clone(),
+                arrival: j.arrival,
+                completed: j.completed_at,
+                work: j.total_work(),
+                subjobs: j.subjobs_done,
+                max_wait: max_waits[j.id as usize],
+                deadline_met: j.deadline.map(|d| j.completed_at.map_or(false, |c| c <= d)),
+                weight: j.weight,
+            })
+            .collect();
+
+        RunOutcome {
+            metrics,
+            cluster,
+            jobs,
+            scheduler_stats: self.scheduler.stats(),
+        }
+    }
+
+    /// Apply one commitment: validate + reserve the interval, advance the
+    /// job's reserved work, and schedule the realized completion.
+    fn apply_commitment(
+        &mut self,
+        c: &Commitment,
+        now: Time,
+        cluster: &mut Cluster,
+        jobs: &mut JobSet,
+        rng: &mut Rng,
+        metrics: &mut RunMetrics,
+    ) {
+        let slice_speed = cluster.slice(c.slice).speed();
+        let job = jobs.get_mut(c.job);
+        debug_assert!(job.state == JobState::Active, "commitment for non-active job");
+        let work = c.work.min(job.pending_work());
+        if work <= 1e-9 || c.interval.is_empty() {
+            return;
+        }
+        let seq = job.subjob_seq;
+        cluster
+            .slice_mut(c.slice)
+            .timeline
+            .reserve(Reservation { job: c.job, subjob_seq: seq, interval: c.interval })
+            .unwrap_or_else(|e| panic!("scheduler {} emitted overlapping commitment: {e}",
+                self.scheduler.name()));
+
+        let job = jobs.get_mut(c.job);
+        let remaining_at_commit = job.remaining_work();
+        job.subjob_seq += 1;
+        job.reserved_work += work;
+        job.last_selected = now;
+        job.last_slice = Some(c.slice);
+        job.variants_won += 1;
+        metrics.total_commits += 1;
+
+        // Realization: the ground truth the scheduler cannot see yet.
+        let realized_duration = job.trp.sample_duration(rng, work, slice_speed);
+        let reserved_len = c.interval.len();
+        let (realized_end, realized_work) = if realized_duration <= reserved_len {
+            (c.interval.start + realized_duration, work)
+        } else {
+            // Reservation expired first: the subjob checkpoints at the
+            // window boundary with proportional progress (atomicity is
+            // preserved; the rest re-enters the bid pool).
+            (c.interval.end, work * reserved_len as f64 / realized_duration as f64)
+        };
+
+        // Observed job-side features (what ex-post verification compares
+        // against the declaration).
+        let observed_phi = [
+            utility::phi_jct(realized_work, remaining_at_commit),
+            utility::phi_qos(job, realized_end),
+            utility::phi_energy(
+                realized_end.saturating_sub(c.interval.start),
+                slice_speed,
+                c.window_len,
+            ),
+            c.declared_phi[3], // locality is exact by construction
+        ];
+
+        let rec = SubjobRecord {
+            job: c.job,
+            slice: c.slice,
+            subjob_seq: seq,
+            reserved: c.interval,
+            realized_end,
+            planned_work: work,
+            realized_work,
+            declared_phi: c.declared_phi,
+            observed_phi,
+            committed_at: now,
+        };
+        let idx = self.pending.len();
+        self.pending.push(PendingCompletion {
+            fire_at: realized_end,
+            rec,
+            speed: slice_speed,
+            window_len: c.window_len,
+            realized_duration,
+        });
+        self.event_seq += 1;
+        self.events.push(Reverse((HeapKey(realized_end, self.event_seq), idx)));
+    }
+
+    /// Fire a completion: credit work, free unused reservation tail,
+    /// notify the scheduler, finalize the job if done.
+    fn handle_completion(
+        &mut self,
+        pc: &PendingCompletion,
+        cluster: &mut Cluster,
+        jobs: &mut JobSet,
+        metrics: &mut RunMetrics,
+    ) {
+        let _ = (pc.speed, pc.window_len, pc.realized_duration, pc.fire_at);
+        let rec = &pc.rec;
+        let job = jobs.get_mut(rec.job);
+        job.reserved_work = (job.reserved_work - rec.planned_work).max(0.0);
+        job.done_work += rec.realized_work;
+        job.subjobs_done += 1;
+
+        // Early finishers free their reservation tail for future windows.
+        if rec.realized_end < rec.reserved.end {
+            cluster.slice_mut(rec.slice).timeline.truncate(
+                rec.job,
+                rec.subjob_seq,
+                rec.realized_end,
+            );
+        }
+
+        if job.remaining_work() <= 1e-6 && job.state == JobState::Active {
+            job.state = JobState::Completed;
+            job.completed_at = Some(rec.realized_end);
+        }
+        let _ = metrics;
+        self.scheduler.on_subjob_complete(rec);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::Job;
+    use crate::trp::{Phase, Trp};
+
+    /// Trivial greedy scheduler: earliest idle gap, one chunk per
+    /// iteration, first bidder wins. Exists to exercise the engine.
+    struct GreedyFcfs;
+
+    impl Scheduler for GreedyFcfs {
+        fn name(&self) -> &str {
+            "greedy-test"
+        }
+
+        fn iterate(
+            &mut self,
+            now: Time,
+            cluster: &Cluster,
+            jobs: &mut JobSet,
+            _rng: &mut Rng,
+        ) -> Vec<Commitment> {
+            let bidder = match jobs.bidders().map(|j| j.id).min() {
+                Some(id) => id,
+                None => return vec![],
+            };
+            let job = jobs.get(bidder);
+            // earliest gap on any slice
+            let mut best: Option<(SliceId, Interval, f64)> = None;
+            for s in cluster.slices() {
+                if let Some(g) = s.timeline.earliest_gap(now, now + 10_000, 10) {
+                    let cand = (s.id, g.interval, s.speed());
+                    if best.map_or(true, |(_, b, _)| cand.1.start < b.start) {
+                        best = Some(cand);
+                    }
+                }
+            }
+            let (slice, gap, speed) = match best {
+                Some(b) => b,
+                None => return vec![],
+            };
+            // Memory check: skip slices the job can't fit on.
+            let cap = cluster.slice(slice).capacity_gb();
+            if job.trp.peak_mem_gb() > cap {
+                return vec![];
+            }
+            let avail = gap.len().min(2000);
+            let work = (avail as f64 * speed).min(job.pending_work());
+            let dur = job.trp.predicted_duration(work, speed, 0.9);
+            if dur > gap.len() {
+                return vec![];
+            }
+            vec![Commitment {
+                job: bidder,
+                slice,
+                interval: Interval::new(gap.start, gap.start + dur),
+                work,
+                declared_phi: [0.5; 4],
+                score: 0.5,
+                window_len: gap.len(),
+            }]
+        }
+    }
+
+    fn tiny_jobs(n: u32) -> Vec<Job> {
+        (0..n)
+            .map(|i| {
+                let trp = Trp {
+                    phases: vec![Phase::new(500.0, 3.0, 0.1, 0.1)],
+                    duration_cv: 0.05,
+                };
+                Job::new(i, "tiny", (i as u64) * 100, trp, None, 1.0, 250.0, 0.0)
+            })
+            .collect()
+    }
+
+    fn test_cfg() -> SimConfig {
+        let mut cfg = SimConfig::default();
+        cfg.cluster.layout = "balanced".into();
+        cfg.engine.iteration_period = 20;
+        cfg
+    }
+
+    #[test]
+    fn engine_completes_all_jobs() {
+        let mut eng = SimEngine::new(test_cfg(), Box::new(GreedyFcfs));
+        let out = eng.run(tiny_jobs(4));
+        assert_eq!(out.metrics.unfinished, 0, "all jobs must finish");
+        assert!(out.jobs.all_completed());
+        for j in out.jobs.iter() {
+            assert!(j.completed_at.is_some());
+            assert!((j.done_work - j.total_work()).abs() < 1.0);
+            assert!(j.subjobs_done >= 1);
+        }
+        assert!(out.metrics.makespan > 0);
+        assert!(out.metrics.utilization > 0.0 && out.metrics.utilization <= 1.0);
+        assert!(out.metrics.total_commits >= 4);
+    }
+
+    #[test]
+    fn engine_is_deterministic() {
+        let m1 = SimEngine::new(test_cfg(), Box::new(GreedyFcfs)).run(tiny_jobs(4)).metrics;
+        let m2 = SimEngine::new(test_cfg(), Box::new(GreedyFcfs)).run(tiny_jobs(4)).metrics;
+        assert_eq!(m1.makespan, m2.makespan);
+        assert_eq!(m1.total_commits, m2.total_commits);
+        assert_eq!(m1.mean_jct(), m2.mean_jct());
+    }
+
+    #[test]
+    fn seed_changes_realization() {
+        let mut cfg2 = test_cfg();
+        cfg2.seed = 1234;
+        let m1 = SimEngine::new(test_cfg(), Box::new(GreedyFcfs)).run(tiny_jobs(4)).metrics;
+        let m2 = SimEngine::new(cfg2, Box::new(GreedyFcfs)).run(tiny_jobs(4)).metrics;
+        // Different realization noise -> (almost surely) different makespan.
+        assert_ne!(m1.makespan, m2.makespan);
+    }
+
+    #[test]
+    fn arrivals_respected() {
+        let mut eng = SimEngine::new(test_cfg(), Box::new(GreedyFcfs));
+        let out = eng.run(tiny_jobs(3));
+        for j in out.jobs.iter() {
+            // No subjob may start before the job arrives; JCT >= ideal.
+            let jct = j.jct().unwrap();
+            assert!(jct as f64 >= 500.0 * 0.5, "jct {jct} suspiciously small");
+        }
+    }
+
+    #[test]
+    fn max_time_guard_stops_runaway() {
+        // A scheduler that never schedules anything.
+        struct Never;
+        impl Scheduler for Never {
+            fn name(&self) -> &str {
+                "never"
+            }
+            fn iterate(
+                &mut self,
+                _: Time,
+                _: &Cluster,
+                _: &mut JobSet,
+                _: &mut Rng,
+            ) -> Vec<Commitment> {
+                vec![]
+            }
+        }
+        let mut cfg = test_cfg();
+        cfg.engine.max_time = 5_000;
+        let out = SimEngine::new(cfg, Box::new(Never)).run(tiny_jobs(2));
+        assert_eq!(out.metrics.unfinished, 2);
+        assert!(out.metrics.iterations > 0);
+    }
+
+    #[test]
+    fn observed_features_populated() {
+        struct Capture(std::rc::Rc<std::cell::RefCell<Vec<SubjobRecord>>>);
+        impl Scheduler for Capture {
+            fn name(&self) -> &str {
+                "capture"
+            }
+            fn iterate(
+                &mut self,
+                now: Time,
+                cluster: &Cluster,
+                jobs: &mut JobSet,
+                rng: &mut Rng,
+            ) -> Vec<Commitment> {
+                GreedyFcfs.iterate(now, cluster, jobs, rng)
+            }
+            fn on_subjob_complete(&mut self, rec: &SubjobRecord) {
+                self.0.borrow_mut().push(rec.clone());
+            }
+        }
+        let recs = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+        let out =
+            SimEngine::new(test_cfg(), Box::new(Capture(recs.clone()))).run(tiny_jobs(2));
+        assert_eq!(out.metrics.unfinished, 0);
+        let recs = recs.borrow();
+        assert!(!recs.is_empty());
+        for r in recs.iter() {
+            assert!(r.realized_work > 0.0 && r.realized_work <= r.planned_work + 1e-9);
+            assert!(r.realized_end <= r.reserved.end);
+            assert!(r.realized_end > r.reserved.start);
+            for &phi in &r.observed_phi {
+                assert!((0.0..=1.0).contains(&phi), "observed phi {phi} out of range");
+            }
+        }
+    }
+}

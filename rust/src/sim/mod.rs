@@ -1,0 +1,8 @@
+//! Simulation substrate: deterministic RNG and the discrete-event engine
+//! that realizes committed subjobs and drives pluggable schedulers.
+
+pub mod engine;
+pub mod rng;
+
+pub use engine::{Commitment, RunOutcome, Scheduler, SimEngine, SubjobRecord};
+pub use rng::Rng;

@@ -1,0 +1,11 @@
+//! TRP/FMP: probabilistic temporal resource profiles (paper §3.2, §4.1).
+//!
+//! These descriptors originate in the SJA concept and are the basis of
+//! JASDA's *safe-by-construction* eligibility: every variant a job bids
+//! must satisfy `Pr(max_t RAM(t) > c_k | FMP) ≤ θ` over its predicted
+//! execution interval.
+
+pub mod math;
+pub mod profile;
+
+pub use profile::{Fmp, Phase, Trp};

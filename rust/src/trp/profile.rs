@@ -1,0 +1,345 @@
+//! Temporal Resource Profiles (TRP) and Functional Memory Profiles (FMP).
+//!
+//! A TRP (paper §3.2) is "a probabilistic model of [a job's] time-varying
+//! resource demand over its execution … warm-up phases, steady-state
+//! intervals, and transient bursts". An FMP is the TRP specialized to
+//! device memory. We model a job's execution as a sequence of
+//! [`Phase`]s over its total *work* (measured in full-GPU tick
+//! equivalents); within each phase, memory at a given progress point is
+//! Gaussian with a phase-specific mean trajectory and standard deviation.
+//!
+//! The two roles the paper assigns to TRPs are implemented here:
+//!
+//! 1. **Duration prediction** — [`Trp::predicted_duration`] derives the
+//!    declared duration `Δt̃_i` of a variant from the work it covers, the
+//!    slice speed, and a confidence quantile of the job's duration noise.
+//! 2. **Probabilistic safety** — [`Fmp::violation_prob`] evaluates
+//!    `Pr(max_t RAM(t) > c_k | FMP)` over the predicted interval, the
+//!    safe-by-construction bound of §4.1(a).
+
+use crate::sim::rng::Rng;
+use crate::trp::math::{log_normal_cdf, normal_quantile};
+
+/// One execution phase of a job (warm-up, steady, burst, …).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Phase {
+    /// Compute work in this phase (full-GPU tick equivalents).
+    pub work: f64,
+    /// Memory level (GiB) the phase ramps *to* and then holds.
+    pub mem_gb: f64,
+    /// Per-point Gaussian std of memory (GiB) within this phase.
+    pub mem_std_gb: f64,
+    /// Fraction of the phase spent ramping linearly from the previous
+    /// phase's level to `mem_gb` (0 = step change, 1 = ramp whole phase).
+    pub ramp_frac: f64,
+}
+
+impl Phase {
+    /// Convenience constructor.
+    pub fn new(work: f64, mem_gb: f64, mem_std_gb: f64, ramp_frac: f64) -> Self {
+        Phase { work, mem_gb, mem_std_gb, ramp_frac }
+    }
+}
+
+/// The job-level temporal resource profile.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trp {
+    /// Execution phases in order. Total work = Σ phase.work.
+    pub phases: Vec<Phase>,
+    /// Coefficient of variation of realized duration around the nominal
+    /// `work / speed` (duration noise; drives declared-vs-observed gaps).
+    pub duration_cv: f64,
+}
+
+/// Discretized FMP over a work range: `bins` Gaussian memory snapshots.
+///
+/// This is exactly the `(M, T)` matrix the L1 Pallas scoring kernel
+/// consumes: `mu[t]`, `sigma[t]` per time bin.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Fmp {
+    /// Mean memory per bin (GiB).
+    pub mu: Vec<f64>,
+    /// Std of memory per bin (GiB).
+    pub sigma: Vec<f64>,
+}
+
+impl Trp {
+    /// Total work of the job in full-GPU tick equivalents.
+    pub fn total_work(&self) -> f64 {
+        self.phases.iter().map(|p| p.work).sum()
+    }
+
+    /// Peak mean memory across phases (GiB) — a quick lower bound on the
+    /// slice capacity the whole job would need if run monolithically.
+    pub fn peak_mem_gb(&self) -> f64 {
+        self.phases.iter().map(|p| p.mem_gb).fold(0.0, f64::max)
+    }
+
+    /// Gaussian memory statistics `(mu, sigma)` at cumulative work `w`.
+    ///
+    /// Within a phase the mean ramps linearly from the previous phase's
+    /// level over the first `ramp_frac` of the phase, then holds at
+    /// `mem_gb`. Work beyond the total clamps to the final level.
+    pub fn mem_stats_at(&self, w: f64) -> (f64, f64) {
+        let mut prev_level = 0.0;
+        let mut acc = 0.0;
+        for p in &self.phases {
+            if w <= acc + p.work || p.work == 0.0 {
+                let frac = if p.work > 0.0 { ((w - acc) / p.work).clamp(0.0, 1.0) } else { 1.0 };
+                let mu = if p.ramp_frac > 0.0 && frac < p.ramp_frac {
+                    prev_level + (p.mem_gb - prev_level) * (frac / p.ramp_frac)
+                } else {
+                    p.mem_gb
+                };
+                return (mu, p.mem_std_gb);
+            }
+            acc += p.work;
+            prev_level = p.mem_gb;
+        }
+        // Past the end: hold final level.
+        match self.phases.last() {
+            Some(p) => (p.mem_gb, p.mem_std_gb),
+            None => (0.0, 0.0),
+        }
+    }
+
+    /// Discretize the FMP over the work range `[w0, w1]` into `bins`
+    /// snapshots (bin centers).
+    pub fn fmp_bins(&self, w0: f64, w1: f64, bins: usize) -> Fmp {
+        assert!(bins > 0, "fmp_bins needs at least one bin");
+        let mut mu = Vec::with_capacity(bins);
+        let mut sigma = Vec::with_capacity(bins);
+        let span = (w1 - w0).max(0.0);
+        for i in 0..bins {
+            let w = w0 + span * ((i as f64 + 0.5) / bins as f64);
+            let (m, s) = self.mem_stats_at(w);
+            mu.push(m);
+            sigma.push(s);
+        }
+        Fmp { mu, sigma }
+    }
+
+    /// Declared duration (ticks) for executing `work` on a slice of the
+    /// given `speed`, at confidence `quantile` of the duration noise.
+    ///
+    /// Jobs declare conservative durations (e.g. the 0.9 quantile) so that
+    /// the committed reservation usually covers the realized run; the
+    /// margin is part of what ex-post verification measures.
+    pub fn predicted_duration(&self, work: f64, speed: f64, quantile: f64) -> u64 {
+        assert!(speed > 0.0);
+        let nominal = work / speed;
+        let z = if self.duration_cv > 0.0 && quantile > 0.0 && quantile < 1.0 {
+            normal_quantile(quantile)
+        } else {
+            0.0
+        };
+        let d = nominal * (1.0 + z * self.duration_cv);
+        d.max(1.0).round() as u64
+    }
+
+    /// Sample a realized duration (ticks) for `work` on `speed`, truncated
+    /// below at half the nominal (a run can't be arbitrarily fast).
+    pub fn sample_duration(&self, rng: &mut Rng, work: f64, speed: f64) -> u64 {
+        let nominal = work / speed;
+        let d = rng.normal_trunc_lo(nominal, nominal * self.duration_cv, nominal * 0.5);
+        d.max(1.0).round() as u64
+    }
+}
+
+impl Fmp {
+    /// Number of bins.
+    pub fn len(&self) -> usize {
+        self.mu.len()
+    }
+
+    /// True if the profile has no bins.
+    pub fn is_empty(&self) -> bool {
+        self.mu.is_empty()
+    }
+
+    /// `Pr(max_t RAM(t) > c | FMP)` under per-bin independence:
+    /// `1 − Π_t Φ((c − μ_t)/σ_t)`, evaluated in log space for stability.
+    ///
+    /// This is the eligibility bound of paper §4.1(a): a variant is
+    /// *safe-by-construction* iff `violation_prob(c_k) ≤ θ`.
+    pub fn violation_prob(&self, capacity_gb: f64) -> f64 {
+        let mut log_surv = 0.0;
+        for (&mu, &sig) in self.mu.iter().zip(&self.sigma) {
+            if sig <= 0.0 {
+                if mu > capacity_gb {
+                    return 1.0;
+                }
+                continue;
+            }
+            let z = (capacity_gb - mu) / sig;
+            log_surv += log_normal_cdf(z);
+        }
+        (1.0 - log_surv.exp()).clamp(0.0, 1.0)
+    }
+
+    /// Expected normalized memory headroom over the interval:
+    /// `E[(c − RAM(t))/c]` clamped to `[0,1]` — the ψ_mem_headroom scoring
+    /// feature of paper §4.2.
+    pub fn mean_headroom(&self, capacity_gb: f64) -> f64 {
+        if self.is_empty() || capacity_gb <= 0.0 {
+            return 0.0;
+        }
+        let s: f64 =
+            self.mu.iter().map(|&mu| ((capacity_gb - mu) / capacity_gb).clamp(0.0, 1.0)).sum();
+        s / self.mu.len() as f64
+    }
+
+    /// Sample a realized memory trajectory and return its peak (GiB).
+    pub fn sample_peak(&self, rng: &mut Rng) -> f64 {
+        self.mu
+            .iter()
+            .zip(&self.sigma)
+            .map(|(&mu, &sig)| rng.normal_ms(mu, sig).max(0.0))
+            .fold(0.0, f64::max)
+    }
+
+    /// Sample the realized mean headroom given a capacity.
+    pub fn sample_headroom(&self, rng: &mut Rng, capacity_gb: f64) -> f64 {
+        if self.is_empty() || capacity_gb <= 0.0 {
+            return 0.0;
+        }
+        let s: f64 = self
+            .mu
+            .iter()
+            .zip(&self.sigma)
+            .map(|(&mu, &sig)| {
+                let m = rng.normal_ms(mu, sig).max(0.0);
+                ((capacity_gb - m) / capacity_gb).clamp(0.0, 1.0)
+            })
+            .sum();
+        s / self.mu.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn training_trp() -> Trp {
+        Trp {
+            phases: vec![
+                Phase::new(1000.0, 8.0, 0.4, 0.5), // warm-up ramp to 8 GiB
+                Phase::new(8000.0, 14.0, 0.8, 0.2), // steady at 14 GiB
+                Phase::new(1000.0, 16.0, 1.5, 0.1), // bursty tail at 16 GiB
+            ],
+            duration_cv: 0.1,
+        }
+    }
+
+    #[test]
+    fn totals_and_peaks() {
+        let t = training_trp();
+        assert_eq!(t.total_work(), 10_000.0);
+        assert_eq!(t.peak_mem_gb(), 16.0);
+    }
+
+    #[test]
+    fn mem_stats_ramp_then_hold() {
+        let t = training_trp();
+        // Start of warm-up: ramping from 0 toward 8 over first half.
+        let (m0, _) = t.mem_stats_at(0.0);
+        assert!(m0 < 1.0, "start of ramp near 0, got {m0}");
+        let (m_mid_ramp, _) = t.mem_stats_at(250.0); // frac 0.25 of ramp 0.5 -> half way
+        assert!((m_mid_ramp - 4.0).abs() < 1e-9);
+        let (m_hold, s_hold) = t.mem_stats_at(900.0);
+        assert_eq!((m_hold, s_hold), (8.0, 0.4));
+        // Steady phase holds 14 after its short ramp.
+        let (m_steady, _) = t.mem_stats_at(5000.0);
+        assert_eq!(m_steady, 14.0);
+        // Past the end: final level.
+        let (m_end, _) = t.mem_stats_at(99_999.0);
+        assert_eq!(m_end, 16.0);
+    }
+
+    #[test]
+    fn mem_stats_empty_trp() {
+        let t = Trp { phases: vec![], duration_cv: 0.0 };
+        assert_eq!(t.mem_stats_at(5.0), (0.0, 0.0));
+        assert_eq!(t.total_work(), 0.0);
+    }
+
+    #[test]
+    fn fmp_bins_sample_centers() {
+        let t = training_trp();
+        let fmp = t.fmp_bins(1000.0, 9000.0, 16);
+        assert_eq!(fmp.len(), 16);
+        // All bins are inside the steady phase (after its 20% ramp)
+        // except the earliest ones.
+        assert_eq!(*fmp.mu.last().unwrap(), 14.0);
+        assert!(fmp.mu.iter().all(|&m| m > 0.0 && m <= 14.0));
+    }
+
+    #[test]
+    fn violation_prob_monotone_in_capacity() {
+        let t = training_trp();
+        let fmp = t.fmp_bins(2000.0, 8000.0, 32);
+        let p_tight = fmp.violation_prob(14.5);
+        let p_loose = fmp.violation_prob(20.0);
+        assert!(p_tight > p_loose, "tight {p_tight} loose {p_loose}");
+        assert!((0.0..=1.0).contains(&p_tight));
+        assert!(p_loose < 1e-6, "20 GiB vs 14±0.8 should be safe, got {p_loose}");
+        // Capacity below the mean is (almost) certain violation.
+        assert!(fmp.violation_prob(10.0) > 0.999);
+    }
+
+    #[test]
+    fn violation_prob_degenerate_sigma() {
+        let fmp = Fmp { mu: vec![5.0, 6.0], sigma: vec![0.0, 0.0] };
+        assert_eq!(fmp.violation_prob(6.5), 0.0);
+        assert_eq!(fmp.violation_prob(5.5), 1.0);
+    }
+
+    #[test]
+    fn headroom_in_unit_interval() {
+        let t = training_trp();
+        let fmp = t.fmp_bins(0.0, 10_000.0, 64);
+        let h = fmp.mean_headroom(20.0);
+        assert!((0.0..=1.0).contains(&h));
+        // ~14 GiB mean usage on 20 GiB -> headroom around 0.3-0.5.
+        assert!(h > 0.2 && h < 0.7, "h = {h}");
+        assert!(fmp.mean_headroom(40.0) > h, "more capacity -> more headroom");
+        assert_eq!(Fmp { mu: vec![], sigma: vec![] }.mean_headroom(10.0), 0.0);
+    }
+
+    #[test]
+    fn predicted_duration_quantile_margin() {
+        let t = training_trp();
+        let nominal = t.predicted_duration(700.0, 1.0, 0.5);
+        let conservative = t.predicted_duration(700.0, 1.0, 0.9);
+        assert_eq!(nominal, 700);
+        assert!(conservative > nominal, "0.9-quantile must add margin");
+        // Slower slice -> proportionally longer.
+        let slow = t.predicted_duration(700.0, 2.0 / 7.0, 0.5);
+        assert_eq!(slow, 2450);
+        // cv = 0 -> quantile irrelevant.
+        let det = Trp { phases: t.phases.clone(), duration_cv: 0.0 };
+        assert_eq!(det.predicted_duration(700.0, 1.0, 0.99), 700);
+    }
+
+    #[test]
+    fn sample_duration_statistics() {
+        let t = training_trp();
+        let mut rng = Rng::new(42);
+        let n = 5000;
+        let mean: f64 =
+            (0..n).map(|_| t.sample_duration(&mut rng, 1000.0, 1.0) as f64).sum::<f64>()
+                / n as f64;
+        assert!((mean - 1000.0).abs() < 15.0, "mean {mean}");
+    }
+
+    #[test]
+    fn sample_peak_tracks_profile() {
+        let t = training_trp();
+        let fmp = t.fmp_bins(2000.0, 8000.0, 32);
+        let mut rng = Rng::new(7);
+        let peak = fmp.sample_peak(&mut rng);
+        assert!(peak > 12.0 && peak < 20.0, "peak {peak}");
+        let h = fmp.sample_headroom(&mut rng, 20.0);
+        assert!((0.0..=1.0).contains(&h));
+    }
+}

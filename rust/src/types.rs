@@ -1,0 +1,160 @@
+//! Core scalar types shared across the crate.
+//!
+//! All simulated time is measured in integer **ticks**; one tick is one
+//! millisecond of simulated wall-clock time. Memory is measured in **GiB**
+//! as `f64` (MIG slice capacities are 5/10/20/40 GiB on A100-class parts).
+//! Compute capacity is measured in **sevenths** of a full GPU, matching the
+//! NVIDIA MIG compute-slice granularity (a 7g profile owns the whole GPU).
+
+
+/// Simulated time in ticks (1 tick = 1 ms of simulated time).
+pub type Time = u64;
+
+/// Simulated duration in ticks.
+pub type Duration = u64;
+
+/// Unique job identifier, assigned at arrival in admission order.
+pub type JobId = u32;
+
+/// Identifier of a MIG slice, unique across the whole cluster.
+pub type SliceId = u32;
+
+/// Identifier of a physical GPU in the cluster.
+pub type GpuId = u32;
+
+/// Identifier of a variant within one scheduling iteration's bid pool.
+pub type VariantId = u32;
+
+/// Convert ticks to (simulated) seconds.
+#[inline]
+pub fn ticks_to_secs(t: Time) -> f64 {
+    t as f64 / 1000.0
+}
+
+/// Convert (simulated) seconds to ticks, rounding to the nearest tick.
+#[inline]
+pub fn secs_to_ticks(s: f64) -> Time {
+    (s * 1000.0).round().max(0.0) as Time
+}
+
+/// A half-open time interval `[start, end)` on a slice timeline.
+///
+/// Empty intervals (`start >= end`) are permitted as degenerate values but
+/// never stored in timelines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Interval {
+    /// Inclusive start tick.
+    pub start: Time,
+    /// Exclusive end tick.
+    pub end: Time,
+}
+
+impl Interval {
+    /// Create a new interval; callers must ensure `start <= end`.
+    #[inline]
+    pub fn new(start: Time, end: Time) -> Self {
+        debug_assert!(start <= end, "interval start {start} > end {end}");
+        Interval { start, end }
+    }
+
+    /// Length of the interval in ticks.
+    #[inline]
+    pub fn len(&self) -> Duration {
+        self.end.saturating_sub(self.start)
+    }
+
+    /// True if the interval contains no ticks.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.start >= self.end
+    }
+
+    /// True if `self` and `other` share at least one tick.
+    ///
+    /// Half-open semantics: `[0,10)` and `[10,20)` do **not** overlap —
+    /// exactly the compatibility rule the WIS clearing phase uses
+    /// (paper §4.4 constraint (i)).
+    #[inline]
+    pub fn overlaps(&self, other: &Interval) -> bool {
+        self.start < other.end && other.start < self.end
+    }
+
+    /// True if `self` fully contains `other`.
+    #[inline]
+    pub fn contains(&self, other: &Interval) -> bool {
+        self.start <= other.start && other.end <= self.end
+    }
+
+    /// True if tick `t` lies inside the interval.
+    #[inline]
+    pub fn contains_tick(&self, t: Time) -> bool {
+        self.start <= t && t < self.end
+    }
+
+    /// Intersection of two intervals, or `None` if they do not overlap.
+    pub fn intersect(&self, other: &Interval) -> Option<Interval> {
+        let s = self.start.max(other.start);
+        let e = self.end.min(other.end);
+        if s < e {
+            Some(Interval::new(s, e))
+        } else {
+            None
+        }
+    }
+}
+
+impl std::fmt::Display for Interval {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}, {})", self.start, self.end)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interval_len_and_empty() {
+        assert_eq!(Interval::new(5, 15).len(), 10);
+        assert!(Interval::new(7, 7).is_empty());
+        assert!(!Interval::new(7, 8).is_empty());
+    }
+
+    #[test]
+    fn interval_overlap_half_open() {
+        let a = Interval::new(0, 10);
+        let b = Interval::new(10, 20);
+        let c = Interval::new(9, 11);
+        assert!(!a.overlaps(&b), "adjacent half-open intervals must not overlap");
+        assert!(a.overlaps(&c));
+        assert!(b.overlaps(&c));
+        assert!(c.overlaps(&a));
+    }
+
+    #[test]
+    fn interval_contains() {
+        let outer = Interval::new(0, 100);
+        assert!(outer.contains(&Interval::new(0, 100)));
+        assert!(outer.contains(&Interval::new(10, 90)));
+        assert!(!outer.contains(&Interval::new(10, 101)));
+        assert!(outer.contains_tick(0));
+        assert!(outer.contains_tick(99));
+        assert!(!outer.contains_tick(100));
+    }
+
+    #[test]
+    fn interval_intersect() {
+        let a = Interval::new(0, 10);
+        assert_eq!(a.intersect(&Interval::new(5, 15)), Some(Interval::new(5, 10)));
+        assert_eq!(a.intersect(&Interval::new(10, 15)), None);
+        assert_eq!(a.intersect(&Interval::new(2, 4)), Some(Interval::new(2, 4)));
+    }
+
+    #[test]
+    fn tick_conversions_round_trip() {
+        assert_eq!(ticks_to_secs(1500), 1.5);
+        assert_eq!(secs_to_ticks(1.5), 1500);
+        assert_eq!(secs_to_ticks(ticks_to_secs(123_456)), 123_456);
+        assert_eq!(secs_to_ticks(-1.0), 0, "negative seconds clamp to zero");
+    }
+}

@@ -1,0 +1,128 @@
+//! Measurement harness used by all `rust/benches/*` targets (the offline
+//! environment has no criterion; this provides the same discipline:
+//! warm-up, repeated timed samples, median/mean/min reporting).
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone, Copy)]
+pub struct Measurement {
+    /// Median time per iteration.
+    pub median: Duration,
+    /// Mean time per iteration.
+    pub mean: Duration,
+    /// Fastest sample.
+    pub min: Duration,
+    /// Slowest sample.
+    pub max: Duration,
+    /// Iterations per sample.
+    pub iters: u32,
+    /// Number of samples.
+    pub samples: u32,
+}
+
+impl Measurement {
+    /// ns per iteration (median).
+    pub fn ns_per_iter(&self) -> f64 {
+        self.median.as_nanos() as f64
+    }
+
+    /// Human-readable form.
+    pub fn display(&self) -> String {
+        format!(
+            "median {:>12} mean {:>12} min {:>12} ({} samples x {} iters)",
+            fmt_dur(self.median),
+            fmt_dur(self.mean),
+            fmt_dur(self.min),
+            self.samples,
+            self.iters
+        )
+    }
+}
+
+/// Format a duration adaptively (ns/µs/ms/s).
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Time `f`, returning per-iteration statistics. Automatically picks an
+/// iteration count so each sample runs ≥ `min_sample_ms` ms, then takes
+/// `samples` samples. Results of `f` are passed to `std::hint::black_box`
+/// by the caller's closure convention (return something observable).
+pub fn bench<T>(samples: u32, min_sample_ms: u64, mut f: impl FnMut() -> T) -> Measurement {
+    // Warm-up + calibration.
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let one = t0.elapsed().max(Duration::from_nanos(50));
+    let target = Duration::from_millis(min_sample_ms.max(1));
+    let iters = ((target.as_nanos() / one.as_nanos()).clamp(1, 1_000_000)) as u32;
+
+    let mut per_iter: Vec<Duration> = Vec::with_capacity(samples as usize);
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(f());
+        }
+        per_iter.push(t.elapsed() / iters);
+    }
+    per_iter.sort();
+    let median = per_iter[per_iter.len() / 2];
+    let mean = per_iter.iter().sum::<Duration>() / samples;
+    Measurement {
+        median,
+        mean,
+        min: per_iter[0],
+        max: *per_iter.last().unwrap(),
+        iters,
+        samples,
+    }
+}
+
+/// Run and report a named benchmark in one line.
+pub fn run_case<T>(name: &str, samples: u32, min_sample_ms: u64, f: impl FnMut() -> T) -> Measurement {
+    let m = bench(samples, min_sample_ms, f);
+    println!("{name:<48} {}", m.display());
+    m
+}
+
+/// Print a bench header.
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let m = bench(5, 1, || {
+            let mut s = 0u64;
+            for i in 0..100 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert!(m.median.as_nanos() > 0);
+        assert!(m.min <= m.median && m.median <= m.max);
+        assert!(m.iters >= 1);
+        assert_eq!(m.samples, 5);
+    }
+
+    #[test]
+    fn fmt_dur_scales() {
+        assert_eq!(fmt_dur(Duration::from_nanos(12)), "12 ns");
+        assert_eq!(fmt_dur(Duration::from_nanos(1500)), "1.50 µs");
+        assert_eq!(fmt_dur(Duration::from_micros(2500)), "2.50 ms");
+        assert_eq!(fmt_dur(Duration::from_millis(1500)), "1.500 s");
+    }
+}

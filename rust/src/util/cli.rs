@@ -1,0 +1,128 @@
+//! Minimal command-line argument parsing (no external deps).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positionals.
+//! Unknown flags are an error, so typos surface immediately.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// `--key value` / `--key=value` options.
+    opts: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    flags: Vec<String>,
+    /// Positional arguments in order.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    /// `value_opts` lists option names that consume a value.
+    pub fn parse(
+        argv: impl Iterator<Item = String>,
+        value_opts: &[&str],
+        flag_opts: &[&str],
+    ) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, inline) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                if value_opts.contains(&key.as_str()) {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("option --{key} requires a value"))?,
+                    };
+                    out.opts.insert(key, v);
+                } else if flag_opts.contains(&key.as_str()) {
+                    if inline.is_some() {
+                        return Err(format!("flag --{key} takes no value"));
+                    }
+                    out.flags.push(key);
+                } else {
+                    return Err(format!("unknown option --{key}"));
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Value of `--key`, if given.
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    /// Whether `--flag` was given.
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Typed option with default.
+    pub fn opt_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("invalid value for --{key}: '{v}'")),
+        }
+    }
+
+    /// Comma-separated list option.
+    pub fn opt_list_f64(&self, key: &str, default: &[f64]) -> Result<Vec<f64>, String> {
+        match self.opt(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().parse::<f64>().map_err(|_| format!("bad f64 '{s}' in --{key}")))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Result<Args, String> {
+        Args::parse(
+            args.iter().map(|s| s.to_string()),
+            &["seed", "scheduler", "lambdas"],
+            &["json", "csv"],
+        )
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = parse(&["run", "--seed", "7", "--scheduler=fcfs", "--json", "extra"]).unwrap();
+        assert_eq!(a.positional, vec!["run", "extra"]);
+        assert_eq!(a.opt("seed"), Some("7"));
+        assert_eq!(a.opt("scheduler"), Some("fcfs"));
+        assert!(a.flag("json"));
+        assert!(!a.flag("csv"));
+    }
+
+    #[test]
+    fn typed_and_list() {
+        let a = parse(&["--seed", "42", "--lambdas", "0.3,0.5, 0.7"]).unwrap();
+        assert_eq!(a.opt_parse("seed", 0u64).unwrap(), 42);
+        assert_eq!(a.opt_parse("missing", 5u32).unwrap(), 5);
+        assert_eq!(a.opt_list_f64("lambdas", &[]).unwrap(), vec![0.3, 0.5, 0.7]);
+        assert_eq!(a.opt_list_f64("none", &[1.0]).unwrap(), vec![1.0]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse(&["--bogus"]).is_err());
+        assert!(parse(&["--seed"]).is_err());
+        assert!(parse(&["--json=1"]).is_err());
+        let a = parse(&["--seed", "x"]).unwrap();
+        assert!(a.opt_parse("seed", 0u64).is_err());
+        assert!(a.opt_list_f64("seed", &[]).is_err());
+    }
+}

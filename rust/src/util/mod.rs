@@ -1,0 +1,9 @@
+//! In-crate infrastructure the offline environment would otherwise pull
+//! from crates.io: JSON (configs/traces/metrics), CLI parsing, and the
+//! benchmark measurement harness.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+
+pub use json::Json;

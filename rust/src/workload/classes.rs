@@ -1,0 +1,262 @@
+//! Job classes: parameterized templates for the workload mixes the paper
+//! motivates (AI training/inference, analytics, Agriculture 4.0).
+//!
+//! Each class fixes the *shape* of the TRP (phase structure, memory
+//! levels, burstiness, atomization granularity); instantiation draws the
+//! scale parameters (total work, memory) from class-specific log-normal
+//! distributions so populations are heterogeneous but reproducible.
+
+use crate::job::Job;
+use crate::sim::Rng;
+use crate::trp::{Phase, Trp};
+use crate::types::Time;
+
+/// The built-in job classes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobClass {
+    /// Small model training: warm-up ramp then long steady phase,
+    /// moderate memory, medium atoms (checkpoint every few minutes).
+    TrainSmall,
+    /// Large model training: high memory (needs 3g/4g+ slices), long,
+    /// coarse atoms.
+    TrainLarge,
+    /// Inference burst: short, small memory, tight deadline, fine atoms.
+    InferenceBurst,
+    /// Data analytics: medium length, spiky memory (bursty joins).
+    Analytics,
+    /// Agriculture 4.0 pipeline: periodic sensing + inference stages,
+    /// small-to-medium memory, deadline-bound (daily windows).
+    AgriPipeline,
+}
+
+/// Distribution parameters for one class.
+#[derive(Debug, Clone)]
+pub struct JobClassSpec {
+    /// Class enum value.
+    pub class: JobClass,
+    /// Canonical name used in config mixes.
+    pub name: &'static str,
+    /// Log-normal (mu, sigma) of total work in ticks (full-GPU).
+    pub work_lognorm: (f64, f64),
+    /// Log-normal (mu, sigma) of steady memory (GiB).
+    pub mem_lognorm: (f64, f64),
+    /// Memory noise std as a fraction of the level.
+    pub mem_noise: f64,
+    /// Atom size as a fraction of total work.
+    pub atom_frac: f64,
+    /// Duration CV (realization noise).
+    pub duration_cv: f64,
+    /// Deadline slack multiplier over ideal runtime (None = no deadline).
+    pub deadline_slack: Option<f64>,
+    /// Tenant weight.
+    pub weight: f64,
+}
+
+impl JobClass {
+    /// All classes.
+    pub const ALL: [JobClass; 5] = [
+        JobClass::TrainSmall,
+        JobClass::TrainLarge,
+        JobClass::InferenceBurst,
+        JobClass::Analytics,
+        JobClass::AgriPipeline,
+    ];
+
+    /// Parse a class by config name.
+    pub fn parse(name: &str) -> Option<JobClass> {
+        Self::ALL.iter().copied().find(|c| c.spec().name == name)
+    }
+
+    /// The class's distribution spec.
+    pub fn spec(&self) -> JobClassSpec {
+        match self {
+            JobClass::TrainSmall => JobClassSpec {
+                class: *self,
+                name: "train_small",
+                // e^8.5 ≈ 4900 ticks of work
+                work_lognorm: (8.5, 0.5),
+                // e^1.8 ≈ 6 GiB
+                mem_lognorm: (1.8, 0.3),
+                mem_noise: 0.06,
+                atom_frac: 0.15,
+                duration_cv: 0.08,
+                deadline_slack: None,
+                weight: 1.0,
+            },
+            JobClass::TrainLarge => JobClassSpec {
+                class: *self,
+                name: "train_large",
+                // e^9.6 ≈ 14.8k ticks
+                work_lognorm: (9.6, 0.4),
+                // e^2.75 ≈ 15.6 GiB — needs 3g/4g/7g slices
+                mem_lognorm: (2.75, 0.15),
+                mem_noise: 0.05,
+                atom_frac: 0.2,
+                duration_cv: 0.1,
+                deadline_slack: None,
+                weight: 2.0,
+            },
+            JobClass::InferenceBurst => JobClassSpec {
+                class: *self,
+                name: "inference_burst",
+                // e^6.6 ≈ 735 ticks
+                work_lognorm: (6.6, 0.5),
+                // e^1.0 ≈ 2.7 GiB — fits 1g slices
+                mem_lognorm: (1.0, 0.3),
+                mem_noise: 0.08,
+                atom_frac: 0.34,
+                duration_cv: 0.12,
+                deadline_slack: Some(12.0),
+                weight: 1.0,
+            },
+            JobClass::Analytics => JobClassSpec {
+                class: *self,
+                name: "analytics",
+                work_lognorm: (8.0, 0.6),
+                mem_lognorm: (1.6, 0.4),
+                mem_noise: 0.18, // spiky joins
+                atom_frac: 0.25,
+                duration_cv: 0.15,
+                deadline_slack: None,
+                weight: 1.0,
+            },
+            JobClass::AgriPipeline => JobClassSpec {
+                class: *self,
+                name: "agri_pipeline",
+                work_lognorm: (7.4, 0.4),
+                mem_lognorm: (1.3, 0.25),
+                mem_noise: 0.1,
+                atom_frac: 0.25,
+                duration_cv: 0.1,
+                deadline_slack: Some(20.0),
+                weight: 1.0,
+            },
+        }
+    }
+}
+
+impl JobClassSpec {
+    /// Draw one job instance.
+    pub fn instantiate(&self, id: u32, arrival: Time, rng: &mut Rng) -> Job {
+        let work = rng.log_normal(self.work_lognorm.0, self.work_lognorm.1).max(100.0);
+        // Clamp so every job fits at least a 20 GiB (3g/4g) slice even at
+        // its bursty tail (1.05x level + >3 sigma of noise must stay under
+        // 20 GiB) — no job is structurally unschedulable.
+        let mem = rng.log_normal(self.mem_lognorm.0, self.mem_lognorm.1).clamp(0.5, 13.5);
+        let noise = (mem * self.mem_noise).max(0.05);
+
+        let phases = match self.class {
+            // Training: warm-up ramp -> steady -> bursty tail.
+            JobClass::TrainSmall | JobClass::TrainLarge => vec![
+                Phase::new(work * 0.1, mem * 0.75, noise, 0.6),
+                Phase::new(work * 0.8, mem, noise, 0.15),
+                Phase::new(work * 0.1, mem * 1.05, noise * 2.0, 0.1),
+            ],
+            // Inference: fast ramp, short steady.
+            JobClass::InferenceBurst => vec![
+                Phase::new(work * 0.2, mem, noise, 0.4),
+                Phase::new(work * 0.8, mem, noise, 0.0),
+            ],
+            // Analytics: alternating spiky stages.
+            JobClass::Analytics => vec![
+                Phase::new(work * 0.3, mem * 0.6, noise, 0.3),
+                Phase::new(work * 0.3, mem * 1.1, noise * 1.8, 0.1),
+                Phase::new(work * 0.4, mem * 0.8, noise, 0.1),
+            ],
+            // Agri pipeline: sense (light) -> infer (heavier) -> aggregate.
+            JobClass::AgriPipeline => vec![
+                Phase::new(work * 0.35, mem * 0.5, noise, 0.3),
+                Phase::new(work * 0.4, mem, noise, 0.2),
+                Phase::new(work * 0.25, mem * 0.7, noise, 0.1),
+            ],
+        };
+
+        // Enforce schedulability by construction: every phase must pass
+        // the chunk-level safety product on the largest common slice
+        // (20 GiB): mu + 3.3 sigma <= 19 GiB keeps a 64-bin FMP violation
+        // probability under theta = 0.05. Jobs whose draw exceeds this are
+        // scaled down proportionally (they'd be rejected by any admission
+        // control in practice).
+        let mut phases = phases;
+        let worst =
+            phases.iter().map(|p| p.mem_gb + 3.3 * p.mem_std_gb).fold(0.0, f64::max);
+        if worst > 19.0 {
+            let scale = 19.0 / worst;
+            for p in &mut phases {
+                p.mem_gb *= scale;
+                p.mem_std_gb *= scale;
+            }
+        }
+
+        let trp = Trp { phases, duration_cv: self.duration_cv };
+        let total = trp.total_work();
+        let deadline = self
+            .deadline_slack
+            .map(|s| arrival + (total * s).round() as Time);
+        let atom = (total * self.atom_frac).max(50.0);
+        Job::new(id, self.name, arrival, trp, deadline, self.weight, atom, 0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trip() {
+        for c in JobClass::ALL {
+            assert_eq!(JobClass::parse(c.spec().name), Some(c));
+        }
+        assert_eq!(JobClass::parse("bogus"), None);
+    }
+
+    #[test]
+    fn instantiation_is_sane() {
+        let mut rng = Rng::new(5);
+        for c in JobClass::ALL {
+            for i in 0..20 {
+                let j = c.spec().instantiate(i, 1000, &mut rng);
+                assert!(j.total_work() >= 100.0, "{}: work {}", j.class, j.total_work());
+                let peak = j.trp.peak_mem_gb();
+                assert!(peak > 0.0 && peak <= 40.0, "{}: peak {peak}", j.class);
+                assert!(j.atom_work >= 50.0);
+                assert!(j.atom_work <= j.total_work() + 1e-9 || j.total_work() < 50.0);
+                assert_eq!(j.arrival, 1000);
+                if let Some(d) = j.deadline {
+                    assert!(d > j.arrival);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn class_scale_ordering() {
+        // Across a population, train_large is bigger/heavier than
+        // inference_burst in both work and memory.
+        let mut rng = Rng::new(17);
+        let n = 200;
+        let mean = |c: JobClass, rng: &mut Rng| {
+            let mut w = 0.0;
+            let mut m = 0.0;
+            for i in 0..n {
+                let j = c.spec().instantiate(i, 0, rng);
+                w += j.total_work();
+                m += j.trp.peak_mem_gb();
+            }
+            (w / n as f64, m / n as f64)
+        };
+        let (w_big, m_big) = mean(JobClass::TrainLarge, &mut rng);
+        let (w_inf, m_inf) = mean(JobClass::InferenceBurst, &mut rng);
+        assert!(w_big > 5.0 * w_inf, "{w_big} vs {w_inf}");
+        assert!(m_big > 3.0 * m_inf, "{m_big} vs {m_inf}");
+    }
+
+    #[test]
+    fn inference_always_has_deadline() {
+        let mut rng = Rng::new(2);
+        for i in 0..50 {
+            let j = JobClass::InferenceBurst.spec().instantiate(i, 500, &mut rng);
+            assert!(j.deadline.is_some());
+        }
+    }
+}

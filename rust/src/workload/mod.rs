@@ -1,0 +1,160 @@
+//! Workload generation: job classes, Poisson arrivals, and traces.
+//!
+//! Job classes model the heterogeneous mixes the paper motivates (§1):
+//! AI training and inference, data analytics, and Agriculture 4.0
+//! pipelines (periodic sensing/inference bursts). Arrivals follow a
+//! Poisson process with bounded rate — the stationarity assumption behind
+//! the §4.6 asymptotics.
+
+pub mod classes;
+pub mod trace;
+
+use crate::config::WorkloadConfig;
+use crate::job::Job;
+use crate::sim::Rng;
+use crate::types::Time;
+
+pub use classes::{JobClass, JobClassSpec};
+pub use trace::{load_trace, save_trace, TraceRecord};
+
+/// Generates reproducible job populations from a [`WorkloadConfig`].
+#[derive(Debug, Clone)]
+pub struct WorkloadGenerator {
+    cfg: WorkloadConfig,
+}
+
+impl WorkloadGenerator {
+    /// Build a generator.
+    pub fn new(cfg: WorkloadConfig) -> Self {
+        WorkloadGenerator { cfg }
+    }
+
+    /// Generate the job population for a run, deterministic in `seed`.
+    pub fn generate(&self, seed: u64) -> Vec<Job> {
+        let mut rng = Rng::new(seed).fork(0x307B);
+        let specs: Vec<(JobClassSpec, f64)> = self
+            .cfg
+            .mix
+            .iter()
+            .filter_map(|(name, w)| JobClass::parse(name).map(|c| (c.spec(), *w)))
+            .collect();
+        assert!(!specs.is_empty(), "workload mix resolved to no known classes");
+        let total_w: f64 = specs.iter().map(|(_, w)| w).sum();
+
+        let mut jobs = Vec::with_capacity(self.cfg.num_jobs);
+        let mut t: f64 = 0.0;
+        let rate_per_tick = self.cfg.arrival_rate_per_sec / 1000.0;
+        for id in 0..self.cfg.num_jobs {
+            t += rng.exponential(rate_per_tick);
+            let arrival = t.round() as Time;
+
+            // Pick a class by weight.
+            let mut pick = rng.uniform() * total_w;
+            let mut chosen = &specs[0].0;
+            for (spec, w) in &specs {
+                if pick < *w {
+                    chosen = spec;
+                    break;
+                }
+                pick -= w;
+            }
+
+            let misreport = if rng.chance(self.cfg.misreport_fraction) {
+                self.cfg.misreport_bias
+            } else {
+                0.0
+            };
+            let mut job = chosen.instantiate(id as u32, arrival, &mut rng);
+            job.misreport_bias = misreport;
+            jobs.push(job);
+        }
+        jobs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadConfig;
+
+    fn gen(n: usize, rate: f64) -> Vec<Job> {
+        let cfg = WorkloadConfig {
+            num_jobs: n,
+            arrival_rate_per_sec: rate,
+            ..WorkloadConfig::default()
+        };
+        WorkloadGenerator::new(cfg).generate(7)
+    }
+
+    #[test]
+    fn generates_requested_count_with_monotone_arrivals() {
+        let jobs = gen(50, 1.0);
+        assert_eq!(jobs.len(), 50);
+        for w in jobs.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+        for (i, j) in jobs.iter().enumerate() {
+            assert_eq!(j.id as usize, i);
+            assert!(j.total_work() > 0.0);
+            assert!(j.trp.peak_mem_gb() > 0.0);
+            assert!(j.atom_work > 0.0);
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let cfg = WorkloadConfig::default();
+        let a = WorkloadGenerator::new(cfg.clone()).generate(9);
+        let b = WorkloadGenerator::new(cfg).generate(9);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.class, y.class);
+            assert_eq!(x.total_work(), y.total_work());
+        }
+    }
+
+    #[test]
+    fn arrival_rate_roughly_matches() {
+        let jobs = gen(400, 2.0); // 2 jobs/s => mean gap 500 ticks
+        let last = jobs.last().unwrap().arrival as f64;
+        let mean_gap = last / 400.0;
+        assert!((mean_gap - 500.0).abs() < 100.0, "mean gap {mean_gap}");
+    }
+
+    #[test]
+    fn misreport_fraction_applied() {
+        let cfg = WorkloadConfig {
+            num_jobs: 300,
+            misreport_fraction: 0.3,
+            misreport_bias: 0.5,
+            ..WorkloadConfig::default()
+        };
+        let jobs = WorkloadGenerator::new(cfg).generate(11);
+        let liars = jobs.iter().filter(|j| j.misreport_bias > 0.0).count();
+        let frac = liars as f64 / jobs.len() as f64;
+        assert!((frac - 0.3).abs() < 0.08, "liar fraction {frac}");
+    }
+
+    #[test]
+    fn mix_respects_weights() {
+        let cfg = WorkloadConfig {
+            num_jobs: 500,
+            mix: vec![("inference_burst".into(), 0.8), ("train_small".into(), 0.2)],
+            ..WorkloadConfig::default()
+        };
+        let jobs = WorkloadGenerator::new(cfg).generate(3);
+        let inf = jobs.iter().filter(|j| j.class == "inference_burst").count() as f64;
+        assert!((inf / 500.0 - 0.8).abs() < 0.06);
+    }
+
+    #[test]
+    #[should_panic]
+    fn unknown_mix_panics() {
+        let cfg = WorkloadConfig {
+            mix: vec![("no_such_class".into(), 1.0)],
+            ..WorkloadConfig::default()
+        };
+        WorkloadGenerator::new(cfg).generate(1);
+    }
+}

@@ -1,0 +1,239 @@
+//! Workload trace persistence: save generated populations to JSON-lines
+//! and reload them, so experiments can be re-run on the exact same trace
+//! (and traces can be shared across schedulers / machines).
+
+use crate::job::Job;
+use crate::trp::{Phase, Trp};
+use crate::types::Time;
+use crate::util::Json;
+use std::io::{BufRead, Write};
+
+/// One trace line: the static description of a job (dynamic state is
+/// reset on load).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRecord {
+    /// Job id.
+    pub id: u32,
+    /// Class name.
+    pub class: String,
+    /// Arrival tick.
+    pub arrival: Time,
+    /// Resource profile.
+    pub trp: Trp,
+    /// Optional absolute deadline.
+    pub deadline: Option<Time>,
+    /// Tenant weight.
+    pub weight: f64,
+    /// Atomization granularity.
+    pub atom_work: f64,
+    /// Misreport bias.
+    pub misreport_bias: f64,
+}
+
+impl From<&Job> for TraceRecord {
+    fn from(j: &Job) -> Self {
+        TraceRecord {
+            id: j.id,
+            class: j.class.clone(),
+            arrival: j.arrival,
+            trp: j.trp.clone(),
+            deadline: j.deadline,
+            weight: j.weight,
+            atom_work: j.atom_work,
+            misreport_bias: j.misreport_bias,
+        }
+    }
+}
+
+fn phase_to_json(p: &Phase) -> Json {
+    Json::obj(vec![
+        ("work", p.work.into()),
+        ("mem_gb", p.mem_gb.into()),
+        ("mem_std_gb", p.mem_std_gb.into()),
+        ("ramp_frac", p.ramp_frac.into()),
+    ])
+}
+
+fn phase_from_json(v: &Json) -> anyhow::Result<Phase> {
+    let f = |k: &str| {
+        v.get(k)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("phase missing numeric '{k}'"))
+    };
+    Ok(Phase {
+        work: f("work")?,
+        mem_gb: f("mem_gb")?,
+        mem_std_gb: f("mem_std_gb")?,
+        ramp_frac: f("ramp_frac")?,
+    })
+}
+
+impl TraceRecord {
+    /// Serialize to one JSON value.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", self.id.into()),
+            ("class", self.class.clone().into()),
+            ("arrival", self.arrival.into()),
+            (
+                "trp",
+                Json::obj(vec![
+                    ("phases", Json::Arr(self.trp.phases.iter().map(phase_to_json).collect())),
+                    ("duration_cv", self.trp.duration_cv.into()),
+                ]),
+            ),
+            ("deadline", self.deadline.map_or(Json::Null, |d| d.into())),
+            ("weight", self.weight.into()),
+            ("atom_work", self.atom_work.into()),
+            ("misreport_bias", self.misreport_bias.into()),
+        ])
+    }
+
+    /// Parse from a JSON value.
+    pub fn from_json(v: &Json) -> anyhow::Result<TraceRecord> {
+        let num = |k: &str| {
+            v.get(k).and_then(Json::as_f64).ok_or_else(|| anyhow::anyhow!("missing '{k}'"))
+        };
+        let trp_v = v.get("trp").ok_or_else(|| anyhow::anyhow!("missing 'trp'"))?;
+        let phases_v = trp_v
+            .get("phases")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("missing 'trp.phases'"))?;
+        let phases: anyhow::Result<Vec<Phase>> = phases_v.iter().map(phase_from_json).collect();
+        let deadline = match v.get("deadline") {
+            None | Some(Json::Null) => None,
+            Some(d) => {
+                Some(d.as_u64().ok_or_else(|| anyhow::anyhow!("deadline must be integer"))?)
+            }
+        };
+        Ok(TraceRecord {
+            id: num("id")? as u32,
+            class: v
+                .get("class")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("missing 'class'"))?
+                .to_string(),
+            arrival: v
+                .get("arrival")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow::anyhow!("missing 'arrival'"))?,
+            trp: Trp {
+                phases: phases?,
+                duration_cv: trp_v
+                    .get("duration_cv")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow::anyhow!("missing 'trp.duration_cv'"))?,
+            },
+            deadline,
+            weight: num("weight")?,
+            atom_work: num("atom_work")?,
+            misreport_bias: num("misreport_bias")?,
+        })
+    }
+
+    /// Reconstruct a fresh (unstarted) job.
+    pub fn into_job(self) -> Job {
+        Job::new(
+            self.id,
+            self.class,
+            self.arrival,
+            self.trp,
+            self.deadline,
+            self.weight,
+            self.atom_work,
+            self.misreport_bias,
+        )
+    }
+}
+
+/// Write jobs as JSON-lines.
+pub fn save_trace(path: &std::path::Path, jobs: &[Job]) -> anyhow::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    for j in jobs {
+        writeln!(f, "{}", TraceRecord::from(j).to_json())?;
+    }
+    Ok(())
+}
+
+/// Load jobs from a JSON-lines trace.
+pub fn load_trace(path: &std::path::Path) -> anyhow::Result<Vec<Job>> {
+    let f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut jobs = Vec::new();
+    for (n, line) in f.lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = Json::parse(&line).map_err(|e| anyhow::anyhow!("trace line {}: {e}", n + 1))?;
+        jobs.push(
+            TraceRecord::from_json(&v)
+                .map_err(|e| anyhow::anyhow!("trace line {}: {e}", n + 1))?
+                .into_job(),
+        );
+    }
+    Ok(jobs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadConfig;
+    use crate::workload::WorkloadGenerator;
+
+    #[test]
+    fn trace_round_trip() {
+        let jobs = WorkloadGenerator::new(WorkloadConfig {
+            num_jobs: 12,
+            ..WorkloadConfig::default()
+        })
+        .generate(4);
+        let dir = std::env::temp_dir().join("jasda_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.jsonl");
+        save_trace(&path, &jobs).unwrap();
+        let back = load_trace(&path).unwrap();
+        assert_eq!(back.len(), jobs.len());
+        for (a, b) in jobs.iter().zip(&back) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.class, b.class);
+            assert_eq!(a.arrival, b.arrival);
+            assert_eq!(a.trp, b.trp);
+            assert_eq!(a.deadline, b.deadline);
+            assert_eq!(a.atom_work, b.atom_work);
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn record_json_round_trip_with_deadline() {
+        let jobs = WorkloadGenerator::new(WorkloadConfig {
+            num_jobs: 30,
+            mix: vec![("inference_burst".into(), 1.0)],
+            ..WorkloadConfig::default()
+        })
+        .generate(9);
+        for j in &jobs {
+            let rec = TraceRecord::from(j);
+            let back = TraceRecord::from_json(&rec.to_json()).unwrap();
+            assert_eq!(rec, back);
+            assert!(back.deadline.is_some());
+        }
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join("jasda_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.jsonl");
+        std::fs::write(&path, "not json\n").unwrap();
+        assert!(load_trace(&path).is_err());
+        std::fs::write(&path, "{\"id\": 0}\n").unwrap();
+        assert!(load_trace(&path).is_err(), "incomplete record must fail");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn load_missing_file_errors() {
+        assert!(load_trace(std::path::Path::new("/no/such/file.jsonl")).is_err());
+    }
+}

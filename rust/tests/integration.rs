@@ -1,0 +1,282 @@
+//! Cross-module integration tests: full runs over the public API,
+//! schedule-validity audits, trace round-trips through the engine, the
+//! threaded protocol runtime, and failure-injection scenarios.
+
+use jasda::baselines::{by_name, ALL_SCHEDULERS};
+use jasda::config::{SimConfig, WindowPolicy};
+use jasda::jasda::JasdaScheduler;
+use jasda::job::JobState;
+use jasda::mig::Cluster;
+use jasda::sim::{RunOutcome, SimEngine};
+use jasda::types::Interval;
+use jasda::workload::{load_trace, save_trace, WorkloadGenerator};
+
+fn cfg(seed: u64, n: usize, rate: f64) -> SimConfig {
+    let mut c = SimConfig::default();
+    c.seed = seed;
+    c.cluster.layout = "heterogeneous".into();
+    c.workload.num_jobs = n;
+    c.workload.arrival_rate_per_sec = rate;
+    // Disable compaction so the full schedule can be audited afterwards.
+    c.engine.compact_after = 0;
+    c
+}
+
+/// Audit a finished run: no overlapping reservations anywhere, no
+/// reservation before the owning job's arrival, all work conserved.
+fn audit(out: &RunOutcome) {
+    for s in out.cluster.slices() {
+        let entries = s.timeline.entries();
+        for w in entries.windows(2) {
+            assert!(
+                !w[0].interval.overlaps(&w[1].interval),
+                "overlap on slice {}: {} vs {}",
+                s.id,
+                w[0].interval,
+                w[1].interval
+            );
+        }
+        for r in entries {
+            let job = out.jobs.get(r.job);
+            assert!(
+                r.interval.start >= job.arrival,
+                "job {} scheduled at {} before arrival {}",
+                r.job,
+                r.interval.start,
+                job.arrival
+            );
+        }
+    }
+    for job in out.jobs.iter() {
+        assert!(job.done_work <= job.total_work() + 1.0, "job {} over-credited", job.id);
+        if job.state == JobState::Completed {
+            assert!(
+                (job.done_work - job.total_work()).abs() < 1.0,
+                "job {} completed with work gap",
+                job.id
+            );
+            assert!(job.completed_at.is_some());
+        }
+    }
+}
+
+#[test]
+fn every_scheduler_produces_valid_schedules() {
+    let c = cfg(5, 40, 0.3);
+    let jobs = WorkloadGenerator::new(c.workload.clone()).generate(c.seed);
+    for name in ALL_SCHEDULERS {
+        let sched = by_name(name, &c.jasda).unwrap();
+        let out = SimEngine::new(c.clone(), sched).run(jobs.clone());
+        assert_eq!(out.metrics.unfinished, 0, "{name}: {}", out.metrics.summary());
+        audit(&out);
+    }
+}
+
+#[test]
+fn trace_round_trip_reproduces_run_exactly() {
+    let c = cfg(17, 25, 0.25);
+    let jobs = WorkloadGenerator::new(c.workload.clone()).generate(c.seed);
+    let dir = std::env::temp_dir().join("jasda_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("round.jsonl");
+    save_trace(&path, &jobs).unwrap();
+    let reloaded = load_trace(&path).unwrap();
+
+    let a = SimEngine::new(c.clone(), Box::new(JasdaScheduler::new(c.jasda.clone())))
+        .run(jobs)
+        .metrics;
+    let b = SimEngine::new(c.clone(), Box::new(JasdaScheduler::new(c.jasda.clone())))
+        .run(reloaded)
+        .metrics;
+    assert_eq!(a.makespan, b.makespan);
+    assert_eq!(a.total_commits, b.total_commits);
+    assert_eq!(a.mean_jct(), b.mean_jct());
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn all_window_policies_complete() {
+    let c0 = cfg(23, 30, 0.3);
+    let jobs = WorkloadGenerator::new(c0.workload.clone()).generate(c0.seed);
+    for policy in WindowPolicy::ALL {
+        let mut c = c0.clone();
+        c.jasda.window_policy = policy;
+        let out = SimEngine::new(c.clone(), Box::new(JasdaScheduler::new(c.jasda.clone())))
+            .run(jobs.clone());
+        assert_eq!(out.metrics.unfinished, 0, "{policy:?}");
+        audit(&out);
+    }
+}
+
+#[test]
+fn announce_lead_still_completes() {
+    // §5.1(a) mitigation (i): announce windows ahead of their start.
+    for lead in [0u64, 100, 1000] {
+        let mut c = cfg(29, 20, 0.25);
+        c.jasda.announce_lead = lead;
+        let out = SimEngine::new(c.clone(), Box::new(JasdaScheduler::new(c.jasda.clone())))
+            .run(WorkloadGenerator::new(c.workload.clone()).generate(c.seed));
+        assert_eq!(out.metrics.unfinished, 0, "lead {lead}");
+        audit(&out);
+    }
+}
+
+#[test]
+fn multi_gpu_scales_out() {
+    // Same workload, more GPUs -> makespan must not increase (and should
+    // drop substantially under contention).
+    let mut jcts = Vec::new();
+    for gpus in [1u32, 2, 4] {
+        let mut c = cfg(31, 60, 0.6);
+        c.cluster.num_gpus = gpus;
+        let out = SimEngine::new(c.clone(), Box::new(JasdaScheduler::new(c.jasda.clone())))
+            .run(WorkloadGenerator::new(c.workload.clone()).generate(c.seed));
+        assert_eq!(out.metrics.unfinished, 0, "gpus {gpus}");
+        jcts.push(out.metrics.mean_jct().unwrap());
+    }
+    assert!(jcts[1] < jcts[0], "2 GPUs should beat 1: {jcts:?}");
+    assert!(jcts[2] <= jcts[1] * 1.05, "4 GPUs should not be worse than 2: {jcts:?}");
+}
+
+#[test]
+fn misreporters_lose_trust_end_to_end() {
+    let mut c = cfg(37, 40, 0.3);
+    c.workload.misreport_fraction = 0.25;
+    c.workload.misreport_bias = 0.9;
+    let jobs = WorkloadGenerator::new(c.workload.clone()).generate(c.seed);
+    let liars: Vec<u32> =
+        jobs.iter().filter(|j| j.misreport_bias > 0.0).map(|j| j.id).collect();
+    assert!(!liars.is_empty());
+
+    let mut sched = JasdaScheduler::new(c.jasda.clone());
+    // Run through the engine by boxing a reference-capturing wrapper is
+    // not possible; instead run and inspect rho through stats afterwards.
+    let out = SimEngine::new(c.clone(), Box::new(JasdaScheduler::new(c.jasda.clone())))
+        .run(jobs.clone());
+    assert_eq!(out.metrics.unfinished, 0);
+    let mean_rho = out.scheduler_stats.get("mean_rho").unwrap().as_f64().unwrap();
+    assert!(mean_rho < 1.0, "misreporting population must dent mean rho");
+
+    // Direct check on a standalone scheduler fed by the engine.
+    let out2 = {
+        let mut eng = SimEngine::new(c.clone(), Box::new(JasdaScheduler::new(c.jasda.clone())));
+        eng.run(jobs)
+    };
+    let _ = &mut sched;
+    assert_eq!(out2.metrics.unfinished, 0);
+}
+
+#[test]
+fn protocol_matches_engine_population() {
+    // The threaded protocol runtime must complete the same workload the
+    // in-process engine completes.
+    let c = cfg(41, 15, 0.25);
+    let jobs = WorkloadGenerator::new(c.workload.clone()).generate(c.seed);
+    let engine_out = SimEngine::new(c.clone(), Box::new(JasdaScheduler::new(c.jasda.clone())))
+        .run(jobs.clone());
+    assert_eq!(engine_out.metrics.unfinished, 0);
+    let proto = jasda::coordinator::run_protocol(c, jobs, 3_000_000);
+    assert_eq!(proto.completed_jobs, proto.total_jobs, "{proto:?}");
+    assert!(proto.awards >= proto.total_jobs as u64);
+}
+
+#[test]
+fn burst_arrival_storm_is_absorbed() {
+    // Failure injection: all jobs arrive at t=0 (worst-case burst).
+    let mut c = cfg(43, 50, 10.0);
+    c.workload.arrival_rate_per_sec = 1e6; // effectively simultaneous
+    let jobs = WorkloadGenerator::new(c.workload.clone()).generate(c.seed);
+    assert!(jobs.iter().all(|j| j.arrival < 100));
+    let out = SimEngine::new(c.clone(), Box::new(JasdaScheduler::new(c.jasda.clone())))
+        .run(jobs);
+    assert_eq!(out.metrics.unfinished, 0, "{}", out.metrics.summary());
+    audit(&out);
+}
+
+#[test]
+fn degenerate_single_job_single_slice() {
+    let mut c = cfg(47, 1, 0.1);
+    c.cluster.layout = "whole".into();
+    let out = SimEngine::new(c.clone(), Box::new(JasdaScheduler::new(c.jasda.clone())))
+        .run(WorkloadGenerator::new(c.workload.clone()).generate(c.seed));
+    assert_eq!(out.metrics.unfinished, 0);
+    let m = &out.metrics;
+    // A lone job on a whole GPU: slowdown should be close to the declared
+    // duration margin (certainly < 2).
+    assert!(m.max_slowdown().unwrap() < 2.0, "{}", m.summary());
+}
+
+#[test]
+fn cluster_window_queries_respect_commitments() {
+    // White-box: after a run, candidate windows never overlap existing
+    // reservations.
+    let c = cfg(53, 20, 0.3);
+    let out = SimEngine::new(c.clone(), Box::new(JasdaScheduler::new(c.jasda.clone())))
+        .run(WorkloadGenerator::new(c.workload.clone()).generate(c.seed));
+    let cluster: &Cluster = &out.cluster;
+    let mid = out.metrics.makespan / 2;
+    for w in cluster.candidate_windows(mid, 50_000, 10) {
+        let slice = cluster.slice(w.slice);
+        assert!(
+            slice.timeline.is_free(&Interval::new(w.interval.start, w.interval.end)),
+            "candidate window overlaps a reservation"
+        );
+    }
+}
+
+#[test]
+fn config_json_drives_run() {
+    let text = r#"{
+        "seed": 9,
+        "cluster": {"num_gpus": 1, "layout": "balanced"},
+        "workload": {"num_jobs": 8, "arrival_rate_per_sec": 0.2},
+        "jasda": {"lambda": 0.7, "window_policy": "slack_aware"}
+    }"#;
+    let c = SimConfig::from_json_str(text).unwrap();
+    c.validate().unwrap();
+    assert_eq!(c.jasda.window_policy, WindowPolicy::SlackAware);
+    let out = SimEngine::new(c.clone(), Box::new(JasdaScheduler::new(c.jasda.clone())))
+        .run(WorkloadGenerator::new(c.workload.clone()).generate(c.seed));
+    assert_eq!(out.metrics.unfinished, 0);
+}
+
+#[test]
+fn repack_mode_completes_and_reports() {
+    let mut c = cfg(59, 40, 0.4);
+    c.jasda.repack = true;
+    let out = SimEngine::new(c.clone(), Box::new(JasdaScheduler::new(c.jasda.clone())))
+        .run(WorkloadGenerator::new(c.workload.clone()).generate(c.seed));
+    assert_eq!(out.metrics.unfinished, 0);
+    audit(&out);
+    let repacks = out.scheduler_stats.get("repack_iterations").unwrap().as_u64().unwrap();
+    // Under this contended trace fragmentation crosses the threshold at
+    // least occasionally.
+    assert!(repacks > 0, "repack never triggered");
+}
+
+#[test]
+fn duration_weighted_clearing_reduces_atomization() {
+    let c0 = cfg(61, 40, 0.35);
+    let jobs = WorkloadGenerator::new(c0.workload.clone()).generate(c0.seed);
+    let plain = SimEngine::new(c0.clone(), Box::new(JasdaScheduler::new(c0.jasda.clone())))
+        .run(jobs.clone())
+        .metrics;
+    let mut c = c0.clone();
+    c.jasda.duration_weighted_clearing = true;
+    let dw = SimEngine::new(c.clone(), Box::new(JasdaScheduler::new(c.jasda.clone())))
+        .run(jobs)
+        .metrics;
+    assert_eq!(plain.unfinished, 0);
+    assert_eq!(dw.unfinished, 0);
+    // Measured F6 finding (EXPERIMENTS.md): duration weighting does NOT
+    // reduce atomization, because variant generation caps chunk length at
+    // the atom size — the bid pool contains no long variants for the
+    // weighted objective to prefer. The ablation documents that the
+    // subjob inflation lives in announcement/generation, not clearing.
+    assert!(
+        dw.mean_subjobs().unwrap() <= plain.mean_subjobs().unwrap() * 1.1,
+        "dw {} vs plain {}",
+        dw.mean_subjobs().unwrap(),
+        plain.mean_subjobs().unwrap()
+    );
+}

@@ -1,0 +1,122 @@
+//! Integration tests for the PJRT-executed AOT artifact: the L1/L2
+//! pipeline loaded from `artifacts/scorer.hlo.txt` must agree with the
+//! rust-native mirror to f32 precision, and a full JASDA simulation run
+//! on the PJRT backend must make the *same decisions* as the native one.
+//!
+//! These tests require `make artifacts` to have run; they are skipped
+//! (with a loud message) when the artifact is missing so `cargo test`
+//! stays usable before the first artifact build.
+
+use jasda::config::SimConfig;
+use jasda::jasda::scoring::{NativeScorer, ScoreBatch, ScorerBackend};
+use jasda::jasda::JasdaScheduler;
+use jasda::runtime::{PjrtScorer, T_BINS};
+use jasda::sim::{Rng, SimEngine};
+use jasda::workload::WorkloadGenerator;
+
+fn scorer_or_skip() -> Option<PjrtScorer> {
+    let path = jasda::runtime::artifacts_dir().join("scorer.hlo.txt");
+    if !path.exists() {
+        eprintln!("SKIP: {} missing — run `make artifacts`", path.display());
+        return None;
+    }
+    Some(PjrtScorer::load(&path).expect("artifact compiles"))
+}
+
+/// Random batch covering safe, unsafe, and boundary rows.
+fn random_batch(seed: u64, m: usize) -> ScoreBatch {
+    let mut rng = Rng::new(seed);
+    let mut b = ScoreBatch::with_bins(T_BINS);
+    b.capacity = 20.0;
+    b.theta = 0.05;
+    b.lambda = 0.6;
+    b.alpha = [0.45, 0.25, 0.15, 0.15];
+    b.beta = [0.45, 0.2, 0.15, 0.2];
+    for _ in 0..m {
+        let base = rng.uniform_range(1.0, 19.0);
+        let mu: Vec<f64> = (0..T_BINS).map(|_| base + rng.uniform_range(-1.0, 1.0)).collect();
+        let sigma: Vec<f64> = (0..T_BINS).map(|_| rng.uniform_range(0.02, 2.5)).collect();
+        b.push(
+            &mu,
+            &sigma,
+            [rng.uniform(), rng.uniform(), rng.uniform(), rng.uniform()],
+            [rng.uniform(), rng.uniform(), rng.uniform()],
+            rng.uniform(),
+            rng.uniform(),
+        );
+    }
+    b
+}
+
+#[test]
+fn pjrt_matches_native_scorer() {
+    let Some(mut pjrt) = scorer_or_skip() else { return };
+    let mut native = NativeScorer;
+    for seed in [1u64, 2, 3] {
+        // Sizes exercise padding (non-multiples) and multi-chunk batches.
+        for m in [1usize, 7, 255, 256, 300] {
+            let b = random_batch(seed * 1000 + m as u64, m);
+            let a = native.score(&b).expect("native");
+            let p = pjrt.score(&b).expect("pjrt");
+            assert_eq!(a.score.len(), m);
+            assert_eq!(p.score.len(), m);
+            for i in 0..m {
+                assert!(
+                    (a.score[i] - p.score[i]).abs() < 1e-4,
+                    "seed {seed} m {m} row {i}: native {} vs pjrt {}",
+                    a.score[i],
+                    p.score[i]
+                );
+                assert!(
+                    (a.violation[i] - p.violation[i]).abs() < 1e-4,
+                    "violation mismatch row {i}"
+                );
+                assert!(
+                    (a.headroom[i] - p.headroom[i]).abs() < 1e-5,
+                    "headroom mismatch row {i}"
+                );
+                // Eligibility may only flip within float noise of theta.
+                if (a.violation[i] - b.theta).abs() > 1e-3 {
+                    assert_eq!(a.eligible[i], p.eligible[i], "eligibility row {i}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn pjrt_backend_runs_full_simulation_identically() {
+    let Some(pjrt) = scorer_or_skip() else { return };
+    let mut cfg = SimConfig::default();
+    cfg.cluster.layout = "balanced".into();
+    cfg.workload.num_jobs = 12;
+    cfg.seed = 11;
+    let jobs = WorkloadGenerator::new(cfg.workload.clone()).generate(cfg.seed);
+
+    let native_out = SimEngine::new(cfg.clone(), Box::new(JasdaScheduler::new(cfg.jasda.clone())))
+        .run(jobs.clone());
+    let pjrt_out = SimEngine::new(
+        cfg.clone(),
+        Box::new(JasdaScheduler::with_scorer(cfg.jasda.clone(), Box::new(pjrt))),
+    )
+    .run(jobs);
+
+    assert_eq!(native_out.metrics.unfinished, 0);
+    assert_eq!(pjrt_out.metrics.unfinished, 0);
+    // Decisions (and therefore the entire trajectory) must match: scores
+    // agree to ~1e-6 and WIS tie-breaks are deterministic.
+    assert_eq!(native_out.metrics.total_commits, pjrt_out.metrics.total_commits);
+    assert_eq!(native_out.metrics.makespan, pjrt_out.metrics.makespan);
+    assert_eq!(native_out.metrics.mean_jct(), pjrt_out.metrics.mean_jct());
+}
+
+#[test]
+fn pjrt_rejects_wrong_bin_count() {
+    let Some(mut pjrt) = scorer_or_skip() else { return };
+    let mut b = ScoreBatch::with_bins(16);
+    b.capacity = 10.0;
+    b.theta = 0.05;
+    b.lambda = 0.5;
+    b.push(&[4.0; 16], &[0.2; 16], [0.5; 4], [0.5; 3], 1.0, 0.5);
+    assert!(pjrt.score(&b).is_err(), "T mismatch must be a clean error");
+}

@@ -1,0 +1,304 @@
+//! Property-based tests over the DESIGN.md §6 invariants.
+//!
+//! No proptest in the offline environment, so these are hand-rolled
+//! property loops driven by the deterministic `sim::Rng`: each test
+//! generates hundreds of random cases and asserts the invariant; failing
+//! seeds are printed so cases can be replayed.
+
+use jasda::config::JasdaConfig;
+use jasda::jasda::calibration::Calibration;
+use jasda::jasda::clearing::{select_best_compatible, WisItem};
+use jasda::jasda::scoring::{NativeScorer, ScoreBatch, ScorerBackend};
+use jasda::job::variants::generate_variants;
+use jasda::job::{Job, JobState};
+use jasda::mig::{Reservation, Timeline, Window};
+use jasda::sim::Rng;
+use jasda::trp::{Phase, Trp};
+use jasda::types::Interval;
+
+/// Exhaustive WIS reference (exponential, n <= 14).
+fn brute_force(items: &[WisItem]) -> f64 {
+    let m = items.len();
+    let mut best = 0.0f64;
+    'subset: for mask in 0u32..(1 << m) {
+        let mut total = 0.0;
+        for i in 0..m {
+            if mask & (1 << i) != 0 {
+                for j in 0..i {
+                    if mask & (1 << j) != 0
+                        && items[i].interval.overlaps(&items[j].interval)
+                    {
+                        continue 'subset;
+                    }
+                }
+                total += items[i].score;
+            }
+        }
+        best = best.max(total);
+    }
+    best
+}
+
+#[test]
+fn prop_wis_optimal_and_feasible() {
+    let mut rng = Rng::new(0xA11CE);
+    for case in 0..400 {
+        let n = 1 + rng.index(14);
+        let items: Vec<WisItem> = (0..n)
+            .map(|_| {
+                let s = rng.below(200);
+                WisItem {
+                    interval: Interval::new(s, s + 1 + rng.below(60)),
+                    score: rng.uniform(),
+                }
+            })
+            .collect();
+        let sol = select_best_compatible(&items);
+        // Optimality.
+        let best = brute_force(&items);
+        assert!(
+            (sol.total_score - best).abs() < 1e-9,
+            "case {case}: dp {} vs brute {best}: {items:?}",
+            sol.total_score
+        );
+        // Feasibility + consistency.
+        for i in 0..sol.selected.len() {
+            for j in 0..i {
+                assert!(!items[sol.selected[i]]
+                    .interval
+                    .overlaps(&items[sol.selected[j]].interval));
+            }
+        }
+        let sum: f64 = sol.selected.iter().map(|&i| items[i].score).sum();
+        assert!((sum - sol.total_score).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn prop_timeline_never_overlaps_and_coalesces() {
+    let mut rng = Rng::new(0xBEEF);
+    for case in 0..300 {
+        let mut tl = Timeline::new();
+        let mut accepted: Vec<Interval> = Vec::new();
+        for k in 0..40 {
+            let s = rng.below(2_000);
+            let iv = Interval::new(s, s + 1 + rng.below(100));
+            let free = tl.is_free(&iv);
+            let expect_free = accepted.iter().all(|a| !a.overlaps(&iv));
+            assert_eq!(free, expect_free, "case {case}.{k}: is_free disagrees with model");
+            let r = tl.reserve(Reservation { job: k, subjob_seq: 0, interval: iv });
+            assert_eq!(r.is_ok(), expect_free);
+            if r.is_ok() {
+                accepted.push(iv);
+            }
+        }
+        // Sorted, pairwise disjoint.
+        let entries = tl.entries();
+        for w in entries.windows(2) {
+            assert!(w[0].interval.start <= w[1].interval.start);
+            assert!(!w[0].interval.overlaps(&w[1].interval));
+        }
+        // Idle gaps + busy ticks partition the horizon.
+        let busy = tl.busy_ticks(0, 3_000);
+        let idle: u64 =
+            tl.idle_gaps(0, 3_000, 1).iter().map(|g| g.interval.len()).sum();
+        assert_eq!(busy + idle, 3_000, "case {case}: busy+idle must cover horizon");
+    }
+}
+
+#[test]
+fn prop_scores_normalized_when_weights_are() {
+    let mut rng = Rng::new(0xCAFE);
+    let mut scorer = NativeScorer;
+    for case in 0..200 {
+        // Random normalized weights.
+        let mut alpha = [rng.uniform() as f32; 4];
+        for a in alpha.iter_mut() {
+            *a = rng.uniform() as f32;
+        }
+        let asum: f32 = alpha.iter().sum();
+        for a in alpha.iter_mut() {
+            *a /= asum.max(1.0); // Σα ≤ 1
+        }
+        let mut beta = [0.0f32; 4];
+        for b in beta.iter_mut() {
+            *b = rng.uniform() as f32;
+        }
+        let bsum: f32 = beta.iter().sum();
+        for b in beta.iter_mut() {
+            *b /= bsum.max(1.0);
+        }
+
+        let mut batch = ScoreBatch::with_bins(8);
+        batch.capacity = rng.uniform_range(5.0, 40.0) as f32;
+        batch.theta = rng.uniform_range(0.01, 0.3) as f32;
+        batch.lambda = rng.uniform() as f32;
+        batch.alpha = alpha;
+        batch.beta = beta;
+        for _ in 0..16 {
+            let mu: Vec<f64> = (0..8).map(|_| rng.uniform_range(0.5, 45.0)).collect();
+            let sigma: Vec<f64> = (0..8).map(|_| rng.uniform_range(0.0, 3.0)).collect();
+            batch.push(
+                &mu,
+                &sigma,
+                [rng.uniform(), rng.uniform(), rng.uniform(), rng.uniform()],
+                [rng.uniform(), rng.uniform(), rng.uniform()],
+                rng.uniform(),
+                rng.uniform(),
+            );
+        }
+        let out = scorer.score(&batch).unwrap();
+        for i in 0..batch.m {
+            assert!(
+                (0.0..=1.0).contains(&out.score[i]),
+                "case {case}: score {} out of [0,1]",
+                out.score[i]
+            );
+            assert!((0.0..=1.0).contains(&out.violation[i]));
+            assert!((0.0..=1.0).contains(&out.headroom[i]));
+            if !out.eligible[i] {
+                assert_eq!(out.score[i], 0.0);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_reliability_bounds_and_monotonicity() {
+    let mut rng = Rng::new(0xD00D);
+    for _case in 0..200 {
+        let kappa = rng.uniform_range(0.5, 10.0);
+        let mut cal = Calibration::new(1, kappa, 0.7, [0.45, 0.25, 0.15, 0.15]);
+        let mut last_rho = 1.0;
+        let constant_err = rng.uniform();
+        for _ in 0..30 {
+            // Feed a constant per-feature error: mean error converges to
+            // it, so rho must be non-increasing.
+            let declared = [constant_err, 0.5, constant_err, 0.5];
+            let observed = [0.0, 0.5, 0.0, 0.5];
+            cal.verify(0, &declared, &observed, 0.4);
+            let t = cal.trust(0);
+            assert!(t.rho > 0.0 && t.rho <= 1.0, "rho out of (0,1]: {}", t.rho);
+            assert!(t.rho <= last_rho + 1e-12, "rho increased under constant error");
+            assert!((0.0..=1.0).contains(&t.mean_error));
+            assert!((0.0..=1.0).contains(&t.hist_avg));
+            last_rho = t.rho;
+        }
+    }
+}
+
+#[test]
+fn prop_generated_variants_always_eligible() {
+    let mut rng = Rng::new(0xF00D);
+    let cfg = JasdaConfig { fmp_bins: 16, tau_min: 50, ..JasdaConfig::default() };
+    for case in 0..300 {
+        let work = rng.uniform_range(200.0, 20_000.0);
+        let mem = rng.uniform_range(0.5, 18.0);
+        let noise = mem * rng.uniform_range(0.02, 0.2);
+        let trp = Trp {
+            phases: vec![
+                Phase::new(work * 0.3, mem * 0.8, noise, rng.uniform()),
+                Phase::new(work * 0.7, mem, noise, rng.uniform() * 0.3),
+            ],
+            duration_cv: rng.uniform_range(0.0, 0.2),
+        };
+        let mut job = Job::new(0, "p", 0, trp, None, 1.0, work * rng.uniform_range(0.1, 0.6), 0.0);
+        job.state = JobState::Active;
+        job.done_work = work * rng.uniform() * 0.8;
+
+        let cap = [5.0, 10.0, 20.0, 40.0][rng.index(4)];
+        let speed = [1.0 / 7.0, 2.0 / 7.0, 3.0 / 7.0, 4.0 / 7.0, 1.0][rng.index(5)];
+        let start = rng.below(10_000);
+        let len = 1 + rng.below(30_000);
+        let window = Window {
+            slice: 3,
+            capacity_gb: cap,
+            speed,
+            interval: Interval::new(start, start + len),
+        };
+
+        let vs = generate_variants(&job, &window, &cfg);
+        let mut prev_end = window.t_min();
+        for (k, v) in vs.iter().enumerate() {
+            assert!(
+                window.interval.contains(&v.interval),
+                "case {case}.{k}: variant escapes window"
+            );
+            assert!(v.duration() >= cfg.tau_min, "case {case}.{k}: below tau_min");
+            assert!(
+                v.violation_prob <= cfg.theta + 1e-12,
+                "case {case}.{k}: unsafe variant emitted"
+            );
+            assert!(v.work <= job.pending_work() + 1e-6);
+            assert!(v.declared.h_tilde >= 0.0 && v.declared.h_tilde <= 1.0);
+            assert!(v.sys.util > 0.0 && v.sys.util <= 1.0);
+            assert!(v.sys.frag >= 0.0 && v.sys.frag <= 1.0);
+            // Chain variants are ordered and non-overlapping.
+            if v.work_offset > 0.0 {
+                assert!(v.interval.start >= prev_end, "case {case}.{k}: chain overlap");
+            }
+            prev_end = prev_end.max(v.interval.end);
+        }
+        assert!(vs.len() <= cfg.max_variants_per_job + 1);
+    }
+}
+
+#[test]
+fn prop_fmp_violation_monotone_in_capacity_and_sigma() {
+    let mut rng = Rng::new(0x5EED);
+    for _ in 0..300 {
+        let mem = rng.uniform_range(1.0, 30.0);
+        let trp = Trp {
+            phases: vec![Phase::new(
+                1000.0,
+                mem,
+                mem * rng.uniform_range(0.01, 0.3),
+                rng.uniform(),
+            )],
+            duration_cv: 0.1,
+        };
+        let fmp = trp.fmp_bins(0.0, 1000.0, 16);
+        let caps = [mem * 0.8, mem * 1.05, mem * 1.3, mem * 2.0];
+        let viols: Vec<f64> = caps.iter().map(|&c| fmp.violation_prob(c)).collect();
+        for w in viols.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9, "violation not monotone in capacity: {viols:?}");
+        }
+        for &v in &viols {
+            assert!((0.0..=1.0).contains(&v));
+        }
+    }
+}
+
+#[test]
+fn prop_age_factor_bounds_and_reset() {
+    let mut rng = Rng::new(0xA6E);
+    for _ in 0..200 {
+        let arrival = rng.below(10_000);
+        let trp = Trp { phases: vec![Phase::new(100.0, 1.0, 0.1, 0.0)], duration_cv: 0.0 };
+        let mut job = Job::new(0, "a", arrival, trp, None, 1.0, 50.0, 0.0);
+        let scale = 1 + rng.below(100_000);
+        let mut last = 0.0;
+        let mut t = arrival;
+        for _ in 0..20 {
+            t += rng.below(20_000);
+            let a = job.age_factor(t, scale);
+            assert!((0.0..=1.0).contains(&a));
+            assert!(a + 1e-12 >= last, "age must be non-decreasing while unselected");
+            last = a;
+        }
+        // Selection resets the clock.
+        job.last_selected = t;
+        assert_eq!(job.age_factor(t, scale), 0.0);
+    }
+}
+
+#[test]
+fn prop_rng_fork_streams_do_not_collide() {
+    let root = Rng::new(123);
+    let mut seen = std::collections::HashSet::new();
+    for stream in 0..500u64 {
+        let mut r = root.fork(stream);
+        let v = (r.next_u64(), r.next_u64());
+        assert!(seen.insert(v), "fork({stream}) collided");
+    }
+}
