@@ -60,4 +60,52 @@ fn main() {
         "overhead growth {:.1}x for a 16x arrival-rate increase (quasi-linear ≤ ~64x)",
         hi / lo
     );
+
+    // K-window announcement sweep (ISSUE 1): at a fixed contended rate,
+    // clearing K windows per iteration raises commitments per decision
+    // round; makespan must not regress relative to K=1.
+    println!("\nFigure: decision-round throughput vs announce_k\n");
+    let mut ktable = Table::new(
+        "JASDA K-window sweep (burst arrivals)",
+        &["announce_k", "commits/iter", "max_commits/iter", "makespan(s)", "util", "unfinished"],
+    );
+    let mut baseline_makespan = 0u64;
+    let mut baseline_cpi = 0.0;
+    for (label, k, per_slice) in
+        [("1", 1usize, false), ("2", 2, false), ("4", 4, false), ("per-slice", 1, true)]
+    {
+        let mut cfg = common::contended_cfg(47, 60);
+        cfg.workload.arrival_rate_per_sec = 1e6; // burst: worst-case contention
+        cfg.engine.iteration_period = 500; // decision-round-limited regime
+        cfg.jasda.announce_k = k;
+        cfg.jasda.announce_per_slice = per_slice;
+        let jobs = WorkloadGenerator::new(cfg.workload.clone()).generate(cfg.seed);
+        let m = SimEngine::new(cfg.clone(), Box::new(JasdaScheduler::new(cfg.jasda.clone())))
+            .run(jobs)
+            .metrics;
+        if label == "1" {
+            baseline_makespan = m.makespan;
+            baseline_cpi = m.commits_per_iteration();
+        }
+        ktable.push_row(vec![
+            label.to_string(),
+            format!("{:.3}", m.commits_per_iteration()),
+            format!("{}", m.max_commits_per_iter),
+            format!("{:.1}", m.makespan as f64 / 1000.0),
+            format!("{:.3}", m.utilization),
+            format!("{}", m.unfinished),
+        ]);
+        if label != "1" {
+            println!(
+                "  K={label}: commits/iter {:.3} vs baseline {:.3} ({}); makespan {} vs {} ({})",
+                m.commits_per_iteration(),
+                baseline_cpi,
+                if m.commits_per_iteration() > baseline_cpi { "UP" } else { "no gain" },
+                m.makespan,
+                baseline_makespan,
+                if m.makespan <= baseline_makespan { "ok" } else { "REGRESSED" },
+            );
+        }
+    }
+    println!("\n{}", ktable.to_markdown());
 }

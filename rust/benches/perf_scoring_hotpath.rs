@@ -51,22 +51,39 @@ fn main() {
         );
     }
 
+    header("L3 scoring, per-row capacity (K-window union batches)");
+    for &m in &[256usize, 4096] {
+        let mut b = batch(m, m as u64);
+        // Rows grouped by window, 4 windows with distinct capacities.
+        b.row_capacity = (0..m)
+            .map(|i| [20.0f32, 10.0, 10.0, 5.0][(i * 4) / m.max(1)])
+            .collect();
+        let meas = run_case(&format!("native scorer M={m} (4 windows)"), 10, 5, || {
+            native.score(std::hint::black_box(&b)).unwrap().score[0]
+        });
+        println!(
+            "{:<48}   -> {:.0} variants/ms",
+            "",
+            m as f64 / (meas.ns_per_iter() / 1e6)
+        );
+    }
+
     let artifact = jasda::runtime::artifacts_dir().join("scorer.hlo.txt");
-    if artifact.exists() {
-        let mut pjrt = PjrtScorer::load(&artifact).expect("artifact compiles");
-        for &m in &[256usize, 1024, 4096] {
-            let b = batch(m, m as u64);
-            let meas = run_case(&format!("pjrt scorer   M={m}"), 5, 10, || {
-                pjrt.score(std::hint::black_box(&b)).unwrap().score[0]
-            });
-            println!(
-                "{:<48}   -> {:.0} variants/ms",
-                "",
-                m as f64 / (meas.ns_per_iter() / 1e6)
-            );
+    match PjrtScorer::load(&artifact) {
+        Ok(mut pjrt) => {
+            for &m in &[256usize, 1024, 4096] {
+                let b = batch(m, m as u64);
+                let meas = run_case(&format!("pjrt scorer   M={m}"), 5, 10, || {
+                    pjrt.score(std::hint::black_box(&b)).unwrap().score[0]
+                });
+                println!(
+                    "{:<48}   -> {:.0} variants/ms",
+                    "",
+                    m as f64 / (meas.ns_per_iter() / 1e6)
+                );
+            }
         }
-    } else {
-        println!("(pjrt rows skipped: run `make artifacts`)");
+        Err(e) => println!("(pjrt rows skipped: {e})"),
     }
 
     header("WIS clearing throughput");
@@ -109,4 +126,31 @@ fn main() {
         m.sched_ns_per_iteration(),
         meas.ns_per_iter() / 1e6,
     );
+
+    header("K-window announcement sweep (full simulation per K)");
+    for (label, k, per_slice) in
+        [("K=1", 1usize, false), ("K=2", 2, false), ("K=4", 4, false), ("K=slices", 1, true)]
+    {
+        let mut kcfg = common::contended_cfg(81, 50);
+        kcfg.jasda.announce_k = k;
+        kcfg.jasda.announce_per_slice = per_slice;
+        let kjobs = common::workload(&kcfg);
+        let meas = run_case(&format!("50-job simulation {label}"), 5, 50, || {
+            SimEngine::new(kcfg.clone(), Box::new(JasdaScheduler::new(kcfg.jasda.clone())))
+                .run(kjobs.clone())
+                .metrics
+                .makespan
+        });
+        let m = SimEngine::new(kcfg.clone(), Box::new(JasdaScheduler::new(kcfg.jasda.clone())))
+            .run(kjobs.clone())
+            .metrics;
+        println!(
+            "{:<48}   -> {:.3} commits/iter  makespan {}  sched {:.0} ns/iter  wall {:.1} ms",
+            "",
+            m.commits_per_iteration(),
+            m.makespan,
+            m.sched_ns_per_iteration(),
+            meas.ns_per_iter() / 1e6,
+        );
+    }
 }

@@ -248,7 +248,20 @@ pub struct JasdaConfig {
     pub announce_lead: Duration,
     /// How far ahead (ticks) the scheduler looks for idle windows.
     pub announce_horizon: Duration,
-    /// Max variants a single job may bid per iteration (V_max, §4.6).
+    /// Windows announced (and cleared) per iteration, K ≥ 1. The paper's
+    /// prototype uses one window per cycle; K > 1 generalizes §3.1/§3.5
+    /// so several slices' gaps clear concurrently per decision round
+    /// (fragmentation-aware MIG schedulers show this is what keeps wide
+    /// clusters packed). K = 1 reproduces the single-window loop exactly.
+    pub announce_k: usize,
+    /// Per-slice announcement mode: ignore `announce_k` and announce one
+    /// window per slice that currently has a candidate window, so every
+    /// free slice is offered for bidding each iteration.
+    pub announce_per_slice: bool,
+    /// Max variants a single job may bid **per announced window**
+    /// (V_max, §4.6). With `announce_k > 1` or per-slice announcement a
+    /// job may bid into each announced window, so its per-iteration
+    /// total is bounded by K·V_max.
     pub max_variants_per_job: usize,
     /// FMP discretization bins per variant (T of the scoring kernel).
     pub fmp_bins: usize,
@@ -282,6 +295,8 @@ impl Default for JasdaConfig {
             window_policy: WindowPolicy::EarliestStart,
             announce_lead: 0,
             announce_horizon: 20_000,
+            announce_k: 1,
+            announce_per_slice: false,
             max_variants_per_job: 4,
             fmp_bins: 64,
             repack: false,
@@ -321,6 +336,9 @@ impl JasdaConfig {
         if self.fmp_bins == 0 || self.max_variants_per_job == 0 {
             anyhow::bail!("fmp_bins and max_variants_per_job must be > 0");
         }
+        if self.announce_k == 0 {
+            anyhow::bail!("announce_k must be >= 1 (1 = the paper's single-window loop)");
+        }
         Ok(())
     }
 
@@ -345,6 +363,8 @@ impl JasdaConfig {
                 }
                 "announce_lead" => self.announce_lead = need_u64(val, k)?,
                 "announce_horizon" => self.announce_horizon = need_u64(val, k)?,
+                "announce_k" => self.announce_k = need_u64(val, k)? as usize,
+                "announce_per_slice" => self.announce_per_slice = need_bool(val, k)?,
                 "max_variants_per_job" => {
                     self.max_variants_per_job = need_u64(val, k)? as usize
                 }
@@ -382,6 +402,8 @@ impl JasdaConfig {
             ("window_policy", self.window_policy.name().into()),
             ("announce_lead", self.announce_lead.into()),
             ("announce_horizon", self.announce_horizon.into()),
+            ("announce_k", self.announce_k.into()),
+            ("announce_per_slice", self.announce_per_slice.into()),
             ("max_variants_per_job", self.max_variants_per_job.into()),
             ("fmp_bins", self.fmp_bins.into()),
             ("repack", self.repack.into()),
@@ -651,6 +673,8 @@ mod tests {
         cfg.seed = 1234;
         cfg.jasda.window_policy = WindowPolicy::SlackAware;
         cfg.jasda.backend = ScoringBackend::Pjrt;
+        cfg.jasda.announce_k = 3;
+        cfg.jasda.announce_per_slice = true;
         cfg.workload.mix = vec![("analytics".into(), 1.0)];
         let text = cfg.to_json().to_string_pretty();
         let back = SimConfig::from_json_str(&text).unwrap();
@@ -703,6 +727,10 @@ mod tests {
 
         let mut cfg = SimConfig::default();
         cfg.jasda.kappa = 0.0;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = SimConfig::default();
+        cfg.jasda.announce_k = 0;
         assert!(cfg.validate().is_err());
 
         let mut cfg = SimConfig::default();

@@ -127,7 +127,12 @@ pub fn run_protocol(cfg: SimConfig, jobs: Vec<Job>, max_rounds: u64) -> Protocol
     let mut scorer = NativeScorer;
     let mut selector = WindowSelector::new();
 
-    // Leader-side read-only job facts + bookkeeping.
+    // Leader-side read-only job facts + bookkeeping. Vectors are in
+    // population order; `slot` maps a (possibly sparse, trace-supplied)
+    // JobId to its vector index so ids are never used as indices.
+    let slot: std::collections::BTreeMap<JobId, usize> =
+        jobs.iter().enumerate().map(|(i, j)| (j.id, i)).collect();
+    assert_eq!(slot.len(), n_jobs, "protocol runtime requires unique job ids");
     let trps: Vec<crate::trp::Trp> = jobs.iter().map(|j| j.trp.clone()).collect();
     let arrivals: Vec<Time> = jobs.iter().map(|j| j.arrival).collect();
     let totals: Vec<f64> = jobs.iter().map(|j| j.total_work()).collect();
@@ -164,7 +169,10 @@ pub fn run_protocol(cfg: SimConfig, jobs: Vec<Job>, max_rounds: u64) -> Protocol
     let period = cfg.engine.iteration_period;
     let mut now: Time = arrivals.iter().min().copied().unwrap_or(0);
     let mut events: BinaryHeap<std::cmp::Reverse<(PendingKey, usize)>> = BinaryHeap::new();
-    let mut pending: Vec<PendingDone> = Vec::new();
+    // Slab of in-flight completions with slot reuse (same scheme as
+    // SimEngine): memory stays O(outstanding), not O(total subjobs).
+    let mut pending: Vec<Option<PendingDone>> = Vec::new();
+    let mut free_slots: Vec<usize> = Vec::new();
     let mut event_seq = 0u64;
 
     for round in 0..max_rounds {
@@ -175,8 +183,10 @@ pub fn run_protocol(cfg: SimConfig, jobs: Vec<Job>, max_rounds: u64) -> Protocol
                 break;
             }
             events.pop();
-            let p = &pending[idx];
-            remaining[p.job as usize] -= p.realized_work;
+            let p = pending[idx].take().expect("completion fired twice");
+            free_slots.push(idx);
+            let js = slot[&p.job];
+            remaining[js] -= p.realized_work;
             if p.realized_end < p.reserved.end {
                 cluster.slice_mut(p.slice).timeline.truncate(p.job, p.seq, p.realized_end);
             }
@@ -202,9 +212,9 @@ pub fn run_protocol(cfg: SimConfig, jobs: Vec<Job>, max_rounds: u64) -> Protocol
                 realized_work: p.realized_work,
                 at: p.realized_end,
             });
-            let _ = agent_tx[p.job as usize].send(report);
-            if remaining[p.job as usize] <= 1e-6 && !done[p.job as usize] {
-                done[p.job as usize] = true;
+            let _ = agent_tx[js].send(report);
+            if remaining[js] <= 1e-6 && !done[js] {
+                done[js] = true;
                 out.completed_jobs += 1;
             }
         }
@@ -272,7 +282,7 @@ pub fn run_protocol(cfg: SimConfig, jobs: Vec<Job>, max_rounds: u64) -> Protocol
         batch.alpha = alpha.map(|x| x as f32);
         batch.beta = beta.map(|x| x as f32);
         for v in &pool {
-            let j = v.job as usize;
+            let j = slot[&v.job];
             let age = if cfg.jasda.age_priority {
                 let waited = now.saturating_sub(last_selected[j]);
                 (waited as f64 / cfg.jasda.age_scale.max(1) as f64).min(1.0)
@@ -309,7 +319,7 @@ pub fn run_protocol(cfg: SimConfig, jobs: Vec<Job>, max_rounds: u64) -> Protocol
             std::collections::HashMap::new();
         for &k in &sol.selected {
             let v = &pool[item_to_pool[k]];
-            let j = v.job as usize;
+            let j = slot[&v.job];
             let work = v.work.min(remaining[j].max(0.0));
             if work <= 1e-9 {
                 continue;
@@ -333,8 +343,7 @@ pub fn run_protocol(cfg: SimConfig, jobs: Vec<Job>, max_rounds: u64) -> Protocol
             } else {
                 (v.interval.end, work * reserved_len as f64 / realized_duration as f64)
             };
-            let idx = pending.len();
-            pending.push(PendingDone {
+            let pd = PendingDone {
                 job: v.job,
                 slice: v.slice,
                 seq: s,
@@ -343,13 +352,23 @@ pub fn run_protocol(cfg: SimConfig, jobs: Vec<Job>, max_rounds: u64) -> Protocol
                 planned_work: work,
                 realized_work,
                 declared_phi: v.declared.phi,
-            });
+            };
+            let idx = match free_slots.pop() {
+                Some(reused) => {
+                    pending[reused] = Some(pd);
+                    reused
+                }
+                None => {
+                    pending.push(Some(pd));
+                    pending.len() - 1
+                }
+            };
             event_seq += 1;
             events.push(std::cmp::Reverse((PendingKey(realized_end, event_seq), idx)));
         }
         for (job, variant_ids) in per_job_awards {
             let _ =
-                agent_tx[job as usize].send(ToAgent::Awarded(Award { round, variant_ids, now }));
+                agent_tx[slot[&job]].send(ToAgent::Awarded(Award { round, variant_ids, now }));
         }
 
         now += period;
@@ -357,11 +376,12 @@ pub fn run_protocol(cfg: SimConfig, jobs: Vec<Job>, max_rounds: u64) -> Protocol
 
     // Drain outstanding completions for accounting.
     while let Some(std::cmp::Reverse((PendingKey(t, _), idx))) = events.pop() {
-        let p = &pending[idx];
-        remaining[p.job as usize] -= p.realized_work;
+        let p = pending[idx].take().expect("completion fired twice");
+        let js = slot[&p.job];
+        remaining[js] -= p.realized_work;
         now = now.max(t);
-        if remaining[p.job as usize] <= 1e-6 && !done[p.job as usize] {
-            done[p.job as usize] = true;
+        if remaining[js] <= 1e-6 && !done[js] {
+            done[js] = true;
             out.completed_jobs += 1;
         }
     }
@@ -410,6 +430,16 @@ mod tests {
         assert!(out.bids > 0);
         assert!(out.awards >= 5);
         assert!(out.variants >= out.bids);
+    }
+
+    #[test]
+    fn protocol_handles_sparse_job_ids() {
+        let mut js = jobs(3);
+        js[0].id = 500;
+        js[1].id = 7;
+        js[2].id = 10_000;
+        let out = run_protocol(cfg(), js, 100_000);
+        assert_eq!(out.completed_jobs, 3, "{out:?}");
     }
 
     #[test]

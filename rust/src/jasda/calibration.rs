@@ -49,36 +49,43 @@ pub struct Calibration {
     /// EWMA rate for HistAvg (adaptability/stability trade-off the paper
     /// leaves open; 0.25 favors adaptation).
     ewma: f64,
-    per_job: Vec<JobTrust>,
+    /// Keyed by [`crate::types::JobId`]: trace workloads may carry
+    /// sparse, non-zero-based ids. Jobs without verified history read as
+    /// the neutral default. HashMap keeps the per-variant hot-path
+    /// lookups (trust_weight/hist_avg in score_pool) O(1); the one
+    /// aggregate consumer, [`Calibration::mean_rho`], sorts before
+    /// summing so diagnostics stay deterministic.
+    per_job: std::collections::HashMap<u32, JobTrust>,
 }
 
 impl Calibration {
-    /// Build for `n_jobs` jobs with policy parameters `kappa`, `gamma` and
-    /// job-side weights `alpha` (normalized into the error weights w_i).
-    pub fn new(n_jobs: usize, kappa: f64, gamma: f64, alpha: [f64; 4]) -> Self {
+    /// Build with policy parameters `kappa`, `gamma` and job-side weights
+    /// `alpha` (normalized into the error weights w_i). `_n_jobs` is kept
+    /// for API stability; trust states materialize lazily per job id.
+    pub fn new(_n_jobs: usize, kappa: f64, gamma: f64, alpha: [f64; 4]) -> Self {
         let s: f64 = alpha.iter().sum();
         let w = if s > 0.0 {
             [alpha[0] / s, alpha[1] / s, alpha[2] / s, alpha[3] / s]
         } else {
             [0.25; 4]
         };
-        Calibration { kappa, gamma, w, ewma: 0.25, per_job: vec![JobTrust::default(); n_jobs] }
+        Calibration { kappa, gamma, w, ewma: 0.25, per_job: Default::default() }
     }
 
-    /// Trust state of a job.
-    pub fn trust(&self, job: u32) -> &JobTrust {
-        &self.per_job[job as usize]
+    /// Trust state of a job (the neutral prior until verified history).
+    pub fn trust(&self, job: u32) -> JobTrust {
+        self.per_job.get(&job).copied().unwrap_or_default()
     }
 
     /// Calibration weight `γ·ρ_J` the scoring pipeline applies to the
     /// declared utility (Eq. (5) with reliability feedback).
     pub fn trust_weight(&self, job: u32) -> f64 {
-        self.gamma * self.per_job[job as usize].rho
+        self.gamma * self.trust(job).rho
     }
 
     /// Historical anchor HistAvg(J).
     pub fn hist_avg(&self, job: u32) -> f64 {
-        self.per_job[job as usize].hist_avg
+        self.trust(job).hist_avg
     }
 
     /// Per-variant error ε(v) = Σ w_i |φ_i − φ_i^observed| (Eqs. (6)–(7)
@@ -98,7 +105,7 @@ impl Calibration {
     /// features (the "verified score" anchoring HistAvg).
     pub fn verify(&mut self, job: u32, declared: &[f64; 4], observed: &[f64; 4], h_observed: f64) {
         let eps = self.variant_error(declared, observed);
-        let t = &mut self.per_job[job as usize];
+        let t = self.per_job.entry(job).or_default();
         t.verified += 1;
         // Running mean of ε(v) — exactly Eq. (7).
         t.mean_error += (eps - t.mean_error) / t.verified as f64;
@@ -129,13 +136,15 @@ impl Calibration {
 
     /// Mean reliability across jobs with history (diagnostics).
     pub fn mean_rho(&self) -> f64 {
-        let with: Vec<f64> =
-            self.per_job.iter().filter(|t| t.verified > 0).map(|t| t.rho).collect();
+        let mut with: Vec<f64> =
+            self.per_job.values().filter(|t| t.verified > 0).map(|t| t.rho).collect();
         if with.is_empty() {
-            1.0
-        } else {
-            with.iter().sum::<f64>() / with.len() as f64
+            return 1.0;
         }
+        // HashMap iteration order is arbitrary; summing in sorted order
+        // keeps the reported float bit-stable across runs.
+        with.sort_by(f64::total_cmp);
+        with.iter().sum::<f64>() / with.len() as f64
     }
 }
 
@@ -212,6 +221,17 @@ mod tests {
         }
         let recovered = c.trust(2).rho;
         assert!(recovered > low, "honest behavior must rebuild trust: {low} -> {recovered}");
+    }
+
+    #[test]
+    fn sparse_job_ids_supported() {
+        // Ids far beyond the constructed population must work (trace
+        // workloads are not dense); unverified ids read the neutral prior.
+        let mut c = cal();
+        assert_eq!(c.trust(1_000_000).rho, 1.0);
+        c.verify(1_000_000, &[0.9; 4], &[0.1; 4], 0.1);
+        assert!(c.trust(1_000_000).rho < 1.0);
+        assert_eq!(c.trust(999_999).rho, 1.0, "neighbor untouched");
     }
 
     #[test]

@@ -3,10 +3,17 @@
 //! * [`window`] — window announcement policies (§3.1, §5.1(c));
 //! * [`scoring`] — the normalized composite scoring pipeline (§4.2) and
 //!   the pluggable backend abstraction (native mirror vs PJRT artifact);
+//!   batches may span several announced windows via per-row capacities;
 //! * [`calibration`] — ex-ante calibration, ex-post verification, and
 //!   reliability feedback (§4.2.1);
 //! * [`clearing`] — optimal per-window WIS selection (§4.4);
-//! * [`scheduler`] — the full interaction cycle (Algorithm 1).
+//! * [`scheduler`] — the full interaction cycle (Algorithm 1),
+//!   generalized to **K windows per iteration**: `announce_k` windows
+//!   (or one per free slice with `announce_per_slice`) are announced and
+//!   cleared each round, with one batched scoring pass over the union
+//!   bid pool and a cross-window reconciliation step that keeps a job
+//!   from holding overlapping reservations on different slices. The
+//!   default K = 1 is bit-identical to the paper's single-window loop.
 
 pub mod calibration;
 pub mod clearing;

@@ -1,17 +1,25 @@
 //! The JASDA scheduling loop — paper Algorithm 1, one full interaction
 //! cycle per engine iteration:
 //!
-//! 1. **Window announcement** (§3.1): pick one idle time–capacity window
-//!    via the configured [`WindowSelector`] policy.
+//! 1. **Window announcement** (§3.1): pick up to **K** idle time–capacity
+//!    windows via the configured [`WindowSelector`] policy
+//!    (`announce_k`, or one per free slice in `announce_per_slice` mode;
+//!    K = 1 is the paper's single-window prototype loop). Windows that
+//!    draw no bids are skipped by index and do not count as
+//!    announcements.
 //! 2. **Job-side variant generation** (§3.2): every active job
 //!    autonomously generates eligible, safe-by-construction variants
-//!    (or stays silent).
+//!    for each announced window (or stays silent).
 //! 3. **Bid submission** (§3.3): variants with declared utilities pool
-//!    into the iteration's bid set V.
-//! 4. **Scheduler clearing** (§3.4/§4.4): the scoring backend evaluates
-//!    the normalized composite score (Eq. (4)) with calibration (Eq. (5))
-//!    and age fairness (§4.3); WIS selects the optimal non-overlapping
-//!    subset.
+//!    into the iteration's union bid set V, each tagged with the window
+//!    it targets.
+//! 4. **Scheduler clearing** (§3.4/§4.4): one batched scoring pass
+//!    evaluates the normalized composite score (Eq. (4)) with calibration
+//!    (Eq. (5)) and age fairness (§4.3) across all windows (per-row slice
+//!    capacities); WIS then selects the optimal non-overlapping subset
+//!    *per window*, and a cross-window reconciliation pass drops any
+//!    selection that would hand one job two temporally overlapping
+//!    reservations on different slices (atomicity, §4.1).
 //! 5. **Commit and advance** (§3.5): selected variants become engine
 //!    commitments; ex-post verification feeds back on completion.
 
@@ -24,17 +32,25 @@ use crate::job::variants::{generate_variants, Variant};
 use crate::job::JobSet;
 use crate::mig::{Cluster, Window};
 use crate::sim::{Commitment, Rng, Scheduler, SubjobRecord};
-use crate::types::{JobId, Time};
+use crate::types::{Interval, JobId, SliceId, Time};
 
 /// Internal counters exposed through [`Scheduler::stats`].
 #[derive(Debug, Default, Clone)]
 struct JasdaStats {
     iterations: u64,
+    /// Windows that gathered at least one bid (silent windows excluded).
     windows_announced: u64,
+    /// Windows announced that drew no bids and were skipped.
+    windows_silent: u64,
     iterations_with_bids: u64,
     variants_submitted: u64,
     variants_eligible: u64,
     variants_selected: u64,
+    /// Eligible pool variants filtered out before a window's WIS because
+    /// their job already won an overlapping interval — or an overlapping
+    /// work range — in an earlier window of the same iteration (counts
+    /// variants, not jobs).
+    cross_window_conflicts: u64,
     scoring_ns: u64,
     clearing_ns: u64,
     max_pool: usize,
@@ -95,6 +111,7 @@ impl JasdaScheduler {
     }
 
     /// Steps 2–3: collect the iteration's bid pool for `window`.
+    /// Pool-local ids are assigned later, over the union pool.
     fn collect_bids(&mut self, window: &Window, jobs: &mut JobSet) -> Vec<Variant> {
         let bidder_ids: Vec<JobId> = jobs.bidders().map(|j| j.id).collect();
         let mut pool = Vec::new();
@@ -105,16 +122,39 @@ impl JasdaScheduler {
                 pool.extend(vs);
             }
         }
-        for (i, v) in pool.iter_mut().enumerate() {
-            v.id = i as u32;
-        }
         pool
     }
 
-    /// Step 4a: score the pool with the configured backend.
-    fn score_pool(&mut self, window: &Window, pool: &[Variant], jobs: &JobSet, now: Time) -> ScoreBatch {
+    /// How many windows this iteration announces: `announce_k`, or the
+    /// number of distinct slices with a candidate in per-slice mode.
+    fn announce_target(&self, candidates: &[Window]) -> usize {
+        if self.cfg.announce_per_slice {
+            let mut slices: Vec<SliceId> = candidates.iter().map(|w| w.slice).collect();
+            slices.sort_unstable();
+            slices.dedup();
+            slices.len().max(1)
+        } else {
+            self.cfg.announce_k
+        }
+    }
+
+    /// Step 4a: score the union pool with the configured backend.
+    /// `window_rows[w]` is the contiguous `[start, end)` row range of
+    /// window `w`'s bids in `pool` (bids are pooled window by window);
+    /// with a single window the batch carries the uniform scalar capacity
+    /// (bit-identical to the original single-window path), otherwise
+    /// per-row capacities.
+    fn score_pool(
+        &mut self,
+        windows: &[Window],
+        pool: &[Variant],
+        window_rows: &[(usize, usize)],
+        jobs: &JobSet,
+        now: Time,
+    ) -> ScoreBatch {
+        debug_assert_eq!(windows.len(), window_rows.len());
         let mut batch = ScoreBatch::with_bins(self.cfg.fmp_bins);
-        batch.capacity = window.capacity_gb as f32;
+        batch.capacity = windows[0].capacity_gb as f32;
         batch.theta = self.cfg.theta as f32;
         batch.lambda = self.cfg.lambda as f32;
         let alpha = self.cfg.alpha.as_array();
@@ -150,6 +190,14 @@ impl JasdaScheduler {
                 hist,
             );
         }
+        if windows.len() > 1 {
+            for (w, &(start, end)) in windows.iter().zip(window_rows) {
+                batch
+                    .row_capacity
+                    .extend(std::iter::repeat(w.capacity_gb as f32).take(end - start));
+            }
+            debug_assert_eq!(batch.row_capacity.len(), pool.len());
+        }
         batch
     }
 }
@@ -169,12 +217,6 @@ impl Scheduler for JasdaScheduler {
         self.stats.iterations += 1;
         self.ensure_calibration(jobs.len());
 
-        // Step 1: window announcement. If an announced window draws no
-        // bids at all (the "sparsity" failure mode of §5.1(a)), the
-        // scheduler immediately announces the next candidate window in
-        // policy order rather than idling the whole iteration — otherwise
-        // a policy like earliest-start can livelock on a slice no waiting
-        // job fits. Cost stays bounded by the candidate count.
         let from = now + self.cfg.announce_lead;
         let mut candidates =
             cluster.candidate_windows(from, self.cfg.announce_horizon, self.cfg.tau_min);
@@ -206,7 +248,21 @@ impl Scheduler for JasdaScheduler {
         } else {
             self.cfg.window_policy
         };
-        let (window, pool) = loop {
+
+        // Step 1–3: announce up to K windows, pooling each window's bids
+        // as it is announced. A window that draws no bids at all (the
+        // "sparsity" failure mode of §5.1(a)) is removed by index — O(1)
+        // via swap_remove, the policies' total tie-broken orderings make
+        // selection order-independent — and the next candidate is tried,
+        // so a policy like earliest-start cannot livelock on a slice no
+        // waiting job fits. Cost stays bounded by the candidate count.
+        let k_target = self.announce_target(&candidates);
+        let mut announced: Vec<Window> = Vec::new();
+        let mut pool: Vec<Variant> = Vec::new();
+        // Contiguous [start, end) row range of each announced window's
+        // bids within `pool`.
+        let mut window_rows: Vec<(usize, usize)> = Vec::new();
+        while announced.len() < k_target {
             let window = match self.selector.select(
                 policy,
                 &candidates,
@@ -215,35 +271,91 @@ impl Scheduler for JasdaScheduler {
                 self.cfg.announce_horizon,
             ) {
                 Some(w) => w,
-                None => return vec![],
+                None => break,
             };
-            self.stats.windows_announced += 1;
+            let pos = candidates
+                .iter()
+                .position(|c| c.slice == window.slice && c.interval == window.interval)
+                .expect("selected window originates from the candidate list");
+            candidates.swap_remove(pos);
 
-            // Steps 2–3: job-side generation + bid pooling.
-            let pool = self.collect_bids(&window, jobs);
-            if !pool.is_empty() {
-                break (window, pool);
+            let bids = self.collect_bids(&window, jobs);
+            if bids.is_empty() {
+                // Silent window: skip it; it is not a real announcement.
+                self.stats.windows_silent += 1;
+                continue;
             }
-            // Silent window: drop it and try the next candidate.
-            candidates.retain(|c| !(c.slice == window.slice && c.interval == window.interval));
-        };
+            self.stats.windows_announced += 1;
+            let row0 = pool.len();
+            pool.extend(bids);
+            window_rows.push((row0, pool.len()));
+            if self.cfg.announce_per_slice {
+                // One window per slice: further candidates on this slice
+                // are out of this round.
+                let slice = window.slice;
+                candidates.retain(|c| c.slice != slice);
+            }
+            announced.push(window);
+        }
+        if announced.is_empty() {
+            return vec![];
+        }
+        for (i, v) in pool.iter_mut().enumerate() {
+            v.id = i as u32;
+        }
         self.stats.iterations_with_bids += 1;
         self.stats.variants_submitted += pool.len() as u64;
         self.stats.max_pool = self.stats.max_pool.max(pool.len());
 
-        // Step 4a: composite scoring (Eq. (4) + calibration + age).
+        // Step 4a: one batched composite-scoring pass across all windows
+        // (Eq. (4) + calibration + age; per-row capacities when K > 1).
         let t0 = std::time::Instant::now();
-        let batch = self.score_pool(&window, &pool, jobs, now);
+        let batch = self.score_pool(&announced, &pool, &window_rows, jobs, now);
         let out = self.scorer.score(&batch).expect("scoring backend failed");
         self.stats.scoring_ns += t0.elapsed().as_nanos() as u64;
 
-        // Step 4b: optimal per-window clearing (WIS).
+        // Step 4b: optimal per-window clearing (WIS) with cross-window
+        // reconciliation: within one decision round a job must never
+        // hold two temporally overlapping reservations on different
+        // slices (§4.1 atomicity), nor win the *same work chunk* twice —
+        // every window's chains start at the job's unchanged work
+        // cursor, so without the work-range check a job could commit
+        // chunk [cursor, cursor+w) on two slices and the second
+        // reservation would execute no work while still blocking its
+        // slice. Windows clear in announcement order (= policy
+        // preference order); conflicting variants are filtered *before*
+        // this window's WIS, so the window still optimizes over
+        // everything that can actually commit instead of silently
+        // losing its winners. With one announced window the filter never
+        // fires — K=1 stays bit-identical to the single-window path.
         let t1 = std::time::Instant::now();
-        let mut items = Vec::with_capacity(pool.len());
-        let mut item_to_pool = Vec::with_capacity(pool.len());
-        let wlen = window.delta_t().max(1) as f64;
-        for (i, v) in pool.iter().enumerate() {
-            if out.eligible[i] && out.score[i] > 0.0 {
+        let mut commitments: Vec<Commitment> = Vec::new();
+        // Per accepted variant: (job, execution interval, work range
+        // [w0, w1) relative to the job's cursor).
+        let mut accepted: Vec<(JobId, Interval, f64, f64)> = Vec::new();
+        let mut items: Vec<WisItem> = Vec::new();
+        let mut item_to_pool: Vec<usize> = Vec::new();
+        for (widx, window) in announced.iter().enumerate() {
+            items.clear();
+            item_to_pool.clear();
+            let wlen = window.delta_t().max(1) as f64;
+            let (row0, row1) = window_rows[widx];
+            for i in row0..row1 {
+                let v = &pool[i];
+                if !out.eligible[i] || out.score[i] <= 0.0 {
+                    continue;
+                }
+                if !accepted.is_empty()
+                    && accepted.iter().any(|&(job, iv, w0, w1)| {
+                        job == v.job
+                            && (iv.overlaps(&v.interval)
+                                || (v.work_offset < w1 - 1e-9
+                                    && w0 < v.work_offset + v.work - 1e-9))
+                    })
+                {
+                    self.stats.cross_window_conflicts += 1;
+                    continue;
+                }
                 // Optional duration weighting (EXPERIMENTS.md F6): under
                 // the paper's plain sum objective, many short variants
                 // dominate few long ones; weighting by window share makes
@@ -256,28 +368,28 @@ impl Scheduler for JasdaScheduler {
                 items.push(WisItem { interval: v.interval, score: out.score[i] as f64 * w });
                 item_to_pool.push(i);
             }
-        }
-        self.stats.variants_eligible += items.len() as u64;
-        let sol = select_best_compatible(&items);
-        self.stats.clearing_ns += t1.elapsed().as_nanos() as u64;
-        self.stats.variants_selected += sol.selected.len() as u64;
-
-        // Step 5: commit.
-        sol.selected
-            .iter()
-            .map(|&k| {
-                let v = &pool[item_to_pool[k]];
-                Commitment {
+            self.stats.variants_eligible += items.len() as u64;
+            let sol = select_best_compatible(&items);
+            for &k in &sol.selected {
+                let i = item_to_pool[k];
+                let v = &pool[i];
+                accepted.push((v.job, v.interval, v.work_offset, v.work_offset + v.work));
+                self.stats.variants_selected += 1;
+                commitments.push(Commitment {
                     job: v.job,
                     slice: v.slice,
                     interval: v.interval,
                     work: v.work,
                     declared_phi: v.declared.phi,
-                    score: out.score[item_to_pool[k]] as f64,
+                    score: out.score[i] as f64,
                     window_len: window.delta_t(),
-                }
-            })
-            .collect()
+                });
+            }
+        }
+        self.stats.clearing_ns += t1.elapsed().as_nanos() as u64;
+
+        // Step 5: commit.
+        commitments
     }
 
     fn on_subjob_complete(&mut self, rec: &SubjobRecord) {
@@ -293,10 +405,12 @@ impl Scheduler for JasdaScheduler {
             ("scorer", self.scorer.name().into()),
             ("iterations", self.stats.iterations.into()),
             ("windows_announced", self.stats.windows_announced.into()),
+            ("windows_silent", self.stats.windows_silent.into()),
             ("iterations_with_bids", self.stats.iterations_with_bids.into()),
             ("variants_submitted", self.stats.variants_submitted.into()),
             ("variants_eligible", self.stats.variants_eligible.into()),
             ("variants_selected", self.stats.variants_selected.into()),
+            ("cross_window_conflicts", self.stats.cross_window_conflicts.into()),
             ("scoring_ns", self.stats.scoring_ns.into()),
             ("clearing_ns", self.stats.clearing_ns.into()),
             ("max_pool", self.stats.max_pool.into()),
@@ -364,6 +478,36 @@ mod tests {
     }
 
     #[test]
+    fn multi_window_deterministic() {
+        for per_slice in [false, true] {
+            let run = || {
+                let mut c = cfg();
+                c.jasda.announce_k = 3;
+                c.jasda.announce_per_slice = per_slice;
+                let sched = JasdaScheduler::new(c.jasda.clone());
+                SimEngine::new(c, Box::new(sched)).run(jobs(6, 6.0, 1800.0)).metrics
+            };
+            let (a, b) = (run(), run());
+            assert_eq!(a.makespan, b.makespan, "per_slice={per_slice}");
+            assert_eq!(a.total_commits, b.total_commits, "per_slice={per_slice}");
+        }
+    }
+
+    #[test]
+    fn multi_window_completes_and_reports() {
+        let mut c = cfg();
+        c.jasda.announce_per_slice = true;
+        let sched = JasdaScheduler::new(c.jasda.clone());
+        let out = SimEngine::new(c, Box::new(sched)).run(jobs(8, 6.0, 2000.0));
+        assert_eq!(out.metrics.unfinished, 0, "summary: {}", out.metrics.summary());
+        let g = |k: &str| out.scheduler_stats.get(k).unwrap().as_u64().unwrap();
+        // With per-slice announcement on a 3-slice layout, contended
+        // iterations must announce more windows than iterations-with-bids
+        // would allow under K=1.
+        assert!(g("windows_announced") > g("iterations_with_bids"));
+    }
+
+    #[test]
     fn memory_hungry_jobs_avoid_small_slices() {
         // 18 GiB jobs can only run on the 3g.20gb slice of `balanced`.
         let c = cfg();
@@ -376,6 +520,26 @@ mod tests {
                 assert!(
                     s.timeline.is_empty(),
                     "unsafe slice {} ({} GiB) received work",
+                    s.id,
+                    s.capacity_gb()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn memory_hungry_jobs_avoid_small_slices_multi_window() {
+        // Same safety property with every slice announced per iteration.
+        let mut c = cfg();
+        c.jasda.announce_per_slice = true;
+        let sched = JasdaScheduler::new(c.jasda.clone());
+        let out = SimEngine::new(c, Box::new(sched)).run(jobs(3, 17.0, 1200.0));
+        assert_eq!(out.metrics.unfinished, 0);
+        for s in out.cluster.slices() {
+            if s.capacity_gb() < 17.0 {
+                assert!(
+                    s.timeline.is_empty(),
+                    "unsafe slice {} ({} GiB) received work under per-slice K",
                     s.id,
                     s.capacity_gb()
                 );

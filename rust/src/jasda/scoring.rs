@@ -42,8 +42,14 @@ pub struct ScoreBatch {
     pub trust: Vec<f32>,
     /// Per-variant historical average of verified scores, `[M]`.
     pub hist: Vec<f32>,
-    /// Slice capacity c_k (GiB).
+    /// Slice capacity c_k (GiB), uniform across the batch. Used when
+    /// [`ScoreBatch::row_capacity`] is empty (the single-window case).
     pub capacity: f32,
+    /// Per-row slice capacity c_k (GiB) for batches pooling bids across
+    /// several announced windows (K-window clearing): row `i` is scored
+    /// against `row_capacity[i]`. Empty means "uniform `capacity`".
+    /// When non-empty the length must equal `m`.
+    pub row_capacity: Vec<f32>,
     /// Safety bound θ.
     pub theta: f32,
     /// Job/system trade-off λ.
@@ -84,6 +90,17 @@ impl ScoreBatch {
     /// True when the batch has no rows.
     pub fn is_empty(&self) -> bool {
         self.m == 0
+    }
+
+    /// Capacity row `i` is scored against: the per-row value when the
+    /// batch spans several windows, else the uniform scalar.
+    #[inline]
+    pub fn capacity_of(&self, i: usize) -> f32 {
+        if self.row_capacity.is_empty() {
+            self.capacity
+        } else {
+            self.row_capacity[i]
+        }
     }
 }
 
@@ -149,6 +166,10 @@ impl ScorerBackend for NativeScorer {
         anyhow::ensure!(b.sigma.len() == m * t, "sigma shape mismatch");
         anyhow::ensure!(b.phi.len() == m * 4 && b.psi.len() == m * 3, "feature shape mismatch");
         anyhow::ensure!(b.trust.len() == m && b.hist.len() == m, "calibration shape mismatch");
+        anyhow::ensure!(
+            b.row_capacity.is_empty() || b.row_capacity.len() == m,
+            "row_capacity must be empty or length m"
+        );
 
         let mut out = ScoreOutput {
             score: vec![0.0; m],
@@ -156,9 +177,9 @@ impl ScorerBackend for NativeScorer {
             headroom: vec![0.0; m],
             eligible: vec![false; m],
         };
-        let c = b.capacity;
-        let inv_c = 1.0 / c;
         for i in 0..m {
+            let c = b.capacity_of(i);
+            let inv_c = 1.0 / c;
             let row = i * t;
             // 1) safety. The survival product Π Φ(z_t) is accumulated
             // directly in f64 instead of summing f32 logs: mathematically
@@ -306,6 +327,39 @@ mod tests {
         let mut b = batch_one(4.0, 0.1, 10.0);
         b.mu.pop();
         assert!(NativeScorer.score(&b).is_err());
+    }
+
+    #[test]
+    fn per_row_capacity_scores_each_window() {
+        // Two identical rows, one scored against a 20 GiB window and one
+        // against a 5 GiB window: the tight row must be ineligible while
+        // the roomy row scores normally.
+        let mut b = ScoreBatch::with_bins(8);
+        b.capacity = 999.0; // must be ignored when row_capacity is set
+        b.theta = 0.05;
+        b.lambda = 0.6;
+        b.alpha = [0.45, 0.25, 0.15, 0.15];
+        b.beta = [0.45, 0.2, 0.15, 0.2];
+        for _ in 0..2 {
+            b.push(&[4.5; 8], &[0.3; 8], [0.8, 1.0, 0.5, 0.5], [0.7, 1.0, 0.0], 1.0, 0.5);
+        }
+        b.row_capacity = vec![20.0, 5.0];
+        let out = NativeScorer.score(&b).unwrap();
+        assert!(out.eligible[0]);
+        assert!(!out.eligible[1], "4.5±0.3 GiB on a 5 GiB slice violates theta");
+        assert_eq!(out.score[1], 0.0);
+        // headroom row 0 = (20-4.5)/20
+        assert!((out.headroom[0] - 15.5 / 20.0).abs() < 1e-5);
+
+        // Mismatched row_capacity length is rejected.
+        b.row_capacity = vec![20.0];
+        assert!(NativeScorer.score(&b).is_err());
+
+        // Empty row_capacity falls back to the uniform scalar.
+        b.row_capacity = vec![];
+        b.capacity = 20.0;
+        let out = NativeScorer.score(&b).unwrap();
+        assert!(out.eligible[0] && out.eligible[1]);
     }
 
     #[test]

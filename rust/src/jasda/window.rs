@@ -1,10 +1,18 @@
 //! Window selection policies (paper §3.1 "Window Selection Policy" and
 //! §5.1(c) "Adaptive window selection").
 //!
-//! Each iteration the scheduler announces exactly **one** window. The
-//! paper's prototype announces the earliest-starting idle window; the
-//! alternatives sketched in §5.1(c) (slack-aware, fragmentation-aware)
-//! are implemented too and compared by `benches/fig_window_policy`.
+//! Each iteration the scheduler announces up to **K** windows
+//! (`announce_k`, default 1 = the paper's prototype; per-slice mode
+//! announces one per free slice). The selector ranks one candidate at a
+//! time in policy order; the scheduler calls it repeatedly, removing
+//! each pick (and, per-slice, the picked slice's remaining candidates)
+//! from the candidate list between calls. Every policy's comparator is a
+//! total order over candidates — ties break on start/length/slice — so
+//! selection is independent of candidate-list order and K=1 reproduces
+//! the single-window loop exactly. The paper's prototype announces the
+//! earliest-starting idle window; the alternatives sketched in §5.1(c)
+//! (slack-aware, fragmentation-aware) are implemented too and compared
+//! by `benches/fig_window_policy`.
 
 use crate::config::WindowPolicy;
 use crate::mig::{Cluster, Window};

@@ -153,18 +153,34 @@ impl Job {
 }
 
 /// The population of jobs in a run, indexed by [`JobId`].
+///
+/// Ids only have to be unique — trace workloads may carry sparse,
+/// non-zero-based ids; an id→slot map resolves lookups while iteration
+/// keeps the original (arrival-generation) order.
 #[derive(Debug, Clone, Default)]
 pub struct JobSet {
     jobs: Vec<Job>,
+    /// Lookup-only (iteration always walks `jobs` in insertion order),
+    /// so a HashMap keeps the per-variant hot-path lookup O(1) without
+    /// costing determinism.
+    index: std::collections::HashMap<JobId, usize>,
 }
 
 impl JobSet {
-    /// Build from a workload (jobs must be id-ordered 0..n).
+    /// Build from a workload. Ids must be unique but may be sparse.
     pub fn new(jobs: Vec<Job>) -> Self {
+        let mut index = std::collections::HashMap::with_capacity(jobs.len());
         for (i, j) in jobs.iter().enumerate() {
-            assert_eq!(j.id as usize, i, "jobs must be dense and id-ordered");
+            let prev = index.insert(j.id, i);
+            assert!(prev.is_none(), "duplicate job id {}", j.id);
         }
-        JobSet { jobs }
+        JobSet { jobs, index }
+    }
+
+    /// Slot of a job id (panics on unknown ids, like slice indexing did).
+    #[inline]
+    fn slot(&self, id: JobId) -> usize {
+        *self.index.get(&id).unwrap_or_else(|| panic!("unknown job id {id}"))
     }
 
     /// Number of jobs (all states).
@@ -179,12 +195,13 @@ impl JobSet {
 
     /// Job by id.
     pub fn get(&self, id: JobId) -> &Job {
-        &self.jobs[id as usize]
+        &self.jobs[self.slot(id)]
     }
 
     /// Mutable job by id.
     pub fn get_mut(&mut self, id: JobId) -> &mut Job {
-        &mut self.jobs[id as usize]
+        let slot = self.slot(id);
+        &mut self.jobs[slot]
     }
 
     /// All jobs.
@@ -291,8 +308,29 @@ mod tests {
     }
 
     #[test]
+    fn jobset_accepts_sparse_ids() {
+        // Trace workloads may carry non-contiguous, non-zero-based ids.
+        let mut set = JobSet::new(vec![mini_job(1000, 0), mini_job(5, 100), mini_job(77, 50)]);
+        assert_eq!(set.len(), 3);
+        assert_eq!(set.get(1000).arrival, 0);
+        assert_eq!(set.get(5).arrival, 100);
+        set.get_mut(77).done_work = 3.0;
+        assert_eq!(set.get(77).done_work, 3.0);
+        // Iteration preserves construction (generation) order.
+        let ids: Vec<JobId> = set.iter().map(|j| j.id).collect();
+        assert_eq!(ids, vec![1000, 5, 77]);
+    }
+
+    #[test]
     #[should_panic]
-    fn jobset_rejects_sparse_ids() {
-        JobSet::new(vec![mini_job(1, 0)]);
+    fn jobset_rejects_duplicate_ids() {
+        JobSet::new(vec![mini_job(3, 0), mini_job(3, 10)]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn jobset_unknown_id_panics() {
+        let set = JobSet::new(vec![mini_job(1, 0)]);
+        let _ = set.get(2);
     }
 }

@@ -9,10 +9,13 @@
 //!
 //! ## Architecture (three layers)
 //!
-//! * **L3 (this crate)** — the coordinator: the JASDA interaction cycle,
-//!   scoring/calibration/fairness policies, WIS clearing, a discrete-event
-//!   MIG cluster simulator substrate, baseline schedulers, workload
-//!   generators, metrics, and a tokio-based bid–response protocol runtime.
+//! * **L3 (this crate)** — the coordinator: the JASDA interaction cycle
+//!   (generalized to K announced windows per iteration — see
+//!   [`config::JasdaConfig::announce_k`] and `announce_per_slice`),
+//!   scoring/calibration/fairness policies, per-window WIS clearing with
+//!   cross-window reconciliation, a discrete-event MIG cluster simulator
+//!   substrate, baseline schedulers, workload generators, metrics, and a
+//!   thread-per-agent bid–response protocol runtime.
 //! * **L2 (python/compile/model.py)** — the batched variant-scoring
 //!   pipeline expressed in JAX, AOT-lowered to HLO text at build time.
 //! * **L1 (python/compile/kernels/scoring.py)** — the scoring hot-spot as a

@@ -67,6 +67,9 @@ pub struct RunMetrics {
     pub total_variants: u64,
     /// Total subjobs committed.
     pub total_commits: u64,
+    /// Largest number of commitments any single iteration produced
+    /// (multi-window clearing raises this above the per-window optimum).
+    pub max_commits_per_iter: u64,
     /// Wall-clock nanoseconds spent inside `Scheduler::iterate`.
     pub sched_wall_ns: u64,
     /// Jobs that never completed within the run.
@@ -190,6 +193,15 @@ impl RunMetrics {
         self.sched_wall_ns as f64 / self.iterations as f64
     }
 
+    /// Mean commitments per scheduler iteration — the decision-round
+    /// throughput that K-window announcement is designed to raise.
+    pub fn commits_per_iteration(&self) -> f64 {
+        if self.iterations == 0 {
+            return 0.0;
+        }
+        self.total_commits as f64 / self.iterations as f64
+    }
+
     /// Full metrics as JSON (for `jasda run --json`).
     pub fn to_json(&self) -> crate::util::Json {
         use crate::util::Json;
@@ -201,6 +213,8 @@ impl RunMetrics {
             ("mean_fragmentation", self.mean_fragmentation.into()),
             ("iterations", self.iterations.into()),
             ("total_commits", self.total_commits.into()),
+            ("commits_per_iteration", self.commits_per_iteration().into()),
+            ("max_commits_per_iter", self.max_commits_per_iter.into()),
             ("sched_wall_ns", self.sched_wall_ns.into()),
             ("unfinished", self.unfinished.into()),
             ("mean_jct", opt(self.mean_jct())),
@@ -289,6 +303,7 @@ mod tests {
             iterations_with_bids: 80,
             total_variants: 500,
             total_commits: 7,
+            max_commits_per_iter: 2,
             sched_wall_ns: 1_000_000,
             unfinished: 1,
         }
@@ -318,6 +333,8 @@ mod tests {
         assert_eq!(m.throughput_per_sec(), 0.3);
         assert_eq!(m.mean_subjobs(), Some(2.0));
         assert_eq!(m.sched_ns_per_iteration(), 10_000.0);
+        assert_eq!(m.commits_per_iteration(), 0.07);
+        assert_eq!(RunMetrics::default().commits_per_iteration(), 0.0);
     }
 
     #[test]

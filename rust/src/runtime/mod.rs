@@ -8,6 +8,13 @@
 //! artifact once on the PJRT CPU client and then serves
 //! [`ScorerBackend::score`] calls by padding batches to the artifact's
 //! fixed `[M_PAD, T]` shape.
+//!
+//! The executing implementation depends on the external `xla` crate and
+//! is gated behind the off-by-default `pjrt` cargo feature (the offline
+//! build has no registry access; enabling the feature requires adding
+//! `xla` to `[dependencies]`). Without the feature a stub [`PjrtScorer`]
+//! with the identical API is compiled that fails cleanly at load time, so
+//! the `--pjrt` CLI path, benches, and examples keep building.
 
 use crate::jasda::scoring::{ScoreBatch, ScoreOutput, ScorerBackend};
 use std::path::{Path, PathBuf};
@@ -28,166 +35,235 @@ pub fn artifacts_dir() -> PathBuf {
         .unwrap_or_else(|| PathBuf::from("artifacts"))
 }
 
-/// A compiled HLO module on the PJRT CPU client.
-pub struct HloExecutable {
-    exe: xla::PjRtLoadedExecutable,
-    /// Artifact path, for diagnostics.
-    pub path: PathBuf,
-}
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use super::*;
 
-impl HloExecutable {
-    /// Load HLO text from `path` and compile it.
-    pub fn load(client: &xla::PjRtClient, path: &Path) -> anyhow::Result<Self> {
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", path.display()))?;
-        Ok(HloExecutable { exe, path: path.to_path_buf() })
+    /// A compiled HLO module on the PJRT CPU client.
+    pub struct HloExecutable {
+        exe: xla::PjRtLoadedExecutable,
+        /// Artifact path, for diagnostics.
+        pub path: PathBuf,
     }
 
-    /// Execute with literal inputs; returns the flattened output tuple.
-    pub fn run(&self, args: &[xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
-        let result = self
-            .exe
-            .execute::<xla::Literal>(args)
-            .map_err(|e| anyhow::anyhow!("executing {}: {e:?}", self.path.display()))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetching result: {e:?}"))?;
-        lit.to_tuple().map_err(|e| anyhow::anyhow!("untupling result: {e:?}"))
+    impl HloExecutable {
+        /// Load HLO text from `path` and compile it.
+        pub fn load(client: &xla::PjRtClient, path: &Path) -> anyhow::Result<Self> {
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", path.display()))?;
+            Ok(HloExecutable { exe, path: path.to_path_buf() })
+        }
+
+        /// Execute with literal inputs; returns the flattened output tuple.
+        pub fn run(&self, args: &[xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
+            let result = self
+                .exe
+                .execute::<xla::Literal>(args)
+                .map_err(|e| anyhow::anyhow!("executing {}: {e:?}", self.path.display()))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("fetching result: {e:?}"))?;
+            lit.to_tuple().map_err(|e| anyhow::anyhow!("untupling result: {e:?}"))
+        }
+    }
+
+    pub(super) fn f32_literal(data: &[f32], dims: &[usize]) -> anyhow::Result<xla::Literal> {
+        let n: usize = dims.iter().product();
+        anyhow::ensure!(
+            data.len() == n,
+            "literal data/shape mismatch: {} vs {:?}",
+            data.len(),
+            dims
+        );
+        let bytes: &[u8] =
+            unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+        xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, bytes)
+            .map_err(|e| anyhow::anyhow!("creating literal: {e:?}"))
+    }
+
+    /// The PJRT-backed scoring backend (L1/L2 on the hot path).
+    pub struct PjrtScorer {
+        exe: HloExecutable,
+        // Reusable padded staging buffers (allocation-free steady state).
+        mu: Vec<f32>,
+        sigma: Vec<f32>,
+        phi: Vec<f32>,
+        psi: Vec<f32>,
+        trust: Vec<f32>,
+        hist: Vec<f32>,
+        valid: Vec<f32>,
+    }
+
+    impl PjrtScorer {
+        /// Load `scorer.hlo.txt` from the default artifacts directory.
+        pub fn from_default_artifacts() -> anyhow::Result<Self> {
+            Self::load(&artifacts_dir().join("scorer.hlo.txt"))
+        }
+
+        /// Load and compile the scorer artifact at `path`.
+        pub fn load(path: &Path) -> anyhow::Result<Self> {
+            anyhow::ensure!(
+                path.exists(),
+                "scorer artifact {} not found — run `make artifacts` first",
+                path.display()
+            );
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| anyhow::anyhow!("creating PJRT client: {e:?}"))?;
+            let exe = HloExecutable::load(&client, path)?;
+            Ok(PjrtScorer {
+                exe,
+                mu: vec![0.0; M_PAD * T_BINS],
+                sigma: vec![0.0; M_PAD * T_BINS],
+                phi: vec![0.0; M_PAD * 4],
+                psi: vec![0.0; M_PAD * 3],
+                trust: vec![0.0; M_PAD],
+                hist: vec![0.0; M_PAD],
+                valid: vec![0.0; M_PAD],
+            })
+        }
+
+        /// Score one padded chunk of up to [`M_PAD`] rows starting at
+        /// `row0`, all sharing `capacity` (the artifact takes a scalar
+        /// capacity; multi-window batches are split into uniform runs by
+        /// the caller).
+        fn score_chunk(
+            &mut self,
+            b: &ScoreBatch,
+            row0: usize,
+            rows: usize,
+            capacity: f32,
+            out: &mut ScoreOutput,
+        ) -> anyhow::Result<()> {
+            // Stage into padded buffers; padded lanes get valid=0 and benign
+            // sigma so the kernel's math stays finite.
+            self.mu.fill(0.0);
+            self.sigma.fill(1.0);
+            self.phi.fill(0.0);
+            self.psi.fill(0.0);
+            self.trust.fill(1.0);
+            self.hist.fill(0.0);
+            self.valid.fill(0.0);
+            let t = b.t;
+            self.mu[..rows * t].copy_from_slice(&b.mu[row0 * t..(row0 + rows) * t]);
+            self.sigma[..rows * t].copy_from_slice(&b.sigma[row0 * t..(row0 + rows) * t]);
+            self.phi[..rows * 4].copy_from_slice(&b.phi[row0 * 4..(row0 + rows) * 4]);
+            self.psi[..rows * 3].copy_from_slice(&b.psi[row0 * 3..(row0 + rows) * 3]);
+            self.trust[..rows].copy_from_slice(&b.trust[row0..row0 + rows]);
+            self.hist[..rows].copy_from_slice(&b.hist[row0..row0 + rows]);
+            self.valid[..rows].fill(1.0);
+
+            let mut params = [0.0f32; N_PARAMS];
+            params[0] = capacity;
+            params[1] = b.theta;
+            params[2] = b.lambda;
+            params[3..7].copy_from_slice(&b.alpha);
+            params[7..11].copy_from_slice(&b.beta);
+
+            let args = [
+                f32_literal(&self.mu, &[M_PAD, T_BINS])?,
+                f32_literal(&self.sigma, &[M_PAD, T_BINS])?,
+                f32_literal(&self.phi, &[M_PAD, 4])?,
+                f32_literal(&self.psi, &[M_PAD, 3])?,
+                f32_literal(&self.trust, &[M_PAD])?,
+                f32_literal(&self.hist, &[M_PAD])?,
+                f32_literal(&self.valid, &[M_PAD])?,
+                f32_literal(&params, &[N_PARAMS])?,
+            ];
+            let outputs = self.exe.run(&args)?;
+            anyhow::ensure!(outputs.len() == 3, "scorer artifact must return 3 outputs");
+            let score = outputs[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+            let viol = outputs[1].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+            let head = outputs[2].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+            for i in 0..rows {
+                let eligible = viol[i] <= b.theta;
+                out.score.push(if eligible { score[i] } else { 0.0 });
+                out.violation.push(viol[i]);
+                out.headroom.push(head[i]);
+                out.eligible.push(eligible);
+            }
+            Ok(())
+        }
+    }
+
+    impl ScorerBackend for PjrtScorer {
+        fn name(&self) -> &str {
+            "pjrt"
+        }
+
+        fn score(&mut self, b: &ScoreBatch) -> anyhow::Result<ScoreOutput> {
+            anyhow::ensure!(
+                b.t == T_BINS,
+                "PJRT scorer artifact was lowered with T={T_BINS} bins, got {}",
+                b.t
+            );
+            anyhow::ensure!(
+                b.row_capacity.is_empty() || b.row_capacity.len() == b.m,
+                "row_capacity must be empty or length m"
+            );
+            let mut out = ScoreOutput::default();
+            let mut row = 0;
+            while row < b.m {
+                // Rows must share a capacity within one artifact call;
+                // multi-window batches carry per-row capacities, grouped
+                // by announcement window, so runs are few and long.
+                let cap = b.capacity_of(row);
+                let mut end = row + 1;
+                while end < b.m && end - row < M_PAD && b.capacity_of(end) == cap {
+                    end += 1;
+                }
+                self.score_chunk(b, row, end - row, cap, &mut out)?;
+                row = end;
+            }
+            Ok(out)
+        }
     }
 }
 
-fn f32_literal(data: &[f32], dims: &[usize]) -> anyhow::Result<xla::Literal> {
-    let n: usize = dims.iter().product();
-    anyhow::ensure!(data.len() == n, "literal data/shape mismatch: {} vs {:?}", data.len(), dims);
-    let bytes: &[u8] =
-        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
-    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, bytes)
-        .map_err(|e| anyhow::anyhow!("creating literal: {e:?}"))
-}
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::{HloExecutable, PjrtScorer};
 
-/// The PJRT-backed scoring backend (L1/L2 on the hot path).
+/// Stub compiled when the `pjrt` feature is off: same API, fails cleanly
+/// at load time so CLI/bench/example code paths keep working.
+#[cfg(not(feature = "pjrt"))]
 pub struct PjrtScorer {
-    exe: HloExecutable,
-    // Reusable padded staging buffers (allocation-free steady state).
-    mu: Vec<f32>,
-    sigma: Vec<f32>,
-    phi: Vec<f32>,
-    psi: Vec<f32>,
-    trust: Vec<f32>,
-    hist: Vec<f32>,
-    valid: Vec<f32>,
+    _private: (),
 }
 
+#[cfg(not(feature = "pjrt"))]
 impl PjrtScorer {
     /// Load `scorer.hlo.txt` from the default artifacts directory.
     pub fn from_default_artifacts() -> anyhow::Result<Self> {
         Self::load(&artifacts_dir().join("scorer.hlo.txt"))
     }
 
-    /// Load and compile the scorer artifact at `path`.
+    /// Load and compile the scorer artifact at `path`. Always fails in
+    /// stub builds (after the same missing-artifact check as the real
+    /// implementation, so error messages stay consistent).
     pub fn load(path: &Path) -> anyhow::Result<Self> {
         anyhow::ensure!(
             path.exists(),
             "scorer artifact {} not found — run `make artifacts` first",
             path.display()
         );
-        let client =
-            xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("creating PJRT client: {e:?}"))?;
-        let exe = HloExecutable::load(&client, path)?;
-        Ok(PjrtScorer {
-            exe,
-            mu: vec![0.0; M_PAD * T_BINS],
-            sigma: vec![0.0; M_PAD * T_BINS],
-            phi: vec![0.0; M_PAD * 4],
-            psi: vec![0.0; M_PAD * 3],
-            trust: vec![0.0; M_PAD],
-            hist: vec![0.0; M_PAD],
-            valid: vec![0.0; M_PAD],
-        })
-    }
-
-    /// Score one padded chunk of up to [`M_PAD`] rows starting at `row0`.
-    fn score_chunk(
-        &mut self,
-        b: &ScoreBatch,
-        row0: usize,
-        rows: usize,
-        out: &mut ScoreOutput,
-    ) -> anyhow::Result<()> {
-        // Stage into padded buffers; padded lanes get valid=0 and benign
-        // sigma so the kernel's math stays finite.
-        self.mu.fill(0.0);
-        self.sigma.fill(1.0);
-        self.phi.fill(0.0);
-        self.psi.fill(0.0);
-        self.trust.fill(1.0);
-        self.hist.fill(0.0);
-        self.valid.fill(0.0);
-        let t = b.t;
-        self.mu[..rows * t].copy_from_slice(&b.mu[row0 * t..(row0 + rows) * t]);
-        self.sigma[..rows * t].copy_from_slice(&b.sigma[row0 * t..(row0 + rows) * t]);
-        self.phi[..rows * 4].copy_from_slice(&b.phi[row0 * 4..(row0 + rows) * 4]);
-        self.psi[..rows * 3].copy_from_slice(&b.psi[row0 * 3..(row0 + rows) * 3]);
-        self.trust[..rows].copy_from_slice(&b.trust[row0..row0 + rows]);
-        self.hist[..rows].copy_from_slice(&b.hist[row0..row0 + rows]);
-        self.valid[..rows].fill(1.0);
-
-        let mut params = [0.0f32; N_PARAMS];
-        params[0] = b.capacity;
-        params[1] = b.theta;
-        params[2] = b.lambda;
-        params[3..7].copy_from_slice(&b.alpha);
-        params[7..11].copy_from_slice(&b.beta);
-
-        let args = [
-            f32_literal(&self.mu, &[M_PAD, T_BINS])?,
-            f32_literal(&self.sigma, &[M_PAD, T_BINS])?,
-            f32_literal(&self.phi, &[M_PAD, 4])?,
-            f32_literal(&self.psi, &[M_PAD, 3])?,
-            f32_literal(&self.trust, &[M_PAD])?,
-            f32_literal(&self.hist, &[M_PAD])?,
-            f32_literal(&self.valid, &[M_PAD])?,
-            f32_literal(&params, &[N_PARAMS])?,
-        ];
-        let outputs = self.exe.run(&args)?;
-        anyhow::ensure!(outputs.len() == 3, "scorer artifact must return 3 outputs");
-        let score = outputs[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
-        let viol = outputs[1].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
-        let head = outputs[2].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
-        for i in 0..rows {
-            let eligible = viol[i] <= b.theta;
-            out.score.push(if eligible { score[i] } else { 0.0 });
-            out.violation.push(viol[i]);
-            out.headroom.push(head[i]);
-            out.eligible.push(eligible);
-        }
-        Ok(())
+        anyhow::bail!(
+            "this binary was built without the `pjrt` cargo feature; \
+             rebuild with `--features pjrt` (requires the `xla` dependency)"
+        )
     }
 }
 
+#[cfg(not(feature = "pjrt"))]
 impl ScorerBackend for PjrtScorer {
     fn name(&self) -> &str {
         "pjrt"
     }
 
-    fn score(&mut self, b: &ScoreBatch) -> anyhow::Result<ScoreOutput> {
-        anyhow::ensure!(
-            b.t == T_BINS,
-            "PJRT scorer artifact was lowered with T={T_BINS} bins, got {}",
-            b.t
-        );
-        let mut out = ScoreOutput::default();
-        let mut row = 0;
-        while row < b.m {
-            let rows = (b.m - row).min(M_PAD);
-            self.score_chunk(b, row, rows, &mut out)?;
-            row += rows;
-        }
-        Ok(out)
+    fn score(&mut self, _b: &ScoreBatch) -> anyhow::Result<ScoreOutput> {
+        anyhow::bail!("pjrt backend unavailable: built without the `pjrt` feature")
     }
 }
 
@@ -211,13 +287,20 @@ mod tests {
         assert!(err.to_string().contains("make artifacts"), "{err}");
     }
 
+    #[cfg(not(feature = "pjrt"))]
     #[test]
-    fn f32_literal_shape_checked() {
-        assert!(f32_literal(&[1.0, 2.0], &[3]).is_err());
-        let l = f32_literal(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
-        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    fn stub_load_reports_missing_feature() {
+        // An existing path gets past the artifact check and must then
+        // report the disabled feature, not a confusing compile error.
+        let dir = std::env::temp_dir().join("jasda_runtime_stub_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("scorer.hlo.txt");
+        std::fs::write(&path, "HloModule stub").unwrap();
+        let err = PjrtScorer::load(&path).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+        std::fs::remove_file(&path).unwrap();
     }
 
     // Full PJRT parity tests live in rust/tests/pjrt_parity.rs (they need
-    // `make artifacts` to have produced the HLO).
+    // `make artifacts` to have produced the HLO and the `pjrt` feature).
 }

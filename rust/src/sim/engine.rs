@@ -21,7 +21,7 @@ use crate::mig::{Cluster, PartitionLayout, Reservation};
 use crate::sim::rng::Rng;
 use crate::types::{Interval, JobId, SliceId, Time};
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BTreeMap, BinaryHeap};
 
 /// A scheduling decision: reserve `interval` on `slice` for a subjob of
 /// `job` covering `work` (full-GPU tick equivalents).
@@ -129,7 +129,12 @@ pub struct SimEngine {
     cfg: SimConfig,
     scheduler: Box<dyn Scheduler>,
     events: BinaryHeap<Reverse<(HeapKey, usize)>>,
-    pending: Vec<PendingCompletion>,
+    /// Slab of in-flight completions. Fired entries are taken out of
+    /// their slot and the index goes onto `free_slots` for reuse, so
+    /// memory stays O(max outstanding subjobs) instead of O(total
+    /// subjobs) over a long run.
+    pending: Vec<Option<PendingCompletion>>,
+    free_slots: Vec<usize>,
     event_seq: u64,
 }
 
@@ -141,8 +146,16 @@ impl SimEngine {
             scheduler,
             events: BinaryHeap::new(),
             pending: Vec::new(),
+            free_slots: Vec::new(),
             event_seq: 0,
         }
+    }
+
+    /// Take a fired completion out of its slab slot, recycling the slot.
+    fn take_pending(&mut self, idx: usize) -> PendingCompletion {
+        let pc = self.pending[idx].take().expect("completion event fired twice");
+        self.free_slots.push(idx);
+        pc
     }
 
     /// Run the simulation over a job population until every job
@@ -159,9 +172,11 @@ impl SimEngine {
             scheduler: self.scheduler.name().to_string(),
             ..RunMetrics::default()
         };
-        let mut max_waits: Vec<u64> = vec![0; jobs.len()];
-        let mut last_progress: Vec<Time> =
-            jobs.iter().map(|j| j.arrival).collect();
+        // Starvation bookkeeping is keyed by JobId (not slot index):
+        // trace workloads may carry non-contiguous or non-zero-based ids.
+        let mut max_waits: BTreeMap<JobId, u64> = BTreeMap::new();
+        let mut last_progress: BTreeMap<JobId, Time> =
+            jobs.iter().map(|j| (j.id, j.arrival)).collect();
         let mut last_event_time: Time = 0;
 
         let period = self.cfg.engine.iteration_period;
@@ -179,7 +194,7 @@ impl SimEngine {
                     break;
                 }
                 self.events.pop();
-                let pc = self.pending[idx].clone();
+                let pc = self.take_pending(idx);
                 self.handle_completion(&pc, &mut cluster, &mut jobs, &mut metrics);
                 last_event_time = last_event_time.max(pc.rec.realized_end);
             }
@@ -194,13 +209,22 @@ impl SimEngine {
             metrics.iterations += 1;
 
             // 4. Apply commitments: reserve, track waits, sample realization.
+            // Only commitments that actually reserve (apply_commitment
+            // drops zero-work/empty no-ops) count toward the
+            // per-iteration throughput metric.
+            let mut applied_commits = 0u64;
             for c in commitments {
-                self.apply_commitment(&c, now, &mut cluster, &mut jobs, &mut rng, &mut metrics);
-                let j = c.job as usize;
-                let wait = now.saturating_sub(last_progress[j]);
-                max_waits[j] = max_waits[j].max(wait);
-                last_progress[j] = now;
+                if self.apply_commitment(&c, now, &mut cluster, &mut jobs, &mut rng, &mut metrics)
+                {
+                    applied_commits += 1;
+                }
+                let since = last_progress.get(&c.job).copied().unwrap_or(now);
+                let wait = now.saturating_sub(since);
+                let w = max_waits.entry(c.job).or_insert(0);
+                *w = (*w).max(wait);
+                last_progress.insert(c.job, now);
             }
+            metrics.max_commits_per_iter = metrics.max_commits_per_iter.max(applied_commits);
 
             // 5. Track waiting (starvation) for still-waiting active jobs.
             // (max_wait is finalized lazily; see final pass below.)
@@ -231,7 +255,7 @@ impl SimEngine {
         // Drain outstanding completions past the horizon.
         while let Some(Reverse((HeapKey(t, _), idx))) = self.events.pop() {
             let _ = t;
-            let pc = self.pending[idx].clone();
+            let pc = self.take_pending(idx);
             self.handle_completion(&pc, &mut cluster, &mut jobs, &mut metrics);
             last_event_time = last_event_time.max(pc.rec.realized_end);
         }
@@ -239,9 +263,10 @@ impl SimEngine {
         // Finalize waiting gaps for unfinished jobs.
         for j in jobs.iter() {
             if j.state == JobState::Active {
-                let idx = j.id as usize;
-                let wait = now.saturating_sub(last_progress[idx]);
-                max_waits[idx] = max_waits[idx].max(wait);
+                let since = last_progress.get(&j.id).copied().unwrap_or(j.arrival);
+                let wait = now.saturating_sub(since);
+                let w = max_waits.entry(j.id).or_insert(0);
+                *w = (*w).max(wait);
             }
         }
 
@@ -275,7 +300,7 @@ impl SimEngine {
                 completed: j.completed_at,
                 work: j.total_work(),
                 subjobs: j.subjobs_done,
-                max_wait: max_waits[j.id as usize],
+                max_wait: max_waits.get(&j.id).copied().unwrap_or(0),
                 deadline_met: j.deadline.map(|d| j.completed_at.map_or(false, |c| c <= d)),
                 weight: j.weight,
             })
@@ -291,6 +316,8 @@ impl SimEngine {
 
     /// Apply one commitment: validate + reserve the interval, advance the
     /// job's reserved work, and schedule the realized completion.
+    /// Returns false for no-ops (zero effective work / empty interval)
+    /// that reserve nothing.
     fn apply_commitment(
         &mut self,
         c: &Commitment,
@@ -299,13 +326,13 @@ impl SimEngine {
         jobs: &mut JobSet,
         rng: &mut Rng,
         metrics: &mut RunMetrics,
-    ) {
+    ) -> bool {
         let slice_speed = cluster.slice(c.slice).speed();
         let job = jobs.get_mut(c.job);
         debug_assert!(job.state == JobState::Active, "commitment for non-active job");
         let work = c.work.min(job.pending_work());
         if work <= 1e-9 || c.interval.is_empty() {
-            return;
+            return false;
         }
         let seq = job.subjob_seq;
         cluster
@@ -361,16 +388,26 @@ impl SimEngine {
             observed_phi,
             committed_at: now,
         };
-        let idx = self.pending.len();
-        self.pending.push(PendingCompletion {
+        let pc = PendingCompletion {
             fire_at: realized_end,
             rec,
             speed: slice_speed,
             window_len: c.window_len,
             realized_duration,
-        });
+        };
+        let idx = match self.free_slots.pop() {
+            Some(slot) => {
+                self.pending[slot] = Some(pc);
+                slot
+            }
+            None => {
+                self.pending.push(Some(pc));
+                self.pending.len() - 1
+            }
+        };
         self.event_seq += 1;
         self.events.push(Reverse((HeapKey(realized_end, self.event_seq), idx)));
+        true
     }
 
     /// Fire a completion: credit work, free unused reservation tail,
@@ -534,6 +571,58 @@ mod tests {
             let jct = j.jct().unwrap();
             assert!(jct as f64 >= 500.0 * 0.5, "jct {jct} suspiciously small");
         }
+    }
+
+    #[test]
+    fn sparse_job_ids_run_end_to_end() {
+        // Regression: starvation stats used to be indexed by `id as usize`
+        // and panicked (or corrupted) on non-contiguous trace ids.
+        let mut jobs = tiny_jobs(3);
+        jobs[0].id = 4_000_000;
+        jobs[1].id = 17;
+        jobs[2].id = 90;
+        let mut eng = SimEngine::new(test_cfg(), Box::new(GreedyFcfs));
+        let out = eng.run(jobs);
+        assert_eq!(out.metrics.unfinished, 0, "{}", out.metrics.summary());
+        let ids: Vec<JobId> = out.metrics.jobs.iter().map(|j| j.job).collect();
+        assert_eq!(ids, vec![4_000_000, 17, 90], "reported ids must be the trace ids");
+        for j in &out.metrics.jobs {
+            assert!(j.completed.is_some());
+            assert!(j.max_wait < 1_000_000, "wait stats corrupt for job {}", j.job);
+        }
+    }
+
+    #[test]
+    fn pending_completion_slots_are_reused() {
+        // Regression: the pending slab used to grow by one entry per
+        // subjob forever. With slot reuse its size is bounded by the
+        // maximum number of concurrently outstanding completions, far
+        // below the total commit count on a long run. Arrivals are
+        // spaced far apart so each job's subjobs complete before the
+        // next job shows up — outstanding completions stay small while
+        // total commits keep growing.
+        let jobs: Vec<Job> = (0..12)
+            .map(|i| {
+                let trp = Trp {
+                    phases: vec![Phase::new(2000.0, 3.0, 0.1, 0.1)],
+                    duration_cv: 0.05,
+                };
+                Job::new(i, "tiny", (i as u64) * 10_000, trp, None, 1.0, 100.0, 0.0)
+            })
+            .collect();
+        let mut eng = SimEngine::new(test_cfg(), Box::new(GreedyFcfs));
+        let out = eng.run(jobs);
+        assert_eq!(out.metrics.unfinished, 0);
+        assert!(out.metrics.total_commits > 30, "want many subjobs, got {}", out.metrics.total_commits);
+        assert!(
+            (eng.pending.len() as u64) < out.metrics.total_commits / 2,
+            "slab grew like total commits: {} slots for {} commits",
+            eng.pending.len(),
+            out.metrics.total_commits
+        );
+        // Every slot is free again after the run drains.
+        assert_eq!(eng.free_slots.len(), eng.pending.len());
+        assert!(eng.pending.iter().all(|s| s.is_none()));
     }
 
     #[test]

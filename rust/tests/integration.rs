@@ -109,6 +109,64 @@ fn all_window_policies_complete() {
 }
 
 #[test]
+fn multi_window_k_sweep_completes_and_audits() {
+    // K-window clearing (ISSUE 1 tentpole): every K (and per-slice mode)
+    // must finish the workload with a valid, non-overlapping schedule.
+    let c0 = cfg(67, 30, 0.35);
+    let jobs = WorkloadGenerator::new(c0.workload.clone()).generate(c0.seed);
+    for (k, per_slice) in [(1usize, false), (2, false), (4, false), (1, true)] {
+        let mut c = c0.clone();
+        c.jasda.announce_k = k;
+        c.jasda.announce_per_slice = per_slice;
+        let out = SimEngine::new(c.clone(), Box::new(JasdaScheduler::new(c.jasda.clone())))
+            .run(jobs.clone());
+        assert_eq!(out.metrics.unfinished, 0, "k={k} per_slice={per_slice}");
+        audit(&out);
+    }
+}
+
+#[test]
+fn multi_window_raises_commit_throughput_under_burst() {
+    // ISSUE 1 acceptance: with K > 1 on a contended burst, commitments
+    // per iteration strictly exceed the K=1 baseline and makespan does
+    // not regress. A long iteration period puts the run in the
+    // decision-round-limited regime where one window per round visibly
+    // serializes the cluster.
+    let mut c = cfg(71, 40, 0.3);
+    c.workload.arrival_rate_per_sec = 1e6; // effectively simultaneous burst
+    c.engine.iteration_period = 500;
+    let jobs = WorkloadGenerator::new(c.workload.clone()).generate(c.seed);
+
+    let run_with = |k: usize, per_slice: bool| {
+        let mut ck = c.clone();
+        ck.jasda.announce_k = k;
+        ck.jasda.announce_per_slice = per_slice;
+        SimEngine::new(ck.clone(), Box::new(JasdaScheduler::new(ck.jasda.clone())))
+            .run(jobs.clone())
+            .metrics
+    };
+    let base = run_with(1, false);
+    assert_eq!(base.unfinished, 0);
+    for (k, per_slice) in [(4usize, false), (1, true)] {
+        let m = run_with(k, per_slice);
+        assert_eq!(m.unfinished, 0, "k={k} per_slice={per_slice}");
+        assert!(
+            m.commits_per_iteration() > base.commits_per_iteration(),
+            "k={k} per_slice={per_slice}: {:.3} commits/iter vs baseline {:.3}",
+            m.commits_per_iteration(),
+            base.commits_per_iteration()
+        );
+        assert!(
+            m.makespan <= base.makespan + base.makespan / 20,
+            "k={k} per_slice={per_slice}: makespan regressed {} vs {}",
+            m.makespan,
+            base.makespan
+        );
+        assert!(m.max_commits_per_iter >= 1);
+    }
+}
+
+#[test]
 fn announce_lead_still_completes() {
     // §5.1(a) mitigation (i): announce windows ahead of their start.
     for lead in [0u64, 100, 1000] {

@@ -5,7 +5,11 @@
 //!
 //! These tests require `make artifacts` to have run; they are skipped
 //! (with a loud message) when the artifact is missing so `cargo test`
-//! stays usable before the first artifact build.
+//! stays usable before the first artifact build. The whole file is gated
+//! on the `pjrt` cargo feature (the offline default build ships only the
+//! stub scorer).
+
+#![cfg(feature = "pjrt")]
 
 use jasda::config::SimConfig;
 use jasda::jasda::scoring::{NativeScorer, ScoreBatch, ScorerBackend};

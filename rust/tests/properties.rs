@@ -9,12 +9,13 @@ use jasda::config::JasdaConfig;
 use jasda::jasda::calibration::Calibration;
 use jasda::jasda::clearing::{select_best_compatible, WisItem};
 use jasda::jasda::scoring::{NativeScorer, ScoreBatch, ScorerBackend};
+use jasda::jasda::{JasdaScheduler, WindowSelector};
 use jasda::job::variants::generate_variants;
-use jasda::job::{Job, JobState};
-use jasda::mig::{Reservation, Timeline, Window};
-use jasda::sim::Rng;
+use jasda::job::{Job, JobSet, JobState};
+use jasda::mig::{Cluster, PartitionLayout, Reservation, Timeline, Window};
+use jasda::sim::{Rng, Scheduler};
 use jasda::trp::{Phase, Trp};
-use jasda::types::Interval;
+use jasda::types::{Interval, Time};
 
 /// Exhaustive WIS reference (exponential, n <= 14).
 fn brute_force(items: &[WisItem]) -> f64 {
@@ -289,6 +290,276 @@ fn prop_age_factor_bounds_and_reset() {
         // Selection resets the clock.
         job.last_selected = t;
         assert_eq!(job.age_factor(t, scale), 0.0);
+    }
+}
+
+// ---------------------------------------------------------------------
+// K-window announcement/clearing invariants (DESIGN.md §6 + ISSUE 1).
+// ---------------------------------------------------------------------
+
+/// Random mid-run cluster state: a stock layout with a handful of
+/// non-overlapping reservations sprinkled over the slices, plus an
+/// active job population with varied memory footprints and progress.
+fn random_state(rng: &mut Rng) -> (Cluster, JobSet, Time) {
+    let layout = match rng.index(3) {
+        0 => PartitionLayout::balanced(),
+        1 => PartitionLayout::seven_small(),
+        _ => PartitionLayout::heterogeneous(),
+    };
+    let mut cluster = Cluster::new(1 + rng.below(2) as u32, &layout);
+    let now: Time = rng.below(5_000);
+    for i in 0..cluster.num_slices() {
+        for k in 0..rng.index(4) {
+            let s = now + rng.below(8_000);
+            let iv = Interval::new(s, s + 100 + rng.below(2_000));
+            // Overlapping draws are simply skipped; the timeline stays valid.
+            let _ = cluster.slice_mut(i as u32).timeline.reserve(Reservation {
+                job: 90_000 + k as u32,
+                subjob_seq: 0,
+                interval: iv,
+            });
+        }
+    }
+    let n = 2 + rng.index(6);
+    let jobs: Vec<Job> = (0..n as u32)
+        .map(|id| {
+            let work = rng.uniform_range(500.0, 8_000.0);
+            let mem = rng.uniform_range(1.0, 16.0);
+            let trp = Trp {
+                phases: vec![
+                    Phase::new(work * 0.4, mem * 0.8, mem * 0.05, 0.3),
+                    Phase::new(work * 0.6, mem, mem * 0.05, 0.1),
+                ],
+                duration_cv: 0.08,
+            };
+            let mut j = Job::new(id, "p", 0, trp, None, 1.0, work / 4.0, 0.0);
+            j.state = JobState::Active;
+            j.done_work = work * rng.uniform() * 0.5;
+            j
+        })
+        .collect();
+    (cluster, JobSet::new(jobs), now)
+}
+
+/// Faithful replica of the seed's single-window `iterate` (announce one
+/// window, retry silent windows, scalar-capacity scoring, one WIS pass),
+/// returning the decision tuple per commitment.
+fn reference_single_window_iterate(
+    cfg: &JasdaConfig,
+    cluster: &Cluster,
+    jobs: &JobSet,
+    now: Time,
+) -> Vec<(u32, u32, Interval, f64, f64)> {
+    let mut selector = WindowSelector::new();
+    let cal = Calibration::new(jobs.len(), cfg.kappa, cfg.gamma, cfg.alpha.as_array());
+    let from = now + cfg.announce_lead;
+    let mut candidates =
+        cluster.candidate_windows(from, cfg.announce_horizon, cfg.tau_min);
+    let (window, pool) = loop {
+        let window = match selector.select(
+            cfg.window_policy,
+            &candidates,
+            cluster,
+            now,
+            cfg.announce_horizon,
+        ) {
+            Some(w) => w,
+            None => return vec![],
+        };
+        let mut pool = Vec::new();
+        for job in jobs.bidders() {
+            pool.extend(generate_variants(job, &window, cfg));
+        }
+        if !pool.is_empty() {
+            break (window, pool);
+        }
+        candidates.retain(|c| !(c.slice == window.slice && c.interval == window.interval));
+    };
+
+    let mut batch = ScoreBatch::with_bins(cfg.fmp_bins);
+    batch.capacity = window.capacity_gb as f32;
+    batch.theta = cfg.theta as f32;
+    batch.lambda = cfg.lambda as f32;
+    let alpha = cfg.alpha.as_array();
+    let beta = cfg.beta.as_array();
+    batch.alpha = [alpha[0] as f32, alpha[1] as f32, alpha[2] as f32, alpha[3] as f32];
+    batch.beta = [beta[0] as f32, beta[1] as f32, beta[2] as f32, beta[3] as f32];
+    for v in &pool {
+        let job = jobs.get(v.job);
+        let age = if cfg.age_priority { job.age_factor(now, cfg.age_scale) } else { 0.0 };
+        let (trust, hist) = if cfg.calibration {
+            (cal.trust_weight(v.job), cal.hist_avg(v.job))
+        } else {
+            (1.0, 0.0)
+        };
+        batch.push(
+            &v.fmp.mu,
+            &v.fmp.sigma,
+            [v.declared.phi[0], v.declared.phi[1], v.declared.phi[2], v.declared.phi[3]],
+            [v.sys.util, v.sys.frag, age],
+            trust,
+            hist,
+        );
+    }
+    let out = NativeScorer.score(&batch).expect("native scorer");
+
+    let wlen = window.delta_t().max(1) as f64;
+    let mut items = Vec::new();
+    let mut item_to_pool = Vec::new();
+    for (i, v) in pool.iter().enumerate() {
+        if out.eligible[i] && out.score[i] > 0.0 {
+            let w = if cfg.duration_weighted_clearing {
+                v.duration() as f64 / wlen
+            } else {
+                1.0
+            };
+            items.push(WisItem { interval: v.interval, score: out.score[i] as f64 * w });
+            item_to_pool.push(i);
+        }
+    }
+    let sol = select_best_compatible(&items);
+    sol.selected
+        .iter()
+        .map(|&k| {
+            let v = &pool[item_to_pool[k]];
+            (v.job, v.slice, v.interval, v.work, out.score[item_to_pool[k]] as f64)
+        })
+        .collect()
+}
+
+#[test]
+fn prop_k1_bit_identical_to_single_window_reference() {
+    // ISSUE 1 invariant (c): with announce_k = 1 the K-window scheduler
+    // makes exactly the decisions of the seed's single-window loop —
+    // same variants, same scores (bit-identical f32 pipeline), same WIS
+    // selection, in the same order.
+    let mut rng = Rng::new(0x51C1);
+    for case in 0..60 {
+        let (cluster, mut jobs, now) = random_state(&mut rng);
+        let cfg = JasdaConfig { fmp_bins: 16, ..JasdaConfig::default() };
+        assert_eq!(cfg.announce_k, 1, "default must preserve the paper loop");
+        let expect = reference_single_window_iterate(&cfg, &cluster, &jobs, now);
+
+        let mut sched = JasdaScheduler::new(cfg);
+        let mut srng = Rng::new(1);
+        let got = sched.iterate(now, &cluster, &mut jobs, &mut srng);
+
+        assert_eq!(got.len(), expect.len(), "case {case}: commitment count");
+        for (c, e) in got.iter().zip(&expect) {
+            assert_eq!(c.job, e.0, "case {case}: job");
+            assert_eq!(c.slice, e.1, "case {case}: slice");
+            assert_eq!(c.interval, e.2, "case {case}: interval");
+            assert_eq!(c.work, e.3, "case {case}: work must be bit-identical");
+            assert_eq!(c.score, e.4, "case {case}: score must be bit-identical");
+        }
+    }
+}
+
+#[test]
+fn prop_multi_window_commitments_are_conflict_free() {
+    // ISSUE 1 invariants (a) + (b): across every announced window of one
+    // iteration, (a) no two commitments on the same slice overlap (and
+    // none overlaps an existing reservation), and (b) no job receives
+    // two temporally overlapping reservations on different slices.
+    let mut rng = Rng::new(0x4B17);
+    for case in 0..80 {
+        let (cluster, mut jobs, now) = random_state(&mut rng);
+        let mut cfg = JasdaConfig { fmp_bins: 16, ..JasdaConfig::default() };
+        match rng.index(3) {
+            0 => cfg.announce_k = 2,
+            1 => cfg.announce_k = 4,
+            _ => cfg.announce_per_slice = true,
+        }
+        let mut sched = JasdaScheduler::new(cfg);
+        let mut srng = Rng::new(2);
+        let commits = sched.iterate(now, &cluster, &mut jobs, &mut srng);
+
+        for (i, a) in commits.iter().enumerate() {
+            assert!(a.interval.start >= now, "case {case}: commitment in the past");
+            assert!(
+                cluster.slice(a.slice).timeline.is_free(&a.interval),
+                "case {case}: commitment overlaps an existing reservation"
+            );
+            for b in commits.iter().skip(i + 1) {
+                if a.slice == b.slice {
+                    assert!(
+                        !a.interval.overlaps(&b.interval),
+                        "case {case}: slice {} double-booked: {} vs {}",
+                        a.slice,
+                        a.interval,
+                        b.interval
+                    );
+                }
+                if a.job == b.job {
+                    assert!(
+                        !a.interval.overlaps(&b.interval),
+                        "case {case}: job {} holds concurrent subjobs: {} vs {}",
+                        a.job,
+                        a.interval,
+                        b.interval
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn multi_window_clears_more_than_single_window_on_burst() {
+    // Deterministic decision-round throughput: an idle 3-slice cluster,
+    // 8 contending jobs, and windows short enough that one window can
+    // only hold one chunk. K=1 can commit work on a single slice; the
+    // per-slice mode must commit on several slices in the same round.
+    let mk_jobs = || -> JobSet {
+        JobSet::new(
+            (0..8u32)
+                .map(|id| {
+                    let trp = Trp {
+                        phases: vec![Phase::new(5_000.0, 4.0, 0.2, 0.1)],
+                        duration_cv: 0.05,
+                    };
+                    let mut j =
+                        Job::new(id, "b", 0, trp, None, 1.0, 250.0 + id as f64, 0.0);
+                    j.state = JobState::Active;
+                    j
+                })
+                .collect(),
+        )
+    };
+    let cluster = Cluster::new(1, &PartitionLayout::balanced());
+    let cfg = |per_slice: bool| JasdaConfig {
+        fmp_bins: 16,
+        announce_horizon: 1_000,
+        announce_per_slice: per_slice,
+        ..JasdaConfig::default()
+    };
+
+    let mut rng = Rng::new(3);
+    let mut jobs1 = mk_jobs();
+    let mut s1 = JasdaScheduler::new(cfg(false));
+    let c1 = s1.iterate(0, &cluster, &mut jobs1, &mut rng);
+    assert!(!c1.is_empty(), "single-window round must commit something");
+
+    let mut jobs_k = mk_jobs();
+    let mut sk = JasdaScheduler::new(cfg(true));
+    let ck = sk.iterate(0, &cluster, &mut jobs_k, &mut rng);
+    assert!(
+        ck.len() > c1.len(),
+        "per-slice round must out-commit K=1: {} vs {}",
+        ck.len(),
+        c1.len()
+    );
+    let mut slices: Vec<u32> = ck.iter().map(|c| c.slice).collect();
+    slices.sort_unstable();
+    slices.dedup();
+    assert!(slices.len() >= 2, "per-slice round must touch several slices");
+    // And the round stays conflict-free per job.
+    for (i, a) in ck.iter().enumerate() {
+        for b in ck.iter().skip(i + 1) {
+            if a.job == b.job {
+                assert!(!a.interval.overlaps(&b.interval));
+            }
+        }
     }
 }
 

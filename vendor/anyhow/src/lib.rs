@@ -1,0 +1,151 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no network access to crates.io, so this
+//! in-tree crate provides the exact subset of anyhow's API the framework
+//! uses: [`Error`], [`Result`], the [`anyhow!`], [`bail!`] and
+//! [`ensure!`] macros, and blanket conversion from any standard error so
+//! `?` works on `io::Error` & friends. Semantics match upstream for this
+//! subset; swap in the real crate by deleting `vendor/anyhow` and adding
+//! `anyhow = "1"` once a registry is reachable.
+
+use std::fmt;
+
+/// A type-erased error, displayable and convertible from any
+/// `std::error::Error`.
+pub struct Error {
+    inner: Box<dyn std::error::Error + Send + Sync + 'static>,
+}
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Message-only error payload backing [`Error::msg`].
+#[derive(Debug)]
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for MessageError {}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { inner: Box::new(MessageError(message.to_string())) }
+    }
+
+    /// Build an error from any standard error value.
+    pub fn new<E>(error: E) -> Error
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        Error { inner: Box::new(error) }
+    }
+
+    /// The underlying cause chain's root, if any.
+    pub fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        self.inner.source()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.inner, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Like upstream anyhow: Debug prints the display message (plus
+        // the source chain when present) so `main() -> Result<()>` output
+        // stays readable.
+        write!(f, "{}", self.inner)?;
+        let mut source = self.inner.source();
+        if source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(s) = source {
+            write!(f, "\n    {s}")?;
+            source = s.source();
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` intentionally does NOT implement `std::error::Error`;
+// that is what makes this blanket conversion coherent (same trick as
+// upstream anyhow).
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/file")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let err = io_fail().unwrap_err();
+        assert!(!err.to_string().is_empty());
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("x = {}", 7);
+        assert_eq!(e.to_string(), "x = 7");
+        fn f(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {flag}");
+            if !flag {
+                bail!("unreachable");
+            }
+            Ok(1)
+        }
+        assert_eq!(f(true).unwrap(), 1);
+        assert_eq!(f(false).unwrap_err().to_string(), "flag was false");
+    }
+
+    #[test]
+    fn debug_includes_message() {
+        let e = anyhow!("top level");
+        assert!(format!("{e:?}").contains("top level"));
+    }
+}
