@@ -1,5 +1,9 @@
-//! Hot-path performance: the batched scoring pipeline (native vs PJRT)
-//! and the end-to-end iteration cost (EXPERIMENTS.md §Perf).
+//! Hot-path performance: the batched scoring pipeline (native vs PJRT),
+//! the end-to-end iteration cost (EXPERIMENTS.md §Perf), and — since
+//! ISSUE 2 — before/after sweeps of the incremental gap index and the
+//! parallel clearing pipeline over slice count and reservation density,
+//! emitted as machine-readable `BENCH_iteration.json` (override the path
+//! with `BENCH_OUT`; set `BENCH_SMOKE=1` for a fast CI smoke run).
 
 #[path = "common/mod.rs"]
 mod common;
@@ -7,10 +11,30 @@ mod common;
 use jasda::jasda::clearing::{select_best_compatible, WisItem};
 use jasda::jasda::scoring::{NativeScorer, ScoreBatch, ScorerBackend};
 use jasda::jasda::JasdaScheduler;
+use jasda::mig::{Cluster, PartitionLayout, Reservation};
 use jasda::runtime::{PjrtScorer, T_BINS};
 use jasda::sim::{Rng, SimEngine};
 use jasda::types::Interval;
 use jasda::util::bench::{header, run_case};
+use jasda::util::Json;
+
+/// A cluster whose every slice carries `density` short reservations —
+/// the dense-timeline regime where per-iteration gap recomputation used
+/// to dominate.
+fn dense_cluster(gpus: u32, density: usize) -> Cluster {
+    let mut c = Cluster::new(gpus, &PartitionLayout::seven_small());
+    for s in 0..c.num_slices() as u32 {
+        for k in 0..density {
+            let start = 100 * k as u64 + (s as u64 * 13) % 40;
+            let iv = Interval::new(start, start + 60);
+            let _ = c
+                .slice_mut(s)
+                .timeline
+                .reserve(Reservation { job: s, subjob_seq: k as u32, interval: iv });
+        }
+    }
+    c
+}
 
 fn batch(m: usize, seed: u64) -> ScoreBatch {
     let mut rng = Rng::new(seed);
@@ -152,5 +176,105 @@ fn main() {
             m.sched_ns_per_iteration(),
             meas.ns_per_iter() / 1e6,
         );
+    }
+
+    // ------------------------------------------------------------------
+    // ISSUE 2: iteration-latency sweeps + machine-readable baseline.
+    // ------------------------------------------------------------------
+    let smoke = std::env::var("BENCH_SMOKE").map_or(false, |v| v != "0" && !v.is_empty());
+    let (samples, sample_ms) = if smoke { (3, 2) } else { (10, 20) };
+
+    header("candidate-window enumeration: full scan vs incremental gap index");
+    let mut enum_rows: Vec<Json> = Vec::new();
+    let density_sweep: &[(u32, usize)] =
+        if smoke { &[(1, 50), (4, 100)] } else { &[(1, 50), (2, 100), (4, 200), (8, 200)] };
+    for &(gpus, density) in density_sweep {
+        let c = dense_cluster(gpus, density);
+        let slices = c.num_slices();
+        let horizon = 100 * density as u64 + 10_000;
+        let scan = run_case(
+            &format!("scan  {slices} slices x {density} resv"),
+            samples,
+            sample_ms,
+            || {
+                let mut n = 0usize;
+                for s in c.slices() {
+                    n += s.timeline.idle_gaps_scan(0, horizon, 25).len();
+                }
+                n
+            },
+        );
+        let mut buf = Vec::new();
+        let index = run_case(
+            &format!("index {slices} slices x {density} resv"),
+            samples,
+            sample_ms,
+            || {
+                c.collect_windows(0, horizon, 25, &mut buf);
+                buf.len()
+            },
+        );
+        let speedup = scan.ns_per_iter() / index.ns_per_iter().max(1.0);
+        println!("{:<48}   -> {speedup:.2}x over full scan", "");
+        enum_rows.push(Json::obj(vec![
+            ("slices", slices.into()),
+            ("reservations_per_slice", density.into()),
+            ("scan_ns", scan.ns_per_iter().into()),
+            ("index_ns", index.ns_per_iter().into()),
+            ("speedup", speedup.into()),
+        ]));
+    }
+
+    header("end-to-end iteration latency: serial vs parallel pipeline");
+    let mut iter_rows: Vec<Json> = Vec::new();
+    // `heterogeneous` = 3 slices/GPU; every generated job fits its 20 GiB
+    // slice, so runs complete. 6 GPUs = 18 slices covers the "16+
+    // slices, dense timelines" acceptance point.
+    let gpu_sweep: &[u32] = if smoke { &[1, 2] } else { &[1, 2, 6] };
+    for &gpus in gpu_sweep {
+        for (mode, threads) in [("serial", 1usize), ("parallel", 0)] {
+            let mut cfg = common::contended_cfg(81, if smoke { 20 } else { 30 * gpus as usize });
+            cfg.cluster.num_gpus = gpus;
+            cfg.jasda.announce_per_slice = true;
+            cfg.jasda.parallel = threads;
+            // Bound pathological runs so the bench always terminates.
+            cfg.engine.max_time = 20_000_000;
+            let jobs = common::workload(&cfg);
+            let m = SimEngine::new(cfg.clone(), Box::new(JasdaScheduler::new(cfg.jasda.clone())))
+                .run(jobs.clone())
+                .metrics;
+            let slices = 3 * gpus as usize;
+            println!(
+                "{mode:<9} {slices:>3} slices: sched {:>10.0} ns/iter  max {:>10} ns  makespan {}  commits/iter {:.3}",
+                m.sched_ns_per_iteration(),
+                m.max_sched_iter_ns,
+                m.makespan,
+                m.commits_per_iteration(),
+            );
+            iter_rows.push(Json::obj(vec![
+                ("slices", slices.into()),
+                ("jobs", cfg.workload.num_jobs.into()),
+                ("mode", mode.into()),
+                ("announce", "per_slice".into()),
+                ("sched_ns_per_iter", m.sched_ns_per_iteration().into()),
+                ("max_sched_iter_ns", m.max_sched_iter_ns.into()),
+                ("makespan", m.makespan.into()),
+                ("commits_per_iter", m.commits_per_iteration().into()),
+                ("iterations", m.iterations.into()),
+                ("unfinished", m.unfinished.into()),
+            ]));
+        }
+    }
+
+    let out = Json::obj(vec![
+        ("schema", "jasda.bench_iteration.v1".into()),
+        ("smoke", smoke.into()),
+        ("enumeration", Json::Arr(enum_rows)),
+        ("iteration", Json::Arr(iter_rows)),
+    ]);
+    let path = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_iteration.json".into());
+    match std::fs::write(&path, out.to_string_pretty()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => println!("\ncould not write {path}: {e}"),
     }
 }

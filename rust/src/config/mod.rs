@@ -258,6 +258,14 @@ pub struct JasdaConfig {
     /// window per slice that currently has a candidate window, so every
     /// free slice is offered for bidding each iteration.
     pub announce_per_slice: bool,
+    /// Worker-thread budget for the clearing pipeline's fan-out stages
+    /// (variant generation, batched scoring, per-window WIS). `0` = use
+    /// the machine's available parallelism; `1` = fully serial. Results
+    /// are bit-identical at every setting (the stages are row/window
+    /// independent and the cross-window reconciliation merge stays
+    /// sequential in announcement order), so this is purely a
+    /// latency/throughput knob.
+    pub parallel: usize,
     /// Max variants a single job may bid **per announced window**
     /// (V_max, §4.6). With `announce_k > 1` or per-slice announcement a
     /// job may bid into each announced window, so its per-iteration
@@ -297,6 +305,7 @@ impl Default for JasdaConfig {
             announce_horizon: 20_000,
             announce_k: 1,
             announce_per_slice: false,
+            parallel: 0,
             max_variants_per_job: 4,
             fmp_bins: 64,
             repack: false,
@@ -365,6 +374,7 @@ impl JasdaConfig {
                 "announce_horizon" => self.announce_horizon = need_u64(val, k)?,
                 "announce_k" => self.announce_k = need_u64(val, k)? as usize,
                 "announce_per_slice" => self.announce_per_slice = need_bool(val, k)?,
+                "parallel" => self.parallel = need_u64(val, k)? as usize,
                 "max_variants_per_job" => {
                     self.max_variants_per_job = need_u64(val, k)? as usize
                 }
@@ -404,6 +414,7 @@ impl JasdaConfig {
             ("announce_horizon", self.announce_horizon.into()),
             ("announce_k", self.announce_k.into()),
             ("announce_per_slice", self.announce_per_slice.into()),
+            ("parallel", self.parallel.into()),
             ("max_variants_per_job", self.max_variants_per_job.into()),
             ("fmp_bins", self.fmp_bins.into()),
             ("repack", self.repack.into()),
@@ -675,6 +686,7 @@ mod tests {
         cfg.jasda.backend = ScoringBackend::Pjrt;
         cfg.jasda.announce_k = 3;
         cfg.jasda.announce_per_slice = true;
+        cfg.jasda.parallel = 4;
         cfg.workload.mix = vec![("analytics".into(), 1.0)];
         let text = cfg.to_json().to_string_pretty();
         let back = SimConfig::from_json_str(&text).unwrap();

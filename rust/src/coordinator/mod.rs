@@ -235,7 +235,7 @@ pub fn run_protocol(cfg: SimConfig, jobs: Vec<Job>, max_rounds: u64) -> Protocol
             now,
             cfg.jasda.announce_horizon,
         ) {
-            Some(w) => w,
+            Some(i) => candidates[i],
             None => {
                 now += period;
                 continue;

@@ -14,6 +14,12 @@
 //!   bid pool and a cross-window reconciliation step that keeps a job
 //!   from holding overlapping reservations on different slices. The
 //!   default K = 1 is bit-identical to the paper's single-window loop.
+//!   Since §Perf iteration 2 the loop runs as an amortized-incremental
+//!   pipeline: candidate windows come off the cluster's persistent gap
+//!   indexes, variant generation reuses shape-keyed plans through a
+//!   bidder index, and the generate/score/WIS stages fan out across
+//!   worker threads (`jasda.parallel`) while the reconciliation merge
+//!   stays sequential — outcomes are bit-identical at any thread count.
 
 pub mod calibration;
 pub mod clearing;

@@ -22,17 +22,44 @@
 //!    reservations on different slices (atomicity, §4.1).
 //! 5. **Commit and advance** (§3.5): selected variants become engine
 //!    commitments; ex-post verification feeds back on completion.
+//!
+//! # Pipeline structure (§Perf iteration 2)
+//!
+//! One iteration is organized as an amortized-incremental pipeline over
+//! scheduler-owned scratch buffers ([`IterScratch`]) — the steady state
+//! allocates nothing on the candidate/pool/scoring paths:
+//!
+//! * **Announce** reads candidate windows straight off the cluster's
+//!   per-slice gap indexes into a reused buffer; the repack trigger is a
+//!   gap-index residue count instead of a per-slice `idle_gaps`
+//!   re-enumeration.
+//! * **Generate** consults a *bidder index* (jobs pre-screened by the
+//!   memory-floor capacity-class precondition) and a per-iteration
+//!   *plan cache* keyed by window shape `(c_k, speed, Δt)`, so identical
+//!   window shapes never re-run chunk sizing or FMP discretization; the
+//!   remaining plan misses fan out across worker threads.
+//! * **Score** runs the one batched pass into a reused output, with the
+//!   row space chunked across threads (rows are independent).
+//! * **Clear** solves each announced window's WIS speculatively in
+//!   parallel, then performs the cross-window reconciliation merge
+//!   *sequentially in announcement order*; a window whose eligible pool
+//!   was touched by an earlier window's acceptances re-solves on the
+//!   filtered pool, exactly like the sequential path.
+//!
+//! Every fan-out stage is bit-identical to its serial form (unit- and
+//! property-tested), so `jasda.parallel` is purely a latency knob.
 
 use crate::config::JasdaConfig;
 use crate::jasda::calibration::Calibration;
-use crate::jasda::clearing::{select_best_compatible, WisItem};
-use crate::jasda::scoring::{NativeScorer, ScoreBatch, ScorerBackend};
+use crate::jasda::clearing::{select_best_compatible, WisItem, WisSolution};
+use crate::jasda::scoring::{NativeScorer, ScoreBatch, ScoreOutput, ScorerBackend};
 use crate::jasda::window::WindowSelector;
-use crate::job::variants::{generate_variants, Variant};
+use crate::job::variants::{plan_chunks, stamp_variants, PlannedChunk, Variant};
 use crate::job::JobSet;
 use crate::mig::{Cluster, Window};
 use crate::sim::{Commitment, Rng, Scheduler, SubjobRecord};
 use crate::types::{Interval, JobId, SliceId, Time};
+use std::collections::HashMap;
 
 /// Internal counters exposed through [`Scheduler::stats`].
 #[derive(Debug, Default, Clone)]
@@ -55,6 +82,139 @@ struct JasdaStats {
     clearing_ns: u64,
     max_pool: usize,
     repack_iterations: u64,
+    /// (job, window) generation calls answered from the per-iteration
+    /// plan cache instead of a fresh plan.
+    plan_cache_hits: u64,
+    /// (job, window) generation calls skipped by the bidder index's
+    /// memory-floor precondition.
+    bidders_skipped: u64,
+    /// Windows whose speculative WIS solution was discarded because an
+    /// earlier window's acceptances touched their eligible pool.
+    wis_replays: u64,
+}
+
+/// One bidder's entry in the per-iteration bidder index.
+#[derive(Debug, Clone, Copy)]
+struct BidderEntry {
+    job: JobId,
+    /// Lower bound on the job's mean memory from its work cursor on
+    /// ([`crate::trp::Trp::min_mem_gb_from`]). A slice whose capacity is
+    /// below this floor cannot receive an eligible variant (every FMP
+    /// bin mean exceeds the capacity, so the violation probability is at
+    /// least 0.5), letting bid collection skip the job for that window
+    /// outright whenever `theta < 0.5`.
+    mem_floor: f64,
+}
+
+/// Plan-cache key: (job, capacity bits, speed bits, Δt) — the window
+/// shape of [`plan_chunks`]. Bit-exact float keys: shapes repeat only
+/// when the slice profile values are identical.
+type PlanKey = (JobId, u64, u64, u64);
+
+/// Scheduler-owned scratch buffers, reused across iterations so the hot
+/// loop performs no steady-state allocation on the candidate, pool,
+/// scoring, or reconciliation paths.
+#[derive(Default)]
+struct IterScratch {
+    /// Candidate windows (refilled from the cluster gap indexes).
+    candidates: Vec<Window>,
+    /// Windows announced this iteration.
+    announced: Vec<Window>,
+    /// Union bid pool.
+    pool: Vec<Variant>,
+    /// Contiguous `[start, end)` row range of each announced window's
+    /// bids within `pool`.
+    window_rows: Vec<(usize, usize)>,
+    /// Bidder index, rebuilt each iteration (capacity retained).
+    bidders: Vec<BidderEntry>,
+    /// Per-iteration plan cache keyed by window shape.
+    plans: HashMap<PlanKey, Vec<PlannedChunk>>,
+    /// Plan-cache misses of the current window: (bidder slot, key).
+    to_plan: Vec<(usize, PlanKey)>,
+    /// Freshly computed plans aligned with `to_plan`.
+    planned: Vec<Vec<PlannedChunk>>,
+    /// Reused scoring batch and output.
+    batch: ScoreBatch,
+    scored: ScoreOutput,
+    /// Per-window WIS items and their pool-row mapping.
+    items: Vec<Vec<WisItem>>,
+    item_rows: Vec<Vec<usize>>,
+    /// Speculative per-window WIS solutions.
+    solutions: Vec<WisSolution>,
+    /// Accepted (job, interval, work range) tuples for reconciliation.
+    accepted: Vec<(JobId, Interval, f64, f64)>,
+    /// Filtered WIS input for conflict replays.
+    replay_items: Vec<WisItem>,
+    replay_rows: Vec<usize>,
+}
+
+/// Bidders per worker below which plan fan-out is not worth a spawn.
+const MIN_PLANS_PER_THREAD: usize = 8;
+/// Eligible items across windows below which speculative parallel WIS
+/// is not worth the fan-out.
+const MIN_WIS_ITEMS_FOR_FANOUT: usize = 64;
+
+/// Workers to use for `work` items given a thread budget and a minimum
+/// batch per worker (always at least 1).
+fn workers_for(budget: usize, work: usize, min_per: usize) -> usize {
+    budget.min(work / min_per.max(1)).max(1)
+}
+
+/// Cross-window reconciliation predicate (§4.1): true if `v`'s job
+/// already won a temporally overlapping reservation — or an overlapping
+/// work range — earlier in this round.
+fn conflicts_with_accepted(accepted: &[(JobId, Interval, f64, f64)], v: &Variant) -> bool {
+    accepted.iter().any(|&(job, iv, w0, w1)| {
+        job == v.job
+            && (iv.overlaps(&v.interval)
+                || (v.work_offset < w1 - 1e-9 && w0 < v.work_offset + v.work - 1e-9))
+    })
+}
+
+/// Step 4a: fill the reused scoring batch for the union pool. With a
+/// single announced window the batch carries the uniform scalar capacity
+/// (bit-identical to the original single-window path), otherwise per-row
+/// capacities.
+#[allow(clippy::too_many_arguments)]
+fn fill_batch(
+    batch: &mut ScoreBatch,
+    cfg: &JasdaConfig,
+    calibration: Option<&Calibration>,
+    windows: &[Window],
+    pool: &[Variant],
+    window_rows: &[(usize, usize)],
+    jobs: &JobSet,
+    now: Time,
+) {
+    debug_assert_eq!(windows.len(), window_rows.len());
+    batch.clear();
+    batch.t = cfg.fmp_bins;
+    batch.capacity = windows[0].capacity_gb as f32;
+    batch.theta = cfg.theta as f32;
+    batch.lambda = cfg.lambda as f32;
+    let alpha = cfg.alpha.as_array();
+    let beta = cfg.beta.as_array();
+    batch.alpha = [alpha[0] as f32, alpha[1] as f32, alpha[2] as f32, alpha[3] as f32];
+    batch.beta = [beta[0] as f32, beta[1] as f32, beta[2] as f32, beta[3] as f32];
+
+    for v in pool {
+        let job = jobs.get(v.job);
+        let age = if cfg.age_priority { job.age_factor(now, cfg.age_scale) } else { 0.0 };
+        let (trust, hist) = if cfg.calibration {
+            let cal = calibration.expect("calibration initialized");
+            (cal.trust_weight(v.job), cal.hist_avg(v.job))
+        } else {
+            (1.0, 0.0)
+        };
+        let phi = [v.declared.phi[0], v.declared.phi[1], v.declared.phi[2], v.declared.phi[3]];
+        batch.push(&v.fmp.mu, &v.fmp.sigma, phi, [v.sys.util, v.sys.frag, age], trust, hist);
+    }
+    if windows.len() > 1 {
+        for (w, &(start, end)) in windows.iter().zip(window_rows) {
+            batch.row_capacity.extend(std::iter::repeat(w.capacity_gb as f32).take(end - start));
+        }
+        debug_assert_eq!(batch.row_capacity.len(), pool.len());
+    }
 }
 
 /// The JASDA scheduler.
@@ -63,6 +223,9 @@ pub struct JasdaScheduler {
     selector: WindowSelector,
     scorer: Box<dyn ScorerBackend>,
     calibration: Option<Calibration>,
+    /// Resolved worker-thread budget (`cfg.parallel`, 0 = autodetect).
+    threads: usize,
+    scratch: IterScratch,
     stats: JasdaStats,
 }
 
@@ -75,11 +238,18 @@ impl JasdaScheduler {
     /// Build with an explicit scoring backend (e.g. the PJRT artifact).
     pub fn with_scorer(cfg: JasdaConfig, scorer: Box<dyn ScorerBackend>) -> Self {
         cfg.validate().expect("invalid JASDA config");
+        let threads = if cfg.parallel > 0 {
+            cfg.parallel
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        };
         JasdaScheduler {
             cfg,
             selector: WindowSelector::new(),
             scorer,
             calibration: None,
+            threads,
+            scratch: IterScratch::default(),
             stats: JasdaStats::default(),
         }
     }
@@ -110,21 +280,6 @@ impl JasdaScheduler {
         }
     }
 
-    /// Steps 2–3: collect the iteration's bid pool for `window`.
-    /// Pool-local ids are assigned later, over the union pool.
-    fn collect_bids(&mut self, window: &Window, jobs: &mut JobSet) -> Vec<Variant> {
-        let bidder_ids: Vec<JobId> = jobs.bidders().map(|j| j.id).collect();
-        let mut pool = Vec::new();
-        for id in bidder_ids {
-            let vs = generate_variants(jobs.get(id), window, &self.cfg);
-            if !vs.is_empty() {
-                jobs.get_mut(id).bids_submitted += 1;
-                pool.extend(vs);
-            }
-        }
-        pool
-    }
-
     /// How many windows this iteration announces: `announce_k`, or the
     /// number of distinct slices with a candidate in per-slice mode.
     fn announce_target(&self, candidates: &[Window]) -> usize {
@@ -138,67 +293,105 @@ impl JasdaScheduler {
         }
     }
 
-    /// Step 4a: score the union pool with the configured backend.
-    /// `window_rows[w]` is the contiguous `[start, end)` row range of
-    /// window `w`'s bids in `pool` (bids are pooled window by window);
-    /// with a single window the batch carries the uniform scalar capacity
-    /// (bit-identical to the original single-window path), otherwise
-    /// per-row capacities.
-    fn score_pool(
-        &mut self,
-        windows: &[Window],
-        pool: &[Variant],
-        window_rows: &[(usize, usize)],
-        jobs: &JobSet,
-        now: Time,
-    ) -> ScoreBatch {
-        debug_assert_eq!(windows.len(), window_rows.len());
-        let mut batch = ScoreBatch::with_bins(self.cfg.fmp_bins);
-        batch.capacity = windows[0].capacity_gb as f32;
-        batch.theta = self.cfg.theta as f32;
-        batch.lambda = self.cfg.lambda as f32;
-        let alpha = self.cfg.alpha.as_array();
-        let beta = self.cfg.beta.as_array();
-        batch.alpha = [alpha[0] as f32, alpha[1] as f32, alpha[2] as f32, alpha[3] as f32];
-        batch.beta = [beta[0] as f32, beta[1] as f32, beta[2] as f32, beta[3] as f32];
+    /// Steps 2–3 for one announced window: append every bidder's
+    /// variants to the scratch pool (in bidder order — bit-identical to
+    /// per-job `generate_variants`), resolving plans through the bidder
+    /// index and the per-iteration plan cache, and fanning plan misses
+    /// out across worker threads. Returns how many bids were added.
+    fn collect_bids_for_window(&mut self, window: Window, jobs: &mut JobSet) -> usize {
+        let cap_bits = window.capacity_gb.to_bits();
+        let speed_bits = window.speed.to_bits();
+        let delta_t = window.delta_t();
+        // The memory-floor skip is exact only while an over-capacity
+        // mean implies ineligibility, i.e. for theta below the 0.5 a
+        // single over-capacity bin already guarantees.
+        let mem_skip = self.cfg.theta < 0.5;
 
-        for v in pool {
-            let job = jobs.get(v.job);
-            let age = if self.cfg.age_priority {
-                job.age_factor(now, self.cfg.age_scale)
-            } else {
-                0.0
-            };
-            let (trust, hist) = if self.cfg.calibration {
-                let cal = self.calibration.as_ref().expect("calibration initialized");
-                (cal.trust_weight(v.job), cal.hist_avg(v.job))
-            } else {
-                (1.0, 0.0)
-            };
-            let phi = [
-                v.declared.phi[0],
-                v.declared.phi[1],
-                v.declared.phi[2],
-                v.declared.phi[3],
-            ];
-            batch.push(
-                &v.fmp.mu,
-                &v.fmp.sigma,
-                phi,
-                [v.sys.util, v.sys.frag, age],
-                trust,
-                hist,
-            );
-        }
-        if windows.len() > 1 {
-            for (w, &(start, end)) in windows.iter().zip(window_rows) {
-                batch
-                    .row_capacity
-                    .extend(std::iter::repeat(w.capacity_gb as f32).take(end - start));
+        // Phase 1: resolve plans — collect cache misses.
+        self.scratch.to_plan.clear();
+        let mut considered = 0u64;
+        for (slot, b) in self.scratch.bidders.iter().enumerate() {
+            if mem_skip && b.mem_floor > window.capacity_gb {
+                continue;
             }
-            debug_assert_eq!(batch.row_capacity.len(), pool.len());
+            considered += 1;
+            let key = (b.job, cap_bits, speed_bits, delta_t);
+            if !self.scratch.plans.contains_key(&key) {
+                self.scratch.to_plan.push((slot, key));
+            }
         }
-        batch
+        self.stats.plan_cache_hits += considered - self.scratch.to_plan.len() as u64;
+        let misses = self.scratch.to_plan.len();
+        if misses > 0 {
+            self.scratch.planned.clear();
+            self.scratch.planned.resize_with(misses, Vec::new);
+            let workers = workers_for(self.threads, misses, MIN_PLANS_PER_THREAD);
+            if workers <= 1 {
+                for k in 0..misses {
+                    let slot = self.scratch.to_plan[k].0;
+                    let job = jobs.get(self.scratch.bidders[slot].job);
+                    self.scratch.planned[k] = plan_chunks(
+                        job,
+                        &self.cfg,
+                        window.capacity_gb,
+                        window.speed,
+                        delta_t,
+                    );
+                }
+            } else {
+                let cfg = &self.cfg;
+                let bidders = &self.scratch.bidders;
+                let to_plan = &self.scratch.to_plan;
+                let jobs_ref = &*jobs;
+                let chunk = (misses + workers - 1) / workers;
+                std::thread::scope(|scope| {
+                    let mut rest = self.scratch.planned.as_mut_slice();
+                    let mut start = 0usize;
+                    while start < misses {
+                        let len = chunk.min(misses - start);
+                        let (out_chunk, r) = rest.split_at_mut(len);
+                        let keys = &to_plan[start..start + len];
+                        scope.spawn(move || {
+                            for (out, &(slot, _)) in out_chunk.iter_mut().zip(keys) {
+                                let job = jobs_ref.get(bidders[slot].job);
+                                *out = plan_chunks(
+                                    job,
+                                    cfg,
+                                    window.capacity_gb,
+                                    window.speed,
+                                    delta_t,
+                                );
+                            }
+                        });
+                        rest = r;
+                        start += len;
+                    }
+                });
+            }
+            for k in 0..misses {
+                let key = self.scratch.to_plan[k].1;
+                let plan = std::mem::take(&mut self.scratch.planned[k]);
+                self.scratch.plans.insert(key, plan);
+            }
+        }
+
+        // Phase 2: stamp plans into the pool in bidder order.
+        let row0 = self.scratch.pool.len();
+        for bi in 0..self.scratch.bidders.len() {
+            let b = self.scratch.bidders[bi];
+            if mem_skip && b.mem_floor > window.capacity_gb {
+                self.stats.bidders_skipped += 1;
+                continue;
+            }
+            let key = (b.job, cap_bits, speed_bits, delta_t);
+            let plan = &self.scratch.plans[&key];
+            if plan.is_empty() {
+                continue;
+            }
+            stamp_variants(jobs.get(b.job), &window, &self.cfg, plan, &mut self.scratch.pool);
+            jobs.get_mut(b.job).bids_submitted += 1;
+        }
+        self.scratch.pool.len() - row0
     }
 }
 
@@ -218,27 +411,22 @@ impl Scheduler for JasdaScheduler {
         self.ensure_calibration(jobs.len());
 
         let from = now + self.cfg.announce_lead;
-        let mut candidates =
-            cluster.candidate_windows(from, self.cfg.announce_horizon, self.cfg.tau_min);
+        cluster.collect_windows(
+            from,
+            self.cfg.announce_horizon,
+            self.cfg.tau_min,
+            &mut self.scratch.candidates,
+        );
         // Rolling repack (§3.5): the paper triggers a defragmentation
         // step "when residual gaps become too small for further
         // allocation". We count idle residues shorter than τ_min across
         // the announce horizon (they can never be allocated); when
         // several have accumulated, announcements are redirected to the
-        // most fragmented slice so bids consolidate its gaps.
+        // most fragmented slice so bids consolidate its gaps. The count
+        // comes straight off the per-slice gap indexes.
         let policy = if self.cfg.repack {
             let to = now.saturating_add(self.cfg.announce_horizon);
-            let unusable: usize = cluster
-                .slices()
-                .iter()
-                .map(|s| {
-                    s.timeline
-                        .idle_gaps(now, to, 1)
-                        .iter()
-                        .filter(|g| g.interval.len() < self.cfg.tau_min)
-                        .count()
-                })
-                .sum();
+            let unusable = cluster.count_unusable_residues(now, to, self.cfg.tau_min);
             if unusable >= 3 {
                 self.stats.repack_iterations += 1;
                 crate::config::WindowPolicy::FragmentationAware
@@ -249,69 +437,84 @@ impl Scheduler for JasdaScheduler {
             self.cfg.window_policy
         };
 
+        // Bidder index: who can bid this round, with the memory-floor
+        // capacity class used to skip whole (job, window) pairs.
+        self.scratch.bidders.clear();
+        for j in jobs.bidders() {
+            let mem_floor = j.trp.min_mem_gb_from(j.work_cursor());
+            self.scratch.bidders.push(BidderEntry { job: j.id, mem_floor });
+        }
+        self.scratch.plans.clear();
+
         // Step 1–3: announce up to K windows, pooling each window's bids
-        // as it is announced. A window that draws no bids at all (the
-        // "sparsity" failure mode of §5.1(a)) is removed by index — O(1)
-        // via swap_remove, the policies' total tie-broken orderings make
-        // selection order-independent — and the next candidate is tried,
-        // so a policy like earliest-start cannot livelock on a slice no
+        // as it is announced. The selector returns the pick's index, so
+        // removal is a direct O(1) swap_remove (the policies' total
+        // tie-broken orderings make selection order-independent). A
+        // window that draws no bids at all (the "sparsity" failure mode
+        // of §5.1(a)) is skipped and the next candidate is tried, so a
+        // policy like earliest-start cannot livelock on a slice no
         // waiting job fits. Cost stays bounded by the candidate count.
-        let k_target = self.announce_target(&candidates);
-        let mut announced: Vec<Window> = Vec::new();
-        let mut pool: Vec<Variant> = Vec::new();
-        // Contiguous [start, end) row range of each announced window's
-        // bids within `pool`.
-        let mut window_rows: Vec<(usize, usize)> = Vec::new();
-        while announced.len() < k_target {
-            let window = match self.selector.select(
+        let k_target = self.announce_target(&self.scratch.candidates);
+        self.scratch.announced.clear();
+        self.scratch.pool.clear();
+        self.scratch.window_rows.clear();
+        while self.scratch.announced.len() < k_target {
+            let idx = match self.selector.select(
                 policy,
-                &candidates,
+                &self.scratch.candidates,
                 cluster,
                 now,
                 self.cfg.announce_horizon,
             ) {
-                Some(w) => w,
+                Some(i) => i,
                 None => break,
             };
-            let pos = candidates
-                .iter()
-                .position(|c| c.slice == window.slice && c.interval == window.interval)
-                .expect("selected window originates from the candidate list");
-            candidates.swap_remove(pos);
+            let window = self.scratch.candidates.swap_remove(idx);
 
-            let bids = self.collect_bids(&window, jobs);
-            if bids.is_empty() {
+            let row0 = self.scratch.pool.len();
+            let added = self.collect_bids_for_window(window, jobs);
+            if added == 0 {
                 // Silent window: skip it; it is not a real announcement.
                 self.stats.windows_silent += 1;
                 continue;
             }
             self.stats.windows_announced += 1;
-            let row0 = pool.len();
-            pool.extend(bids);
-            window_rows.push((row0, pool.len()));
+            self.scratch.window_rows.push((row0, self.scratch.pool.len()));
             if self.cfg.announce_per_slice {
                 // One window per slice: further candidates on this slice
                 // are out of this round.
                 let slice = window.slice;
-                candidates.retain(|c| c.slice != slice);
+                self.scratch.candidates.retain(|c| c.slice != slice);
             }
-            announced.push(window);
+            self.scratch.announced.push(window);
         }
-        if announced.is_empty() {
+        if self.scratch.announced.is_empty() {
             return vec![];
         }
-        for (i, v) in pool.iter_mut().enumerate() {
+        for (i, v) in self.scratch.pool.iter_mut().enumerate() {
             v.id = i as u32;
         }
         self.stats.iterations_with_bids += 1;
-        self.stats.variants_submitted += pool.len() as u64;
-        self.stats.max_pool = self.stats.max_pool.max(pool.len());
+        self.stats.variants_submitted += self.scratch.pool.len() as u64;
+        self.stats.max_pool = self.stats.max_pool.max(self.scratch.pool.len());
 
         // Step 4a: one batched composite-scoring pass across all windows
-        // (Eq. (4) + calibration + age; per-row capacities when K > 1).
+        // (Eq. (4) + calibration + age; per-row capacities when K > 1),
+        // into the reused output, row space chunked across the budget.
         let t0 = std::time::Instant::now();
-        let batch = self.score_pool(&announced, &pool, &window_rows, jobs, now);
-        let out = self.scorer.score(&batch).expect("scoring backend failed");
+        fill_batch(
+            &mut self.scratch.batch,
+            &self.cfg,
+            self.calibration.as_ref(),
+            &self.scratch.announced,
+            &self.scratch.pool,
+            &self.scratch.window_rows,
+            jobs,
+            now,
+        );
+        self.scorer
+            .score_into(&self.scratch.batch, &mut self.scratch.scored, self.threads)
+            .expect("scoring backend failed");
         self.stats.scoring_ns += t0.elapsed().as_nanos() as u64;
 
         // Step 4b: optimal per-window clearing (WIS) with cross-window
@@ -323,39 +526,36 @@ impl Scheduler for JasdaScheduler {
         // chunk [cursor, cursor+w) on two slices and the second
         // reservation would execute no work while still blocking its
         // slice. Windows clear in announcement order (= policy
-        // preference order); conflicting variants are filtered *before*
-        // this window's WIS, so the window still optimizes over
-        // everything that can actually commit instead of silently
-        // losing its winners. With one announced window the filter never
-        // fires — K=1 stays bit-identical to the single-window path.
+        // preference order).
+        //
+        // Parallel form: each window's WIS is solved speculatively over
+        // its *unfiltered* eligible items; the merge then walks windows
+        // sequentially in announcement order. A window none of whose
+        // eligible items conflict with earlier acceptances has a
+        // filtered pool identical to the unfiltered one, so its
+        // speculative solution is exact; otherwise the solution is
+        // discarded and re-solved on the filtered pool — exactly the
+        // sequential algorithm. With one announced window the filter
+        // never fires — K=1 stays bit-identical to the single-window
+        // path.
         let t1 = std::time::Instant::now();
-        let mut commitments: Vec<Commitment> = Vec::new();
-        // Per accepted variant: (job, execution interval, work range
-        // [w0, w1) relative to the job's cursor).
-        let mut accepted: Vec<(JobId, Interval, f64, f64)> = Vec::new();
-        let mut items: Vec<WisItem> = Vec::new();
-        let mut item_to_pool: Vec<usize> = Vec::new();
-        for (widx, window) in announced.iter().enumerate() {
-            items.clear();
-            item_to_pool.clear();
+        let n_windows = self.scratch.announced.len();
+        if self.scratch.items.len() < n_windows {
+            self.scratch.items.resize_with(n_windows, Vec::new);
+            self.scratch.item_rows.resize_with(n_windows, Vec::new);
+        }
+        let mut total_items = 0usize;
+        for widx in 0..n_windows {
+            self.scratch.items[widx].clear();
+            self.scratch.item_rows[widx].clear();
+            let window = self.scratch.announced[widx];
             let wlen = window.delta_t().max(1) as f64;
-            let (row0, row1) = window_rows[widx];
+            let (row0, row1) = self.scratch.window_rows[widx];
             for i in row0..row1 {
-                let v = &pool[i];
-                if !out.eligible[i] || out.score[i] <= 0.0 {
+                if !self.scratch.scored.eligible[i] || self.scratch.scored.score[i] <= 0.0 {
                     continue;
                 }
-                if !accepted.is_empty()
-                    && accepted.iter().any(|&(job, iv, w0, w1)| {
-                        job == v.job
-                            && (iv.overlaps(&v.interval)
-                                || (v.work_offset < w1 - 1e-9
-                                    && w0 < v.work_offset + v.work - 1e-9))
-                    })
-                {
-                    self.stats.cross_window_conflicts += 1;
-                    continue;
-                }
+                let v = &self.scratch.pool[i];
                 // Optional duration weighting (EXPERIMENTS.md F6): under
                 // the paper's plain sum objective, many short variants
                 // dominate few long ones; weighting by window share makes
@@ -365,25 +565,122 @@ impl Scheduler for JasdaScheduler {
                 } else {
                     1.0
                 };
-                items.push(WisItem { interval: v.interval, score: out.score[i] as f64 * w });
-                item_to_pool.push(i);
-            }
-            self.stats.variants_eligible += items.len() as u64;
-            let sol = select_best_compatible(&items);
-            for &k in &sol.selected {
-                let i = item_to_pool[k];
-                let v = &pool[i];
-                accepted.push((v.job, v.interval, v.work_offset, v.work_offset + v.work));
-                self.stats.variants_selected += 1;
-                commitments.push(Commitment {
-                    job: v.job,
-                    slice: v.slice,
+                self.scratch.items[widx].push(WisItem {
                     interval: v.interval,
-                    work: v.work,
-                    declared_phi: v.declared.phi,
-                    score: out.score[i] as f64,
-                    window_len: window.delta_t(),
+                    score: self.scratch.scored.score[i] as f64 * w,
                 });
+                self.scratch.item_rows[widx].push(i);
+            }
+            total_items += self.scratch.items[widx].len();
+        }
+
+        // Speculative fan-out across windows.
+        let speculate =
+            self.threads > 1 && n_windows >= 2 && total_items >= MIN_WIS_ITEMS_FOR_FANOUT;
+        if speculate {
+            self.scratch.solutions.clear();
+            self.scratch
+                .solutions
+                .resize_with(n_windows, || WisSolution { selected: vec![], total_score: 0.0 });
+            let items = &self.scratch.items[..n_windows];
+            let workers = workers_for(self.threads, n_windows, 1);
+            let chunk = (n_windows + workers - 1) / workers;
+            std::thread::scope(|scope| {
+                let mut rest = self.scratch.solutions.as_mut_slice();
+                let mut start = 0usize;
+                while start < n_windows {
+                    let len = chunk.min(n_windows - start);
+                    let (sols, r) = rest.split_at_mut(len);
+                    let window_items = &items[start..start + len];
+                    scope.spawn(move || {
+                        for (sol, wi) in sols.iter_mut().zip(window_items) {
+                            *sol = select_best_compatible(wi);
+                        }
+                    });
+                    rest = r;
+                    start += len;
+                }
+            });
+        }
+
+        // Sequential reconciliation merge in announcement order.
+        let mut commitments: Vec<Commitment> = Vec::new();
+        self.scratch.accepted.clear();
+        let mut fallback = WisSolution { selected: vec![], total_score: 0.0 };
+        for widx in 0..n_windows {
+            let window = self.scratch.announced[widx];
+            let mut n_conflicts = 0u64;
+            if !self.scratch.accepted.is_empty() {
+                for &i in &self.scratch.item_rows[widx] {
+                    if conflicts_with_accepted(&self.scratch.accepted, &self.scratch.pool[i]) {
+                        n_conflicts += 1;
+                    }
+                }
+            }
+            self.stats.cross_window_conflicts += n_conflicts;
+
+            if n_conflicts == 0 {
+                if !speculate {
+                    fallback = select_best_compatible(&self.scratch.items[widx]);
+                }
+                let sol =
+                    if speculate { &self.scratch.solutions[widx] } else { &fallback };
+                self.stats.variants_eligible += self.scratch.items[widx].len() as u64;
+                for &sel in &sol.selected {
+                    let i = self.scratch.item_rows[widx][sel];
+                    let v = &self.scratch.pool[i];
+                    self.scratch.accepted.push((
+                        v.job,
+                        v.interval,
+                        v.work_offset,
+                        v.work_offset + v.work,
+                    ));
+                    self.stats.variants_selected += 1;
+                    commitments.push(Commitment {
+                        job: v.job,
+                        slice: v.slice,
+                        interval: v.interval,
+                        work: v.work,
+                        declared_phi: v.declared.phi,
+                        score: self.scratch.scored.score[i] as f64,
+                        window_len: window.delta_t(),
+                    });
+                }
+            } else {
+                // Replay on the filtered pool — the sequential path.
+                self.stats.wis_replays += 1;
+                self.scratch.replay_items.clear();
+                self.scratch.replay_rows.clear();
+                for k in 0..self.scratch.item_rows[widx].len() {
+                    let i = self.scratch.item_rows[widx][k];
+                    if conflicts_with_accepted(&self.scratch.accepted, &self.scratch.pool[i]) {
+                        continue;
+                    }
+                    self.scratch.replay_items.push(self.scratch.items[widx][k]);
+                    self.scratch.replay_rows.push(i);
+                }
+                self.stats.variants_eligible += self.scratch.replay_items.len() as u64;
+                let sol = select_best_compatible(&self.scratch.replay_items);
+                for &k in &sol.selected {
+                    let i = self.scratch.replay_rows[k];
+                    let v = &self.scratch.pool[i];
+                    self.scratch.accepted.push((
+                        v.job,
+                        v.interval,
+                        v.work_offset,
+                        v.work_offset + v.work,
+                    ));
+                    self.stats.variants_selected += 1;
+                    commitments.push(Commitment {
+                        job: v.job,
+                        slice: v.slice,
+                        interval: v.interval,
+                        work: v.work,
+                        declared_phi: v.declared.phi,
+                        score: self.scratch.scored.score[i] as f64,
+                        window_len: window.delta_t(),
+                    });
+                }
             }
         }
         self.stats.clearing_ns += t1.elapsed().as_nanos() as u64;
@@ -415,6 +712,10 @@ impl Scheduler for JasdaScheduler {
             ("clearing_ns", self.stats.clearing_ns.into()),
             ("max_pool", self.stats.max_pool.into()),
             ("repack_iterations", self.stats.repack_iterations.into()),
+            ("plan_cache_hits", self.stats.plan_cache_hits.into()),
+            ("bidders_skipped", self.stats.bidders_skipped.into()),
+            ("wis_replays", self.stats.wis_replays.into()),
+            ("threads", (self.threads as u64).into()),
             ("mean_rho", self.mean_rho().into()),
         ])
     }
@@ -571,6 +872,64 @@ mod tests {
         let rho = out.scheduler_stats.get("mean_rho").unwrap().as_f64().unwrap();
         assert!(rho > 0.0 && rho <= 1.0);
         assert!(rho < 1.0, "a misreporting job must dent mean reliability, got {rho}");
+    }
+
+    #[test]
+    fn parallel_pipeline_matches_serial_end_to_end() {
+        // The fan-out stages must not change a single decision: full-run
+        // metrics are compared between a forced-serial scheduler and a
+        // multi-threaded one, across announcement modes.
+        for (k, per_slice) in [(1usize, false), (3, false), (1, true)] {
+            let run = |threads: usize| {
+                let mut c = cfg();
+                c.jasda.announce_k = k;
+                c.jasda.announce_per_slice = per_slice;
+                c.jasda.parallel = threads;
+                let sched = JasdaScheduler::new(c.jasda.clone());
+                SimEngine::new(c, Box::new(sched)).run(jobs(8, 6.0, 2000.0)).metrics
+            };
+            let serial = run(1);
+            let parallel = run(4);
+            assert_eq!(serial.makespan, parallel.makespan, "K={k} per_slice={per_slice}");
+            assert_eq!(
+                serial.total_commits, parallel.total_commits,
+                "K={k} per_slice={per_slice}"
+            );
+            assert_eq!(serial.mean_jct(), parallel.mean_jct(), "K={k} per_slice={per_slice}");
+            assert_eq!(serial.unfinished, 0);
+        }
+    }
+
+    #[test]
+    fn bidder_index_skips_oversized_jobs_and_caches_plans() {
+        // 17 GiB jobs on a balanced layout: the two 10 GiB slices must be
+        // skipped by the memory-floor precondition, and per-slice
+        // announcement over identical window shapes must hit the cache.
+        let mut c = cfg();
+        c.jasda.announce_per_slice = true;
+        let sched = JasdaScheduler::new(c.jasda.clone());
+        let out = SimEngine::new(c, Box::new(sched)).run(jobs(3, 17.0, 1200.0));
+        assert_eq!(out.metrics.unfinished, 0);
+        let g = |k: &str| out.scheduler_stats.get(k).unwrap().as_u64().unwrap();
+        assert!(g("bidders_skipped") > 0, "memory floor must skip 10 GiB slices");
+        let stats = &out.scheduler_stats;
+        assert!(stats.get("plan_cache_hits").is_some());
+        assert!(stats.get("wis_replays").is_some());
+    }
+
+    #[test]
+    fn plan_cache_hits_on_identical_slices() {
+        // seven_small: 7 identical 1g.5gb slices. With per-slice
+        // announcement the 7 idle windows share one shape, so each
+        // bidder plans once and stamps 7 times.
+        let mut c = cfg();
+        c.cluster.layout = "7x1g".into();
+        c.jasda.announce_per_slice = true;
+        let sched = JasdaScheduler::new(c.jasda.clone());
+        let out = SimEngine::new(c, Box::new(sched)).run(jobs(6, 3.0, 1500.0));
+        assert_eq!(out.metrics.unfinished, 0);
+        let g = |k: &str| out.scheduler_stats.get(k).unwrap().as_u64().unwrap();
+        assert!(g("plan_cache_hits") > 0, "identical slices must share plans");
     }
 
     #[test]

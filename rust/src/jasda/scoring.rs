@@ -92,6 +92,19 @@ impl ScoreBatch {
         self.m == 0
     }
 
+    /// Reset the batch for reuse (keeps `t`, the policy scalars, and all
+    /// allocated capacity) — the scheduler's scratch-buffer path.
+    pub fn clear(&mut self) {
+        self.m = 0;
+        self.mu.clear();
+        self.sigma.clear();
+        self.phi.clear();
+        self.psi.clear();
+        self.trust.clear();
+        self.hist.clear();
+        self.row_capacity.clear();
+    }
+
     /// Capacity row `i` is scored against: the per-row value when the
     /// batch spans several windows, else the uniform scalar.
     #[inline]
@@ -117,6 +130,20 @@ pub struct ScoreOutput {
     pub eligible: Vec<bool>,
 }
 
+impl ScoreOutput {
+    /// Size all lanes for `m` rows, reusing allocated capacity.
+    pub fn resize(&mut self, m: usize) {
+        self.score.clear();
+        self.score.resize(m, 0.0);
+        self.violation.clear();
+        self.violation.resize(m, 0.0);
+        self.headroom.clear();
+        self.headroom.resize(m, 0.0);
+        self.eligible.clear();
+        self.eligible.resize(m, false);
+    }
+}
+
 /// A scoring backend: either the native mirror or the PJRT-executed
 /// AOT artifact (see `runtime::PjrtScorer`).
 pub trait ScorerBackend {
@@ -124,6 +151,21 @@ pub trait ScorerBackend {
     fn name(&self) -> &str;
     /// Score a batch.
     fn score(&mut self, batch: &ScoreBatch) -> anyhow::Result<ScoreOutput>;
+    /// Score a batch into a reusable output buffer, with a worker-thread
+    /// budget (`threads <= 1` = serial). Rows are independent, so
+    /// backends that honor the budget produce bit-identical results at
+    /// any thread count; backends with their own execution model may
+    /// ignore it. Default: delegate to [`ScorerBackend::score`].
+    fn score_into(
+        &mut self,
+        batch: &ScoreBatch,
+        out: &mut ScoreOutput,
+        threads: usize,
+    ) -> anyhow::Result<()> {
+        let _ = threads;
+        *out = self.score(batch)?;
+        Ok(())
+    }
 }
 
 /// erf via Abramowitz–Stegun 7.1.26 in f32 — the *same* polynomial the
@@ -155,76 +197,143 @@ pub fn normal_cdf_f32(x: f32) -> f32 {
 #[derive(Debug, Default)]
 pub struct NativeScorer;
 
+/// Shape validation shared by the scoring entry points.
+fn validate_batch(b: &ScoreBatch) -> anyhow::Result<()> {
+    let (m, t) = (b.m, b.t);
+    anyhow::ensure!(b.mu.len() == m * t, "mu shape mismatch");
+    anyhow::ensure!(b.sigma.len() == m * t, "sigma shape mismatch");
+    anyhow::ensure!(b.phi.len() == m * 4 && b.psi.len() == m * 3, "feature shape mismatch");
+    anyhow::ensure!(b.trust.len() == m && b.hist.len() == m, "calibration shape mismatch");
+    anyhow::ensure!(
+        b.row_capacity.is_empty() || b.row_capacity.len() == m,
+        "row_capacity must be empty or length m"
+    );
+    Ok(())
+}
+
+/// Score rows `rows` of a (validated) batch into output slices indexed
+/// relative to `rows.start`. Every row is computed by exactly the serial
+/// pipeline's arithmetic; parallel callers hand disjoint row chunks to
+/// worker threads and results stay bit-identical at any thread count.
+pub fn score_rows_into(
+    b: &ScoreBatch,
+    rows: std::ops::Range<usize>,
+    score: &mut [f32],
+    violation: &mut [f32],
+    headroom_out: &mut [f32],
+    eligible_out: &mut [bool],
+) {
+    let t = b.t;
+    for (k, i) in rows.enumerate() {
+        let c = b.capacity_of(i);
+        let inv_c = 1.0 / c;
+        let row = i * t;
+        // 1) safety. The survival product Π Φ(z_t) is accumulated
+        // directly in f64 instead of summing f32 logs: mathematically
+        // identical (Φ is clamped ≥ 1e-12, so 64 bins bottom out at
+        // 1e-768 ≫ f64::MIN_POSITIVE), and it removes one `ln` per
+        // bin from the hot loop (§Perf iteration 1).
+        let mut surv = 1.0f64;
+        let mut head = 0.0f32;
+        let mus = &b.mu[row..row + t];
+        let sigmas = &b.sigma[row..row + t];
+        for (&mu, &sigma) in mus.iter().zip(sigmas) {
+            let gap = c - mu;
+            let sig = sigma.max(SIGMA_EPS);
+            // Deep-safe shortcut (§Perf iteration 2): Φ(z) ≥ 1−4e-9
+            // for z ≥ 6, so the factor is 1.0 to beyond f32
+            // precision — skip the erf. Most bins of healthy
+            // variants take this branch.
+            if gap < 6.0 * sig {
+                surv *= normal_cdf_f32(gap / sig) as f64;
+            }
+            head += (gap * inv_c).clamp(0.0, 1.0);
+        }
+        let viol = ((1.0 - surv) as f32).clamp(0.0, 1.0);
+        let headroom = head / t as f32;
+
+        // 2) calibrated job utility.
+        let phi = &b.phi[i * 4..i * 4 + 4];
+        let h_tilde: f32 = (0..4).map(|j| b.alpha[j] * phi[j]).sum();
+        let trust = b.trust[i];
+        let h_cal = trust * h_tilde + (1.0 - trust) * b.hist[i];
+
+        // 3) system utility with in-pipeline headroom.
+        let psi = &b.psi[i * 3..i * 3 + 3];
+        let f_sys =
+            b.beta[0] * psi[0] + b.beta[1] * headroom + b.beta[2] * psi[1] + b.beta[3] * psi[2];
+
+        // 4) composite + eligibility gating.
+        let s = b.lambda * h_cal + (1.0 - b.lambda) * f_sys;
+        let eligible = viol <= b.theta;
+        violation[k] = viol;
+        headroom_out[k] = headroom;
+        eligible_out[k] = eligible;
+        score[k] = if eligible { s.clamp(0.0, 1.0) } else { 0.0 };
+    }
+}
+
+/// Rows below which a worker thread is not worth its spawn cost.
+const PAR_MIN_ROWS_PER_THREAD: usize = 256;
+
 impl ScorerBackend for NativeScorer {
     fn name(&self) -> &str {
         "native"
     }
 
     fn score(&mut self, b: &ScoreBatch) -> anyhow::Result<ScoreOutput> {
-        let (m, t) = (b.m, b.t);
-        anyhow::ensure!(b.mu.len() == m * t, "mu shape mismatch");
-        anyhow::ensure!(b.sigma.len() == m * t, "sigma shape mismatch");
-        anyhow::ensure!(b.phi.len() == m * 4 && b.psi.len() == m * 3, "feature shape mismatch");
-        anyhow::ensure!(b.trust.len() == m && b.hist.len() == m, "calibration shape mismatch");
-        anyhow::ensure!(
-            b.row_capacity.is_empty() || b.row_capacity.len() == m,
-            "row_capacity must be empty or length m"
-        );
-
-        let mut out = ScoreOutput {
-            score: vec![0.0; m],
-            violation: vec![0.0; m],
-            headroom: vec![0.0; m],
-            eligible: vec![false; m],
-        };
-        for i in 0..m {
-            let c = b.capacity_of(i);
-            let inv_c = 1.0 / c;
-            let row = i * t;
-            // 1) safety. The survival product Π Φ(z_t) is accumulated
-            // directly in f64 instead of summing f32 logs: mathematically
-            // identical (Φ is clamped ≥ 1e-12, so 64 bins bottom out at
-            // 1e-768 ≫ f64::MIN_POSITIVE), and it removes one `ln` per
-            // bin from the hot loop (§Perf iteration 1).
-            let mut surv = 1.0f64;
-            let mut head = 0.0f32;
-            let mus = &b.mu[row..row + t];
-            let sigmas = &b.sigma[row..row + t];
-            for (&mu, &sigma) in mus.iter().zip(sigmas) {
-                let gap = c - mu;
-                let sig = sigma.max(SIGMA_EPS);
-                // Deep-safe shortcut (§Perf iteration 2): Φ(z) ≥ 1−4e-9
-                // for z ≥ 6, so the factor is 1.0 to beyond f32
-                // precision — skip the erf. Most bins of healthy
-                // variants take this branch.
-                if gap < 6.0 * sig {
-                    surv *= normal_cdf_f32(gap / sig) as f64;
-                }
-                head += (gap * inv_c).clamp(0.0, 1.0);
-            }
-            let viol = ((1.0 - surv) as f32).clamp(0.0, 1.0);
-            let headroom = head / t as f32;
-
-            // 2) calibrated job utility.
-            let phi = &b.phi[i * 4..i * 4 + 4];
-            let h_tilde: f32 = (0..4).map(|j| b.alpha[j] * phi[j]).sum();
-            let trust = b.trust[i];
-            let h_cal = trust * h_tilde + (1.0 - trust) * b.hist[i];
-
-            // 3) system utility with in-pipeline headroom.
-            let psi = &b.psi[i * 3..i * 3 + 3];
-            let f_sys =
-                b.beta[0] * psi[0] + b.beta[1] * headroom + b.beta[2] * psi[1] + b.beta[3] * psi[2];
-
-            // 4) composite + eligibility gating.
-            let score = b.lambda * h_cal + (1.0 - b.lambda) * f_sys;
-            let eligible = viol <= b.theta;
-            out.violation[i] = viol;
-            out.headroom[i] = headroom;
-            out.eligible[i] = eligible;
-            out.score[i] = if eligible { score.clamp(0.0, 1.0) } else { 0.0 };
-        }
+        let mut out = ScoreOutput::default();
+        self.score_into(b, &mut out, 1)?;
         Ok(out)
+    }
+
+    fn score_into(
+        &mut self,
+        b: &ScoreBatch,
+        out: &mut ScoreOutput,
+        threads: usize,
+    ) -> anyhow::Result<()> {
+        validate_batch(b)?;
+        let m = b.m;
+        out.resize(m);
+        let workers = threads.min(m / PAR_MIN_ROWS_PER_THREAD.max(1)).max(1);
+        if workers <= 1 {
+            score_rows_into(
+                b,
+                0..m,
+                &mut out.score,
+                &mut out.violation,
+                &mut out.headroom,
+                &mut out.eligible,
+            );
+            return Ok(());
+        }
+        // Fan the row space out over `workers` disjoint chunks. Rows are
+        // independent and each is computed by the same arithmetic as the
+        // serial path, so the output is bit-identical.
+        let chunk = (m + workers - 1) / workers;
+        std::thread::scope(|scope| {
+            let mut score_rest = out.score.as_mut_slice();
+            let mut viol_rest = out.violation.as_mut_slice();
+            let mut head_rest = out.headroom.as_mut_slice();
+            let mut elig_rest = out.eligible.as_mut_slice();
+            let mut start = 0usize;
+            while start < m {
+                let len = chunk.min(m - start);
+                let (sc, sr) = score_rest.split_at_mut(len);
+                let (vi, vr) = viol_rest.split_at_mut(len);
+                let (he, hr) = head_rest.split_at_mut(len);
+                let (el, er) = elig_rest.split_at_mut(len);
+                let rows = start..start + len;
+                scope.spawn(move || score_rows_into(b, rows, sc, vi, he, el));
+                score_rest = sr;
+                viol_rest = vr;
+                head_rest = hr;
+                elig_rest = er;
+                start += len;
+            }
+        });
+        Ok(())
     }
 }
 
@@ -360,6 +469,59 @@ mod tests {
         b.capacity = 20.0;
         let out = NativeScorer.score(&b).unwrap();
         assert!(out.eligible[0] && out.eligible[1]);
+    }
+
+    #[test]
+    fn score_into_parallel_is_bit_identical_and_reuses_buffers() {
+        // Large pseudo-random batch: the threaded path must agree with
+        // the serial path on every lane, bit for bit.
+        let mut b = ScoreBatch::with_bins(8);
+        b.capacity = 12.0;
+        b.theta = 0.05;
+        b.lambda = 0.6;
+        b.alpha = [0.45, 0.25, 0.15, 0.15];
+        b.beta = [0.45, 0.2, 0.15, 0.2];
+        let mut state = 0x9E37_79B9_7F4A_7C15u64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            (state >> 11) as f64 / (1u64 << 53) as f64
+        };
+        for _ in 0..1536 {
+            let base = 2.0 + 12.0 * next();
+            let mu: Vec<f64> = (0..8).map(|_| base + next() - 0.5).collect();
+            let sigma: Vec<f64> = (0..8).map(|_| 0.05 + next()).collect();
+            b.push(
+                &mu,
+                &sigma,
+                [next(), next(), next(), next()],
+                [next(), next(), next()],
+                next(),
+                next(),
+            );
+        }
+        let serial = NativeScorer.score(&b).unwrap();
+        let mut parallel = ScoreOutput::default();
+        NativeScorer.score_into(&b, &mut parallel, 8).unwrap();
+        assert_eq!(serial, parallel, "threaded scoring diverged from serial");
+        // Buffer reuse: scoring a smaller batch into the same output
+        // shrinks it and still matches.
+        let mut small = ScoreBatch::with_bins(8);
+        small.capacity = 12.0;
+        small.theta = 0.05;
+        small.lambda = 0.6;
+        small.alpha = b.alpha;
+        small.beta = b.beta;
+        small.push(&[4.0; 8], &[0.3; 8], [0.8, 1.0, 0.5, 0.5], [0.7, 1.0, 0.0], 1.0, 0.5);
+        NativeScorer.score_into(&small, &mut parallel, 8).unwrap();
+        assert_eq!(parallel, NativeScorer.score(&small).unwrap());
+        assert_eq!(parallel.score.len(), 1);
+        // Batch reuse: clear() keeps policy scalars and capacity.
+        small.clear();
+        assert!(small.is_empty());
+        assert_eq!(small.t, 8);
+        assert_eq!(small.lambda, 0.6);
     }
 
     #[test]

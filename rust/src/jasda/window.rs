@@ -4,9 +4,9 @@
 //! Each iteration the scheduler announces up to **K** windows
 //! (`announce_k`, default 1 = the paper's prototype; per-slice mode
 //! announces one per free slice). The selector ranks one candidate at a
-//! time in policy order; the scheduler calls it repeatedly, removing
-//! each pick (and, per-slice, the picked slice's remaining candidates)
-//! from the candidate list between calls. Every policy's comparator is a
+//! time in policy order and returns its *index*; the scheduler calls it
+//! repeatedly, `swap_remove`-ing each pick (and, per-slice, the picked
+//! slice's remaining candidates) between calls. Every policy's comparator is a
 //! total order over candidates — ties break on start/length/slice — so
 //! selection is independent of candidate-list order and K=1 reproduces
 //! the single-window loop exactly. The paper's prototype announces the
@@ -18,20 +18,31 @@ use crate::config::WindowPolicy;
 use crate::mig::{Cluster, Window};
 use crate::types::Time;
 
-/// Stateful window selector (round-robin needs a cursor).
+/// Stateful window selector (round-robin needs a cursor; the
+/// fragmentation policy keeps a per-slice scratch buffer so selection
+/// allocates nothing).
 #[derive(Debug, Clone, Default)]
 pub struct WindowSelector {
     rr_cursor: usize,
+    /// Per-slice fragmentation cache for one `select` call
+    /// (fragmentation-aware policy only; NaN = not yet computed).
+    frag_scratch: Vec<f64>,
 }
 
 impl WindowSelector {
     /// Create a selector.
     pub fn new() -> Self {
-        WindowSelector { rr_cursor: 0 }
+        WindowSelector::default()
     }
 
     /// Pick the window to announce from `candidates` (must be non-empty to
     /// return Some). `now`/`horizon` give the fragmentation scoring span.
+    ///
+    /// Returns the *index* of the pick into `candidates`, so the caller
+    /// can remove it with a direct `swap_remove` instead of re-scanning
+    /// the list for the selected window. Every policy's comparator is a
+    /// strict total order over distinct candidates, so the pick is
+    /// independent of candidate-list order.
     pub fn select(
         &mut self,
         policy: WindowPolicy,
@@ -39,74 +50,87 @@ impl WindowSelector {
         cluster: &Cluster,
         now: Time,
         horizon: u64,
-    ) -> Option<Window> {
+    ) -> Option<usize> {
         if candidates.is_empty() {
             return None;
         }
-        let w = match policy {
+        match policy {
             WindowPolicy::EarliestStart => candidates
                 .iter()
-                .min_by(|a, b| {
+                .enumerate()
+                .min_by(|(_, a), (_, b)| {
                     a.interval
                         .start
                         .cmp(&b.interval.start)
                         .then(b.delta_t().cmp(&a.delta_t())) // tie: longer first
                         .then(a.slice.cmp(&b.slice))
                 })
-                .copied(),
+                .map(|(i, _)| i),
             WindowPolicy::LongestFirst => candidates
                 .iter()
-                .max_by(|a, b| {
+                .enumerate()
+                .max_by(|(_, a), (_, b)| {
                     a.delta_t()
                         .cmp(&b.delta_t())
                         .then(b.interval.start.cmp(&a.interval.start))
                         .then(b.slice.cmp(&a.slice))
                 })
-                .copied(),
+                .map(|(i, _)| i),
             WindowPolicy::SlackAware => candidates
                 .iter()
-                .max_by(|a, b| {
+                .enumerate()
+                .max_by(|(_, a), (_, b)| {
                     let sa = a.delta_t() as f64 * a.speed;
                     let sb = b.delta_t() as f64 * b.speed;
                     sa.total_cmp(&sb)
                         .then(b.interval.start.cmp(&a.interval.start))
                         .then(b.slice.cmp(&a.slice))
                 })
-                .copied(),
-            WindowPolicy::FragmentationAware => candidates
-                .iter()
-                .max_by(|a, b| {
-                    let fa = cluster
-                        .slice(a.slice)
-                        .timeline
-                        .fragmentation(now, now.saturating_add(horizon));
-                    let fb = cluster
-                        .slice(b.slice)
-                        .timeline
-                        .fragmentation(now, now.saturating_add(horizon));
-                    fa.total_cmp(&fb)
-                        .then(b.interval.start.cmp(&a.interval.start))
-                        .then(b.slice.cmp(&a.slice))
-                })
-                .copied(),
+                .map(|(i, _)| i),
+            WindowPolicy::FragmentationAware => {
+                // Per-slice fragmentation walks that slice's gap index;
+                // evaluate it once per distinct slice instead of twice
+                // per pairwise comparison, into a reused scratch buffer.
+                let to = now.saturating_add(horizon);
+                self.frag_scratch.clear();
+                self.frag_scratch.resize(cluster.num_slices(), f64::NAN);
+                for w in candidates {
+                    let s = w.slice as usize;
+                    if self.frag_scratch[s].is_nan() {
+                        self.frag_scratch[s] =
+                            cluster.slice(w.slice).timeline.fragmentation(now, to);
+                    }
+                }
+                let frag = &self.frag_scratch;
+                candidates
+                    .iter()
+                    .enumerate()
+                    .max_by(|(_, a), (_, b)| {
+                        frag[a.slice as usize]
+                            .total_cmp(&frag[b.slice as usize])
+                            .then(b.interval.start.cmp(&a.interval.start))
+                            .then(b.slice.cmp(&a.slice))
+                    })
+                    .map(|(i, _)| i)
+            }
             WindowPolicy::RoundRobin => {
                 // Advance over slices until one with a candidate is found.
                 let n_slices = cluster.num_slices();
                 for step in 0..n_slices {
                     let slice = ((self.rr_cursor + step) % n_slices) as u32;
-                    if let Some(w) = candidates
+                    if let Some((i, _)) = candidates
                         .iter()
-                        .filter(|w| w.slice == slice)
-                        .min_by_key(|w| w.interval.start)
+                        .enumerate()
+                        .filter(|(_, w)| w.slice == slice)
+                        .min_by_key(|(_, w)| w.interval.start)
                     {
                         self.rr_cursor = (slice as usize + 1) % n_slices;
-                        return Some(*w);
+                        return Some(i);
                     }
                 }
                 None
             }
-        };
-        w
+        }
     }
 }
 
@@ -143,7 +167,7 @@ mod tests {
         let c = cluster();
         let cands = [w(0, 50, 10, 1.0), w(1, 20, 10, 1.0), w(2, 20, 40, 1.0)];
         let got = s.select(WindowPolicy::EarliestStart, &cands, &c, 0, 1000).unwrap();
-        assert_eq!(got.slice, 2, "tie on start=20 broken by longer window");
+        assert_eq!(cands[got].slice, 2, "tie on start=20 broken by longer window");
     }
 
     #[test]
@@ -152,7 +176,7 @@ mod tests {
         let c = cluster();
         let cands = [w(0, 0, 100, 1.0), w(1, 5, 300, 1.0), w(2, 10, 200, 1.0)];
         let got = s.select(WindowPolicy::LongestFirst, &cands, &c, 0, 1000).unwrap();
-        assert_eq!(got.slice, 1);
+        assert_eq!(cands[got].slice, 1);
     }
 
     #[test]
@@ -162,7 +186,7 @@ mod tests {
         // 100 ticks at speed 1.0 beats 300 ticks at 1/7.
         let cands = [w(0, 0, 300, 1.0 / 7.0), w(1, 0, 100, 1.0)];
         let got = s.select(WindowPolicy::SlackAware, &cands, &c, 0, 1000).unwrap();
-        assert_eq!(got.slice, 1);
+        assert_eq!(cands[got].slice, 1);
     }
 
     #[test]
@@ -181,7 +205,7 @@ mod tests {
         let mut s = WindowSelector::new();
         let got =
             s.select(WindowPolicy::FragmentationAware, &cands, &c, 0, 1000).unwrap();
-        assert_eq!(got.slice, 0);
+        assert_eq!(cands[got].slice, 0);
     }
 
     #[test]
@@ -191,7 +215,10 @@ mod tests {
             [w(0, 0, 100, 1.0), w(2, 0, 100, 1.0), w(5, 0, 100, 1.0)];
         let mut s = WindowSelector::new();
         let picks: Vec<u32> = (0..6)
-            .map(|_| s.select(WindowPolicy::RoundRobin, &cands, &c, 0, 1000).unwrap().slice)
+            .map(|_| {
+                let i = s.select(WindowPolicy::RoundRobin, &cands, &c, 0, 1000).unwrap();
+                cands[i].slice
+            })
             .collect();
         assert_eq!(picks, vec![0, 2, 5, 0, 2, 5]);
     }
@@ -202,6 +229,6 @@ mod tests {
         let cands = [w(0, 500, 100, 1.0), w(0, 100, 100, 1.0)];
         let mut s = WindowSelector::new();
         let got = s.select(WindowPolicy::RoundRobin, &cands, &c, 0, 1000).unwrap();
-        assert_eq!(got.interval.start, 100);
+        assert_eq!(cands[got].interval.start, 100);
     }
 }

@@ -13,13 +13,31 @@
 //! τ_min, and its interval lies inside the announced window. Ineligible
 //! candidates are silently dropped — jobs that can produce nothing stay
 //! silent (§3.2).
+//!
+//! # Plan/stamp split (§Perf iteration 2)
+//!
+//! Generation is factored into two stages so the scheduler can reuse
+//! work across announced windows with the same *shape*:
+//!
+//! 1. [`plan_chunks`] computes everything that depends only on the
+//!    window shape `(c_k, speed, Δt)` and the job's current progress —
+//!    chunk sizing, declared durations, FMP discretization, and the
+//!    safety check. This is the expensive stage (FMP bins per chunk).
+//! 2. [`stamp_variants`] turns a plan into concrete [`Variant`]s for one
+//!    announced window, filling in the position-dependent parts only
+//!    (absolute interval, QoS/locality features, misreporting).
+//!
+//! [`generate_variants`] composes the two, so cached-plan stamping and
+//! one-shot generation run the identical arithmetic and produce
+//! bit-identical variants.
 
 use crate::config::JasdaConfig;
 use crate::job::{utility, Job};
 use crate::mig::Window;
 use crate::trp::math::normal_quantile;
 use crate::trp::Fmp;
-use crate::types::{Interval, JobId, SliceId, Time, VariantId};
+use crate::types::{Duration, Interval, JobId, SliceId, Time, VariantId};
+use std::sync::Arc;
 
 /// The φ feature vector a job declares with a bid, plus its aggregate h̃.
 ///
@@ -64,7 +82,9 @@ pub struct Variant {
     /// generation time (0 for the first chunk of a chain).
     pub work_offset: f64,
     /// Discretized FMP over the chunk (input to the scoring kernel).
-    pub fmp: Fmp,
+    /// Shared with the plan it was stamped from, so re-announcing the
+    /// same window shape never re-discretizes or deep-copies the FMP.
+    pub fmp: Arc<Fmp>,
     /// Job's own safety estimate `Pr(max RAM > c_k | FMP)`.
     pub violation_prob: f64,
     /// Declared job-side features.
@@ -99,21 +119,45 @@ fn psi_frag(leftover: u64, window_len: u64, tau_min: u64) -> f64 {
     (1.0 - wasted as f64 / window_len as f64).clamp(0.0, 1.0)
 }
 
-/// Build one candidate variant for `job` covering `work` starting at
-/// `t_start`, or `None` if it is ineligible.
+/// One chunk of a job's variant plan for a window *shape* — everything
+/// about a candidate variant that does not depend on where the window
+/// sits on the time axis or which slice id it carries. Chunks are
+/// eligible by construction (τ_min, containment, safety vs the shape's
+/// capacity all hold).
+#[derive(Debug, Clone)]
+pub struct PlannedChunk {
+    /// Work chunk (full-GPU tick equivalents).
+    pub work: f64,
+    /// Work-axis offset relative to the job's cursor (0 = first chunk).
+    pub work_offset: f64,
+    /// Start offset from the window start (ticks).
+    pub rel_start: Duration,
+    /// Declared duration Δt̃ (ticks).
+    pub duration: Duration,
+    /// Discretized FMP over the chunk.
+    pub fmp: Arc<Fmp>,
+    /// Job's safety estimate vs the shape's capacity (≤ θ).
+    pub violation_prob: f64,
+}
+
+/// Build one planned chunk covering `work` at `rel_start` ticks into a
+/// window of shape `(capacity_gb, speed, delta_t)`, or `None` if it is
+/// ineligible.
 #[allow(clippy::too_many_arguments)]
-fn make_variant(
+fn plan_chunk(
     job: &Job,
-    window: &Window,
     cfg: &JasdaConfig,
+    capacity_gb: f64,
+    speed: f64,
+    delta_t: Duration,
     work: f64,
     work_offset: f64,
-    t_start: Time,
-) -> Option<Variant> {
+    rel_start: Duration,
+) -> Option<PlannedChunk> {
     if work <= 1e-9 {
         return None;
     }
-    let mut duration = job.trp.predicted_duration(work, window.speed, cfg.duration_quantile);
+    let mut duration = job.trp.predicted_duration(work, speed, cfg.duration_quantile);
     // Eligibility: τ_min and window containment. A chunk that finishes
     // the job's remaining work may round its reservation *up* to τ_min —
     // otherwise a sub-τ_min tail could never be scheduled and the job
@@ -126,54 +170,32 @@ fn make_variant(
             return None;
         }
     }
-    let t_end = t_start.checked_add(duration)?;
-    let interval = Interval::new(t_start, t_end);
-    if !window.interval.contains(&interval) {
+    let rel_end = rel_start.checked_add(duration)?;
+    if rel_end > delta_t {
         return None;
     }
     // Safe-by-construction (§4.1(a)): FMP violation probability ≤ θ.
     let w0 = job.work_cursor() + work_offset;
     let fmp = job.trp.fmp_bins(w0, w0 + work, cfg.fmp_bins);
-    let violation_prob = fmp.violation_prob(window.capacity_gb);
+    let violation_prob = fmp.violation_prob(capacity_gb);
     if violation_prob > cfg.theta {
         return None;
     }
-
-    // Job-side features (honest), then the declared (possibly inflated)
-    // copy the scheduler actually sees.
-    let phi_honest = [
-        utility::phi_jct(work, job.remaining_work() - work_offset),
-        utility::phi_qos(job, t_end),
-        utility::phi_energy(duration, window.speed, window.delta_t()),
-        utility::phi_locality(job, window),
-    ];
-    let phi = utility::misreport(&phi_honest, job.misreport_bias);
-    let h = utility::h_tilde(&cfg.alpha.as_array(), &phi);
-
-    let window_len = window.delta_t();
-    let leftover = window.interval.end.saturating_sub(t_end);
-    let sys = SysFeatures {
-        util: (duration as f64 / window_len as f64).clamp(0.0, 1.0),
-        frag: psi_frag(leftover, window_len, cfg.tau_min),
-    };
-
-    Some(Variant {
-        id: 0, // assigned at pool assembly
-        job: job.id,
-        slice: window.slice,
-        interval,
+    Some(PlannedChunk {
         work,
         work_offset,
-        fmp,
+        rel_start,
+        duration,
+        fmp: Arc::new(fmp),
         violation_prob,
-        declared: DeclaredFeatures { phi_honest, phi, h_tilde: h },
-        sys,
     })
 }
 
-/// Generate the job's eligible variant portfolio for an announced window
-/// (paper §3.2 "GenerateVariants"). Returns an empty vec when the job
-/// stays silent.
+/// Plan the job's eligible chunk portfolio for a window shape
+/// `(capacity_gb, speed, delta_t)` — the shape-invariant half of
+/// "GenerateVariants" (paper §3.2). Two windows with the same shape get
+/// the same plan, which is what makes the scheduler's per-iteration plan
+/// cache sound.
 ///
 /// Strategy (each candidate is still subjected to full eligibility):
 /// 1. *Chain fill*: consecutive chunks of at most `atom_work`, placed
@@ -182,29 +204,35 @@ fn make_variant(
 ///    several short atoms (Table 3's J_A pattern).
 /// 2. *Alternative half chunk*: a half-size first chunk, giving the
 ///    clearing phase a lower-utilization / lower-energy alternative.
-pub fn generate_variants(job: &Job, window: &Window, cfg: &JasdaConfig) -> Vec<Variant> {
+pub fn plan_chunks(
+    job: &Job,
+    cfg: &JasdaConfig,
+    capacity_gb: f64,
+    speed: f64,
+    delta_t: Duration,
+) -> Vec<PlannedChunk> {
     let mut out = Vec::new();
-    if !job.can_bid() || window.interval.is_empty() {
+    if !job.can_bid() || delta_t == 0 {
         return out;
     }
 
-    let mut t = window.t_min();
+    let mut rel = 0;
     let mut offset = 0.0;
     let pending = job.pending_work();
 
     // 1. Chain fill.
     while out.len() < cfg.max_variants_per_job {
-        let avail = window.interval.end.saturating_sub(t);
+        let avail = delta_t.saturating_sub(rel);
         if avail < cfg.tau_min {
             break;
         }
-        let w_fit = max_work_for(avail, window.speed, job.trp.duration_cv, cfg.duration_quantile);
+        let w_fit = max_work_for(avail, speed, job.trp.duration_cv, cfg.duration_quantile);
         let w = w_fit.min(job.atom_work).min(pending - offset);
-        match make_variant(job, window, cfg, w, offset, t) {
-            Some(v) => {
-                t = v.interval.end;
-                offset += v.work;
-                out.push(v);
+        match plan_chunk(job, cfg, capacity_gb, speed, delta_t, w, offset, rel) {
+            Some(c) => {
+                rel = c.rel_start + c.duration;
+                offset += c.work;
+                out.push(c);
             }
             None => break,
         }
@@ -216,15 +244,80 @@ pub fn generate_variants(job: &Job, window: &Window, cfg: &JasdaConfig) -> Vec<V
     // 2. Alternative half-size first chunk (distinct duration only).
     if out.len() < cfg.max_variants_per_job {
         if let Some(first) = out.first() {
-            let half = first.work / 2.0;
-            if let Some(v) = make_variant(job, window, cfg, half, 0.0, window.t_min()) {
-                if v.duration() != first.duration() {
-                    out.push(v);
+            let (half, first_duration) = (first.work / 2.0, first.duration);
+            if let Some(c) = plan_chunk(job, cfg, capacity_gb, speed, delta_t, half, 0.0, 0) {
+                if c.duration != first_duration {
+                    out.push(c);
                 }
             }
         }
     }
 
+    out
+}
+
+/// Stamp one planned chunk into a concrete [`Variant`] for an announced
+/// window of the plan's shape: place the interval on the time axis and
+/// evaluate the position-dependent features (QoS, locality,
+/// misreporting). Cheap — no FMP work, the plan's profile is shared.
+pub fn stamp_variant(job: &Job, window: &Window, cfg: &JasdaConfig, chunk: &PlannedChunk) -> Variant {
+    let t_start: Time = window.t_min() + chunk.rel_start;
+    let t_end = t_start + chunk.duration;
+    let interval = Interval::new(t_start, t_end);
+
+    // Job-side features (honest), then the declared (possibly inflated)
+    // copy the scheduler actually sees.
+    let phi_honest = [
+        utility::phi_jct(chunk.work, job.remaining_work() - chunk.work_offset),
+        utility::phi_qos(job, t_end),
+        utility::phi_energy(chunk.duration, window.speed, window.delta_t()),
+        utility::phi_locality(job, window),
+    ];
+    let phi = utility::misreport(&phi_honest, job.misreport_bias);
+    let h = utility::h_tilde(&cfg.alpha.as_array(), &phi);
+
+    let window_len = window.delta_t();
+    let leftover = window.interval.end.saturating_sub(t_end);
+    let sys = SysFeatures {
+        util: (chunk.duration as f64 / window_len as f64).clamp(0.0, 1.0),
+        frag: psi_frag(leftover, window_len, cfg.tau_min),
+    };
+
+    Variant {
+        id: 0, // assigned at pool assembly
+        job: job.id,
+        slice: window.slice,
+        interval,
+        work: chunk.work,
+        work_offset: chunk.work_offset,
+        fmp: chunk.fmp.clone(),
+        violation_prob: chunk.violation_prob,
+        declared: DeclaredFeatures { phi_honest, phi, h_tilde: h },
+        sys,
+    }
+}
+
+/// Stamp a whole plan for one announced window, appending to `out`.
+pub fn stamp_variants(
+    job: &Job,
+    window: &Window,
+    cfg: &JasdaConfig,
+    plan: &[PlannedChunk],
+    out: &mut Vec<Variant>,
+) {
+    for chunk in plan {
+        out.push(stamp_variant(job, window, cfg, chunk));
+    }
+}
+
+/// Generate the job's eligible variant portfolio for an announced window
+/// (paper §3.2 "GenerateVariants"): plan against the window's shape,
+/// then stamp onto its position. Returns an empty vec when the job stays
+/// silent.
+pub fn generate_variants(job: &Job, window: &Window, cfg: &JasdaConfig) -> Vec<Variant> {
+    let plan = plan_chunks(job, cfg, window.capacity_gb, window.speed, window.delta_t());
+    let mut out = Vec::with_capacity(plan.len());
+    stamp_variants(job, window, cfg, &plan, &mut out);
     out
 }
 
@@ -356,6 +449,36 @@ mod tests {
         let vs = generate_variants(&job, &w, &cfg);
         assert!(vs.len() <= 4, "V_max chain + 1 alternative, got {}", vs.len());
         assert!(vs.iter().filter(|v| v.work_offset > 0.0).count() <= 2);
+    }
+
+    #[test]
+    fn cached_plan_stamps_identically_across_same_shape_windows() {
+        // Two windows with the same (capacity, speed, Δt) shape but
+        // different positions/slices: stamping one window's plan onto
+        // the other must equal generating from scratch, bit for bit.
+        let job = test_job(4.0, 10_000.0, 100.0);
+        let cfg = test_cfg();
+        let w_a = test_window(10.0, 1.0, 50, 400);
+        let mut w_b = test_window(10.0, 1.0, 777, 400);
+        w_b.slice = 5;
+        let plan = plan_chunks(&job, &cfg, w_a.capacity_gb, w_a.speed, w_a.delta_t());
+        assert!(!plan.is_empty());
+        let mut stamped = Vec::new();
+        stamp_variants(&job, &w_b, &cfg, &plan, &mut stamped);
+        let fresh = generate_variants(&job, &w_b, &cfg);
+        assert_eq!(stamped.len(), fresh.len());
+        for (s, f) in stamped.iter().zip(&fresh) {
+            assert_eq!(s.interval, f.interval);
+            assert_eq!(s.slice, f.slice);
+            assert_eq!(s.work, f.work);
+            assert_eq!(s.work_offset, f.work_offset);
+            assert_eq!(s.violation_prob, f.violation_prob);
+            assert_eq!(s.declared.phi, f.declared.phi);
+            assert_eq!(s.declared.h_tilde, f.declared.h_tilde);
+            assert_eq!((s.sys.util, s.sys.frag), (f.sys.util, f.sys.frag));
+            assert_eq!(s.fmp.mu, f.fmp.mu);
+            assert_eq!(s.fmp.sigma, f.fmp.sigma);
+        }
     }
 
     #[test]

@@ -72,6 +72,9 @@ pub struct RunMetrics {
     pub max_commits_per_iter: u64,
     /// Wall-clock nanoseconds spent inside `Scheduler::iterate`.
     pub sched_wall_ns: u64,
+    /// Slowest single `Scheduler::iterate` call (ns) — the per-decision
+    /// latency tail the incremental/parallel pipeline targets.
+    pub max_sched_iter_ns: u64,
     /// Jobs that never completed within the run.
     pub unfinished: usize,
 }
@@ -216,6 +219,7 @@ impl RunMetrics {
             ("commits_per_iteration", self.commits_per_iteration().into()),
             ("max_commits_per_iter", self.max_commits_per_iter.into()),
             ("sched_wall_ns", self.sched_wall_ns.into()),
+            ("max_sched_iter_ns", self.max_sched_iter_ns.into()),
             ("unfinished", self.unfinished.into()),
             ("mean_jct", opt(self.mean_jct())),
             ("p95_jct", opt(self.jct_percentile(0.95))),
@@ -305,6 +309,7 @@ mod tests {
             total_commits: 7,
             max_commits_per_iter: 2,
             sched_wall_ns: 1_000_000,
+            max_sched_iter_ns: 50_000,
             unfinished: 1,
         }
     }

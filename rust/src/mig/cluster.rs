@@ -129,27 +129,49 @@ impl Cluster {
         &self.slices[id as usize]
     }
 
-    /// Enumerate every candidate window across all slices: idle gaps in
-    /// `[from, from + horizon)` of at least `min_len` ticks.
+    /// Enumerate every candidate window across all slices — idle gaps in
+    /// `[from, from + horizon)` of at least `min_len` ticks — into a
+    /// caller-owned buffer (cleared first). Enumeration runs off each
+    /// slice's incremental gap index, so a scheduler that reuses the
+    /// buffer allocates nothing on this path.
+    pub fn collect_windows(
+        &self,
+        from: Time,
+        horizon: Duration,
+        min_len: Duration,
+        out: &mut Vec<Window>,
+    ) {
+        let to = from.saturating_add(horizon);
+        out.clear();
+        for s in &self.slices {
+            let (id, capacity_gb, speed) = (s.id, s.capacity_gb(), s.speed());
+            s.timeline.for_each_gap(from, to, min_len, |IdleGap { interval }| {
+                out.push(Window { slice: id, capacity_gb, speed, interval });
+            });
+        }
+    }
+
+    /// [`Cluster::collect_windows`] into a fresh vector (convenience for
+    /// tests, baselines, and the coordinator runtime).
     pub fn candidate_windows(
         &self,
         from: Time,
         horizon: Duration,
         min_len: Duration,
     ) -> Vec<Window> {
-        let to = from.saturating_add(horizon);
         let mut windows = Vec::new();
-        for s in &self.slices {
-            for IdleGap { interval } in s.timeline.idle_gaps(from, to, min_len) {
-                windows.push(Window {
-                    slice: s.id,
-                    capacity_gb: s.capacity_gb(),
-                    speed: s.speed(),
-                    interval,
-                });
-            }
-        }
+        self.collect_windows(from, horizon, min_len, &mut windows);
         windows
+    }
+
+    /// Total idle residues shorter than `tau_min` across all slices in
+    /// `[from, to)` — the rolling-repack trigger input (paper §3.5),
+    /// answered from the per-slice gap indexes without allocating.
+    pub fn count_unusable_residues(&self, from: Time, to: Time, tau_min: Duration) -> usize {
+        self.slices
+            .iter()
+            .map(|s| s.timeline.count_unusable_residues(from, to, tau_min))
+            .sum()
     }
 
     /// Compute-weighted utilization of the cluster over `[from, to)`:
@@ -232,6 +254,45 @@ mod tests {
         let w1 = ws.iter().find(|w| w.slice == 1).unwrap();
         assert_eq!(w1.delta_t(), 100);
         assert_eq!(w1.capacity_gb, 10.0);
+    }
+
+    #[test]
+    fn collect_windows_reuses_buffer_and_matches_wrapper() {
+        let mut c = Cluster::new(1, &PartitionLayout::balanced());
+        c.slice_mut(1)
+            .timeline
+            .reserve(Reservation { job: 1, subjob_seq: 0, interval: Interval::new(20, 60) })
+            .unwrap();
+        let mut buf = vec![Window {
+            slice: 99,
+            capacity_gb: 0.0,
+            speed: 0.0,
+            interval: Interval::new(0, 1),
+        }];
+        c.collect_windows(0, 100, 1, &mut buf);
+        assert_eq!(buf, c.candidate_windows(0, 100, 1), "buffer path must match wrapper");
+        assert!(buf.iter().all(|w| w.slice != 99), "buffer must be cleared first");
+    }
+
+    #[test]
+    fn cluster_residue_count_sums_slices() {
+        let mut c = Cluster::new(1, &PartitionLayout::balanced());
+        // Slice 0: a 4-tick residue between two reservations.
+        c.slice_mut(0)
+            .timeline
+            .reserve(Reservation { job: 1, subjob_seq: 0, interval: Interval::new(0, 10) })
+            .unwrap();
+        c.slice_mut(0)
+            .timeline
+            .reserve(Reservation { job: 1, subjob_seq: 1, interval: Interval::new(14, 40) })
+            .unwrap();
+        // Slice 1: a 2-tick residue at the head of the query span.
+        c.slice_mut(1)
+            .timeline
+            .reserve(Reservation { job: 2, subjob_seq: 0, interval: Interval::new(2, 50) })
+            .unwrap();
+        assert_eq!(c.count_unusable_residues(0, 100, 8), 2);
+        assert_eq!(c.count_unusable_residues(0, 100, 3), 1);
     }
 
     #[test]

@@ -6,6 +6,14 @@
 //! faithful simulated substrate (see DESIGN.md §4): the NVIDIA profile
 //! table fixes slice capacities and compute fractions, and timelines
 //! enforce the non-overlap invariant the clearing phase relies on.
+//!
+//! Each [`Timeline`] additionally maintains an **incremental gap index**
+//! (§Perf iteration 2) so window announcement and the repack trigger
+//! read idle structure with an O(log n) search per query instead of
+//! re-deriving it from the reservation list every scheduler iteration; see
+//! [`timeline`] for the invariants and
+//! [`Cluster::collect_windows`]/[`Cluster::count_unusable_residues`]
+//! for the cluster-wide zero-allocation entry points.
 
 pub mod cluster;
 pub mod profile;

@@ -6,6 +6,24 @@
 //! *commit* step (paper §3.5) inserts the reservations selected by the WIS
 //! clearing phase. Overlap is rejected structurally, so a committed
 //! schedule can never violate the non-preemption invariant.
+//!
+//! # Incremental gap index (§Perf iteration 2)
+//!
+//! Window announcement runs every scheduler iteration, so re-deriving the
+//! idle structure from the reservation list each tick is the dominant
+//! cost on dense timelines. The timeline therefore maintains a
+//! **persistent interior-gap index** — the sorted list of idle intervals
+//! between consecutive reservations — updated on every mutation
+//! ([`Timeline::reserve`], [`Timeline::release`],
+//! [`Timeline::truncate`], [`Timeline::compact_before`]) with an
+//! O(log n) position lookup plus the same O(n) `Vec` shift the entry
+//! list itself pays.
+//! [`Timeline::for_each_gap`] then enumerates the idle windows of any
+//! query span without allocating and without walking reservations, and
+//! [`Timeline::count_unusable_residues`] answers the rolling-repack
+//! trigger (paper §3.5) from the same index. [`Timeline::idle_gaps_scan`]
+//! keeps the original full timeline walk as the recompute reference the
+//! property tests compare the index against.
 
 use crate::types::{Duration, Interval, JobId, Time};
 
@@ -25,6 +43,14 @@ pub struct Reservation {
 pub struct Timeline {
     /// Reservations sorted by start time; pairwise non-overlapping.
     entries: Vec<Reservation>,
+    /// Incremental gap index: the idle intervals *between* consecutive
+    /// reservations (positive length only), sorted by start. Because
+    /// reservation end times are strictly increasing, gap starts are
+    /// unique and the index is binary-searchable. The open regions
+    /// before the first and after the last reservation are not stored —
+    /// they depend on the query span and are derived in
+    /// [`Timeline::for_each_gap`].
+    gaps: Vec<Interval>,
 }
 
 /// An idle gap on a slice, as announced to jobs.
@@ -37,7 +63,43 @@ pub struct IdleGap {
 impl Timeline {
     /// Empty timeline.
     pub fn new() -> Self {
-        Timeline { entries: Vec::new() }
+        Timeline { entries: Vec::new(), gaps: Vec::new() }
+    }
+
+    /// The interior-gap index: idle intervals between consecutive
+    /// reservations, sorted by start. Maintained incrementally.
+    pub fn gap_index(&self) -> &[Interval] {
+        &self.gaps
+    }
+
+    /// Remove the index entry starting at `start`, if present.
+    fn remove_gap_starting_at(&mut self, start: Time) {
+        if let Ok(i) = self.gaps.binary_search_by(|g| g.start.cmp(&start)) {
+            self.gaps.remove(i);
+        }
+    }
+
+    /// Insert a gap into the index (no-op for empty intervals).
+    fn insert_gap(&mut self, start: Time, end: Time) {
+        if start < end {
+            let i = self.gaps.partition_point(|g| g.start < start);
+            self.gaps.insert(i, Interval::new(start, end));
+        }
+    }
+
+    /// Debug-build invariant: the index equals a fresh recompute from the
+    /// reservation list. Compiled out of release builds.
+    fn debug_check_gaps(&self) {
+        #[cfg(debug_assertions)]
+        {
+            let mut expect = Vec::new();
+            for w in self.entries.windows(2) {
+                if w[0].interval.end < w[1].interval.start {
+                    expect.push(Interval::new(w[0].interval.end, w[1].interval.start));
+                }
+            }
+            debug_assert_eq!(self.gaps, expect, "gap index diverged from timeline");
+        }
     }
 
     /// Number of reservations.
@@ -85,7 +147,23 @@ impl Timeline {
             );
         }
         let pos = self.entries.partition_point(|r| r.interval.start < res.interval.start);
+        // Index maintenance: the new reservation lands between `left`
+        // and `right`; their shared gap (if any) is split by it.
+        let left_end = pos.checked_sub(1).map(|i| self.entries[i].interval.end);
+        let right_start = self.entries.get(pos).map(|r| r.interval.start);
+        if let (Some(le), Some(rs)) = (left_end, right_start) {
+            if le < rs {
+                self.remove_gap_starting_at(le);
+            }
+        }
+        if let Some(le) = left_end {
+            self.insert_gap(le, res.interval.start);
+        }
+        if let Some(rs) = right_start {
+            self.insert_gap(res.interval.end, rs);
+        }
         self.entries.insert(pos, res);
+        self.debug_check_gaps();
         Ok(())
     }
 
@@ -96,17 +174,47 @@ impl Timeline {
             .entries
             .iter()
             .position(|r| r.job == job && r.subjob_seq == subjob_seq)?;
-        Some(self.entries.remove(pos))
+        let r = self.entries.remove(pos);
+        // Index maintenance: the gaps bordering the removed reservation
+        // merge into one (or dissolve into the leading/trailing region).
+        let left_end = pos.checked_sub(1).map(|i| self.entries[i].interval.end);
+        let right_start = self.entries.get(pos).map(|e| e.interval.start);
+        if let Some(le) = left_end {
+            if le < r.interval.start {
+                self.remove_gap_starting_at(le);
+            }
+        }
+        if let Some(rs) = right_start {
+            if r.interval.end < rs {
+                self.remove_gap_starting_at(r.interval.end);
+            }
+        }
+        if let (Some(le), Some(rs)) = (left_end, right_start) {
+            self.insert_gap(le, rs);
+        }
+        self.debug_check_gaps();
+        Some(r)
     }
 
     /// Truncate a reservation's end (the realized subjob finished early).
     /// Returns false if the reservation was not found or `new_end` does not
     /// shrink it.
     pub fn truncate(&mut self, job: JobId, subjob_seq: u32, new_end: Time) -> bool {
-        for r in &mut self.entries {
+        for i in 0..self.entries.len() {
+            let r = &self.entries[i];
             if r.job == job && r.subjob_seq == subjob_seq {
                 if new_end > r.interval.start && new_end < r.interval.end {
-                    r.interval.end = new_end;
+                    let old_end = r.interval.end;
+                    self.entries[i].interval.end = new_end;
+                    // Index maintenance: the gap toward the next
+                    // reservation grows backward (or appears).
+                    if let Some(rs) = self.entries.get(i + 1).map(|e| e.interval.start) {
+                        if old_end < rs {
+                            self.remove_gap_starting_at(old_end);
+                        }
+                        self.insert_gap(new_end, rs);
+                    }
+                    self.debug_check_gaps();
                     return true;
                 }
                 return false;
@@ -122,12 +230,76 @@ impl Timeline {
         if keep_from == 0 {
             return 0;
         }
-        self.entries.drain(..keep_from).count()
+        // Index maintenance: gaps start at the end of some reservation;
+        // exactly the gaps following a dropped reservation (end <= t)
+        // are dropped with it.
+        let g0 = self.gaps.partition_point(|g| g.start <= t);
+        self.gaps.drain(..g0);
+        let n = self.entries.drain(..keep_from).count();
+        self.debug_check_gaps();
+        n
     }
 
-    /// Enumerate idle gaps in `[from, horizon)`, each at least `min_len`
-    /// ticks long. This is the raw material of window announcement.
+    /// Visit the idle gaps in `[from, to)` of at least `min_len` ticks,
+    /// in start order, **without allocating**: interior gaps come from
+    /// the incremental index (binary search to the first relevant one),
+    /// and the open regions before the first / after the last
+    /// reservation are derived from the entry bounds. Produces exactly
+    /// the intervals of [`Timeline::idle_gaps_scan`].
+    pub fn for_each_gap(&self, from: Time, to: Time, min_len: Duration, mut f: impl FnMut(IdleGap)) {
+        if from >= to {
+            return;
+        }
+        let min_len = min_len.max(1);
+        let (first, last) = match (self.entries.first(), self.entries.last()) {
+            (Some(a), Some(b)) => (a, b),
+            _ => {
+                if to - from >= min_len {
+                    f(IdleGap { interval: Interval::new(from, to) });
+                }
+                return;
+            }
+        };
+        // Leading region before the first reservation.
+        if from < first.interval.start {
+            let gap = Interval::new(from, first.interval.start.min(to));
+            if gap.len() >= min_len {
+                f(IdleGap { interval: gap });
+            }
+        }
+        // Interior gaps, clipped to the query span.
+        let i0 = self.gaps.partition_point(|g| g.end <= from);
+        for g in &self.gaps[i0..] {
+            if g.start >= to {
+                break;
+            }
+            let gap = Interval::new(g.start.max(from), g.end.min(to));
+            if gap.len() >= min_len {
+                f(IdleGap { interval: gap });
+            }
+        }
+        // Trailing region after the last reservation.
+        if last.interval.end < to {
+            let gap = Interval::new(last.interval.end.max(from), to);
+            if gap.len() >= min_len {
+                f(IdleGap { interval: gap });
+            }
+        }
+    }
+
+    /// Idle gaps in `[from, horizon)`, each at least `min_len` ticks
+    /// long, as an owned vector (convenience wrapper over
+    /// [`Timeline::for_each_gap`]; hot paths use the closure form).
     pub fn idle_gaps(&self, from: Time, horizon: Time, min_len: Duration) -> Vec<IdleGap> {
+        let mut gaps = Vec::new();
+        self.for_each_gap(from, horizon, min_len, |g| gaps.push(g));
+        gaps
+    }
+
+    /// Recompute-from-scratch reference for [`Timeline::idle_gaps`]: the
+    /// original full timeline walk. Kept as the oracle the property
+    /// tests compare the incremental gap index against.
+    pub fn idle_gaps_scan(&self, from: Time, horizon: Time, min_len: Duration) -> Vec<IdleGap> {
         let mut gaps = Vec::new();
         if from >= horizon {
             return gaps;
@@ -152,6 +324,19 @@ impl Timeline {
             }
         }
         gaps
+    }
+
+    /// Number of idle residues in `[from, to)` too short to ever host a
+    /// subjob (`0 < len < tau_min`) — the rolling-repack trigger metric
+    /// (paper §3.5), answered from the gap index without allocating.
+    pub fn count_unusable_residues(&self, from: Time, to: Time, tau_min: Duration) -> usize {
+        let mut n = 0;
+        self.for_each_gap(from, to, 1, |g| {
+            if g.interval.len() < tau_min {
+                n += 1;
+            }
+        });
+        n
     }
 
     /// Earliest idle gap in `[from, horizon)` of at least `min_len`, if any.
@@ -202,12 +387,16 @@ impl Timeline {
     /// values near 1 mean idle time is shattered into many small gaps.
     /// Returns 0 when there is no idle time at all.
     pub fn fragmentation(&self, from: Time, to: Time) -> f64 {
-        let gaps = self.idle_gaps(from, to, 1);
-        let total: u64 = gaps.iter().map(|g| g.interval.len()).sum();
+        let mut total: u64 = 0;
+        let mut largest: u64 = 0;
+        self.for_each_gap(from, to, 1, |g| {
+            let len = g.interval.len();
+            total += len;
+            largest = largest.max(len);
+        });
         if total == 0 {
             return 0.0;
         }
-        let largest = gaps.iter().map(|g| g.interval.len()).max().unwrap_or(0);
         1.0 - largest as f64 / total as f64
     }
 
@@ -334,6 +523,79 @@ mod tests {
         assert_eq!(tl.compact_before(20), 2);
         assert_eq!(tl.len(), 1);
         assert_eq!(tl.compact_before(20), 0);
+    }
+
+    #[test]
+    fn gap_index_tracks_mutations() {
+        let mut tl = Timeline::new();
+        assert!(tl.gap_index().is_empty());
+        tl.reserve(res(1, 0, 10, 20)).unwrap();
+        assert!(tl.gap_index().is_empty(), "single entry has no interior gap");
+        tl.reserve(res(2, 0, 40, 50)).unwrap();
+        assert_eq!(tl.gap_index(), &[Interval::new(20, 40)]);
+        // Split the gap by inserting into its middle.
+        tl.reserve(res(3, 0, 25, 30)).unwrap();
+        assert_eq!(tl.gap_index(), &[Interval::new(20, 25), Interval::new(30, 40)]);
+        // Adjacent insert leaves a single-sided gap.
+        tl.reserve(res(4, 0, 20, 25)).unwrap();
+        assert_eq!(tl.gap_index(), &[Interval::new(30, 40)]);
+        // Release merges neighbors back.
+        tl.release(3, 0).unwrap();
+        assert_eq!(tl.gap_index(), &[Interval::new(25, 40)]);
+        // Truncate grows the following gap backward.
+        assert!(tl.truncate(4, 0, 22));
+        assert_eq!(tl.gap_index(), &[Interval::new(22, 40)]);
+        // Truncating the last entry touches no interior gap.
+        assert!(tl.truncate(2, 0, 45));
+        assert_eq!(tl.gap_index(), &[Interval::new(22, 40)]);
+        // Compaction drops gaps that trail dropped reservations.
+        assert_eq!(tl.compact_before(22), 2);
+        assert!(tl.gap_index().is_empty());
+    }
+
+    #[test]
+    fn for_each_gap_matches_scan() {
+        let mut tl = Timeline::new();
+        for (j, s, e) in [(1u32, 10u64, 20u64), (2, 20, 25), (3, 40, 50), (4, 80, 90)] {
+            tl.reserve(res(j, 0, s, e)).unwrap();
+        }
+        for &(from, to, min_len) in &[
+            (0u64, 100u64, 1u64),
+            (0, 100, 8),
+            (12, 45, 1),
+            (22, 60, 3),
+            (50, 80, 1),
+            (95, 99, 1),
+            (60, 60, 1),
+            (5, 10, 1),
+        ] {
+            assert_eq!(
+                tl.idle_gaps(from, to, min_len),
+                tl.idle_gaps_scan(from, to, min_len),
+                "index vs scan mismatch for [{from},{to}) min {min_len}"
+            );
+        }
+        assert_eq!(Timeline::new().idle_gaps(3, 9, 1), Timeline::new().idle_gaps_scan(3, 9, 1));
+    }
+
+    #[test]
+    fn count_unusable_residues_matches_filtered_scan() {
+        let mut tl = Timeline::new();
+        tl.reserve(res(1, 0, 10, 20)).unwrap();
+        tl.reserve(res(2, 0, 24, 50)).unwrap(); // 4-tick residue
+        tl.reserve(res(3, 0, 52, 70)).unwrap(); // 2-tick residue
+        for &(from, to, tau) in &[(0u64, 100u64, 8u64), (0, 100, 3), (15, 53, 8), (0, 26, 8)] {
+            let expect = tl
+                .idle_gaps_scan(from, to, 1)
+                .iter()
+                .filter(|g| g.interval.len() < tau)
+                .count();
+            assert_eq!(
+                tl.count_unusable_residues(from, to, tau),
+                expect,
+                "residue count mismatch for [{from},{to}) tau {tau}"
+            );
+        }
     }
 
     #[test]

@@ -205,7 +205,9 @@ impl SimEngine {
             // 3. Scheduler iteration.
             let t0 = std::time::Instant::now();
             let commitments = self.scheduler.iterate(now, &cluster, &mut jobs, &mut sched_rng);
-            metrics.sched_wall_ns += t0.elapsed().as_nanos() as u64;
+            let iter_ns = t0.elapsed().as_nanos() as u64;
+            metrics.sched_wall_ns += iter_ns;
+            metrics.max_sched_iter_ns = metrics.max_sched_iter_ns.max(iter_ns);
             metrics.iterations += 1;
 
             // 4. Apply commitments: reserve, track waits, sample realization.

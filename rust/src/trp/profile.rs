@@ -75,6 +75,51 @@ impl Trp {
         self.phases.iter().map(|p| p.mem_gb).fold(0.0, f64::max)
     }
 
+    /// Minimum of the mean-memory trajectory (GiB) over all work points
+    /// at or after `w0` (including the hold level past the final phase).
+    ///
+    /// This is the bidder-index precondition of the scheduler's bid
+    /// collection: every FMP bin of a chunk starting at the work cursor
+    /// samples the trajectory at some `w >= w0`, so if this minimum
+    /// exceeds a slice's capacity, every bin mean does too and the
+    /// violation probability is at least 0.5 — the job cannot produce an
+    /// eligible variant for that slice under any `theta < 0.5`.
+    pub fn min_mem_gb_from(&self, w0: f64) -> f64 {
+        let mut min = f64::INFINITY;
+        let mut prev_level = 0.0;
+        let mut acc = 0.0;
+        for p in &self.phases {
+            if p.work == 0.0 {
+                // A zero-work phase answers every query past its position
+                // in `mem_stats_at`, so its level always bounds the
+                // suffix minimum.
+                min = min.min(p.mem_gb);
+            } else if w0 < acc + p.work {
+                // The phase overlaps [w0, inf): its trajectory ramps
+                // linearly from prev_level to mem_gb over the first
+                // ramp_frac, then holds. Over the suffix starting at
+                // progress frac0, a lower bound is the value at frac0 or
+                // the target level, whichever is smaller.
+                let frac0 = ((w0 - acc) / p.work).clamp(0.0, 1.0);
+                let at_frac0 = if p.ramp_frac > 0.0 && frac0 < p.ramp_frac {
+                    prev_level + (p.mem_gb - prev_level) * (frac0 / p.ramp_frac)
+                } else {
+                    p.mem_gb
+                };
+                min = min.min(at_frac0).min(p.mem_gb);
+            }
+            acc += p.work;
+            prev_level = p.mem_gb;
+        }
+        // Hold level past the end (also covers w0 beyond the total work).
+        if let Some(p) = self.phases.last() {
+            min = min.min(p.mem_gb);
+        } else {
+            min = 0.0;
+        }
+        min
+    }
+
     /// Gaussian memory statistics `(mu, sigma)` at cumulative work `w`.
     ///
     /// Within a phase the mean ramps linearly from the previous phase's
@@ -272,6 +317,29 @@ mod tests {
         // except the earliest ones.
         assert_eq!(*fmp.mu.last().unwrap(), 14.0);
         assert!(fmp.mu.iter().all(|&m| m > 0.0 && m <= 14.0));
+    }
+
+    #[test]
+    fn min_mem_bounds_trajectory_suffix() {
+        let t = training_trp();
+        // Exhaustively compare against dense trajectory sampling.
+        for w0 in [0.0, 250.0, 900.0, 1000.0, 4_000.0, 9_800.0, 10_000.0, 20_000.0] {
+            let bound = t.min_mem_gb_from(w0);
+            let mut sampled = f64::INFINITY;
+            let mut w = w0;
+            while w <= 12_000.0 {
+                sampled = sampled.min(t.mem_stats_at(w).0);
+                w += 1.0;
+            }
+            assert!(
+                bound <= sampled + 1e-9,
+                "w0={w0}: bound {bound} exceeds sampled min {sampled}"
+            );
+        }
+        // From the steady state on, the bound clears the early ramp.
+        assert!(t.min_mem_gb_from(2_000.0) >= 8.0);
+        // Empty profile.
+        assert_eq!(Trp { phases: vec![], duration_cv: 0.0 }.min_mem_gb_from(0.0), 0.0);
     }
 
     #[test]

@@ -356,16 +356,17 @@ fn reference_single_window_iterate(
     let mut candidates =
         cluster.candidate_windows(from, cfg.announce_horizon, cfg.tau_min);
     let (window, pool) = loop {
-        let window = match selector.select(
+        let idx = match selector.select(
             cfg.window_policy,
             &candidates,
             cluster,
             now,
             cfg.announce_horizon,
         ) {
-            Some(w) => w,
+            Some(i) => i,
             None => return vec![],
         };
+        let window = candidates.swap_remove(idx);
         let mut pool = Vec::new();
         for job in jobs.bidders() {
             pool.extend(generate_variants(job, &window, cfg));
@@ -373,7 +374,6 @@ fn reference_single_window_iterate(
         if !pool.is_empty() {
             break (window, pool);
         }
-        candidates.retain(|c| !(c.slice == window.slice && c.interval == window.interval));
     };
 
     let mut batch = ScoreBatch::with_bins(cfg.fmp_bins);
@@ -560,6 +560,217 @@ fn multi_window_clears_more_than_single_window_on_burst() {
                 assert!(!a.interval.overlaps(&b.interval));
             }
         }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Incremental gap index + parallel clearing invariants (ISSUE 2).
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_gap_index_matches_recompute_under_mutation() {
+    // Arbitrary interleavings of reserve / release / truncate / compact
+    // must leave the incremental gap index answering every query exactly
+    // like a fresh full-timeline recompute (`idle_gaps_scan`).
+    let mut rng = Rng::new(0x6A71);
+    for case in 0..120 {
+        let mut tl = Timeline::new();
+        let mut live: Vec<(u32, u32)> = Vec::new();
+        let mut next_seq = 0u32;
+        for step in 0..50 {
+            match rng.index(10) {
+                0..=4 => {
+                    // Reserve a random interval (overlaps simply fail).
+                    let s = rng.below(5_000);
+                    let iv = Interval::new(s, s + 1 + rng.below(400));
+                    let r = Reservation { job: 7, subjob_seq: next_seq, interval: iv };
+                    if tl.reserve(r).is_ok() {
+                        live.push((7, next_seq));
+                        next_seq += 1;
+                    }
+                }
+                5 | 6 => {
+                    // Release (completion / repack) a random reservation.
+                    if !live.is_empty() {
+                        let k = rng.index(live.len());
+                        let (j, s) = live.swap_remove(k);
+                        assert!(tl.release(j, s).is_some());
+                    }
+                }
+                7 | 8 => {
+                    // Truncate (early finish) a random reservation.
+                    if !live.is_empty() {
+                        let k = rng.index(live.len());
+                        let (j, s) = live[k];
+                        let iv = tl
+                            .entries()
+                            .iter()
+                            .find(|r| r.job == j && r.subjob_seq == s)
+                            .map(|r| r.interval)
+                            .unwrap();
+                        if iv.len() > 1 {
+                            let new_end = iv.start + 1 + rng.below(iv.len() - 1);
+                            assert!(tl.truncate(j, s, new_end));
+                        }
+                    }
+                }
+                _ => {
+                    // History compaction.
+                    let t = rng.below(6_000);
+                    tl.compact_before(t);
+                    live.retain(|&(j, s)| {
+                        tl.entries().iter().any(|r| r.job == j && r.subjob_seq == s)
+                    });
+                }
+            }
+            // Index-backed queries vs full recompute on random spans.
+            for _ in 0..3 {
+                let from = rng.below(6_000);
+                let to = from + rng.below(6_000);
+                let min_len = 1 + rng.below(300);
+                assert_eq!(
+                    tl.idle_gaps(from, to, min_len),
+                    tl.idle_gaps_scan(from, to, min_len),
+                    "case {case} step {step}: index != recompute for [{from},{to}) min {min_len}"
+                );
+                let tau = 1 + rng.below(400);
+                let expect = tl
+                    .idle_gaps_scan(from, to, 1)
+                    .iter()
+                    .filter(|g| g.interval.len() < tau)
+                    .count();
+                assert_eq!(
+                    tl.count_unusable_residues(from, to, tau),
+                    expect,
+                    "case {case} step {step}: residue count for [{from},{to}) tau {tau}"
+                );
+            }
+        }
+    }
+}
+
+/// A contended wide state: enough bidders and windows that every
+/// fan-out stage of the parallel pipeline (plan generation, scoring row
+/// chunks, speculative per-window WIS with reconciliation replays)
+/// actually crosses its thread-gate thresholds.
+fn wide_state() -> (Cluster, JobSet) {
+    let mut cluster = Cluster::new(1, &PartitionLayout::seven_small());
+    let mut seq = 0u32;
+    for slice in 0..7u32 {
+        if slice % 2 == 0 {
+            let s = 500 + 97 * slice as u64;
+            cluster
+                .slice_mut(slice)
+                .timeline
+                .reserve(Reservation {
+                    job: 90_000,
+                    subjob_seq: seq,
+                    interval: Interval::new(s, s + 400),
+                })
+                .unwrap();
+            seq += 1;
+        }
+    }
+    let jobs: Vec<Job> = (0..40u32)
+        .map(|id| {
+            let work = 2_000.0 + 50.0 * id as f64;
+            let mem = 1.0 + (id % 4) as f64;
+            let trp = Trp {
+                phases: vec![Phase::new(work, mem, 0.1, 0.1)],
+                duration_cv: 0.05,
+            };
+            let mut j = Job::new(id, "p", 0, trp, None, 1.0, work / 6.0, 0.0);
+            j.state = JobState::Active;
+            j
+        })
+        .collect();
+    (cluster, JobSet::new(jobs))
+}
+
+#[test]
+fn prop_parallel_clearing_bit_identical_to_serial() {
+    // ISSUE 2 invariant: the parallel K-window clearing pipeline makes
+    // exactly the serial path's decisions — same commitments, same
+    // work/score floats — for K in {1, 2, per-slice}.
+    for (k, per_slice) in [(1usize, false), (2, false), (1, true)] {
+        let cfg_for = |threads: usize| JasdaConfig {
+            fmp_bins: 16,
+            announce_k: k,
+            announce_per_slice: per_slice,
+            parallel: threads,
+            ..JasdaConfig::default()
+        };
+
+        let (cluster_a, mut jobs_a) = wide_state();
+        let mut serial = JasdaScheduler::new(cfg_for(1));
+        let mut rng_a = Rng::new(5);
+        let ca = serial.iterate(0, &cluster_a, &mut jobs_a, &mut rng_a);
+
+        let (cluster_b, mut jobs_b) = wide_state();
+        let mut parallel = JasdaScheduler::new(cfg_for(8));
+        let mut rng_b = Rng::new(5);
+        let cb = parallel.iterate(0, &cluster_b, &mut jobs_b, &mut rng_b);
+
+        assert!(!ca.is_empty(), "K={k} per_slice={per_slice}: scenario must commit work");
+        assert_eq!(ca.len(), cb.len(), "K={k} per_slice={per_slice}: commitment count");
+        for (a, b) in ca.iter().zip(&cb) {
+            assert_eq!(a.job, b.job, "K={k} per_slice={per_slice}");
+            assert_eq!(a.slice, b.slice, "K={k} per_slice={per_slice}");
+            assert_eq!(a.interval, b.interval, "K={k} per_slice={per_slice}");
+            assert_eq!(a.work, b.work, "K={k} per_slice={per_slice}: work bits");
+            assert_eq!(a.score, b.score, "K={k} per_slice={per_slice}: score bits");
+            assert_eq!(a.window_len, b.window_len, "K={k} per_slice={per_slice}");
+        }
+        // Job-side bookkeeping advanced identically too.
+        for (ja, jb) in jobs_a.iter().zip(jobs_b.iter()) {
+            assert_eq!(ja.bids_submitted, jb.bids_submitted, "bids_submitted diverged");
+        }
+    }
+}
+
+#[test]
+fn prop_parallel_full_runs_bit_identical() {
+    // End-to-end: whole simulations under serial vs parallel clearing
+    // (random mid-sized states, every announcement mode) agree on the
+    // decision-visible metrics.
+    let mut rng = Rng::new(0x9A12);
+    for case in 0..6 {
+        let per_slice = case % 2 == 0;
+        let k = 1 + rng.index(3);
+        let run = |threads: usize| {
+            let mut c = jasda::config::SimConfig::default();
+            c.seed = 1000 + case as u64;
+            c.cluster.layout = "balanced".into();
+            c.engine.iteration_period = 25;
+            c.jasda.fmp_bins = 16;
+            c.jasda.announce_k = k;
+            c.jasda.announce_per_slice = per_slice;
+            c.jasda.parallel = threads;
+            let jobs: Vec<Job> = (0..10u32)
+                .map(|i| {
+                    let work = 1_500.0 + 100.0 * i as f64;
+                    let trp = Trp {
+                        phases: vec![
+                            Phase::new(work * 0.3, 4.0, 0.2, 0.4),
+                            Phase::new(work * 0.7, 6.0, 0.3, 0.1),
+                        ],
+                        duration_cv: 0.08,
+                    };
+                    Job::new(i, "t", (i as u64) * 150, trp, None, 1.0, work / 4.0, 0.0)
+                })
+                .collect();
+            let sched = JasdaScheduler::new(c.jasda.clone());
+            jasda::sim::SimEngine::new(c, Box::new(sched)).run(jobs).metrics
+        };
+        let serial = run(1);
+        let parallel = run(6);
+        assert_eq!(serial.makespan, parallel.makespan, "case {case} K={k} ps={per_slice}");
+        assert_eq!(
+            serial.total_commits, parallel.total_commits,
+            "case {case} K={k} ps={per_slice}"
+        );
+        assert_eq!(serial.mean_jct(), parallel.mean_jct(), "case {case}");
+        assert_eq!(serial.unfinished, 0, "case {case}: runs must complete");
     }
 }
 
