@@ -266,11 +266,54 @@ fn main() {
         }
     }
 
+    // ------------------------------------------------------------------
+    // ISSUE 3: coordinator-path round latency — single-window vs
+    // K-window rounds, serial vs persistent-pool fan-out, and the
+    // threaded protocol vs the in-process reference oracle.
+    // ------------------------------------------------------------------
+    header("coordinator protocol round latency (leader decision path)");
+    let mut proto_rows: Vec<Json> = Vec::new();
+    for (label, k, per_slice) in
+        [("K=1", 1usize, false), ("K=2", 2, false), ("K=slices", 1, true)]
+    {
+        for (mode, threads) in [("serial", 1usize), ("pool", 0)] {
+            let mut cfg = common::contended_cfg(81, if smoke { 10 } else { 30 });
+            cfg.jasda.announce_k = k;
+            cfg.jasda.announce_per_slice = per_slice;
+            cfg.jasda.parallel = threads;
+            let jobs = common::workload(&cfg);
+            let proto =
+                jasda::coordinator::run_protocol(cfg.clone(), jobs.clone(), 3_000_000);
+            let reference = jasda::coordinator::run_reference(cfg, jobs, 3_000_000);
+            println!(
+                "{label:<9} {mode:<7}: proto {:>9.0} ns/round (max {:>9} ns)  \
+                 reference {:>9.0} ns/round  windows/round {:.2}  wall {:.1?} ",
+                proto.decision_ns_per_round(),
+                proto.max_round_decision_ns,
+                reference.decision_ns_per_round(),
+                proto.windows_announced as f64 / proto.announcements.max(1) as f64,
+                proto.wall,
+            );
+            proto_rows.push(Json::obj(vec![
+                ("announce", label.into()),
+                ("mode", mode.into()),
+                ("rounds", proto.rounds.into()),
+                ("windows_announced", proto.windows_announced.into()),
+                ("proto_decision_ns_per_round", proto.decision_ns_per_round().into()),
+                ("proto_max_round_decision_ns", proto.max_round_decision_ns.into()),
+                ("reference_decision_ns_per_round", reference.decision_ns_per_round().into()),
+                ("proto_completed", proto.completed_jobs.into()),
+                ("proto_wall_ms", (proto.wall.as_nanos() as f64 / 1e6).into()),
+            ]));
+        }
+    }
+
     let out = Json::obj(vec![
         ("schema", "jasda.bench_iteration.v1".into()),
         ("smoke", smoke.into()),
         ("enumeration", Json::Arr(enum_rows)),
         ("iteration", Json::Arr(iter_rows)),
+        ("protocol", Json::Arr(proto_rows)),
     ]);
     let path = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_iteration.json".into());
     match std::fs::write(&path, out.to_string_pretty()) {

@@ -10,6 +10,13 @@
 //! Config files are JSON (the offline build has no serde/toml; the JSON
 //! layer is the in-crate [`crate::util::json`]). Partial configs merge
 //! over defaults; unknown keys are rejected so typos surface.
+//!
+//! A human-oriented reference table of every key — type, default, and
+//! semantics, including the K-window announcement knobs
+//! (`jasda.announce_k`, `jasda.announce_per_slice`) and the worker-pool
+//! budget (`jasda.parallel`) — lives in `docs/CONFIG.md` at the
+//! repository root; this module is the authoritative machine-checked
+//! definition it indexes.
 
 use crate::types::{Duration, Time};
 use crate::util::Json;

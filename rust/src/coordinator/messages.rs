@@ -1,26 +1,63 @@
 //! Protocol messages between the leader and job agents.
 //!
 //! The message vocabulary is intentionally minimal — it is exactly the
-//! information flow of the paper's interaction cycle (Fig. Algorithm 1):
-//! announcements flow down, bids flow up, awards and completion reports
-//! flow down. Agents never see other agents' bids or the global schedule
-//! (§5.1(d) information-visibility contract).
+//! information flow of the paper's interaction cycle (Fig. Algorithm 1),
+//! generalized to **multi-window rounds**: announcements flow down, bids
+//! flow up, awards and completion reports flow down. Agents never see
+//! other agents' bids or the global schedule (§5.1(d)
+//! information-visibility contract).
+//!
+//! One round exchanges at most four message kinds per agent:
+//!
+//! ```text
+//!  leader                                agent (one thread per job)
+//!    │  Announce { round, now, windows } → │   windows = the round's
+//!    │                                     │   candidate set, in a
+//!    │                                     │   leader-chosen order
+//!    │ ← Bid { job, round, bids, done }    │   bids[w] answers windows[w]
+//!    │    (exactly one reply per agent;    │   (empty = silent on w)
+//!    │     all-empty bids = silent round)  │
+//!    │  … leader clears ≤ K windows …      │
+//!    │  Awarded { round, variant_ids,    → │   ids are *agent-assigned*
+//!    │            now }                    │   (see Bid), so the agent
+//!    │                                     │   resolves them locally
+//!    │  … later, when a subjob ends …      │
+//!    │  Completed { planned_work,        → │   agent advances its work
+//!    │              realized_work, at }    │   cursor / completes
+//! ```
+//!
+//! Why the announcement carries the whole candidate set rather than
+//! exactly K windows: the leader only *clears* up to K windows per
+//! round, but it cannot know in advance which candidates will draw no
+//! bids (the "silent window" sparsity mode of §5.1(a)). Shipping the
+//! candidates in one message lets the leader skip silent windows and
+//! fall through to the next candidate **without another round-trip**,
+//! which is exactly what the in-process scheduler's announce loop does —
+//! the property tests pin the two paths to identical decisions.
 
 use crate::job::Variant;
 use crate::mig::Window;
 use crate::types::Time;
+use std::sync::Arc;
 
 /// Leader → agent messages.
 #[derive(Debug, Clone)]
 pub enum ToAgent {
-    /// Step 1: a window `w*` is open for bidding in `round`.
+    /// Step 1: the round's candidate windows are open for bidding. The
+    /// leader will clear at most K of them (`jasda.announce_k`, or one
+    /// per slice under `announce_per_slice`).
     Announce {
-        /// Round (iteration) counter.
+        /// Round (iteration) counter; echoed back in [`AgentReply::Bid`]
+        /// so stale replies can never be mistaken for current ones.
         round: u64,
-        /// Current scheduler time.
+        /// Current leader time (drives agent activation: an agent whose
+        /// job has `arrival <= now` becomes active on receipt).
         now: Time,
-        /// The announced window.
-        window: Window,
+        /// Candidate windows, in the leader's enumeration order. Bids
+        /// must be indexed by position in this vector. Shared (`Arc`) so
+        /// a broadcast to N agents is N refcount bumps, not N deep
+        /// copies of the window list.
+        windows: Arc<Vec<Window>>,
     },
     /// Step 5: some of the agent's variants were selected.
     Awarded(Award),
@@ -30,40 +67,52 @@ pub enum ToAgent {
     Shutdown,
 }
 
-/// Award notice (subset of the agent's last bid).
+/// Award notice (a subset of the agent's last bid).
 #[derive(Debug, Clone)]
 pub struct Award {
     /// Round the bid was placed in.
     pub round: u64,
-    /// Ids (bid-local) of the winning variants.
+    /// Ids of the winning variants, **as assigned by the agent** in its
+    /// [`AgentReply::Bid`] (unique within one reply). Agent-assigned ids
+    /// mean the agent can resolve an award against its own last bid
+    /// without sharing the leader's pool numbering — the leader's
+    /// pool-row ids never leave the leader.
     pub variant_ids: Vec<u32>,
-    /// Commit time.
+    /// Commit time (becomes the job's `last_selected` for the age term).
     pub now: Time,
 }
 
 /// Completion report for one subjob.
 #[derive(Debug, Clone)]
 pub struct CompletionReport {
-    /// Work that was committed.
+    /// Work that was committed for the subjob.
     pub planned_work: f64,
-    /// Work actually realized (≤ planned).
+    /// Work actually realized (≤ planned; less when the reservation ran
+    /// out before the sampled duration).
     pub realized_work: f64,
-    /// Completion time.
+    /// Completion time (realized end, ≤ the reserved end).
     pub at: Time,
 }
 
 /// Agent → leader messages.
 #[derive(Debug, Clone)]
 pub enum AgentReply {
-    /// Step 3: the agent's bid for `round` (empty `variants` = silent).
+    /// Step 3: the agent's bid for one round — one entry per announced
+    /// window, in announcement order.
     Bid {
-        /// Bidding job.
+        /// Bidding job id.
         job: u32,
-        /// Round being answered.
+        /// Round being answered (copied from the announcement).
         round: u64,
-        /// Eligible scored variants (may be empty).
-        variants: Vec<Variant>,
-        /// Whether the job has completed all work.
+        /// Per-window variant portfolios: `bids[w]` answers
+        /// `windows[w]` of the announcement; an empty vector means the
+        /// agent is silent on that window. Variant `id`s are assigned by
+        /// the agent, unique across the whole reply, and echoed back in
+        /// [`Award::variant_ids`].
+        bids: Vec<Vec<Variant>>,
+        /// Whether the job has completed all of its work (diagnostics;
+        /// the leader tracks completion from its own realization
+        /// ground truth).
         done: bool,
     },
 }

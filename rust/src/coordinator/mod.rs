@@ -11,19 +11,78 @@
 //! state, clearing, and ground-truth realization. Messages are the only
 //! coupling — exactly the information-visibility contract of §5.1(d)
 //! (jobs see announced windows and their own awards, nothing else).
+//!
+//! # One multi-window round
+//!
+//! Since the K-window port, a round negotiates **all** of the cluster's
+//! candidate windows in a single message exchange and clears up to K of
+//! them (`jasda.announce_k`, or one per free slice under
+//! `announce_per_slice`) with the same
+//! [`ClearingEngine`](crate::jasda::clearing::ClearingEngine) the
+//! in-process [`JasdaScheduler`](crate::jasda::JasdaScheduler) embeds:
+//!
+//! ```text
+//!  leader                                      agents (thread per job)
+//!    │                                               │
+//!    │ 1. enumerate candidate windows off the        │
+//!    │    cluster gap indexes                        │
+//!    │                                               │
+//!    │ 2. Announce { round, now, windows } ────────▶ │  one broadcast
+//!    │                                               │
+//!    │                      3. each agent plans once │
+//!    │                         per window *shape*    │
+//!    │                         (shape-keyed plan     │
+//!    │                         cache), stamps per    │
+//!    │                         window, and replies   │
+//!    │ ◀──────────── Bid { job, round, bids, done }  │  one reply each
+//!    │                                               │
+//!    │ 4. replay the policy selection loop over the  │
+//!    │    candidates, skipping windows whose pooled  │
+//!    │    bids are empty (silent), until ≤ K windows │
+//!    │    are announced — identical to the scheduler │
+//!    │    announce loop                              │
+//!    │                                               │
+//!    │ 5. ClearingEngine: batched scoring (per-row   │
+//!    │    capacities), speculative per-window WIS on │
+//!    │    the persistent WorkerPool, sequential      │
+//!    │    cross-window reconciliation                │
+//!    │                                               │
+//!    │ 6. Awarded { round, variant_ids, now } ─────▶ │  winners only
+//!    │    + reserve on slice timelines               │
+//!    │    + realize ground truth (sampled durations) │
+//!    │                                               │
+//!    │    … later, when a reservation ends …         │
+//!    │ 7. Completed { planned, realized, at } ─────▶ │  owner only
+//!    │    + ex-post verification → calibration       │
+//!    ▼                                               ▼
+//! ```
+//!
+//! # Decision parity with the in-process scheduler
+//!
+//! [`run_reference`] is the single-process oracle: the **same** leader
+//! environment (realization RNG, completion slab, calibration updates,
+//! award clamping) but with decisions made by an embedded
+//! [`JasdaScheduler`] over a leader-maintained job mirror, exactly as
+//! the engine path would. `tests/properties.rs` asserts, on random
+//! traces for K ∈ {1, 2, per-slice}, that [`run_protocol`] and
+//! [`run_reference`] produce identical per-round windows and awards —
+//! the protocol runtime is a *transport* for the paper's loop, not a
+//! different scheduler.
 
 pub mod messages;
 
 use crate::config::SimConfig;
 use crate::jasda::calibration::Calibration;
-use crate::jasda::clearing::{select_best_compatible, WisItem};
-use crate::jasda::scoring::{NativeScorer, ScoreBatch, ScorerBackend};
-use crate::jasda::window::WindowSelector;
-use crate::job::variants::generate_variants;
-use crate::job::{Job, JobState};
-use crate::mig::{Cluster, PartitionLayout, Reservation};
-use crate::sim::Rng;
-use crate::types::{JobId, Time};
+use crate::jasda::clearing::{Accepted, ClearingEngine, RowCtx};
+use crate::jasda::pool::WorkerPool;
+use crate::jasda::scoring::NativeScorer;
+use crate::jasda::window::{announce_target, round_policy, WindowSelector};
+use crate::jasda::JasdaScheduler;
+use crate::job::variants::{plan_chunks, stamp_variants, PlannedChunk};
+use crate::job::{age_factor, Job, JobSet, JobState, Variant};
+use crate::mig::{Cluster, PartitionLayout, Reservation, Window};
+use crate::sim::{Rng, Scheduler, SubjobRecord};
+use crate::types::{Interval, JobId, SliceId, Time};
 use messages::{AgentReply, Award, CompletionReport, ToAgent};
 use std::collections::BinaryHeap;
 use std::sync::mpsc;
@@ -33,14 +92,22 @@ use std::sync::mpsc;
 pub struct ProtocolOutcome {
     /// Rounds (announcement cycles) executed.
     pub rounds: u64,
-    /// Announcements broadcast.
+    /// Announce broadcasts sent (rounds with at least one candidate).
     pub announcements: u64,
-    /// Bid messages received (silent replies excluded).
+    /// Rounds in which at least one window gathered bids and cleared.
+    pub rounds_with_bids: u64,
+    /// Windows that gathered bids and were cleared.
+    pub windows_announced: u64,
+    /// Selected candidates skipped because they drew no bids.
+    pub windows_silent: u64,
+    /// Bid messages with at least one non-empty per-window portfolio.
     pub bids: u64,
-    /// Variants received in bids.
+    /// Variants received in bids (across all candidate windows).
     pub variants: u64,
     /// Awards granted.
     pub awards: u64,
+    /// Eligible variants dropped by cross-window reconciliation.
+    pub cross_window_conflicts: u64,
     /// Jobs completed.
     pub completed_jobs: usize,
     /// Total jobs.
@@ -49,29 +116,124 @@ pub struct ProtocolOutcome {
     pub final_time: Time,
     /// Wall-clock duration of the run.
     pub wall: std::time::Duration,
+    /// Leader-side decision wall time (selection replay + clearing +
+    /// award application), summed over rounds.
+    pub decision_ns: u64,
+    /// Worst single-round leader decision time.
+    pub max_round_decision_ns: u64,
+}
+
+impl ProtocolOutcome {
+    fn new(total_jobs: usize) -> Self {
+        ProtocolOutcome {
+            rounds: 0,
+            announcements: 0,
+            rounds_with_bids: 0,
+            windows_announced: 0,
+            windows_silent: 0,
+            bids: 0,
+            variants: 0,
+            awards: 0,
+            cross_window_conflicts: 0,
+            completed_jobs: 0,
+            total_jobs,
+            final_time: 0,
+            wall: std::time::Duration::ZERO,
+            decision_ns: 0,
+            max_round_decision_ns: 0,
+        }
+    }
+
+    /// Mean leader decision latency per round with at least one
+    /// candidate (ns).
+    pub fn decision_ns_per_round(&self) -> f64 {
+        if self.announcements == 0 {
+            return 0.0;
+        }
+        self.decision_ns as f64 / self.announcements as f64
+    }
+}
+
+/// One award in a round's decision trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AwardRec {
+    /// Winning job.
+    pub job: JobId,
+    /// Slice reserved.
+    pub slice: SliceId,
+    /// Reserved interval.
+    pub interval: Interval,
+    /// Work committed (after the leader's remaining-work clamp).
+    pub work: f64,
+}
+
+/// Decision record of one round that cleared at least one window — the
+/// unit compared by the protocol-vs-scheduler parity property tests.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundDecision {
+    /// Round counter.
+    pub round: u64,
+    /// Leader time at the decision.
+    pub now: Time,
+    /// Windows cleared this round, in announcement order.
+    pub windows: Vec<Window>,
+    /// Awards, in commitment (reconciliation) order.
+    pub awards: Vec<AwardRec>,
 }
 
 /// Job-agent thread: owns its job, answers announcements autonomously.
+///
+/// The agent mirrors the scheduler-side generation pipeline: one
+/// [`plan_chunks`] call per distinct window *shape* `(c_k, speed, Δt)`
+/// (the agent-local shape-keyed plan cache), then one cheap
+/// [`stamp_variants`] per announced window — identical arithmetic to
+/// `generate_variants`, so agent bids are bit-identical to what the
+/// in-process scheduler would generate from the same job state.
 fn agent_task(
     mut job: Job,
     cfg: crate::config::JasdaConfig,
     rx: mpsc::Receiver<ToAgent>,
     tx: mpsc::Sender<AgentReply>,
 ) {
-    // Variants proposed in the current round, kept so awards can be
-    // resolved to work amounts (the leader echoes variant ids back).
-    let mut last_bid: Vec<crate::job::Variant> = Vec::new();
+    // Variants proposed in the current round (flattened across windows),
+    // kept so awards can be resolved to work amounts: the leader echoes
+    // the *agent-assigned* variant ids back.
+    let mut last_bid: Vec<Variant> = Vec::new();
+    // Agent-local plan cache, cleared every round (plans depend on the
+    // job's work cursor, which only moves on award/completion).
+    let mut plans: std::collections::HashMap<(u64, u64, u64), Vec<PlannedChunk>> =
+        std::collections::HashMap::new();
     while let Ok(msg) = rx.recv() {
         match msg {
-            ToAgent::Announce { round, now, window } => {
+            ToAgent::Announce { round, now, windows } => {
                 if job.state == JobState::Future && job.arrival <= now {
                     job.state = JobState::Active;
                 }
-                last_bid = generate_variants(&job, &window, &cfg);
+                last_bid.clear();
+                plans.clear();
+                let mut bids: Vec<Vec<Variant>> = Vec::with_capacity(windows.len());
+                let mut next_id: u32 = 0;
+                for w in windows.iter() {
+                    let key = (w.capacity_gb.to_bits(), w.speed.to_bits(), w.delta_t());
+                    let plan = plans.entry(key).or_insert_with(|| {
+                        plan_chunks(&job, &cfg, w.capacity_gb, w.speed, w.delta_t())
+                    });
+                    let mut vs = Vec::with_capacity(plan.len());
+                    stamp_variants(&job, w, &cfg, plan, &mut vs);
+                    for v in &mut vs {
+                        v.id = next_id;
+                        next_id += 1;
+                    }
+                    last_bid.extend(vs.iter().cloned());
+                    bids.push(vs);
+                }
+                if !last_bid.is_empty() {
+                    job.bids_submitted += 1;
+                }
                 let reply = AgentReply::Bid {
                     job: job.id,
                     round,
-                    variants: last_bid.clone(),
+                    bids,
                     done: job.state == JobState::Completed,
                 };
                 if tx.send(reply).is_err() {
@@ -103,43 +265,312 @@ fn agent_task(
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 struct PendingKey(Time, u64);
 
+/// An in-flight subjob completion, realized at award time.
 struct PendingDone {
     job: JobId,
     slice: u32,
     seq: u32,
-    reserved: crate::types::Interval,
+    reserved: Interval,
     realized_end: Time,
     planned_work: f64,
     realized_work: f64,
     declared_phi: [f64; 4],
 }
 
+/// A completion that just fired, handed to the run-loop's sink so the
+/// protocol path can message the owning agent and the reference path can
+/// feed the embedded scheduler's verification hook.
+struct Fired {
+    slot: usize,
+    job: JobId,
+    slice: SliceId,
+    seq: u32,
+    reserved: Interval,
+    realized_end: Time,
+    planned_work: f64,
+    realized_work: f64,
+    declared_phi: [f64; 4],
+    observed_phi: [f64; 4],
+}
+
+/// Everything the leader owns besides decision-making: the cluster and
+/// its ground truth, per-job bookkeeping, the completion slab, and the
+/// trust state. Shared verbatim between [`run_protocol`] (decisions via
+/// message-passing agents) and [`run_reference`] (decisions via an
+/// embedded [`JasdaScheduler`]), which is what makes the two runs
+/// comparable round for round.
+struct LeaderEnv {
+    cluster: Cluster,
+    rng: Rng,
+    /// Population-order read-only job facts. `slot` maps a (possibly
+    /// sparse, trace-supplied) JobId to its vector index so ids are
+    /// never used as indices.
+    slot: std::collections::BTreeMap<JobId, usize>,
+    trps: Vec<crate::trp::Trp>,
+    remaining: Vec<f64>,
+    last_selected: Vec<Time>,
+    seq: Vec<u32>,
+    done: Vec<bool>,
+    completed_jobs: usize,
+    calibration: Calibration,
+    /// Slab of in-flight completions with slot reuse (same scheme as
+    /// SimEngine): memory stays O(outstanding), not O(total subjobs).
+    events: BinaryHeap<std::cmp::Reverse<(PendingKey, usize)>>,
+    pending: Vec<Option<PendingDone>>,
+    free_slots: Vec<usize>,
+    event_seq: u64,
+}
+
+impl LeaderEnv {
+    fn new(cfg: &SimConfig, jobs: &[Job]) -> Self {
+        let layout = PartitionLayout::stock(&cfg.cluster.layout).expect("layout");
+        let slot: std::collections::BTreeMap<JobId, usize> =
+            jobs.iter().enumerate().map(|(i, j)| (j.id, i)).collect();
+        assert_eq!(slot.len(), jobs.len(), "protocol runtime requires unique job ids");
+        LeaderEnv {
+            cluster: Cluster::new(cfg.cluster.num_gpus, &layout),
+            rng: Rng::new(cfg.seed).fork(0xC00D),
+            slot,
+            trps: jobs.iter().map(|j| j.trp.clone()).collect(),
+            remaining: jobs.iter().map(|j| j.total_work()).collect(),
+            last_selected: jobs.iter().map(|j| j.arrival).collect(),
+            seq: vec![0; jobs.len()],
+            done: vec![false; jobs.len()],
+            completed_jobs: 0,
+            calibration: Calibration::new(
+                jobs.len(),
+                cfg.jasda.kappa,
+                cfg.jasda.gamma,
+                cfg.jasda.alpha.as_array(),
+            ),
+            events: BinaryHeap::new(),
+            pending: Vec::new(),
+            free_slots: Vec::new(),
+            event_seq: 0,
+        }
+    }
+
+    /// Fire every completion due at or before `now`: release/truncate the
+    /// reservation, run ex-post verification (Eq. (6)–(8)) into the trust
+    /// state, update remaining-work accounting, and hand the event to
+    /// `sink` (protocol: report to the owning agent; reference: feed the
+    /// embedded scheduler's verification hook and the job mirror).
+    fn fire_due(&mut self, now: Time, alpha: &[f64; 4], sink: &mut dyn FnMut(&Fired)) {
+        while let Some(&std::cmp::Reverse((PendingKey(t, _), idx))) = self.events.peek() {
+            if t > now {
+                break;
+            }
+            self.events.pop();
+            let p = self.pending[idx].take().expect("completion fired twice");
+            self.free_slots.push(idx);
+            let js = self.slot[&p.job];
+            self.remaining[js] -= p.realized_work;
+            if p.realized_end < p.reserved.end {
+                self.cluster
+                    .slice_mut(p.slice)
+                    .timeline
+                    .truncate(p.job, p.seq, p.realized_end);
+            }
+            // Ex-post verification (leader-side ground truth).
+            let observed = [
+                (p.realized_work / p.planned_work.max(1e-9)).clamp(0.0, 1.0)
+                    * p.declared_phi[0],
+                p.declared_phi[1],
+                p.declared_phi[2],
+                p.declared_phi[3],
+            ];
+            let h_obs: f64 = alpha.iter().zip(&observed).map(|(a, o)| a * o).sum();
+            self.calibration.verify(p.job, &p.declared_phi, &observed, h_obs);
+            sink(&Fired {
+                slot: js,
+                job: p.job,
+                slice: p.slice,
+                seq: p.seq,
+                reserved: p.reserved,
+                realized_end: p.realized_end,
+                planned_work: p.planned_work,
+                realized_work: p.realized_work,
+                declared_phi: p.declared_phi,
+                observed_phi: observed,
+            });
+            if self.remaining[js] <= 1e-6 && !self.done[js] {
+                self.done[js] = true;
+                self.completed_jobs += 1;
+            }
+        }
+    }
+
+    /// Commit one accepted variant: clamp to the job's remaining work,
+    /// reserve the interval on the slice timeline, and realize the
+    /// ground-truth duration (sampling the leader RNG). Returns the
+    /// clamped planned work, or `None` when the job has nothing left to
+    /// run (the award is dropped, exactly as before the K-window port).
+    #[allow(clippy::too_many_arguments)]
+    fn award(
+        &mut self,
+        now: Time,
+        job: JobId,
+        slice: SliceId,
+        interval: Interval,
+        work: f64,
+        declared_phi: [f64; 4],
+    ) -> Option<f64> {
+        let j = self.slot[&job];
+        let work = work.min(self.remaining[j].max(0.0));
+        if work <= 1e-9 {
+            return None;
+        }
+        let s = self.seq[j];
+        self.seq[j] += 1;
+        self.cluster
+            .slice_mut(slice)
+            .timeline
+            .reserve(Reservation { job, subjob_seq: s, interval })
+            .expect("cleared variants are non-overlapping");
+        self.last_selected[j] = now;
+
+        let speed = self.cluster.slice(slice).speed();
+        let realized_duration = self.trps[j].sample_duration(&mut self.rng, work, speed);
+        let reserved_len = interval.len();
+        let (realized_end, realized_work) = if realized_duration <= reserved_len {
+            (interval.start + realized_duration, work)
+        } else {
+            (interval.end, work * reserved_len as f64 / realized_duration as f64)
+        };
+        let pd = PendingDone {
+            job,
+            slice,
+            seq: s,
+            reserved: interval,
+            realized_end,
+            planned_work: work,
+            realized_work,
+            declared_phi,
+        };
+        let idx = match self.free_slots.pop() {
+            Some(reused) => {
+                self.pending[reused] = Some(pd);
+                reused
+            }
+            None => {
+                self.pending.push(Some(pd));
+                self.pending.len() - 1
+            }
+        };
+        self.event_seq += 1;
+        self.events.push(std::cmp::Reverse((PendingKey(realized_end, self.event_seq), idx)));
+        Some(work)
+    }
+
+    /// Drain outstanding completions for final accounting; returns the
+    /// advanced virtual time.
+    fn drain(&mut self, mut now: Time) -> Time {
+        while let Some(std::cmp::Reverse((PendingKey(t, _), idx))) = self.events.pop() {
+            let p = self.pending[idx].take().expect("completion fired twice");
+            let js = self.slot[&p.job];
+            self.remaining[js] -= p.realized_work;
+            now = now.max(t);
+            if self.remaining[js] <= 1e-6 && !self.done[js] {
+                self.done[js] = true;
+                self.completed_jobs += 1;
+            }
+        }
+        now
+    }
+}
+
+/// The leader's selection replay: the in-process scheduler's announce
+/// loop (policy pick → silent skip → per-slice retain → stop at K),
+/// operating on the bids already collected from the agents. Appends the
+/// per-window pool rows in population (= bidder) order, so pool layout is
+/// identical to the in-process [`Scheduler::iterate`] layout.
+///
+/// `bids[slot][cand]` is job `slot`'s portfolio for original candidate
+/// `cand`. Returns `(announced, window_rows, silent_count)`; `pool` and
+/// `agent_vid` (the agent-assigned id of each pool row, for award
+/// echoes) are filled in place.
+#[allow(clippy::too_many_arguments)]
+fn replay_selection(
+    selector: &mut WindowSelector,
+    policy: crate::config::WindowPolicy,
+    cluster: &Cluster,
+    now: Time,
+    horizon: u64,
+    k_target: usize,
+    per_slice: bool,
+    candidates: &[Window],
+    bids: &[Vec<Vec<Variant>>],
+    pool: &mut Vec<Variant>,
+    agent_vid: &mut Vec<u32>,
+) -> (Vec<Window>, Vec<(usize, usize)>, u64) {
+    let mut work: Vec<Window> = candidates.to_vec();
+    let mut orig: Vec<usize> = (0..candidates.len()).collect();
+    let mut announced: Vec<Window> = Vec::new();
+    let mut window_rows: Vec<(usize, usize)> = Vec::new();
+    let mut silent = 0u64;
+    while announced.len() < k_target {
+        let idx = match selector.select(policy, &work, cluster, now, horizon) {
+            Some(i) => i,
+            None => break,
+        };
+        let window = work.swap_remove(idx);
+        let cand = orig.swap_remove(idx);
+
+        let row0 = pool.len();
+        for per_job in bids {
+            for v in &per_job[cand] {
+                agent_vid.push(v.id);
+                pool.push(v.clone());
+            }
+        }
+        if pool.len() == row0 {
+            // Silent window: skip it; it is not a real announcement.
+            silent += 1;
+            continue;
+        }
+        window_rows.push((row0, pool.len()));
+        if per_slice {
+            // One window per slice: further candidates on this slice are
+            // out of this round.
+            let slice = window.slice;
+            let mut i = 0;
+            while i < work.len() {
+                if work[i].slice == slice {
+                    work.swap_remove(i);
+                    orig.swap_remove(i);
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        announced.push(window);
+    }
+    (announced, window_rows, silent)
+}
+
 /// Run the full protocol: spawn one agent thread per job, drive
-/// announcement rounds until all jobs complete (or `max_rounds`).
+/// multi-window announcement rounds until all jobs complete (or
+/// `max_rounds`).
 pub fn run_protocol(cfg: SimConfig, jobs: Vec<Job>, max_rounds: u64) -> ProtocolOutcome {
+    run_protocol_traced(cfg, jobs, max_rounds, None)
+}
+
+/// [`run_protocol`] with an optional per-round decision trace (used by
+/// the decision-parity property tests; `None` skips all recording).
+pub fn run_protocol_traced(
+    cfg: SimConfig,
+    jobs: Vec<Job>,
+    max_rounds: u64,
+    mut trace: Option<&mut Vec<RoundDecision>>,
+) -> ProtocolOutcome {
     let wall0 = std::time::Instant::now();
     let n_jobs = jobs.len();
-    let layout = PartitionLayout::stock(&cfg.cluster.layout).expect("layout");
-    let mut cluster = Cluster::new(cfg.cluster.num_gpus, &layout);
-    let mut rng = Rng::new(cfg.seed).fork(0xC00D);
-    let mut calibration =
-        Calibration::new(n_jobs, cfg.jasda.kappa, cfg.jasda.gamma, cfg.jasda.alpha.as_array());
+    let mut env = LeaderEnv::new(&cfg, &jobs);
     let mut scorer = NativeScorer;
     let mut selector = WindowSelector::new();
-
-    // Leader-side read-only job facts + bookkeeping. Vectors are in
-    // population order; `slot` maps a (possibly sparse, trace-supplied)
-    // JobId to its vector index so ids are never used as indices.
-    let slot: std::collections::BTreeMap<JobId, usize> =
-        jobs.iter().enumerate().map(|(i, j)| (j.id, i)).collect();
-    assert_eq!(slot.len(), n_jobs, "protocol runtime requires unique job ids");
-    let trps: Vec<crate::trp::Trp> = jobs.iter().map(|j| j.trp.clone()).collect();
-    let arrivals: Vec<Time> = jobs.iter().map(|j| j.arrival).collect();
-    let totals: Vec<f64> = jobs.iter().map(|j| j.total_work()).collect();
-    let mut remaining: Vec<f64> = totals.clone();
-    let mut last_selected: Vec<Time> = arrivals.clone();
-    let mut seq: Vec<u32> = vec![0; n_jobs];
-    let mut done: Vec<bool> = vec![false; n_jobs];
+    let mut engine = ClearingEngine::new();
+    let wpool = WorkerPool::from_config(cfg.jasda.parallel);
+    let alpha = cfg.jasda.alpha.as_array();
 
     // Spawn agents.
     let (reply_tx, reply_rx) = mpsc::channel::<AgentReply>();
@@ -154,237 +585,176 @@ pub fn run_protocol(cfg: SimConfig, jobs: Vec<Job>, max_rounds: u64) -> Protocol
     }
     drop(reply_tx);
 
-    let mut out = ProtocolOutcome {
-        rounds: 0,
-        announcements: 0,
-        bids: 0,
-        variants: 0,
-        awards: 0,
-        completed_jobs: 0,
-        total_jobs: n_jobs,
-        final_time: 0,
-        wall: std::time::Duration::ZERO,
-    };
-
+    let mut out = ProtocolOutcome::new(n_jobs);
     let period = cfg.engine.iteration_period;
-    let mut now: Time = arrivals.iter().min().copied().unwrap_or(0);
-    let mut events: BinaryHeap<std::cmp::Reverse<(PendingKey, usize)>> = BinaryHeap::new();
-    // Slab of in-flight completions with slot reuse (same scheme as
-    // SimEngine): memory stays O(outstanding), not O(total subjobs).
-    let mut pending: Vec<Option<PendingDone>> = Vec::new();
-    let mut free_slots: Vec<usize> = Vec::new();
-    let mut event_seq = 0u64;
+    let mut now: Time =
+        env.last_selected.iter().min().copied().unwrap_or(0);
+    // Per-round bid store: bids_by_slot[slot][cand] = that job's
+    // portfolio for candidate `cand`.
+    let mut bids_by_slot: Vec<Vec<Vec<Variant>>> = vec![Vec::new(); n_jobs];
+    let mut pool: Vec<Variant> = Vec::new();
+    let mut agent_vid: Vec<u32> = Vec::new();
 
     for round in 0..max_rounds {
         out.rounds = round + 1;
-        // 1. Fire due completions; report to agents + verify trust.
-        while let Some(&std::cmp::Reverse((PendingKey(t, _), idx))) = events.peek() {
-            if t > now {
-                break;
-            }
-            events.pop();
-            let p = pending[idx].take().expect("completion fired twice");
-            free_slots.push(idx);
-            let js = slot[&p.job];
-            remaining[js] -= p.realized_work;
-            if p.realized_end < p.reserved.end {
-                cluster.slice_mut(p.slice).timeline.truncate(p.job, p.seq, p.realized_end);
-            }
-            // Ex-post verification (leader-side ground truth).
-            let observed = [
-                (p.realized_work / p.planned_work.max(1e-9)).clamp(0.0, 1.0)
-                    * p.declared_phi[0],
-                p.declared_phi[1],
-                p.declared_phi[2],
-                p.declared_phi[3],
-            ];
-            let h_obs: f64 = cfg
-                .jasda
-                .alpha
-                .as_array()
-                .iter()
-                .zip(&observed)
-                .map(|(a, o)| a * o)
-                .sum();
-            calibration.verify(p.job, &p.declared_phi, &observed, h_obs);
+        // 1. Fire due completions; report to agents.
+        let agent_tx_ref = &agent_tx;
+        env.fire_due(now, &alpha, &mut |f: &Fired| {
             let report = ToAgent::Completed(CompletionReport {
-                planned_work: p.planned_work,
-                realized_work: p.realized_work,
-                at: p.realized_end,
+                planned_work: f.planned_work,
+                realized_work: f.realized_work,
+                at: f.realized_end,
             });
-            let _ = agent_tx[js].send(report);
-            if remaining[js] <= 1e-6 && !done[js] {
-                done[js] = true;
-                out.completed_jobs += 1;
-            }
-        }
-        if out.completed_jobs == n_jobs {
+            let _ = agent_tx_ref[f.slot].send(report);
+        });
+        out.completed_jobs = env.completed_jobs;
+        if env.completed_jobs == n_jobs {
             break;
         }
 
-        // 2. Announce one window to every agent.
-        let candidates = cluster.candidate_windows(
+        // 2. Announce the round's candidate windows to every agent
+        // (shared behind an Arc: one enumeration, N refcount bumps).
+        let candidates = std::sync::Arc::new(env.cluster.candidate_windows(
             now + cfg.jasda.announce_lead,
             cfg.jasda.announce_horizon,
             cfg.jasda.tau_min,
-        );
-        let window = match selector.select(
-            cfg.jasda.window_policy,
-            &candidates,
-            &cluster,
-            now,
-            cfg.jasda.announce_horizon,
-        ) {
-            Some(i) => candidates[i],
-            None => {
-                now += period;
-                continue;
-            }
-        };
+        ));
+        if candidates.is_empty() {
+            now += period;
+            continue;
+        }
         out.announcements += 1;
         for tx in &agent_tx {
-            let _ = tx.send(ToAgent::Announce { round, now, window });
+            let _ = tx.send(ToAgent::Announce {
+                round,
+                now,
+                windows: std::sync::Arc::clone(&candidates),
+            });
         }
 
-        // 3. Collect one reply per agent (silent = empty variants).
-        let mut pool: Vec<crate::job::Variant> = Vec::new();
+        // 3. Collect one reply per agent (all-empty bids = silent).
         let mut replies = 0;
         while replies < n_jobs {
             match reply_rx.recv() {
-                Ok(AgentReply::Bid { job: _, round: r, variants, done: _ }) => {
+                Ok(AgentReply::Bid { job, round: r, bids, done: _ }) => {
                     if r == round {
                         replies += 1;
-                        if !variants.is_empty() {
+                        let slot = env.slot[&job];
+                        let n: usize = bids.iter().map(|b| b.len()).sum();
+                        if n > 0 {
                             out.bids += 1;
-                            pool.extend(variants);
+                            out.variants += n as u64;
                         }
+                        bids_by_slot[slot] = bids;
                     }
                 }
                 Err(_) => break,
             }
         }
-        for (i, v) in pool.iter_mut().enumerate() {
-            v.id = i as u32;
-        }
-        out.variants += pool.len() as u64;
-        if pool.is_empty() {
+
+        // 4. Replay the announce loop, then clear with the shared engine.
+        let t_decide = std::time::Instant::now();
+        let (policy, _repack_redirected) = round_policy(&cfg.jasda, &env.cluster, now);
+        let k_target = announce_target(&cfg.jasda, &candidates);
+        pool.clear();
+        agent_vid.clear();
+        let (announced, window_rows, silent) = replay_selection(
+            &mut selector,
+            policy,
+            &env.cluster,
+            now,
+            cfg.jasda.announce_horizon,
+            k_target,
+            cfg.jasda.announce_per_slice,
+            &candidates,
+            &bids_by_slot,
+            &mut pool,
+            &mut agent_vid,
+        );
+        out.windows_silent += silent;
+        out.windows_announced += announced.len() as u64;
+        if announced.is_empty() {
+            // All candidates were silent: the selection replay above is
+            // still leader decision work — account for it.
+            let decide_ns = t_decide.elapsed().as_nanos() as u64;
+            out.decision_ns += decide_ns;
+            out.max_round_decision_ns = out.max_round_decision_ns.max(decide_ns);
             now += period;
             continue;
         }
+        out.rounds_with_bids += 1;
+        // (Pool rows keep their agent-assigned ids; the engine and the
+        // award path identify variants by row index / `agent_vid`.)
 
-        // 4. Score + clear (same pipeline as the in-process scheduler).
-        let mut batch = ScoreBatch::with_bins(cfg.jasda.fmp_bins);
-        batch.capacity = window.capacity_gb as f32;
-        batch.theta = cfg.jasda.theta as f32;
-        batch.lambda = cfg.jasda.lambda as f32;
-        let alpha = cfg.jasda.alpha.as_array();
-        let beta = cfg.jasda.beta.as_array();
-        batch.alpha = alpha.map(|x| x as f32);
-        batch.beta = beta.map(|x| x as f32);
-        for v in &pool {
-            let j = slot[&v.job];
-            let age = if cfg.jasda.age_priority {
-                let waited = now.saturating_sub(last_selected[j]);
-                (waited as f64 / cfg.jasda.age_scale.max(1) as f64).min(1.0)
+        let jcfg = &cfg.jasda;
+        let env_ro = &env;
+        let mut row_ctx = |v: &Variant| {
+            let slot = env_ro.slot[&v.job];
+            let age = if jcfg.age_priority {
+                age_factor(env_ro.last_selected[slot], now, jcfg.age_scale)
             } else {
                 0.0
             };
-            let (trust, hist) = if cfg.jasda.calibration {
-                (calibration.trust_weight(v.job), calibration.hist_avg(v.job))
+            let (trust, hist) = if jcfg.calibration {
+                (env_ro.calibration.trust_weight(v.job), env_ro.calibration.hist_avg(v.job))
             } else {
                 (1.0, 0.0)
             };
-            batch.push(
-                &v.fmp.mu,
-                &v.fmp.sigma,
-                [v.declared.phi[0], v.declared.phi[1], v.declared.phi[2], v.declared.phi[3]],
-                [v.sys.util, v.sys.frag, age],
-                trust,
-                hist,
-            );
-        }
-        let scored = scorer.score(&batch).expect("native scorer");
-        let mut items = Vec::new();
-        let mut item_to_pool = Vec::new();
-        for (i, v) in pool.iter().enumerate() {
-            if scored.eligible[i] && scored.score[i] > 0.0 {
-                items.push(WisItem { interval: v.interval, score: scored.score[i] as f64 });
-                item_to_pool.push(i);
-            }
-        }
-        let sol = select_best_compatible(&items);
+            RowCtx { age, trust, hist }
+        };
+        let mut accepted_rows: Vec<usize> = Vec::new();
+        let mut on_accept = |acc: Accepted<'_>| accepted_rows.push(acc.row);
+        let cstats = engine.clear(
+            jcfg,
+            &announced,
+            &window_rows,
+            &pool,
+            &mut row_ctx,
+            &mut scorer,
+            &wpool,
+            &mut on_accept,
+        );
+        out.cross_window_conflicts += cstats.cross_window_conflicts;
 
-        // 5. Award + reserve + realize.
-        let mut per_job_awards: std::collections::HashMap<JobId, Vec<u32>> =
-            std::collections::HashMap::new();
-        for &k in &sol.selected {
-            let v = &pool[item_to_pool[k]];
-            let j = slot[&v.job];
-            let work = v.work.min(remaining[j].max(0.0));
-            if work <= 1e-9 {
-                continue;
+        // 5. Award + reserve + realize, in commitment order; then notify
+        // each winning agent once (BTreeMap keeps send order
+        // deterministic; per-agent id order is acceptance order).
+        let mut per_job_awards: std::collections::BTreeMap<JobId, Vec<u32>> =
+            std::collections::BTreeMap::new();
+        let mut round_awards: Vec<AwardRec> = Vec::new();
+        for &row in &accepted_rows {
+            let v = &pool[row];
+            if let Some(work) =
+                env.award(now, v.job, v.slice, v.interval, v.work, v.declared.phi)
+            {
+                out.awards += 1;
+                per_job_awards.entry(v.job).or_default().push(agent_vid[row]);
+                if trace.is_some() {
+                    round_awards.push(AwardRec {
+                        job: v.job,
+                        slice: v.slice,
+                        interval: v.interval,
+                        work,
+                    });
+                }
             }
-            let s = seq[j];
-            seq[j] += 1;
-            cluster
-                .slice_mut(v.slice)
-                .timeline
-                .reserve(Reservation { job: v.job, subjob_seq: s, interval: v.interval })
-                .expect("cleared variants are non-overlapping");
-            last_selected[j] = now;
-            out.awards += 1;
-            per_job_awards.entry(v.job).or_default().push(v.id);
-
-            let speed = cluster.slice(v.slice).speed();
-            let realized_duration = trps[j].sample_duration(&mut rng, work, speed);
-            let reserved_len = v.interval.len();
-            let (realized_end, realized_work) = if realized_duration <= reserved_len {
-                (v.interval.start + realized_duration, work)
-            } else {
-                (v.interval.end, work * reserved_len as f64 / realized_duration as f64)
-            };
-            let pd = PendingDone {
-                job: v.job,
-                slice: v.slice,
-                seq: s,
-                reserved: v.interval,
-                realized_end,
-                planned_work: work,
-                realized_work,
-                declared_phi: v.declared.phi,
-            };
-            let idx = match free_slots.pop() {
-                Some(reused) => {
-                    pending[reused] = Some(pd);
-                    reused
-                }
-                None => {
-                    pending.push(Some(pd));
-                    pending.len() - 1
-                }
-            };
-            event_seq += 1;
-            events.push(std::cmp::Reverse((PendingKey(realized_end, event_seq), idx)));
         }
         for (job, variant_ids) in per_job_awards {
-            let _ =
-                agent_tx[slot[&job]].send(ToAgent::Awarded(Award { round, variant_ids, now }));
+            let _ = agent_tx[env.slot[&job]]
+                .send(ToAgent::Awarded(Award { round, variant_ids, now }));
+        }
+        let decide_ns = t_decide.elapsed().as_nanos() as u64;
+        out.decision_ns += decide_ns;
+        out.max_round_decision_ns = out.max_round_decision_ns.max(decide_ns);
+        if let Some(t) = trace.as_deref_mut() {
+            t.push(RoundDecision { round, now, windows: announced, awards: round_awards });
         }
 
         now += period;
     }
 
-    // Drain outstanding completions for accounting.
-    while let Some(std::cmp::Reverse((PendingKey(t, _), idx))) = events.pop() {
-        let p = pending[idx].take().expect("completion fired twice");
-        let js = slot[&p.job];
-        remaining[js] -= p.realized_work;
-        now = now.max(t);
-        if remaining[js] <= 1e-6 && !done[js] {
-            done[js] = true;
-            out.completed_jobs += 1;
-        }
-    }
+    now = env.drain(now);
+    out.completed_jobs = env.completed_jobs;
 
     for tx in &agent_tx {
         let _ = tx.send(ToAgent::Shutdown);
@@ -392,6 +762,141 @@ pub fn run_protocol(cfg: SimConfig, jobs: Vec<Job>, max_rounds: u64) -> Protocol
     for h in handles {
         let _ = h.join();
     }
+    out.final_time = now;
+    out.wall = wall0.elapsed();
+    out
+}
+
+/// The single-process decision oracle: the identical leader environment
+/// (realization RNG stream, completion slab, calibration updates, award
+/// clamping, round cadence) with decisions made by an embedded
+/// [`JasdaScheduler`] over a leader-maintained job mirror — no threads,
+/// no messages. The parity property tests compare this against
+/// [`run_protocol`] round for round; it is also the honest baseline for
+/// measuring what the message transport itself costs.
+pub fn run_reference(cfg: SimConfig, jobs: Vec<Job>, max_rounds: u64) -> ProtocolOutcome {
+    run_reference_traced(cfg, jobs, max_rounds, None)
+}
+
+/// [`run_reference`] with an optional per-round decision trace.
+pub fn run_reference_traced(
+    cfg: SimConfig,
+    jobs: Vec<Job>,
+    max_rounds: u64,
+    mut trace: Option<&mut Vec<RoundDecision>>,
+) -> ProtocolOutcome {
+    let wall0 = std::time::Instant::now();
+    let n_jobs = jobs.len();
+    let mut env = LeaderEnv::new(&cfg, &jobs);
+    let mut sched = JasdaScheduler::new(cfg.jasda.clone());
+    // The mirror evolves exactly as the agents' private job states do:
+    // activation on announce, reservation bookkeeping on award, work
+    // accounting on completion.
+    let mut mirror = JobSet::new(jobs);
+    let mut dummy_rng = Rng::new(0);
+    let alpha = cfg.jasda.alpha.as_array();
+
+    let mut out = ProtocolOutcome::new(n_jobs);
+    let period = cfg.engine.iteration_period;
+    let mut now: Time = env.last_selected.iter().min().copied().unwrap_or(0);
+    let mut cand_scratch: Vec<Window> = Vec::new();
+
+    for round in 0..max_rounds {
+        out.rounds = round + 1;
+        // 1. Fire due completions into the mirror + scheduler feedback.
+        let sched_ref = &mut sched;
+        let mirror_ref = &mut mirror;
+        env.fire_due(now, &alpha, &mut |f: &Fired| {
+            let j = mirror_ref.get_mut(f.job);
+            j.reserved_work = (j.reserved_work - f.planned_work).max(0.0);
+            j.done_work += f.realized_work;
+            if j.remaining_work() <= 1e-6 && j.state == JobState::Active {
+                j.state = JobState::Completed;
+                j.completed_at = Some(f.realized_end);
+            }
+            sched_ref.on_subjob_complete(&SubjobRecord {
+                job: f.job,
+                slice: f.slice,
+                subjob_seq: f.seq,
+                reserved: f.reserved,
+                realized_end: f.realized_end,
+                planned_work: f.planned_work,
+                realized_work: f.realized_work,
+                declared_phi: f.declared_phi,
+                observed_phi: f.observed_phi,
+                committed_at: 0,
+            });
+        });
+        out.completed_jobs = env.completed_jobs;
+        if env.completed_jobs == n_jobs {
+            break;
+        }
+
+        // 2–4. Announce/bid/clear happen inside the scheduler; rounds
+        // with no candidate windows skip it, exactly as the protocol
+        // leader skips its broadcast. (The scratch buffer avoids a
+        // per-round allocation; the scheduler re-enumerates internally,
+        // which is inherent to using it unmodified as the oracle.)
+        env.cluster.collect_windows(
+            now + cfg.jasda.announce_lead,
+            cfg.jasda.announce_horizon,
+            cfg.jasda.tau_min,
+            &mut cand_scratch,
+        );
+        if cand_scratch.is_empty() {
+            now += period;
+            continue;
+        }
+        out.announcements += 1;
+        mirror.admit_until(now);
+
+        let t_decide = std::time::Instant::now();
+        let commitments = sched.iterate(now, &env.cluster, &mut mirror, &mut dummy_rng);
+        let announced: Vec<Window> = sched.last_announced().to_vec();
+        out.windows_announced += announced.len() as u64;
+        if announced.is_empty() {
+            let decide_ns = t_decide.elapsed().as_nanos() as u64;
+            out.decision_ns += decide_ns;
+            out.max_round_decision_ns = out.max_round_decision_ns.max(decide_ns);
+            now += period;
+            continue;
+        }
+        out.rounds_with_bids += 1;
+
+        // 5. Award + reserve + realize, mirroring the agents' award
+        // handler for accepted commitments.
+        let mut round_awards: Vec<AwardRec> = Vec::new();
+        for c in &commitments {
+            if let Some(work) =
+                env.award(now, c.job, c.slice, c.interval, c.work, c.declared_phi)
+            {
+                out.awards += 1;
+                let j = mirror.get_mut(c.job);
+                j.reserved_work += c.work.min(j.pending_work());
+                j.last_selected = now;
+                j.last_slice = Some(c.slice);
+                if trace.is_some() {
+                    round_awards.push(AwardRec {
+                        job: c.job,
+                        slice: c.slice,
+                        interval: c.interval,
+                        work,
+                    });
+                }
+            }
+        }
+        let decide_ns = t_decide.elapsed().as_nanos() as u64;
+        out.decision_ns += decide_ns;
+        out.max_round_decision_ns = out.max_round_decision_ns.max(decide_ns);
+        if let Some(t) = trace.as_deref_mut() {
+            t.push(RoundDecision { round, now, windows: announced, awards: round_awards });
+        }
+
+        now += period;
+    }
+
+    now = env.drain(now);
+    out.completed_jobs = env.completed_jobs;
     out.final_time = now;
     out.wall = wall0.elapsed();
     out
@@ -430,6 +935,8 @@ mod tests {
         assert!(out.bids > 0);
         assert!(out.awards >= 5);
         assert!(out.variants >= out.bids);
+        assert!(out.windows_announced > 0);
+        assert!(out.decision_ns > 0);
     }
 
     #[test]
@@ -453,5 +960,90 @@ mod tests {
     fn round_cap_respected() {
         let out = run_protocol(cfg(), jobs(3), 5);
         assert!(out.rounds <= 5);
+    }
+
+    #[test]
+    fn protocol_clears_multiple_windows_per_round() {
+        let mut c = cfg();
+        c.jasda.announce_per_slice = true;
+        let out = run_protocol(c, jobs(6), 100_000);
+        assert_eq!(out.completed_jobs, 6, "{out:?}");
+        // On a 3-slice layout, per-slice announcement must clear more
+        // windows than it has bidding rounds (jobs bid into every slice
+        // they fit, so bidding rounds clear several windows at once).
+        assert!(
+            out.windows_announced > out.rounds_with_bids,
+            "multi-window rounds expected: {out:?}"
+        );
+    }
+
+    #[test]
+    fn reference_completes_and_matches_protocol_decisions_smoke() {
+        // The full random-trace parity property lives in
+        // tests/properties.rs; this is the fast in-module smoke check.
+        for (k, per_slice) in [(1usize, false), (2, false), (1, true)] {
+            let mut c = cfg();
+            c.jasda.announce_k = k;
+            c.jasda.announce_per_slice = per_slice;
+            let mut tp = Vec::new();
+            let mut tr = Vec::new();
+            let p = run_protocol_traced(c.clone(), jobs(4), 200_000, Some(&mut tp));
+            let r = run_reference_traced(c, jobs(4), 200_000, Some(&mut tr));
+            assert_eq!(p.completed_jobs, 4, "{p:?}");
+            assert_eq!(r.completed_jobs, 4, "{r:?}");
+            assert_eq!(tp.len(), tr.len(), "K={k} per_slice={per_slice}");
+            for (a, b) in tp.iter().zip(&tr) {
+                assert_eq!(a, b, "K={k} per_slice={per_slice}");
+            }
+            assert_eq!(p.rounds, r.rounds);
+            assert_eq!(p.awards, r.awards);
+            assert_eq!(p.final_time, r.final_time);
+        }
+    }
+
+    #[test]
+    fn agent_resolves_awards_by_agent_assigned_ids() {
+        // Regression: award ids must be the agent's own numbering, so a
+        // winning agent's reserved-work accounting actually moves. With
+        // the old leader-pool-id echo, awards never resolved and the
+        // agent kept re-bidding already-reserved work. Drive one agent
+        // directly: award its whole first bid, then verify the job is
+        // silent on the next announcement (pending work hit zero).
+        let trp = Trp { phases: vec![Phase::new(600.0, 4.0, 0.2, 0.1)], duration_cv: 0.05 };
+        let job = Job::new(9, "p", 0, trp, None, 1.0, 300.0, 0.0);
+        let jcfg = crate::config::JasdaConfig { fmp_bins: 16, ..Default::default() };
+        let (to_tx, to_rx) = mpsc::channel();
+        let (re_tx, re_rx) = mpsc::channel();
+        let handle = std::thread::spawn(move || agent_task(job, jcfg, to_rx, re_tx));
+
+        let window = Window {
+            slice: 0,
+            capacity_gb: 20.0,
+            speed: 1.0,
+            interval: Interval::new(0, 10_000),
+        };
+        let windows = std::sync::Arc::new(vec![window]);
+        to_tx
+            .send(ToAgent::Announce { round: 0, now: 0, windows: windows.clone() })
+            .unwrap();
+        let AgentReply::Bid { bids, round, .. } = re_rx.recv().unwrap();
+        assert_eq!(round, 0);
+        let ids: Vec<u32> = bids[0].iter().map(|v| v.id).collect();
+        assert!(!ids.is_empty(), "active job must bid into a roomy window");
+
+        // Award every proposed variant: the chain covers all pending
+        // work, and the agent clamps each award by its own pending.
+        to_tx
+            .send(ToAgent::Awarded(Award { round: 0, variant_ids: ids, now: 0 }))
+            .unwrap();
+        to_tx.send(ToAgent::Announce { round: 1, now: 25, windows }).unwrap();
+        let AgentReply::Bid { bids: second, round, .. } = re_rx.recv().unwrap();
+        assert_eq!(round, 1);
+        assert!(
+            second.iter().all(|b| b.is_empty()),
+            "fully reserved job must be silent — award ids failed to resolve: {second:?}"
+        );
+        to_tx.send(ToAgent::Shutdown).unwrap();
+        handle.join().unwrap();
     }
 }

@@ -1,16 +1,37 @@
-//! Per-window clearing: optimal Weighted Interval Scheduling (paper §4.4).
+//! Window clearing: optimal per-window Weighted Interval Scheduling
+//! (paper §4.4) and the shared K-window [`ClearingEngine`].
 //!
-//! `SelectBestCompatibleVariants` — given the pooled bid set V of one
-//! announced window, select the maximum-total-score subset of pairwise
-//! temporally non-overlapping variants. Classical DP after sorting by end
-//! time, with binary-search predecessor lookup: `O(M log M)` for `M = |V|`
-//! exactly as §4.6 claims.
+//! Two layers live here:
 //!
-//! Intervals are half-open, so a variant ending at `t` is compatible with
-//! one starting at `t` (back-to-back chains like the worked example's
-//! `v_A1=[40,47), v_A2=[47,50)` are allowed).
+//! * [`select_best_compatible`] — `SelectBestCompatibleVariants`: given
+//!   the pooled bid set V of one announced window, select the
+//!   maximum-total-score subset of pairwise temporally non-overlapping
+//!   variants. Classical DP after sorting by end time, with
+//!   binary-search predecessor lookup: `O(M log M)` for `M = |V|`
+//!   exactly as §4.6 claims. Intervals are half-open, so a variant
+//!   ending at `t` is compatible with one starting at `t` (back-to-back
+//!   chains like the worked example's `v_A1=[40,47)`, `v_A2=[47,50)` are
+//!   allowed).
+//!
+//! * [`ClearingEngine`] — the full K-window decision core shared by the
+//!   in-process [`JasdaScheduler`](crate::jasda::JasdaScheduler) and the
+//!   message-passing [`coordinator`](crate::coordinator) leader: one
+//!   batched composite-scoring pass over the union bid pool (per-row
+//!   slice capacities when K > 1), speculative per-window WIS fanned out
+//!   on a persistent [`WorkerPool`], and the sequential cross-window
+//!   reconciliation merge that keeps a job from winning two temporally
+//!   overlapping reservations — or the same work chunk twice — in one
+//!   decision round (§4.1 atomicity). Both runtimes feed the engine the
+//!   same inputs, so "coordinator round" and "scheduler iteration" are
+//!   decision-identical by construction (property-tested in
+//!   `tests/properties.rs`).
 
-use crate::types::Interval;
+use crate::config::JasdaConfig;
+use crate::jasda::pool::{workers_for, WorkerPool};
+use crate::jasda::scoring::{ScoreBatch, ScoreOutput, ScorerBackend};
+use crate::job::Variant;
+use crate::mig::Window;
+use crate::types::{Interval, JobId};
 
 /// A scored interval entering the WIS instance.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -88,6 +109,329 @@ pub fn select_best_compatible(items: &[WisItem]) -> WisSolution {
     selected.reverse();
     selected.sort_by_key(|&i| items[i].interval.start);
     WisSolution { selected, total_score: dp[m] }
+}
+
+/// Eligible items across windows below which speculative parallel WIS
+/// is not worth the fan-out.
+const MIN_WIS_ITEMS_FOR_FANOUT: usize = 64;
+
+/// Per-row scoring context the caller resolves from its own trust/age
+/// state: the in-process scheduler reads its [`JobSet`](crate::job::JobSet)
+/// and [`Calibration`](crate::jasda::Calibration); the coordinator leader
+/// reads its private bookkeeping vectors. Everything else about a row
+/// comes from the [`Variant`] itself.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RowCtx {
+    /// Age factor `A_i(t) ∈ [0,1]` (§4.3); 0 when age priority is off.
+    pub age: f64,
+    /// Calibration weight `γ·ρ_J` (Eq. (5)); 1 when calibration is off.
+    pub trust: f64,
+    /// Historical anchor `HistAvg(J)`; 0 when calibration is off.
+    pub hist: f64,
+}
+
+/// Counters from one [`ClearingEngine::clear`] round.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ClearStats {
+    /// Variants that survived eligibility gating into a window's WIS.
+    pub variants_eligible: u64,
+    /// Variants accepted across all windows.
+    pub variants_selected: u64,
+    /// Eligible pool variants filtered out before a window's WIS because
+    /// their job already won an overlapping interval — or an overlapping
+    /// work range — in an earlier window of the same round (counts
+    /// variants, not jobs).
+    pub cross_window_conflicts: u64,
+    /// Windows whose speculative WIS solution was discarded because an
+    /// earlier window's acceptances touched their eligible pool.
+    pub wis_replays: u64,
+    /// Wall time of the batched scoring pass.
+    pub scoring_ns: u64,
+    /// Wall time of the WIS + reconciliation pass.
+    pub clearing_ns: u64,
+}
+
+/// One accepted variant, handed to the caller's `on_accept` sink in
+/// reconciliation (= commitment) order.
+#[derive(Debug, Clone, Copy)]
+pub struct Accepted<'a> {
+    /// Row of the variant in the union pool.
+    pub row: usize,
+    /// The accepted variant.
+    pub variant: &'a Variant,
+    /// Composite score at selection time.
+    pub score: f64,
+    /// The announced window it was accepted into.
+    pub window: &'a Window,
+}
+
+/// Cross-window reconciliation predicate (§4.1): true if `v`'s job
+/// already won a temporally overlapping reservation — or an overlapping
+/// work range — earlier in this round.
+fn conflicts_with_accepted(accepted: &[(JobId, Interval, f64, f64)], v: &Variant) -> bool {
+    accepted.iter().any(|&(job, iv, w0, w1)| {
+        job == v.job
+            && (iv.overlaps(&v.interval)
+                || (v.work_offset < w1 - 1e-9 && w0 < v.work_offset + v.work - 1e-9))
+    })
+}
+
+/// The shared K-window clearing core (steps 4a–4b of Algorithm 1,
+/// generalized): batched scoring, speculative per-window WIS, sequential
+/// cross-window reconciliation. Owns every scratch buffer, so the hot
+/// path allocates nothing in the steady state wherever the engine is
+/// embedded.
+#[derive(Default)]
+pub struct ClearingEngine {
+    /// Reused scoring batch and output.
+    batch: ScoreBatch,
+    scored: ScoreOutput,
+    /// Per-window WIS items and their pool-row mapping.
+    items: Vec<Vec<WisItem>>,
+    item_rows: Vec<Vec<usize>>,
+    /// Speculative per-window WIS solutions.
+    solutions: Vec<WisSolution>,
+    /// Accepted (job, interval, work range) tuples for reconciliation.
+    accepted: Vec<(JobId, Interval, f64, f64)>,
+    /// Filtered WIS input for conflict replays.
+    replay_items: Vec<WisItem>,
+    replay_rows: Vec<usize>,
+}
+
+impl ClearingEngine {
+    /// Create an engine with empty scratch buffers.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Clear one decision round: score the union bid `pool` across the
+    /// announced `windows` (rows of window `w` are
+    /// `window_rows[w].0..window_rows[w].1`), solve each window's WIS,
+    /// and reconcile in announcement order. `row_ctx` supplies the
+    /// caller-owned age/trust/history context per row; `on_accept`
+    /// receives every accepted variant in commitment order.
+    ///
+    /// With a single announced window the batch carries the uniform
+    /// scalar capacity and the reconciliation filter never fires — K = 1
+    /// stays bit-identical to the paper's single-window loop. Results
+    /// are bit-identical at any pool budget (the speculative WIS merge
+    /// re-solves exactly like the sequential path on conflict).
+    #[allow(clippy::too_many_arguments)]
+    pub fn clear(
+        &mut self,
+        cfg: &JasdaConfig,
+        windows: &[Window],
+        window_rows: &[(usize, usize)],
+        pool: &[Variant],
+        row_ctx: &mut dyn FnMut(&Variant) -> RowCtx,
+        scorer: &mut dyn ScorerBackend,
+        workers: &WorkerPool,
+        on_accept: &mut dyn FnMut(Accepted<'_>),
+    ) -> ClearStats {
+        debug_assert_eq!(windows.len(), window_rows.len());
+        let mut stats = ClearStats::default();
+        if windows.is_empty() || pool.is_empty() {
+            return stats;
+        }
+
+        // Step 4a: one batched composite-scoring pass across all windows
+        // (Eq. (4) + calibration + age; per-row capacities when K > 1),
+        // into the reused output, row space chunked across the pool.
+        let t0 = std::time::Instant::now();
+        self.batch.clear();
+        self.batch.t = cfg.fmp_bins;
+        self.batch.capacity = windows[0].capacity_gb as f32;
+        self.batch.theta = cfg.theta as f32;
+        self.batch.lambda = cfg.lambda as f32;
+        let alpha = cfg.alpha.as_array();
+        let beta = cfg.beta.as_array();
+        self.batch.alpha =
+            [alpha[0] as f32, alpha[1] as f32, alpha[2] as f32, alpha[3] as f32];
+        self.batch.beta = [beta[0] as f32, beta[1] as f32, beta[2] as f32, beta[3] as f32];
+        for v in pool {
+            let ctx = row_ctx(v);
+            let phi =
+                [v.declared.phi[0], v.declared.phi[1], v.declared.phi[2], v.declared.phi[3]];
+            self.batch.push(
+                &v.fmp.mu,
+                &v.fmp.sigma,
+                phi,
+                [v.sys.util, v.sys.frag, ctx.age],
+                ctx.trust,
+                ctx.hist,
+            );
+        }
+        if windows.len() > 1 {
+            for (w, &(start, end)) in windows.iter().zip(window_rows) {
+                self.batch
+                    .row_capacity
+                    .extend(std::iter::repeat(w.capacity_gb as f32).take(end - start));
+            }
+            debug_assert_eq!(self.batch.row_capacity.len(), pool.len());
+        }
+        scorer
+            .score_into_pooled(&self.batch, &mut self.scored, workers)
+            .expect("scoring backend failed");
+        stats.scoring_ns = t0.elapsed().as_nanos() as u64;
+
+        // Step 4b: optimal per-window clearing (WIS) with cross-window
+        // reconciliation (§4.1 atomicity): within one decision round a
+        // job must never hold two temporally overlapping reservations on
+        // different slices, nor win the *same work chunk* twice — every
+        // window's chains start at the job's unchanged work cursor, so
+        // without the work-range check a job could commit chunk
+        // [cursor, cursor+w) on two slices and the second reservation
+        // would execute no work while still blocking its slice. Windows
+        // clear in announcement order (= policy preference order).
+        //
+        // Parallel form: each window's WIS is solved speculatively over
+        // its *unfiltered* eligible items; the merge then walks windows
+        // sequentially in announcement order. A window none of whose
+        // eligible items conflict with earlier acceptances has a
+        // filtered pool identical to the unfiltered one, so its
+        // speculative solution is exact; otherwise the solution is
+        // discarded and re-solved on the filtered pool — exactly the
+        // sequential algorithm.
+        let t1 = std::time::Instant::now();
+        let n_windows = windows.len();
+        if self.items.len() < n_windows {
+            self.items.resize_with(n_windows, Vec::new);
+            self.item_rows.resize_with(n_windows, Vec::new);
+        }
+        let mut total_items = 0usize;
+        for widx in 0..n_windows {
+            self.items[widx].clear();
+            self.item_rows[widx].clear();
+            let window = windows[widx];
+            let wlen = window.delta_t().max(1) as f64;
+            let (row0, row1) = window_rows[widx];
+            for i in row0..row1 {
+                if !self.scored.eligible[i] || self.scored.score[i] <= 0.0 {
+                    continue;
+                }
+                let v = &pool[i];
+                // Optional duration weighting (EXPERIMENTS.md F6): under
+                // the paper's plain sum objective, many short variants
+                // dominate few long ones; weighting by window share makes
+                // the objective score-weighted busy time.
+                let w = if cfg.duration_weighted_clearing {
+                    v.duration() as f64 / wlen
+                } else {
+                    1.0
+                };
+                self.items[widx].push(WisItem {
+                    interval: v.interval,
+                    score: self.scored.score[i] as f64 * w,
+                });
+                self.item_rows[widx].push(i);
+            }
+            total_items += self.items[widx].len();
+        }
+
+        // Speculative fan-out across windows.
+        let speculate = workers.budget() > 1
+            && n_windows >= 2
+            && total_items >= MIN_WIS_ITEMS_FOR_FANOUT;
+        if speculate {
+            self.solutions.clear();
+            self.solutions
+                .resize_with(n_windows, || WisSolution { selected: vec![], total_score: 0.0 });
+            let items = &self.items[..n_windows];
+            let n_workers = workers_for(workers.budget(), n_windows, 1);
+            let chunk = (n_windows + n_workers - 1) / n_workers;
+            workers.scope(|scope| {
+                let mut rest = self.solutions.as_mut_slice();
+                let mut start = 0usize;
+                while start < n_windows {
+                    let len = chunk.min(n_windows - start);
+                    let (sols, r) = rest.split_at_mut(len);
+                    let window_items = &items[start..start + len];
+                    scope.spawn(move || {
+                        for (sol, wi) in sols.iter_mut().zip(window_items) {
+                            *sol = select_best_compatible(wi);
+                        }
+                    });
+                    rest = r;
+                    start += len;
+                }
+            });
+        }
+
+        // Sequential reconciliation merge in announcement order.
+        self.accepted.clear();
+        let mut fallback = WisSolution { selected: vec![], total_score: 0.0 };
+        for widx in 0..n_windows {
+            let window = &windows[widx];
+            let mut n_conflicts = 0u64;
+            if !self.accepted.is_empty() {
+                for &i in &self.item_rows[widx] {
+                    if conflicts_with_accepted(&self.accepted, &pool[i]) {
+                        n_conflicts += 1;
+                    }
+                }
+            }
+            stats.cross_window_conflicts += n_conflicts;
+
+            if n_conflicts == 0 {
+                if !speculate {
+                    fallback = select_best_compatible(&self.items[widx]);
+                }
+                let sol = if speculate { &self.solutions[widx] } else { &fallback };
+                stats.variants_eligible += self.items[widx].len() as u64;
+                for &sel in &sol.selected {
+                    let i = self.item_rows[widx][sel];
+                    let v = &pool[i];
+                    self.accepted.push((
+                        v.job,
+                        v.interval,
+                        v.work_offset,
+                        v.work_offset + v.work,
+                    ));
+                    stats.variants_selected += 1;
+                    on_accept(Accepted {
+                        row: i,
+                        variant: v,
+                        score: self.scored.score[i] as f64,
+                        window,
+                    });
+                }
+            } else {
+                // Replay on the filtered pool — the sequential path.
+                stats.wis_replays += 1;
+                self.replay_items.clear();
+                self.replay_rows.clear();
+                for k in 0..self.item_rows[widx].len() {
+                    let i = self.item_rows[widx][k];
+                    if conflicts_with_accepted(&self.accepted, &pool[i]) {
+                        continue;
+                    }
+                    self.replay_items.push(self.items[widx][k]);
+                    self.replay_rows.push(i);
+                }
+                stats.variants_eligible += self.replay_items.len() as u64;
+                let sol = select_best_compatible(&self.replay_items);
+                for &k in &sol.selected {
+                    let i = self.replay_rows[k];
+                    let v = &pool[i];
+                    self.accepted.push((
+                        v.job,
+                        v.interval,
+                        v.work_offset,
+                        v.work_offset + v.work,
+                    ));
+                    stats.variants_selected += 1;
+                    on_accept(Accepted {
+                        row: i,
+                        variant: v,
+                        score: self.scored.score[i] as f64,
+                        window,
+                    });
+                }
+            }
+        }
+        stats.clearing_ns = t1.elapsed().as_nanos() as u64;
+        stats
+    }
 }
 
 /// Exhaustive reference solver for verification (exponential; tests only).

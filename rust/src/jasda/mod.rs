@@ -19,16 +19,26 @@
 //!   indexes, variant generation reuses shape-keyed plans through a
 //!   bidder index, and the generate/score/WIS stages fan out across
 //!   worker threads (`jasda.parallel`) while the reconciliation merge
-//!   stays sequential — outcomes are bit-identical at any thread count.
+//!   stays sequential — outcomes are bit-identical at any thread count;
+//! * [`pool`] — the persistent [`WorkerPool`](pool::WorkerPool) those
+//!   fan-out stages run on (spawned once per scheduler/leader, no
+//!   per-iteration thread spawns).
+//!
+//! The scoring + WIS + reconciliation core lives in
+//! [`clearing::ClearingEngine`] and is shared with the message-passing
+//! [`coordinator`](crate::coordinator) runtime, which drives the same
+//! engine from protocol bids instead of in-process generation.
 
 pub mod calibration;
 pub mod clearing;
+pub mod pool;
 pub mod scheduler;
 pub mod scoring;
 pub mod window;
 
 pub use calibration::{Calibration, JobTrust};
-pub use clearing::{select_best_compatible, WisItem, WisSolution};
+pub use clearing::{select_best_compatible, ClearingEngine, WisItem, WisSolution};
+pub use pool::WorkerPool;
 pub use scheduler::JasdaScheduler;
 pub use scoring::{NativeScorer, ScoreBatch, ScoreOutput, ScorerBackend};
 pub use window::WindowSelector;

@@ -1,0 +1,332 @@
+//! Persistent worker pool for the clearing pipeline's fan-out stages.
+//!
+//! §Perf iteration 2 parallelized the scheduler's generate/score/WIS
+//! stages with [`std::thread::scope`], which spawns (and joins) fresh OS
+//! threads on **every** iteration — the per-iteration spawn cost the
+//! bench sweeps flagged as the remaining lever. [`WorkerPool`] replaces
+//! that: a fixed set of worker threads is spawned **once per run** (one
+//! pool per [`JasdaScheduler`](crate::jasda::JasdaScheduler) /
+//! [`run_protocol`](crate::coordinator::run_protocol) leader) and every
+//! fan-out stage feeds it task chunks through a channel.
+//!
+//! # Bit-identity
+//!
+//! [`WorkerPool::scope`] mirrors the `std::thread::scope` contract: tasks
+//! may borrow from the enclosing frame, and `scope` does not return until
+//! every spawned task has finished. Callers keep the exact chunking they
+//! used with scoped threads (disjoint `split_at_mut` output slices, same
+//! worker-count formula), so which OS thread executes a chunk can never
+//! change a result — the pool is purely a latency knob, like
+//! `jasda.parallel` itself. A pool built with a budget of 1 spawns no
+//! threads at all and runs every task inline on the caller.
+//!
+//! # Panic behavior
+//!
+//! A panicking task does not kill its worker (the pool stays usable);
+//! the panic is surfaced by making the owning `scope` call panic after
+//! all of its tasks have drained, matching `std::thread::scope`'s
+//! fail-fast observability without poisoning the pool.
+
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A unit of work shipped to a worker thread. Lifetimes are erased on
+/// submission; soundness is restored by [`WorkerPool::scope`]'s
+/// wait-before-return barrier.
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// Workers to use for `work` items given a concurrency budget and a
+/// minimum batch per worker (always at least 1). Shared by every fan-out
+/// stage so chunking — and therefore output — is identical whichever
+/// mechanism (scoped threads or pool) executes the chunks.
+pub fn workers_for(budget: usize, work: usize, min_per: usize) -> usize {
+    budget.min(work / min_per.max(1)).max(1)
+}
+
+/// Completion tracking for one `scope` call.
+struct ScopeSync {
+    state: Mutex<ScopeState>,
+    done: Condvar,
+}
+
+struct ScopeState {
+    /// Tasks submitted but not yet finished.
+    pending: usize,
+    /// Whether any task panicked.
+    panicked: bool,
+}
+
+/// A persistent pool of worker threads with a scoped-task API.
+///
+/// Construct once with the resolved `jasda.parallel` budget and reuse for
+/// the lifetime of the scheduler/leader; [`Drop`] shuts the workers down.
+pub struct WorkerPool {
+    /// Resolved worker budget (≥ 1; 1 = fully serial, no threads).
+    budget: usize,
+    /// Work queue; `None` for a serial pool.
+    tx: Option<mpsc::Sender<Task>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool").field("budget", &self.budget).finish()
+    }
+}
+
+impl WorkerPool {
+    /// Spawn a pool of `budget` workers (`budget <= 1` spawns none and
+    /// runs tasks inline). `budget` is the number of chunks that can
+    /// execute concurrently — the same quantity the scoped-thread code
+    /// paths called their thread budget.
+    pub fn new(budget: usize) -> Self {
+        let budget = budget.max(1);
+        if budget == 1 {
+            return WorkerPool { budget, tx: None, workers: Vec::new() };
+        }
+        let (tx, rx) = mpsc::channel::<Task>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..budget)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                std::thread::spawn(move || loop {
+                    // Hold the lock only while dequeuing, never while
+                    // running a task.
+                    let task = match rx.lock().unwrap().recv() {
+                        Ok(t) => t,
+                        Err(_) => return, // pool dropped
+                    };
+                    task();
+                })
+            })
+            .collect();
+        WorkerPool { budget, tx: Some(tx), workers }
+    }
+
+    /// Resolve a `jasda.parallel` config value (0 = autodetect) and build
+    /// the pool.
+    pub fn from_config(parallel: usize) -> Self {
+        let budget = if parallel > 0 {
+            parallel
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        };
+        Self::new(budget)
+    }
+
+    /// The pool's concurrency budget (what the scoped-thread paths called
+    /// their thread count).
+    #[inline]
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Run `f` with a [`PoolScope`] on which borrowed tasks can be
+    /// spawned; returns only after every spawned task has finished —
+    /// the same structural guarantee as [`std::thread::scope`].
+    ///
+    /// Panics (after draining) if any task panicked; a panic in `f`
+    /// itself also drains before propagating, so borrowed data is never
+    /// left aliased by a still-running task.
+    pub fn scope<'env, F, R>(&self, f: F) -> R
+    where
+        F: for<'scope> FnOnce(&'scope PoolScope<'scope, 'env>) -> R,
+    {
+        let scope = PoolScope {
+            pool: self,
+            sync: Arc::new(ScopeSync {
+                state: Mutex::new(ScopeState { pending: 0, panicked: false }),
+                done: Condvar::new(),
+            }),
+            env: PhantomData,
+        };
+        let result = catch_unwind(AssertUnwindSafe(|| f(&scope)));
+        // Barrier: every spawned task must finish before any borrow of
+        // 'env can end. This runs on the success AND the panic path.
+        let mut st = scope.sync.state.lock().unwrap();
+        while st.pending > 0 {
+            st = scope.sync.done.wait(st).unwrap();
+        }
+        let task_panicked = st.panicked;
+        drop(st);
+        match result {
+            Err(payload) => resume_unwind(payload),
+            Ok(r) => {
+                if task_panicked {
+                    panic!("a WorkerPool task panicked");
+                }
+                r
+            }
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Closing the channel makes every worker's `recv` fail and exit.
+        drop(self.tx.take());
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Spawn handle passed to the closure of [`WorkerPool::scope`]. `'env`
+/// is the lifetime of borrows the tasks may capture (invariant, exactly
+/// like [`std::thread::Scope`]).
+pub struct PoolScope<'pool, 'env> {
+    pool: &'pool WorkerPool,
+    sync: Arc<ScopeSync>,
+    env: PhantomData<&'env mut &'env ()>,
+}
+
+impl<'pool, 'env> PoolScope<'pool, 'env> {
+    /// Submit a task that may borrow from `'env`. On a serial pool the
+    /// task runs inline, immediately.
+    pub fn spawn<F>(&self, f: F)
+    where
+        F: FnOnce() + Send + 'env,
+    {
+        let tx = match &self.pool.tx {
+            None => {
+                f();
+                return;
+            }
+            Some(tx) => tx,
+        };
+        self.sync.state.lock().unwrap().pending += 1;
+        let sync = Arc::clone(&self.sync);
+        let task: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+            let outcome = catch_unwind(AssertUnwindSafe(f));
+            let mut st = sync.state.lock().unwrap();
+            st.pending -= 1;
+            if outcome.is_err() {
+                st.panicked = true;
+            }
+            sync.done.notify_all();
+        });
+        // SAFETY: erasing 'env to 'static is sound because
+        // `WorkerPool::scope` blocks until `pending == 0` before
+        // returning (on both the normal and the unwind path), so the
+        // task — and everything it borrows — cannot outlive 'env.
+        let task: Task = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Task>(task)
+        };
+        if let Err(mpsc::SendError(task)) = tx.send(task) {
+            // Unreachable in practice (the pool outlives its scopes);
+            // run inline so the barrier still balances.
+            task();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// Chunked parallel sum through the pool equals the serial sum —
+    /// the disjoint-output pattern every production call site uses.
+    fn chunked_sum(pool: &WorkerPool, data: &[u64], workers: usize) -> u64 {
+        let mut partial = vec![0u64; workers.max(1)];
+        let chunk = (data.len() + workers.max(1) - 1) / workers.max(1);
+        pool.scope(|s| {
+            let mut rest = partial.as_mut_slice();
+            let mut start = 0usize;
+            while start < data.len() {
+                let len = chunk.min(data.len() - start);
+                let (out, r) = rest.split_at_mut(1);
+                let slice = &data[start..start + len];
+                s.spawn(move || out[0] = slice.iter().sum());
+                rest = r;
+                start += len;
+            }
+        });
+        partial.iter().sum()
+    }
+
+    #[test]
+    fn pool_matches_serial_sum() {
+        let data: Vec<u64> = (0..10_000).map(|i| i * 7 + 3).collect();
+        let serial: u64 = data.iter().sum();
+        for budget in [1usize, 2, 4, 8] {
+            let pool = WorkerPool::new(budget);
+            for workers in [1usize, 2, 3, budget] {
+                assert_eq!(chunked_sum(&pool, &data, workers), serial, "budget={budget}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_scopes() {
+        let pool = WorkerPool::new(3);
+        let counter = AtomicUsize::new(0);
+        for _ in 0..50 {
+            pool.scope(|s| {
+                for _ in 0..4 {
+                    s.spawn(|| {
+                        counter.fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+            });
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 200);
+    }
+
+    #[test]
+    fn serial_pool_runs_inline() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.budget(), 1);
+        let mut x = 0;
+        pool.scope(|s| s.spawn(|| x += 1));
+        assert_eq!(x, 1);
+    }
+
+    #[test]
+    fn scope_returns_closure_value() {
+        let pool = WorkerPool::new(2);
+        let v = pool.scope(|s| {
+            s.spawn(|| {});
+            42
+        });
+        assert_eq!(v, 42);
+    }
+
+    #[test]
+    fn task_panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.scope(|s| {
+                s.spawn(|| panic!("boom"));
+            });
+        }));
+        assert!(r.is_err(), "scope must surface a task panic");
+        // The pool is still usable afterwards.
+        let data: Vec<u64> = (0..100).collect();
+        assert_eq!(chunked_sum(&pool, &data, 2), data.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn from_config_resolves_autodetect() {
+        assert!(WorkerPool::from_config(0).budget() >= 1);
+        assert_eq!(WorkerPool::from_config(5).budget(), 5);
+    }
+
+    #[test]
+    fn scope_waits_for_all_tasks() {
+        // If scope returned early, the flags would still be false.
+        let pool = WorkerPool::new(4);
+        let flags: Vec<AtomicUsize> = (0..16).map(|_| AtomicUsize::new(0)).collect();
+        pool.scope(|s| {
+            for f in &flags {
+                s.spawn(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                    f.store(1, Ordering::SeqCst);
+                });
+            }
+        });
+        assert!(flags.iter().all(|f| f.load(Ordering::SeqCst) == 1));
+    }
+}

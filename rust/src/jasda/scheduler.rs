@@ -26,7 +26,7 @@
 //! # Pipeline structure (§Perf iteration 2)
 //!
 //! One iteration is organized as an amortized-incremental pipeline over
-//! scheduler-owned scratch buffers ([`IterScratch`]) — the steady state
+//! scheduler-owned scratch buffers (`IterScratch`) — the steady state
 //! allocates nothing on the candidate/pool/scoring paths:
 //!
 //! * **Announce** reads candidate windows straight off the cluster's
@@ -40,25 +40,28 @@
 //!   remaining plan misses fan out across worker threads.
 //! * **Score** runs the one batched pass into a reused output, with the
 //!   row space chunked across threads (rows are independent).
-//! * **Clear** solves each announced window's WIS speculatively in
-//!   parallel, then performs the cross-window reconciliation merge
-//!   *sequentially in announcement order*; a window whose eligible pool
-//!   was touched by an earlier window's acceptances re-solves on the
-//!   filtered pool, exactly like the sequential path.
+//! * **Clear** hands the union pool to the shared
+//!   [`ClearingEngine`](crate::jasda::clearing::ClearingEngine) — the
+//!   same batched-scoring + speculative-WIS + sequential-reconciliation
+//!   core the [`coordinator`](crate::coordinator) leader drives, so both
+//!   runtimes make identical decisions by construction.
 //!
-//! Every fan-out stage is bit-identical to its serial form (unit- and
-//! property-tested), so `jasda.parallel` is purely a latency knob.
+//! Every fan-out stage runs on a persistent [`WorkerPool`] spawned once
+//! per scheduler (no per-iteration thread spawns) and is bit-identical
+//! to its serial form (unit- and property-tested), so `jasda.parallel`
+//! is purely a latency knob.
 
 use crate::config::JasdaConfig;
 use crate::jasda::calibration::Calibration;
-use crate::jasda::clearing::{select_best_compatible, WisItem, WisSolution};
-use crate::jasda::scoring::{NativeScorer, ScoreBatch, ScoreOutput, ScorerBackend};
-use crate::jasda::window::WindowSelector;
+use crate::jasda::clearing::{Accepted, ClearingEngine, RowCtx};
+use crate::jasda::pool::{workers_for, WorkerPool};
+use crate::jasda::scoring::{NativeScorer, ScorerBackend};
+use crate::jasda::window::{announce_target, round_policy, WindowSelector};
 use crate::job::variants::{plan_chunks, stamp_variants, PlannedChunk, Variant};
 use crate::job::JobSet;
 use crate::mig::{Cluster, Window};
 use crate::sim::{Commitment, Rng, Scheduler, SubjobRecord};
-use crate::types::{Interval, JobId, SliceId, Time};
+use crate::types::{JobId, Time};
 use std::collections::HashMap;
 
 /// Internal counters exposed through [`Scheduler::stats`].
@@ -133,89 +136,10 @@ struct IterScratch {
     to_plan: Vec<(usize, PlanKey)>,
     /// Freshly computed plans aligned with `to_plan`.
     planned: Vec<Vec<PlannedChunk>>,
-    /// Reused scoring batch and output.
-    batch: ScoreBatch,
-    scored: ScoreOutput,
-    /// Per-window WIS items and their pool-row mapping.
-    items: Vec<Vec<WisItem>>,
-    item_rows: Vec<Vec<usize>>,
-    /// Speculative per-window WIS solutions.
-    solutions: Vec<WisSolution>,
-    /// Accepted (job, interval, work range) tuples for reconciliation.
-    accepted: Vec<(JobId, Interval, f64, f64)>,
-    /// Filtered WIS input for conflict replays.
-    replay_items: Vec<WisItem>,
-    replay_rows: Vec<usize>,
 }
 
 /// Bidders per worker below which plan fan-out is not worth a spawn.
 const MIN_PLANS_PER_THREAD: usize = 8;
-/// Eligible items across windows below which speculative parallel WIS
-/// is not worth the fan-out.
-const MIN_WIS_ITEMS_FOR_FANOUT: usize = 64;
-
-/// Workers to use for `work` items given a thread budget and a minimum
-/// batch per worker (always at least 1).
-fn workers_for(budget: usize, work: usize, min_per: usize) -> usize {
-    budget.min(work / min_per.max(1)).max(1)
-}
-
-/// Cross-window reconciliation predicate (§4.1): true if `v`'s job
-/// already won a temporally overlapping reservation — or an overlapping
-/// work range — earlier in this round.
-fn conflicts_with_accepted(accepted: &[(JobId, Interval, f64, f64)], v: &Variant) -> bool {
-    accepted.iter().any(|&(job, iv, w0, w1)| {
-        job == v.job
-            && (iv.overlaps(&v.interval)
-                || (v.work_offset < w1 - 1e-9 && w0 < v.work_offset + v.work - 1e-9))
-    })
-}
-
-/// Step 4a: fill the reused scoring batch for the union pool. With a
-/// single announced window the batch carries the uniform scalar capacity
-/// (bit-identical to the original single-window path), otherwise per-row
-/// capacities.
-#[allow(clippy::too_many_arguments)]
-fn fill_batch(
-    batch: &mut ScoreBatch,
-    cfg: &JasdaConfig,
-    calibration: Option<&Calibration>,
-    windows: &[Window],
-    pool: &[Variant],
-    window_rows: &[(usize, usize)],
-    jobs: &JobSet,
-    now: Time,
-) {
-    debug_assert_eq!(windows.len(), window_rows.len());
-    batch.clear();
-    batch.t = cfg.fmp_bins;
-    batch.capacity = windows[0].capacity_gb as f32;
-    batch.theta = cfg.theta as f32;
-    batch.lambda = cfg.lambda as f32;
-    let alpha = cfg.alpha.as_array();
-    let beta = cfg.beta.as_array();
-    batch.alpha = [alpha[0] as f32, alpha[1] as f32, alpha[2] as f32, alpha[3] as f32];
-    batch.beta = [beta[0] as f32, beta[1] as f32, beta[2] as f32, beta[3] as f32];
-
-    for v in pool {
-        let job = jobs.get(v.job);
-        let age = if cfg.age_priority { job.age_factor(now, cfg.age_scale) } else { 0.0 };
-        let (trust, hist) = if cfg.calibration {
-            let cal = calibration.expect("calibration initialized");
-            (cal.trust_weight(v.job), cal.hist_avg(v.job))
-        } else {
-            (1.0, 0.0)
-        };
-        let phi = [v.declared.phi[0], v.declared.phi[1], v.declared.phi[2], v.declared.phi[3]];
-        batch.push(&v.fmp.mu, &v.fmp.sigma, phi, [v.sys.util, v.sys.frag, age], trust, hist);
-    }
-    if windows.len() > 1 {
-        for (w, &(start, end)) in windows.iter().zip(window_rows) {
-            batch.row_capacity.extend(std::iter::repeat(w.capacity_gb as f32).take(end - start));
-        }
-        debug_assert_eq!(batch.row_capacity.len(), pool.len());
-    }
-}
 
 /// The JASDA scheduler.
 pub struct JasdaScheduler {
@@ -223,8 +147,12 @@ pub struct JasdaScheduler {
     selector: WindowSelector,
     scorer: Box<dyn ScorerBackend>,
     calibration: Option<Calibration>,
-    /// Resolved worker-thread budget (`cfg.parallel`, 0 = autodetect).
-    threads: usize,
+    /// Persistent worker pool for every fan-out stage (plan misses,
+    /// scoring rows, speculative WIS), spawned once from the resolved
+    /// `cfg.parallel` budget (0 = autodetect).
+    pool: WorkerPool,
+    /// The shared K-window scoring/WIS/reconciliation core.
+    engine: ClearingEngine,
     scratch: IterScratch,
     stats: JasdaStats,
 }
@@ -238,17 +166,14 @@ impl JasdaScheduler {
     /// Build with an explicit scoring backend (e.g. the PJRT artifact).
     pub fn with_scorer(cfg: JasdaConfig, scorer: Box<dyn ScorerBackend>) -> Self {
         cfg.validate().expect("invalid JASDA config");
-        let threads = if cfg.parallel > 0 {
-            cfg.parallel
-        } else {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        };
+        let pool = WorkerPool::from_config(cfg.parallel);
         JasdaScheduler {
             cfg,
             selector: WindowSelector::new(),
             scorer,
             calibration: None,
-            threads,
+            pool,
+            engine: ClearingEngine::new(),
             scratch: IterScratch::default(),
             stats: JasdaStats::default(),
         }
@@ -257,6 +182,14 @@ impl JasdaScheduler {
     /// Access the policy config.
     pub fn config(&self) -> &JasdaConfig {
         &self.cfg
+    }
+
+    /// Windows announced (and cleared) by the most recent
+    /// [`Scheduler::iterate`] call, in announcement order — empty when
+    /// the last iteration announced nothing. Exposed for the
+    /// decision-parity oracle in [`crate::coordinator::run_reference`].
+    pub fn last_announced(&self) -> &[Window] {
+        &self.scratch.announced
     }
 
     /// Current mean reliability across verified jobs (diagnostics).
@@ -277,19 +210,6 @@ impl JasdaScheduler {
                 self.cfg.gamma,
                 self.cfg.alpha.as_array(),
             ));
-        }
-    }
-
-    /// How many windows this iteration announces: `announce_k`, or the
-    /// number of distinct slices with a candidate in per-slice mode.
-    fn announce_target(&self, candidates: &[Window]) -> usize {
-        if self.cfg.announce_per_slice {
-            let mut slices: Vec<SliceId> = candidates.iter().map(|w| w.slice).collect();
-            slices.sort_unstable();
-            slices.dedup();
-            slices.len().max(1)
-        } else {
-            self.cfg.announce_k
         }
     }
 
@@ -325,7 +245,7 @@ impl JasdaScheduler {
         if misses > 0 {
             self.scratch.planned.clear();
             self.scratch.planned.resize_with(misses, Vec::new);
-            let workers = workers_for(self.threads, misses, MIN_PLANS_PER_THREAD);
+            let workers = workers_for(self.pool.budget(), misses, MIN_PLANS_PER_THREAD);
             if workers <= 1 {
                 for k in 0..misses {
                     let slot = self.scratch.to_plan[k].0;
@@ -344,7 +264,7 @@ impl JasdaScheduler {
                 let to_plan = &self.scratch.to_plan;
                 let jobs_ref = &*jobs;
                 let chunk = (misses + workers - 1) / workers;
-                std::thread::scope(|scope| {
+                self.pool.scope(|scope| {
                     let mut rest = self.scratch.planned.as_mut_slice();
                     let mut start = 0usize;
                     while start < misses {
@@ -417,25 +337,13 @@ impl Scheduler for JasdaScheduler {
             self.cfg.tau_min,
             &mut self.scratch.candidates,
         );
-        // Rolling repack (§3.5): the paper triggers a defragmentation
-        // step "when residual gaps become too small for further
-        // allocation". We count idle residues shorter than τ_min across
-        // the announce horizon (they can never be allocated); when
-        // several have accumulated, announcements are redirected to the
-        // most fragmented slice so bids consolidate its gaps. The count
-        // comes straight off the per-slice gap indexes.
-        let policy = if self.cfg.repack {
-            let to = now.saturating_add(self.cfg.announce_horizon);
-            let unusable = cluster.count_unusable_residues(now, to, self.cfg.tau_min);
-            if unusable >= 3 {
-                self.stats.repack_iterations += 1;
-                crate::config::WindowPolicy::FragmentationAware
-            } else {
-                self.cfg.window_policy
-            }
-        } else {
-            self.cfg.window_policy
-        };
+        // Rolling repack (§3.5): the shared helper redirects to the
+        // fragmentation-aware policy when too many unusable residues
+        // have accumulated (see [`round_policy`]).
+        let (policy, repack_redirected) = round_policy(&self.cfg, cluster, now);
+        if repack_redirected {
+            self.stats.repack_iterations += 1;
+        }
 
         // Bidder index: who can bid this round, with the memory-floor
         // capacity class used to skip whole (job, window) pairs.
@@ -454,7 +362,7 @@ impl Scheduler for JasdaScheduler {
         // of §5.1(a)) is skipped and the next candidate is tried, so a
         // policy like earliest-start cannot livelock on a slice no
         // waiting job fits. Cost stays bounded by the candidate count.
-        let k_target = self.announce_target(&self.scratch.candidates);
+        let k_target = announce_target(&self.cfg, &self.scratch.candidates);
         self.scratch.announced.clear();
         self.scratch.pool.clear();
         self.scratch.window_rows.clear();
@@ -498,192 +406,53 @@ impl Scheduler for JasdaScheduler {
         self.stats.variants_submitted += self.scratch.pool.len() as u64;
         self.stats.max_pool = self.stats.max_pool.max(self.scratch.pool.len());
 
-        // Step 4a: one batched composite-scoring pass across all windows
-        // (Eq. (4) + calibration + age; per-row capacities when K > 1),
-        // into the reused output, row space chunked across the budget.
-        let t0 = std::time::Instant::now();
-        fill_batch(
-            &mut self.scratch.batch,
-            &self.cfg,
-            self.calibration.as_ref(),
-            &self.scratch.announced,
-            &self.scratch.pool,
-            &self.scratch.window_rows,
-            jobs,
-            now,
-        );
-        self.scorer
-            .score_into(&self.scratch.batch, &mut self.scratch.scored, self.threads)
-            .expect("scoring backend failed");
-        self.stats.scoring_ns += t0.elapsed().as_nanos() as u64;
-
-        // Step 4b: optimal per-window clearing (WIS) with cross-window
-        // reconciliation: within one decision round a job must never
-        // hold two temporally overlapping reservations on different
-        // slices (§4.1 atomicity), nor win the *same work chunk* twice —
-        // every window's chains start at the job's unchanged work
-        // cursor, so without the work-range check a job could commit
-        // chunk [cursor, cursor+w) on two slices and the second
-        // reservation would execute no work while still blocking its
-        // slice. Windows clear in announcement order (= policy
-        // preference order).
-        //
-        // Parallel form: each window's WIS is solved speculatively over
-        // its *unfiltered* eligible items; the merge then walks windows
-        // sequentially in announcement order. A window none of whose
-        // eligible items conflict with earlier acceptances has a
-        // filtered pool identical to the unfiltered one, so its
-        // speculative solution is exact; otherwise the solution is
-        // discarded and re-solved on the filtered pool — exactly the
-        // sequential algorithm. With one announced window the filter
-        // never fires — K=1 stays bit-identical to the single-window
-        // path.
-        let t1 = std::time::Instant::now();
-        let n_windows = self.scratch.announced.len();
-        if self.scratch.items.len() < n_windows {
-            self.scratch.items.resize_with(n_windows, Vec::new);
-            self.scratch.item_rows.resize_with(n_windows, Vec::new);
-        }
-        let mut total_items = 0usize;
-        for widx in 0..n_windows {
-            self.scratch.items[widx].clear();
-            self.scratch.item_rows[widx].clear();
-            let window = self.scratch.announced[widx];
-            let wlen = window.delta_t().max(1) as f64;
-            let (row0, row1) = self.scratch.window_rows[widx];
-            for i in row0..row1 {
-                if !self.scratch.scored.eligible[i] || self.scratch.scored.score[i] <= 0.0 {
-                    continue;
-                }
-                let v = &self.scratch.pool[i];
-                // Optional duration weighting (EXPERIMENTS.md F6): under
-                // the paper's plain sum objective, many short variants
-                // dominate few long ones; weighting by window share makes
-                // the objective score-weighted busy time.
-                let w = if self.cfg.duration_weighted_clearing {
-                    v.duration() as f64 / wlen
-                } else {
-                    1.0
-                };
-                self.scratch.items[widx].push(WisItem {
-                    interval: v.interval,
-                    score: self.scratch.scored.score[i] as f64 * w,
-                });
-                self.scratch.item_rows[widx].push(i);
-            }
-            total_items += self.scratch.items[widx].len();
-        }
-
-        // Speculative fan-out across windows.
-        let speculate =
-            self.threads > 1 && n_windows >= 2 && total_items >= MIN_WIS_ITEMS_FOR_FANOUT;
-        if speculate {
-            self.scratch.solutions.clear();
-            self.scratch
-                .solutions
-                .resize_with(n_windows, || WisSolution { selected: vec![], total_score: 0.0 });
-            let items = &self.scratch.items[..n_windows];
-            let workers = workers_for(self.threads, n_windows, 1);
-            let chunk = (n_windows + workers - 1) / workers;
-            std::thread::scope(|scope| {
-                let mut rest = self.scratch.solutions.as_mut_slice();
-                let mut start = 0usize;
-                while start < n_windows {
-                    let len = chunk.min(n_windows - start);
-                    let (sols, r) = rest.split_at_mut(len);
-                    let window_items = &items[start..start + len];
-                    scope.spawn(move || {
-                        for (sol, wi) in sols.iter_mut().zip(window_items) {
-                            *sol = select_best_compatible(wi);
-                        }
-                    });
-                    rest = r;
-                    start += len;
-                }
-            });
-        }
-
-        // Sequential reconciliation merge in announcement order.
+        // Step 4: one batched composite-scoring pass + per-window WIS +
+        // cross-window reconciliation, delegated to the shared
+        // [`ClearingEngine`] on the persistent worker pool. The closure
+        // resolves each row's age/trust/history from scheduler-owned
+        // state; acceptances arrive in commitment order.
+        let cfg = &self.cfg;
+        let calibration = self.calibration.as_ref();
+        let jobs_ro: &JobSet = jobs;
         let mut commitments: Vec<Commitment> = Vec::new();
-        self.scratch.accepted.clear();
-        let mut fallback = WisSolution { selected: vec![], total_score: 0.0 };
-        for widx in 0..n_windows {
-            let window = self.scratch.announced[widx];
-            let mut n_conflicts = 0u64;
-            if !self.scratch.accepted.is_empty() {
-                for &i in &self.scratch.item_rows[widx] {
-                    if conflicts_with_accepted(&self.scratch.accepted, &self.scratch.pool[i]) {
-                        n_conflicts += 1;
-                    }
-                }
-            }
-            self.stats.cross_window_conflicts += n_conflicts;
-
-            if n_conflicts == 0 {
-                if !speculate {
-                    fallback = select_best_compatible(&self.scratch.items[widx]);
-                }
-                let sol =
-                    if speculate { &self.scratch.solutions[widx] } else { &fallback };
-                self.stats.variants_eligible += self.scratch.items[widx].len() as u64;
-                for &sel in &sol.selected {
-                    let i = self.scratch.item_rows[widx][sel];
-                    let v = &self.scratch.pool[i];
-                    self.scratch.accepted.push((
-                        v.job,
-                        v.interval,
-                        v.work_offset,
-                        v.work_offset + v.work,
-                    ));
-                    self.stats.variants_selected += 1;
-                    commitments.push(Commitment {
-                        job: v.job,
-                        slice: v.slice,
-                        interval: v.interval,
-                        work: v.work,
-                        declared_phi: v.declared.phi,
-                        score: self.scratch.scored.score[i] as f64,
-                        window_len: window.delta_t(),
-                    });
-                }
+        let mut row_ctx = |v: &Variant| {
+            let job = jobs_ro.get(v.job);
+            let age = if cfg.age_priority { job.age_factor(now, cfg.age_scale) } else { 0.0 };
+            let (trust, hist) = if cfg.calibration {
+                let cal = calibration.expect("calibration initialized");
+                (cal.trust_weight(v.job), cal.hist_avg(v.job))
             } else {
-                // Replay on the filtered pool — the sequential path.
-                self.stats.wis_replays += 1;
-                self.scratch.replay_items.clear();
-                self.scratch.replay_rows.clear();
-                for k in 0..self.scratch.item_rows[widx].len() {
-                    let i = self.scratch.item_rows[widx][k];
-                    if conflicts_with_accepted(&self.scratch.accepted, &self.scratch.pool[i]) {
-                        continue;
-                    }
-                    self.scratch.replay_items.push(self.scratch.items[widx][k]);
-                    self.scratch.replay_rows.push(i);
-                }
-                self.stats.variants_eligible += self.scratch.replay_items.len() as u64;
-                let sol = select_best_compatible(&self.scratch.replay_items);
-                for &k in &sol.selected {
-                    let i = self.scratch.replay_rows[k];
-                    let v = &self.scratch.pool[i];
-                    self.scratch.accepted.push((
-                        v.job,
-                        v.interval,
-                        v.work_offset,
-                        v.work_offset + v.work,
-                    ));
-                    self.stats.variants_selected += 1;
-                    commitments.push(Commitment {
-                        job: v.job,
-                        slice: v.slice,
-                        interval: v.interval,
-                        work: v.work,
-                        declared_phi: v.declared.phi,
-                        score: self.scratch.scored.score[i] as f64,
-                        window_len: window.delta_t(),
-                    });
-                }
-            }
-        }
-        self.stats.clearing_ns += t1.elapsed().as_nanos() as u64;
+                (1.0, 0.0)
+            };
+            RowCtx { age, trust, hist }
+        };
+        let mut on_accept = |acc: Accepted<'_>| {
+            commitments.push(Commitment {
+                job: acc.variant.job,
+                slice: acc.variant.slice,
+                interval: acc.variant.interval,
+                work: acc.variant.work,
+                declared_phi: acc.variant.declared.phi,
+                score: acc.score,
+                window_len: acc.window.delta_t(),
+            });
+        };
+        let cstats = self.engine.clear(
+            &self.cfg,
+            &self.scratch.announced,
+            &self.scratch.window_rows,
+            &self.scratch.pool,
+            &mut row_ctx,
+            self.scorer.as_mut(),
+            &self.pool,
+            &mut on_accept,
+        );
+        self.stats.variants_eligible += cstats.variants_eligible;
+        self.stats.variants_selected += cstats.variants_selected;
+        self.stats.cross_window_conflicts += cstats.cross_window_conflicts;
+        self.stats.wis_replays += cstats.wis_replays;
+        self.stats.scoring_ns += cstats.scoring_ns;
+        self.stats.clearing_ns += cstats.clearing_ns;
 
         // Step 5: commit.
         commitments
@@ -715,7 +484,7 @@ impl Scheduler for JasdaScheduler {
             ("plan_cache_hits", self.stats.plan_cache_hits.into()),
             ("bidders_skipped", self.stats.bidders_skipped.into()),
             ("wis_replays", self.stats.wis_replays.into()),
-            ("threads", (self.threads as u64).into()),
+            ("threads", (self.pool.budget() as u64).into()),
             ("mean_rho", self.mean_rho().into()),
         ])
     }

@@ -17,6 +17,7 @@
 //! L1 Pallas kernel computes; [`NativeScorer`] is the rust mirror used by
 //! default and in parity tests against the PJRT artifact.
 
+use crate::jasda::pool::WorkerPool;
 
 /// Numerical floor for σ, shared with the kernel.
 pub const SIGMA_EPS: f32 = 1e-6;
@@ -166,6 +167,20 @@ pub trait ScorerBackend {
         *out = self.score(batch)?;
         Ok(())
     }
+    /// Score a batch into a reusable output buffer, fanning row chunks
+    /// out on a persistent [`WorkerPool`] instead of spawning scoped
+    /// threads. Same bit-identity contract as [`ScorerBackend::score_into`]
+    /// (rows are independent; chunking is deterministic). Default:
+    /// delegate to `score_into` with the pool's budget, which is correct
+    /// for backends with their own execution model (e.g. PJRT).
+    fn score_into_pooled(
+        &mut self,
+        batch: &ScoreBatch,
+        out: &mut ScoreOutput,
+        pool: &WorkerPool,
+    ) -> anyhow::Result<()> {
+        self.score_into(batch, out, pool.budget())
+    }
 }
 
 /// erf via Abramowitz–Stegun 7.1.26 in f32 — the *same* polynomial the
@@ -313,6 +328,55 @@ impl ScorerBackend for NativeScorer {
         // serial path, so the output is bit-identical.
         let chunk = (m + workers - 1) / workers;
         std::thread::scope(|scope| {
+            let mut score_rest = out.score.as_mut_slice();
+            let mut viol_rest = out.violation.as_mut_slice();
+            let mut head_rest = out.headroom.as_mut_slice();
+            let mut elig_rest = out.eligible.as_mut_slice();
+            let mut start = 0usize;
+            while start < m {
+                let len = chunk.min(m - start);
+                let (sc, sr) = score_rest.split_at_mut(len);
+                let (vi, vr) = viol_rest.split_at_mut(len);
+                let (he, hr) = head_rest.split_at_mut(len);
+                let (el, er) = elig_rest.split_at_mut(len);
+                let rows = start..start + len;
+                scope.spawn(move || score_rows_into(b, rows, sc, vi, he, el));
+                score_rest = sr;
+                viol_rest = vr;
+                head_rest = hr;
+                elig_rest = er;
+                start += len;
+            }
+        });
+        Ok(())
+    }
+
+    fn score_into_pooled(
+        &mut self,
+        b: &ScoreBatch,
+        out: &mut ScoreOutput,
+        pool: &WorkerPool,
+    ) -> anyhow::Result<()> {
+        validate_batch(b)?;
+        let m = b.m;
+        out.resize(m);
+        // Same worker-count formula and chunking as the scoped-thread
+        // path, so the two are bit-identical by construction; only the
+        // thread spawn cost differs.
+        let workers = pool.budget().min(m / PAR_MIN_ROWS_PER_THREAD.max(1)).max(1);
+        if workers <= 1 {
+            score_rows_into(
+                b,
+                0..m,
+                &mut out.score,
+                &mut out.violation,
+                &mut out.headroom,
+                &mut out.eligible,
+            );
+            return Ok(());
+        }
+        let chunk = (m + workers - 1) / workers;
+        pool.scope(|scope| {
             let mut score_rest = out.score.as_mut_slice();
             let mut viol_rest = out.violation.as_mut_slice();
             let mut head_rest = out.headroom.as_mut_slice();
@@ -505,6 +569,12 @@ mod tests {
         let mut parallel = ScoreOutput::default();
         NativeScorer.score_into(&b, &mut parallel, 8).unwrap();
         assert_eq!(serial, parallel, "threaded scoring diverged from serial");
+        // Persistent-pool fan-out: same chunking as the scoped-thread
+        // path, so every lane must match bit for bit.
+        let pool = crate::jasda::pool::WorkerPool::new(8);
+        let mut pooled = ScoreOutput::default();
+        NativeScorer.score_into_pooled(&b, &mut pooled, &pool).unwrap();
+        assert_eq!(serial, pooled, "pooled scoring diverged from serial");
         // Buffer reuse: scoring a smaller batch into the same output
         // shrinks it and still matches.
         let mut small = ScoreBatch::with_bins(8);

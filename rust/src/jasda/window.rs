@@ -14,9 +14,44 @@
 //! (slack-aware, fragmentation-aware) are implemented too and compared
 //! by `benches/fig_window_policy`.
 
-use crate::config::WindowPolicy;
+use crate::config::{JasdaConfig, WindowPolicy};
 use crate::mig::{Cluster, Window};
-use crate::types::Time;
+use crate::types::{SliceId, Time};
+
+/// How many windows one decision round announces: `announce_k`, or the
+/// number of distinct slices with a candidate in per-slice mode. One
+/// shared implementation so the in-process scheduler and the
+/// coordinator leader can never disagree on the round's K.
+pub fn announce_target(cfg: &JasdaConfig, candidates: &[Window]) -> usize {
+    if cfg.announce_per_slice {
+        let mut slices: Vec<SliceId> = candidates.iter().map(|w| w.slice).collect();
+        slices.sort_unstable();
+        slices.dedup();
+        slices.len().max(1)
+    } else {
+        cfg.announce_k
+    }
+}
+
+/// The round's effective window policy, applying the rolling-repack
+/// redirect (§3.5): the paper triggers a defragmentation step "when
+/// residual gaps become too small for further allocation". We count
+/// idle residues shorter than τ_min across the announce horizon (they
+/// can never be allocated); when several have accumulated, announcements
+/// are redirected to the most fragmented slice so bids consolidate its
+/// gaps. The count comes straight off the per-slice gap indexes.
+/// Returns the policy and whether the redirect fired — shared by the
+/// scheduler and the coordinator leader for decision parity.
+pub fn round_policy(cfg: &JasdaConfig, cluster: &Cluster, now: Time) -> (WindowPolicy, bool) {
+    if cfg.repack {
+        let to = now.saturating_add(cfg.announce_horizon);
+        let unusable = cluster.count_unusable_residues(now, to, cfg.tau_min);
+        if unusable >= 3 {
+            return (WindowPolicy::FragmentationAware, true);
+        }
+    }
+    (cfg.window_policy, false)
+}
 
 /// Stateful window selector (round-robin needs a cursor; the
 /// fragmentation policy keeps a per-slice scratch buffer so selection

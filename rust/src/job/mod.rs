@@ -139,17 +139,27 @@ impl Job {
     /// Normalized age factor `A_i(t) ∈ [0,1]` (paper §4.3): waiting time
     /// since the last successful selection, saturating at `age_scale`.
     pub fn age_factor(&self, now: Time, age_scale: u64) -> f64 {
-        if age_scale == 0 {
-            return 0.0;
-        }
-        let waited = now.saturating_sub(self.last_selected);
-        (waited as f64 / age_scale as f64).min(1.0)
+        age_factor(self.last_selected, now, age_scale)
     }
 
     /// Job completion time, if finished.
     pub fn jct(&self) -> Option<u64> {
         self.completed_at.map(|c| c.saturating_sub(self.arrival))
     }
+}
+
+/// Normalized age factor `A_i(t) ∈ [0,1]` (paper §4.3) from a raw
+/// last-selected timestamp: waiting time since the last successful
+/// selection, saturating at `age_scale` (0 disables the term). A free
+/// function so [`Job::age_factor`] and the coordinator leader — which
+/// tracks `last_selected` in its own bookkeeping, not in a [`Job`] —
+/// compute bit-identical fairness terms.
+pub fn age_factor(last_selected: Time, now: Time, age_scale: u64) -> f64 {
+    if age_scale == 0 {
+        return 0.0;
+    }
+    let waited = now.saturating_sub(last_selected);
+    (waited as f64 / age_scale as f64).min(1.0)
 }
 
 /// The population of jobs in a run, indexed by [`JobId`].

@@ -13,9 +13,16 @@
 //!   (generalized to K announced windows per iteration — see
 //!   [`config::JasdaConfig::announce_k`] and `announce_per_slice`),
 //!   scoring/calibration/fairness policies, per-window WIS clearing with
-//!   cross-window reconciliation, a discrete-event MIG cluster simulator
+//!   cross-window reconciliation (the shared
+//!   [`jasda::clearing::ClearingEngine`] running on a persistent
+//!   [`jasda::pool::WorkerPool`]), a discrete-event MIG cluster simulator
 //!   substrate, baseline schedulers, workload generators, metrics, and a
-//!   thread-per-agent bid–response protocol runtime.
+//!   thread-per-agent bid–response protocol runtime ([`coordinator`])
+//!   driving the same engine through multi-window `Announce`/`Bid`
+//!   rounds — property-tested decision-identical to the in-process loop.
+//!
+//! A top-level `README.md` maps the module layout; `docs/CONFIG.md` is
+//! the configuration reference.
 //! * **L2 (python/compile/model.py)** — the batched variant-scoring
 //!   pipeline expressed in JAX, AOT-lowered to HLO text at build time.
 //! * **L1 (python/compile/kernels/scoring.py)** — the scoring hot-spot as a

@@ -180,17 +180,22 @@ fn cmd_protocol(args: &Args, cfg: SimConfig) -> anyhow::Result<()> {
     let jobs = workload(&cfg, None)?;
     let out = jasda::coordinator::run_protocol(cfg, jobs, max_rounds);
     println!(
-        "protocol: rounds={} announcements={} bids={} variants={} awards={} \
-         completed={}/{} vtime={} wall={:?}",
+        "protocol: rounds={} announcements={} windows={} (+{} silent) bids={} \
+         variants={} awards={} conflicts={} completed={}/{} vtime={} wall={:?} \
+         decision={:.0}ns/round",
         out.rounds,
         out.announcements,
+        out.windows_announced,
+        out.windows_silent,
         out.bids,
         out.variants,
         out.awards,
+        out.cross_window_conflicts,
         out.completed_jobs,
         out.total_jobs,
         out.final_time,
-        out.wall
+        out.wall,
+        out.decision_ns_per_round(),
     );
     Ok(())
 }

@@ -784,3 +784,150 @@ fn prop_rng_fork_streams_do_not_collide() {
         assert!(seen.insert(v), "fork({stream}) collided");
     }
 }
+
+// ---------------------------------------------------------------------
+// Coordinator K-window decision parity + worker-pool bit-identity
+// (ISSUE 3).
+// ---------------------------------------------------------------------
+
+/// Random job population that fits the `balanced` layout (≤ 16 GiB), so
+/// protocol runs always terminate.
+fn random_trace(rng: &mut Rng, n: usize) -> Vec<Job> {
+    (0..n as u32)
+        .map(|id| {
+            let work = rng.uniform_range(600.0, 4_000.0);
+            let mem = rng.uniform_range(1.0, 14.0);
+            let trp = Trp {
+                phases: vec![
+                    Phase::new(work * 0.4, mem * 0.8, mem * 0.05, 0.3),
+                    Phase::new(work * 0.6, mem, mem * 0.05, 0.1),
+                ],
+                duration_cv: 0.08,
+            };
+            let arrival = rng.below(3_000);
+            let deadline = if rng.uniform() < 0.3 { Some(arrival + 60_000) } else { None };
+            let mut j =
+                Job::new(id, "p", arrival, trp, deadline, 1.0, work / 4.0, 0.0);
+            if rng.uniform() < 0.2 {
+                j.misreport_bias = 0.6; // exercise calibration parity
+            }
+            j
+        })
+        .collect()
+}
+
+#[test]
+fn prop_coordinator_decisions_match_scheduler() {
+    // ISSUE 3 invariant: the message-passing coordinator runtime makes
+    // exactly the in-process `JasdaScheduler::iterate` decisions — same
+    // windows announced, same awards (job/slice/interval/work bits), in
+    // the same rounds — for K in {1, 2, per-slice} on random traces.
+    // `run_reference` is the oracle: the identical leader environment
+    // with an embedded JasdaScheduler making the decisions.
+    let mut rng = Rng::new(0xC0DE);
+    for case in 0..6 {
+        let (k, per_slice) = [(1usize, false), (2, false), (1, true)][case % 3];
+        let mut c = jasda::config::SimConfig::default();
+        c.seed = 7_000 + case as u64;
+        c.cluster.layout = "balanced".into();
+        c.engine.iteration_period = 25;
+        c.jasda.fmp_bins = 16;
+        c.jasda.announce_k = k;
+        c.jasda.announce_per_slice = per_slice;
+        // Alternate the parallel budget so the pool path is exercised on
+        // both sides of the comparison.
+        c.jasda.parallel = if case % 2 == 0 { 1 } else { 4 };
+        let jobs = random_trace(&mut rng, 3 + case % 4);
+
+        let mut proto_trace = Vec::new();
+        let proto = jasda::coordinator::run_protocol_traced(
+            c.clone(),
+            jobs.clone(),
+            400_000,
+            Some(&mut proto_trace),
+        );
+        let mut ref_trace = Vec::new();
+        let reference = jasda::coordinator::run_reference_traced(
+            c,
+            jobs,
+            400_000,
+            Some(&mut ref_trace),
+        );
+
+        assert_eq!(
+            proto.completed_jobs, proto.total_jobs,
+            "case {case}: protocol must finish: {proto:?}"
+        );
+        assert_eq!(
+            reference.completed_jobs, reference.total_jobs,
+            "case {case}: reference must finish: {reference:?}"
+        );
+        assert_eq!(
+            proto_trace.len(),
+            ref_trace.len(),
+            "case {case} K={k} ps={per_slice}: decision-round count"
+        );
+        for (p, r) in proto_trace.iter().zip(&ref_trace) {
+            assert_eq!(
+                p, r,
+                "case {case} K={k} ps={per_slice}: round {} decisions diverged",
+                p.round
+            );
+        }
+        assert_eq!(proto.rounds, reference.rounds, "case {case}");
+        assert_eq!(proto.awards, reference.awards, "case {case}");
+        assert_eq!(proto.windows_announced, reference.windows_announced, "case {case}");
+        assert_eq!(proto.final_time, reference.final_time, "case {case}");
+    }
+}
+
+#[test]
+fn prop_worker_pool_bit_identical_to_scoped_threads() {
+    // ISSUE 3 invariant: the persistent WorkerPool fan-out computes the
+    // same bits as the per-iteration `std::thread::scope` fan-out it
+    // replaced. `ScorerBackend::score_into` still uses scoped threads;
+    // `score_into_pooled` rides the pool with the identical chunking —
+    // every output lane must agree exactly, across batch sizes that
+    // straddle the fan-out threshold and budgets that do not divide the
+    // row count.
+    use jasda::jasda::pool::WorkerPool;
+    use jasda::jasda::scoring::ScoreOutput;
+
+    let mut rng = Rng::new(0x500C);
+    for &m in &[1usize, 37, 255, 256, 1000, 3000] {
+        let mut b = ScoreBatch::with_bins(8);
+        b.capacity = 14.0;
+        b.theta = 0.05;
+        b.lambda = 0.6;
+        b.alpha = [0.45, 0.25, 0.15, 0.15];
+        b.beta = [0.45, 0.2, 0.15, 0.2];
+        for _ in 0..m {
+            let base = rng.uniform_range(2.0, 15.0);
+            let mu: Vec<f64> = (0..8).map(|_| base + rng.uniform_range(-0.5, 0.5)).collect();
+            let sigma: Vec<f64> = (0..8).map(|_| rng.uniform_range(0.05, 1.0)).collect();
+            b.push(
+                &mu,
+                &sigma,
+                [rng.uniform(), rng.uniform(), rng.uniform(), rng.uniform()],
+                [rng.uniform(), rng.uniform(), rng.uniform()],
+                rng.uniform(),
+                rng.uniform(),
+            );
+        }
+        // Mixed-capacity rows (the K-window union-batch shape).
+        if m >= 256 {
+            b.row_capacity = (0..m).map(|i| if i % 3 == 0 { 7.0 } else { 14.0 }).collect();
+        }
+        for &budget in &[1usize, 2, 3, 8] {
+            let mut scoped = ScoreOutput::default();
+            NativeScorer.score_into(&b, &mut scoped, budget).unwrap();
+            let pool = WorkerPool::new(budget);
+            let mut pooled = ScoreOutput::default();
+            NativeScorer.score_into_pooled(&b, &mut pooled, &pool).unwrap();
+            assert_eq!(
+                scoped, pooled,
+                "m={m} budget={budget}: pool diverged from scoped threads"
+            );
+        }
+    }
+}
