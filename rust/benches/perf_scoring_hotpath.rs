@@ -308,6 +308,48 @@ fn main() {
         }
     }
 
+    // ------------------------------------------------------------------
+    // ISSUE 6: shards x transport sweep — what the wire codec costs per
+    // round, and what N-leader clearing buys (or costs, once the
+    // reconciler's sequential pass is counted) on a contended workload.
+    // ------------------------------------------------------------------
+    header("sharded coordinator round latency (shards x transport)");
+    use jasda::config::TransportKind;
+    for &shards in if smoke { &[1usize, 2][..] } else { &[1usize, 2, 4][..] } {
+        for transport in TransportKind::ALL {
+            let mut cfg = common::contended_cfg(81, if smoke { 10 } else { 30 });
+            cfg.jasda.announce_per_slice = true;
+            cfg.jasda.shards = shards;
+            cfg.jasda.transport = transport;
+            let jobs = common::workload(&cfg);
+            let proto = jasda::coordinator::run_protocol(cfg, jobs, 3_000_000);
+            println!(
+                "shards={shards} {:<9}: proto {:>9.0} ns/round (max {:>9} ns)  \
+                 cross-shard {:>5}  dropped {:>3}  wall {:.1?}",
+                transport.name(),
+                proto.decision_ns_per_round(),
+                proto.max_round_decision_ns,
+                proto.cross_shard_conflicts,
+                proto.sends_dropped,
+                proto.wall,
+            );
+            proto_rows.push(Json::obj(vec![
+                ("announce", "K=slices".into()),
+                ("mode", "pool".into()),
+                ("shards", shards.into()),
+                ("transport", transport.name().into()),
+                ("rounds", proto.rounds.into()),
+                ("windows_announced", proto.windows_announced.into()),
+                ("proto_decision_ns_per_round", proto.decision_ns_per_round().into()),
+                ("proto_max_round_decision_ns", proto.max_round_decision_ns.into()),
+                ("cross_shard_conflicts", proto.cross_shard_conflicts.into()),
+                ("sends_dropped", proto.sends_dropped.into()),
+                ("proto_completed", proto.completed_jobs.into()),
+                ("proto_wall_ms", (proto.wall.as_nanos() as f64 / 1e6).into()),
+            ]));
+        }
+    }
+
     let out = Json::obj(vec![
         ("schema", "jasda.bench_iteration.v1".into()),
         ("smoke", smoke.into()),

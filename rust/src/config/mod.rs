@@ -70,6 +70,45 @@ impl WindowPolicy {
     ];
 }
 
+/// Which transport carries leader ↔ agent protocol messages in
+/// [`run_protocol`](crate::coordinator::run_protocol).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process channels of typed messages (default). Zero
+    /// serialization; the shape every test was green on before the
+    /// transport split.
+    Loopback,
+    /// Length-prefixed byte frames through the hand-rolled forward-only
+    /// codec of `coordinator::wire` — the deployment-shaped path, still
+    /// bit-identical in decisions because the codec round-trips every
+    /// field exactly.
+    Framed,
+}
+
+impl Default for TransportKind {
+    fn default() -> Self {
+        TransportKind::Loopback
+    }
+}
+
+impl TransportKind {
+    /// Config-file name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::Loopback => "loopback",
+            TransportKind::Framed => "framed",
+        }
+    }
+
+    /// Parse from a config-file name.
+    pub fn parse(s: &str) -> Option<TransportKind> {
+        Self::ALL.iter().copied().find(|t| t.name() == s)
+    }
+
+    /// All transports.
+    pub const ALL: [TransportKind; 2] = [TransportKind::Loopback, TransportKind::Framed];
+}
+
 /// Which backend evaluates the batched scoring pipeline.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ScoringBackend {
@@ -273,6 +312,25 @@ pub struct JasdaConfig {
     /// sequential in announcement order), so this is purely a
     /// latency/throughput knob.
     pub parallel: usize,
+    /// Leader shards in the protocol runtime, N ≥ 1. Each shard owns the
+    /// slices with `slice % shards == shard`, runs the shared clearing
+    /// engine on its own worker pool, and a cross-shard reconciler
+    /// (reusing the cross-window conflict rules) keeps the combined round
+    /// free of double-awards. `1` = the single leader (decision-identical
+    /// to the pre-shard coordinator). Only the protocol runtime reads
+    /// this; the in-process scheduler is unaffected.
+    pub shards: usize,
+    /// Transport carrying leader ↔ agent messages in the protocol
+    /// runtime: in-process typed channels (`loopback`) or length-prefixed
+    /// byte frames through the hand-rolled wire codec (`framed`).
+    pub transport: TransportKind,
+    /// Bandwidth-lean announcement: cap each shard's broadcast to the
+    /// policy's top-N candidate windows (§5.1(a) bandwidth mitigation).
+    /// `0` = no cap (broadcast the full candidate set). A shard whose
+    /// capped broadcast drew no bids falls back to its full set the next
+    /// round, so the cap can never starve a job that only fits an
+    /// unranked window.
+    pub announce_top: usize,
     /// Max variants a single job may bid **per announced window**
     /// (V_max, §4.6). With `announce_k > 1` or per-slice announcement a
     /// job may bid into each announced window, so its per-iteration
@@ -313,6 +371,9 @@ impl Default for JasdaConfig {
             announce_k: 1,
             announce_per_slice: false,
             parallel: 0,
+            shards: 1,
+            transport: TransportKind::Loopback,
+            announce_top: 0,
             max_variants_per_job: 4,
             fmp_bins: 64,
             repack: false,
@@ -355,6 +416,9 @@ impl JasdaConfig {
         if self.announce_k == 0 {
             anyhow::bail!("announce_k must be >= 1 (1 = the paper's single-window loop)");
         }
+        if self.shards == 0 {
+            anyhow::bail!("shards must be >= 1 (1 = the single-leader coordinator)");
+        }
         Ok(())
     }
 
@@ -382,6 +446,13 @@ impl JasdaConfig {
                 "announce_k" => self.announce_k = need_u64(val, k)? as usize,
                 "announce_per_slice" => self.announce_per_slice = need_bool(val, k)?,
                 "parallel" => self.parallel = need_u64(val, k)? as usize,
+                "shards" => self.shards = need_u64(val, k)? as usize,
+                "transport" => {
+                    let name = need_str(val, k)?;
+                    self.transport = TransportKind::parse(name)
+                        .ok_or_else(|| anyhow::anyhow!("unknown transport '{name}'"))?;
+                }
+                "announce_top" => self.announce_top = need_u64(val, k)? as usize,
                 "max_variants_per_job" => {
                     self.max_variants_per_job = need_u64(val, k)? as usize
                 }
@@ -422,6 +493,9 @@ impl JasdaConfig {
             ("announce_k", self.announce_k.into()),
             ("announce_per_slice", self.announce_per_slice.into()),
             ("parallel", self.parallel.into()),
+            ("shards", self.shards.into()),
+            ("transport", self.transport.name().into()),
+            ("announce_top", self.announce_top.into()),
             ("max_variants_per_job", self.max_variants_per_job.into()),
             ("fmp_bins", self.fmp_bins.into()),
             ("repack", self.repack.into()),
@@ -694,6 +768,9 @@ mod tests {
         cfg.jasda.announce_k = 3;
         cfg.jasda.announce_per_slice = true;
         cfg.jasda.parallel = 4;
+        cfg.jasda.shards = 3;
+        cfg.jasda.transport = TransportKind::Framed;
+        cfg.jasda.announce_top = 2;
         cfg.workload.mix = vec![("analytics".into(), 1.0)];
         let text = cfg.to_json().to_string_pretty();
         let back = SimConfig::from_json_str(&text).unwrap();
@@ -715,6 +792,7 @@ mod tests {
         assert!(SimConfig::from_json_str(r#"{"sede": 7}"#).is_err());
         assert!(SimConfig::from_json_str(r#"{"jasda": {"lambada": 0.3}}"#).is_err());
         assert!(SimConfig::from_json_str(r#"{"jasda": {"window_policy": "bogus"}}"#).is_err());
+        assert!(SimConfig::from_json_str(r#"{"jasda": {"transport": "tcp"}}"#).is_err());
         assert!(SimConfig::from_json_str(r#"{"workload": {"mix": [["a"]]}}"#).is_err());
     }
 
@@ -724,6 +802,14 @@ mod tests {
             assert_eq!(WindowPolicy::parse(p.name()), Some(p));
         }
         assert_eq!(WindowPolicy::parse("zzz"), None);
+    }
+
+    #[test]
+    fn transport_kind_name_round_trip() {
+        for t in TransportKind::ALL {
+            assert_eq!(TransportKind::parse(t.name()), Some(t));
+        }
+        assert_eq!(TransportKind::parse("zzz"), None);
     }
 
     #[test]
@@ -750,6 +836,10 @@ mod tests {
 
         let mut cfg = SimConfig::default();
         cfg.jasda.announce_k = 0;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = SimConfig::default();
+        cfg.jasda.shards = 0;
         assert!(cfg.validate().is_err());
 
         let mut cfg = SimConfig::default();

@@ -34,6 +34,12 @@
 //! fall through to the next candidate **without another round-trip**,
 //! which is exactly what the in-process scheduler's announce loop does —
 //! the property tests pin the two paths to identical decisions.
+//!
+//! These are the *typed* messages; how they move is the transport
+//! layer's business ([`super::transport`]). Under the framed transport
+//! every one of them crosses as a length-prefixed byte frame in the
+//! hand-rolled [`super::wire`] format, and the round-trip property tests
+//! pin the codec to these definitions field by field.
 
 use crate::job::Variant;
 use crate::mig::Window;

@@ -1,8 +1,6 @@
 //! The bidirectional bid–response protocol runtime (paper §5.1(f) /
-//! §6(e)): JASDA as an actual distributed negotiation between a leader
-//! thread (the scheduler) and autonomous job-agent threads, over message
-//! channels (std::sync::mpsc; the offline build has no tokio, and the
-//! protocol is synchronous-round anyway — see DESIGN.md).
+//! §6(e)): JASDA as an actual distributed negotiation between leader
+//! shards (the scheduler side) and autonomous job-agent threads.
 //!
 //! The [`SimEngine`](crate::sim::SimEngine) calls job-side code as plain
 //! functions; this module is the deployment-shaped variant where jobs are
@@ -12,22 +10,38 @@
 //! coupling — exactly the information-visibility contract of §5.1(d)
 //! (jobs see announced windows and their own awards, nothing else).
 //!
-//! # One multi-window round
+//! # The three layers
 //!
-//! Since the K-window port, a round negotiates **all** of the cluster's
-//! candidate windows in a single message exchange and clears up to K of
-//! them (`jasda.announce_k`, or one per free slice under
-//! `announce_per_slice`) with the same
-//! [`ClearingEngine`](crate::jasda::clearing::ClearingEngine) the
-//! in-process [`JasdaScheduler`](crate::jasda::JasdaScheduler) embeds:
+//! - **Transport** ([`transport`]): how messages move. A [`Transport`]
+//!   trait with bounded per-agent queues and drop-don't-block
+//!   backpressure; [`LoopbackTransport`] carries typed values over
+//!   channels (default), [`FramedTransport`] carries length-prefixed
+//!   byte frames through the hand-rolled [`wire`] codec.
+//! - **Shards** ([`shard`]): who decides. `jasda.shards` leader shards
+//!   each own the slices with `slice % shards == shard` and run the
+//!   shared [`ClearingEngine`](crate::jasda::clearing::ClearingEngine)
+//!   on their own [`WorkerPool`](crate::jasda::pool::WorkerPool); agents
+//!   bid at whichever shards announce feasible windows.
+//! - **Reconciliation** ([`shard::ShardReconciler`]): why N shards stay
+//!   consistent. Shards decide sequentially each round and later shards'
+//!   bid pools are pre-filtered with the *identical* conflict predicate
+//!   the engine uses across windows, so no job ever holds temporally
+//!   overlapping awards — or double-awarded work — across shards.
+//!
+//! # One multi-shard round
 //!
 //! ```text
-//!  leader                                      agents (thread per job)
+//!  leader (N shards)                           agents (thread per job)
 //!    │                                               │
 //!    │ 1. enumerate candidate windows off the        │
-//!    │    cluster gap indexes                        │
+//!    │    cluster gap indexes; stripe them across    │
+//!    │    shards (slice % N); cap each shard's set   │
+//!    │    to its policy top-`announce_top` (full     │
+//!    │    set again after a silent capped round)     │
 //!    │                                               │
 //!    │ 2. Announce { round, now, windows } ────────▶ │  one broadcast
+//!    │    (bounded inbox: a slow agent's copy is     │  (loopback values
+//!    │     dropped, the round proceeds without it)   │   or wire frames)
 //!    │                                               │
 //!    │                      3. each agent plans once │
 //!    │                         per window *shape*    │
@@ -36,23 +50,25 @@
 //!    │                         window, and replies   │
 //!    │ ◀──────────── Bid { job, round, bids, done }  │  one reply each
 //!    │                                               │
-//!    │ 4. replay the policy selection loop over the  │
-//!    │    candidates, skipping windows whose pooled  │
-//!    │    bids are empty (silent), until ≤ K windows │
-//!    │    are announced — identical to the scheduler │
-//!    │    announce loop                              │
+//!    │ 4. per shard, in shard order:                 │
+//!    │      a. replay the policy selection loop      │
+//!    │         over the shard's candidates (silent   │
+//!    │         windows skipped), pre-filtering bids  │
+//!    │         that conflict with earlier shards'    │
+//!    │         awards this round                     │
+//!    │      b. ClearingEngine on the shard's own     │
+//!    │         WorkerPool: batched scoring, per-     │
+//!    │         window WIS, cross-window              │
+//!    │         reconciliation                        │
+//!    │      c. record acceptances in the cross-      │
+//!    │         shard reconciler                      │
 //!    │                                               │
-//!    │ 5. ClearingEngine: batched scoring (per-row   │
-//!    │    capacities), speculative per-window WIS on │
-//!    │    the persistent WorkerPool, sequential      │
-//!    │    cross-window reconciliation                │
-//!    │                                               │
-//!    │ 6. Awarded { round, variant_ids, now } ─────▶ │  winners only
+//!    │ 5. Awarded { round, variant_ids, now } ─────▶ │  winners only
 //!    │    + reserve on slice timelines               │
 //!    │    + realize ground truth (sampled durations) │
 //!    │                                               │
 //!    │    … later, when a reservation ends …         │
-//!    │ 7. Completed { planned, realized, at } ─────▶ │  owner only
+//!    │ 6. Completed { planned, realized, at } ─────▶ │  owner only
 //!    │    + ex-post verification → calibration       │
 //!    ▼                                               ▼
 //! ```
@@ -64,19 +80,22 @@
 //! award clamping) but with decisions made by an embedded
 //! [`JasdaScheduler`] over a leader-maintained job mirror, exactly as
 //! the engine path would. `tests/properties.rs` asserts, on random
-//! traces for K ∈ {1, 2, per-slice}, that [`run_protocol`] and
-//! [`run_reference`] produce identical per-round windows and awards —
-//! the protocol runtime is a *transport* for the paper's loop, not a
+//! traces for K ∈ {1, 2, per-slice}, that [`run_protocol`] with
+//! `shards=1` — over **either** transport — produces identical per-round
+//! windows and awards to [`run_reference`], and that `shards ∈ {2, 4}`
+//! never violates a conflict rule the single leader would have caught.
+//! The protocol runtime is a *transport* for the paper's loop, not a
 //! different scheduler.
 
 pub mod messages;
+pub mod shard;
+pub mod transport;
+pub mod wire;
 
-use crate::config::SimConfig;
+use crate::config::{SimConfig, TransportKind};
 use crate::jasda::calibration::Calibration;
-use crate::jasda::clearing::{Accepted, ClearingEngine, RowCtx};
-use crate::jasda::pool::WorkerPool;
-use crate::jasda::scoring::NativeScorer;
-use crate::jasda::window::{announce_target, round_policy, WindowSelector};
+use crate::jasda::clearing::{Accepted, RowCtx};
+use crate::jasda::window::{announce_target, shard_round_policy, WindowSelector};
 use crate::jasda::JasdaScheduler;
 use crate::job::variants::{plan_chunks, stamp_variants, PlannedChunk};
 use crate::job::{age_factor, Job, JobSet, JobState, Variant};
@@ -84,8 +103,10 @@ use crate::mig::{Cluster, PartitionLayout, Reservation, Window};
 use crate::sim::{Rng, Scheduler, SubjobRecord};
 use crate::types::{Interval, JobId, SliceId, Time};
 use messages::{AgentReply, Award, CompletionReport, ToAgent};
+use shard::{make_shards, shard_of, ShardReconciler};
 use std::collections::BinaryHeap;
-use std::sync::mpsc;
+use std::sync::Arc;
+use transport::{FramedTransport, LoopbackTransport, Transport, DEFAULT_AGENT_QUEUE};
 
 /// Outcome of a protocol run.
 #[derive(Debug, Clone)]
@@ -106,8 +127,21 @@ pub struct ProtocolOutcome {
     pub variants: u64,
     /// Awards granted.
     pub awards: u64,
-    /// Eligible variants dropped by cross-window reconciliation.
+    /// Eligible variants dropped by cross-window reconciliation (within
+    /// one shard's clearing).
     pub cross_window_conflicts: u64,
+    /// Bid variants excluded before a shard's clearing because their job
+    /// already won a conflicting award in an earlier shard this round
+    /// (always 0 with `shards = 1`).
+    pub cross_shard_conflicts: u64,
+    /// Candidate windows withheld from broadcasts by `announce_top`.
+    pub windows_suppressed: u64,
+    /// Rounds in which a shard re-broadcast its full candidate set
+    /// because its previous capped broadcast drew no bids.
+    pub announce_fallbacks: u64,
+    /// Messages dropped by transport backpressure (bounded agent
+    /// inboxes) or dead agents.
+    pub sends_dropped: u64,
     /// Jobs completed.
     pub completed_jobs: usize,
     /// Total jobs.
@@ -135,6 +169,10 @@ impl ProtocolOutcome {
             variants: 0,
             awards: 0,
             cross_window_conflicts: 0,
+            cross_shard_conflicts: 0,
+            windows_suppressed: 0,
+            announce_fallbacks: 0,
+            sends_dropped: 0,
             completed_jobs: 0,
             total_jobs,
             final_time: 0,
@@ -175,13 +213,18 @@ pub struct RoundDecision {
     pub round: u64,
     /// Leader time at the decision.
     pub now: Time,
-    /// Windows cleared this round, in announcement order.
+    /// Windows cleared this round, in announcement order (shard order,
+    /// then each shard's selection order).
     pub windows: Vec<Window>,
     /// Awards, in commitment (reconciliation) order.
     pub awards: Vec<AwardRec>,
 }
 
-/// Job-agent thread: owns its job, answers announcements autonomously.
+/// Job-agent endpoint logic: owns its job, answers announcements
+/// autonomously. Transport-agnostic — `recv` blocks for the next
+/// leader message (`None` = disconnected) and `send` delivers a reply
+/// (`false` = leader gone), so the identical agent drives both the
+/// loopback channels and the framed byte path.
 ///
 /// The agent mirrors the scheduler-side generation pipeline: one
 /// [`plan_chunks`] call per distinct window *shape* `(c_k, speed, Δt)`
@@ -189,12 +232,11 @@ pub struct RoundDecision {
 /// [`stamp_variants`] per announced window — identical arithmetic to
 /// `generate_variants`, so agent bids are bit-identical to what the
 /// in-process scheduler would generate from the same job state.
-fn agent_task(
-    mut job: Job,
-    cfg: crate::config::JasdaConfig,
-    rx: mpsc::Receiver<ToAgent>,
-    tx: mpsc::Sender<AgentReply>,
-) {
+fn agent_loop<R, S>(mut job: Job, cfg: crate::config::JasdaConfig, mut recv: R, mut send: S)
+where
+    R: FnMut() -> Option<ToAgent>,
+    S: FnMut(AgentReply) -> bool,
+{
     // Variants proposed in the current round (flattened across windows),
     // kept so awards can be resolved to work amounts: the leader echoes
     // the *agent-assigned* variant ids back.
@@ -203,7 +245,7 @@ fn agent_task(
     // job's work cursor, which only moves on award/completion).
     let mut plans: std::collections::HashMap<(u64, u64, u64), Vec<PlannedChunk>> =
         std::collections::HashMap::new();
-    while let Ok(msg) = rx.recv() {
+    while let Some(msg) = recv() {
         match msg {
             ToAgent::Announce { round, now, windows } => {
                 if job.state == JobState::Future && job.arrival <= now {
@@ -236,7 +278,7 @@ fn agent_task(
                     bids,
                     done: job.state == JobState::Completed,
                 };
-                if tx.send(reply).is_err() {
+                if !send(reply) {
                     return;
                 }
             }
@@ -296,8 +338,8 @@ struct Fired {
 /// Everything the leader owns besides decision-making: the cluster and
 /// its ground truth, per-job bookkeeping, the completion slab, and the
 /// trust state. Shared verbatim between [`run_protocol`] (decisions via
-/// message-passing agents) and [`run_reference`] (decisions via an
-/// embedded [`JasdaScheduler`]), which is what makes the two runs
+/// message-passing agents, 1..N shards) and [`run_reference`] (decisions
+/// via an embedded [`JasdaScheduler`]), which is what makes the two runs
 /// comparable round for round.
 struct LeaderEnv {
     cluster: Cluster,
@@ -479,16 +521,22 @@ impl LeaderEnv {
     }
 }
 
-/// The leader's selection replay: the in-process scheduler's announce
+/// One shard's selection replay: the in-process scheduler's announce
 /// loop (policy pick → silent skip → per-slice retain → stop at K),
 /// operating on the bids already collected from the agents. Appends the
 /// per-window pool rows in population (= bidder) order, so pool layout is
 /// identical to the in-process [`Scheduler::iterate`] layout.
 ///
-/// `bids[slot][cand]` is job `slot`'s portfolio for original candidate
-/// `cand`. Returns `(announced, window_rows, silent_count)`; `pool` and
+/// `candidates` is the shard's broadcast slice, starting at position
+/// `cand_base` of the combined broadcast; `bids[slot][cand_base + i]` is
+/// job `slot`'s portfolio for shard candidate `i`. `keep` is the
+/// cross-shard pre-filter: variants it rejects never enter the pool (and
+/// are counted in the returned `filtered`).
+///
+/// Returns `(announced, window_rows, silent, filtered)`; `pool` and
 /// `agent_vid` (the agent-assigned id of each pool row, for award
-/// echoes) are filled in place.
+/// echoes) are appended in place, with `window_rows` indexing the
+/// absolute `pool`.
 #[allow(clippy::too_many_arguments)]
 fn replay_selection(
     selector: &mut WindowSelector,
@@ -499,26 +547,33 @@ fn replay_selection(
     k_target: usize,
     per_slice: bool,
     candidates: &[Window],
+    cand_base: usize,
     bids: &[Vec<Vec<Variant>>],
     pool: &mut Vec<Variant>,
     agent_vid: &mut Vec<u32>,
-) -> (Vec<Window>, Vec<(usize, usize)>, u64) {
+    keep: &mut dyn FnMut(&Variant) -> bool,
+) -> (Vec<Window>, Vec<(usize, usize)>, u64, u64) {
     let mut work: Vec<Window> = candidates.to_vec();
     let mut orig: Vec<usize> = (0..candidates.len()).collect();
     let mut announced: Vec<Window> = Vec::new();
     let mut window_rows: Vec<(usize, usize)> = Vec::new();
     let mut silent = 0u64;
+    let mut filtered = 0u64;
     while announced.len() < k_target {
         let idx = match selector.select(policy, &work, cluster, now, horizon) {
             Some(i) => i,
             None => break,
         };
         let window = work.swap_remove(idx);
-        let cand = orig.swap_remove(idx);
+        let cand = cand_base + orig.swap_remove(idx);
 
         let row0 = pool.len();
         for per_job in bids {
             for v in &per_job[cand] {
+                if !keep(v) {
+                    filtered += 1;
+                    continue;
+                }
                 agent_vid.push(v.id);
                 pool.push(v.clone());
             }
@@ -545,11 +600,12 @@ fn replay_selection(
         }
         announced.push(window);
     }
-    (announced, window_rows, silent)
+    (announced, window_rows, silent, filtered)
 }
 
-/// Run the full protocol: spawn one agent thread per job, drive
-/// multi-window announcement rounds until all jobs complete (or
+/// Run the full protocol: spawn one agent thread per job behind the
+/// configured transport, drive multi-window announcement rounds across
+/// `jasda.shards` leader shards until all jobs complete (or
 /// `max_rounds`).
 pub fn run_protocol(cfg: SimConfig, jobs: Vec<Job>, max_rounds: u64) -> ProtocolOutcome {
     run_protocol_traced(cfg, jobs, max_rounds, None)
@@ -566,116 +622,257 @@ pub fn run_protocol_traced(
     let wall0 = std::time::Instant::now();
     let n_jobs = jobs.len();
     let mut env = LeaderEnv::new(&cfg, &jobs);
-    let mut scorer = NativeScorer;
-    let mut selector = WindowSelector::new();
-    let mut engine = ClearingEngine::new();
-    let wpool = WorkerPool::from_config(cfg.jasda.parallel);
     let alpha = cfg.jasda.alpha.as_array();
+    let shards_n = cfg.jasda.shards.max(1);
+    let mut shards = make_shards(shards_n, cfg.jasda.parallel);
+    let mut reconciler = ShardReconciler::new();
 
-    // Spawn agents.
-    let (reply_tx, reply_rx) = mpsc::channel::<AgentReply>();
-    let mut agent_tx: Vec<mpsc::Sender<ToAgent>> = Vec::with_capacity(n_jobs);
-    let mut handles = Vec::with_capacity(n_jobs);
-    for job in jobs {
-        let (tx, rx) = mpsc::channel::<ToAgent>();
-        agent_tx.push(tx);
-        let jcfg = cfg.jasda.clone();
-        let rtx = reply_tx.clone();
-        handles.push(std::thread::spawn(move || agent_task(job, jcfg, rx, rtx)));
-    }
-    drop(reply_tx);
+    // Spawn agents behind the configured transport.
+    let mut transport: Box<dyn Transport> = match cfg.jasda.transport {
+        TransportKind::Loopback => {
+            Box::new(LoopbackTransport::spawn(jobs, &cfg.jasda, DEFAULT_AGENT_QUEUE))
+        }
+        TransportKind::Framed => {
+            Box::new(FramedTransport::spawn(jobs, &cfg.jasda, DEFAULT_AGENT_QUEUE))
+        }
+    };
 
     let mut out = ProtocolOutcome::new(n_jobs);
     let period = cfg.engine.iteration_period;
-    let mut now: Time =
-        env.last_selected.iter().min().copied().unwrap_or(0);
+    let mut now: Time = env.last_selected.iter().min().copied().unwrap_or(0);
     // Per-round bid store: bids_by_slot[slot][cand] = that job's
-    // portfolio for candidate `cand`.
+    // portfolio for broadcast candidate `cand`.
     let mut bids_by_slot: Vec<Vec<Vec<Variant>>> = vec![Vec::new(); n_jobs];
     let mut pool: Vec<Variant> = Vec::new();
     let mut agent_vid: Vec<u32> = Vec::new();
+    let mut cand_scratch: Vec<Window> = Vec::new();
+    let mut shard_cands: Vec<Vec<Window>> = vec![Vec::new(); shards_n];
+    let mut shard_ranges: Vec<(usize, usize)> = vec![(0, 0); shards_n];
+    let mut dropped: Vec<usize> = Vec::new();
 
     for round in 0..max_rounds {
         out.rounds = round + 1;
-        // 1. Fire due completions; report to agents.
-        let agent_tx_ref = &agent_tx;
+        // 1. Fire due completions; report to the owning agents.
+        let transport_ref = &mut transport;
+        let dropped_ref = &mut out.sends_dropped;
         env.fire_due(now, &alpha, &mut |f: &Fired| {
             let report = ToAgent::Completed(CompletionReport {
                 planned_work: f.planned_work,
                 realized_work: f.realized_work,
                 at: f.realized_end,
             });
-            let _ = agent_tx_ref[f.slot].send(report);
+            if !transport_ref.send(f.slot, &report) {
+                *dropped_ref += 1;
+            }
         });
         out.completed_jobs = env.completed_jobs;
         if env.completed_jobs == n_jobs {
             break;
         }
 
-        // 2. Announce the round's candidate windows to every agent
-        // (shared behind an Arc: one enumeration, N refcount bumps).
-        let candidates = std::sync::Arc::new(env.cluster.candidate_windows(
+        // 2. Enumerate candidate windows, stripe them across shards, and
+        // apply each shard's `announce_top` cap (with the silence
+        // fallback). The combined broadcast is the per-shard subsets
+        // concatenated in shard order, so every shard's candidates form
+        // one contiguous range.
+        env.cluster.collect_windows(
             now + cfg.jasda.announce_lead,
             cfg.jasda.announce_horizon,
             cfg.jasda.tau_min,
-        ));
-        if candidates.is_empty() {
+            &mut cand_scratch,
+        );
+        if cand_scratch.is_empty() {
+            now += period;
+            continue;
+        }
+        for list in shard_cands.iter_mut() {
+            list.clear();
+        }
+        for &w in &cand_scratch {
+            shard_cands[shard_of(w.slice, shards_n)].push(w);
+        }
+        let top = cfg.jasda.announce_top;
+        let mut combined: Vec<Window> = Vec::with_capacity(cand_scratch.len());
+        for s in 0..shards_n {
+            let cands = &shard_cands[s];
+            let c0 = combined.len();
+            if top == 0 || cands.len() <= top {
+                combined.extend_from_slice(cands);
+            } else if shards[s].last_round_silent {
+                // The previous capped broadcast drew nothing: offer the
+                // full set so the cap cannot starve an unranked window.
+                out.announce_fallbacks += 1;
+                combined.extend_from_slice(cands);
+            } else {
+                // Rank with a *cloned* selector: persistent policy state
+                // (the round-robin cursor) must only advance in the real
+                // selection replay below.
+                let (policy, _) =
+                    shard_round_policy(&cfg.jasda, &env.cluster, now, s, shards_n);
+                let mut ranker = shards[s].selector.clone();
+                let mut work = cands.clone();
+                for _ in 0..top {
+                    match ranker.select(
+                        policy,
+                        &work,
+                        &env.cluster,
+                        now,
+                        cfg.jasda.announce_horizon,
+                    ) {
+                        Some(i) => combined.push(work.swap_remove(i)),
+                        None => break,
+                    }
+                }
+                out.windows_suppressed += work.len() as u64;
+            }
+            shard_ranges[s] = (c0, combined.len());
+        }
+        if combined.is_empty() {
             now += period;
             continue;
         }
         out.announcements += 1;
-        for tx in &agent_tx {
-            let _ = tx.send(ToAgent::Announce {
-                round,
-                now,
-                windows: std::sync::Arc::clone(&candidates),
-            });
-        }
 
-        // 3. Collect one reply per agent (all-empty bids = silent).
-        let mut replies = 0;
-        while replies < n_jobs {
-            match reply_rx.recv() {
-                Ok(AgentReply::Bid { job, round: r, bids, done: _ }) => {
-                    if r == round {
-                        replies += 1;
-                        let slot = env.slot[&job];
-                        let n: usize = bids.iter().map(|b| b.len()).sum();
-                        if n > 0 {
-                            out.bids += 1;
-                            out.variants += n as u64;
-                        }
+        // 3. One broadcast (bounded inboxes: a slow agent's copy is
+        // dropped and the round proceeds without its bids), then collect
+        // one reply per *delivered* announcement.
+        let windows = Arc::new(combined);
+        let announce =
+            ToAgent::Announce { round, now, windows: Arc::clone(&windows) };
+        let delivered = transport.broadcast(&announce, &mut dropped);
+        out.sends_dropped += dropped.len() as u64;
+        for b in bids_by_slot.iter_mut() {
+            b.clear();
+            b.resize(windows.len(), Vec::new());
+        }
+        let mut replies = 0usize;
+        while replies < delivered {
+            match transport.recv() {
+                Some(AgentReply::Bid { job, round: r, bids, done: _ }) => {
+                    let Some(&slot) = env.slot.get(&job) else { continue };
+                    if r != round {
+                        continue;
+                    }
+                    replies += 1;
+                    let n: usize = bids.iter().map(|b| b.len()).sum();
+                    if n > 0 {
+                        out.bids += 1;
+                        out.variants += n as u64;
+                    }
+                    if bids.len() == windows.len() {
                         bids_by_slot[slot] = bids;
                     }
                 }
-                Err(_) => break,
+                None => break,
             }
         }
 
-        // 4. Replay the announce loop, then clear with the shared engine.
+        // 4. Decide, shard by shard in shard order: replay the announce
+        // loop over the shard's candidates (pre-filtering bids that
+        // conflict with earlier shards' acceptances this round), clear
+        // with the shard's engine on its own pool, and record
+        // acceptances in the cross-shard reconciler.
         let t_decide = std::time::Instant::now();
-        let (policy, _repack_redirected) = round_policy(&cfg.jasda, &env.cluster, now);
-        let k_target = announce_target(&cfg.jasda, &candidates);
         pool.clear();
         agent_vid.clear();
-        let (announced, window_rows, silent) = replay_selection(
-            &mut selector,
-            policy,
-            &env.cluster,
-            now,
-            cfg.jasda.announce_horizon,
-            k_target,
-            cfg.jasda.announce_per_slice,
-            &candidates,
-            &bids_by_slot,
-            &mut pool,
-            &mut agent_vid,
-        );
-        out.windows_silent += silent;
-        out.windows_announced += announced.len() as u64;
-        if announced.is_empty() {
-            // All candidates were silent: the selection replay above is
-            // still leader decision work — account for it.
+        reconciler.begin_round();
+        let mut announced_all: Vec<Window> = Vec::new();
+        let mut accepted_rows: Vec<usize> = Vec::new();
+        let mut any_window = false;
+        for s in 0..shards_n {
+            let (c0, c1) = shard_ranges[s];
+            if c0 == c1 {
+                continue;
+            }
+            // announce_top silence latch: did this shard's broadcast
+            // draw any bid variant at all?
+            let mut shard_variants = 0usize;
+            for per_job in &bids_by_slot {
+                for c in c0..c1 {
+                    shard_variants += per_job[c].len();
+                }
+            }
+            shards[s].last_round_silent = shard_variants == 0;
+
+            let (policy, _) = shard_round_policy(&cfg.jasda, &env.cluster, now, s, shards_n);
+            let shard_cand = &windows[c0..c1];
+            let k_target = announce_target(&cfg.jasda, shard_cand);
+            let row_base = pool.len();
+            let sh = &mut shards[s];
+            let rec = &reconciler;
+            let (announced, window_rows, silent, filtered) = replay_selection(
+                &mut sh.selector,
+                policy,
+                &env.cluster,
+                now,
+                cfg.jasda.announce_horizon,
+                k_target,
+                cfg.jasda.announce_per_slice,
+                shard_cand,
+                c0,
+                &bids_by_slot,
+                &mut pool,
+                &mut agent_vid,
+                &mut |v| !rec.conflicts(v),
+            );
+            out.windows_silent += silent;
+            out.cross_shard_conflicts += filtered;
+            out.windows_announced += announced.len() as u64;
+            if announced.is_empty() {
+                continue;
+            }
+            any_window = true;
+            // (Pool rows keep their agent-assigned ids; the engine and
+            // the award path identify variants by row index /
+            // `agent_vid`. The engine sees rows relative to this shard's
+            // pool segment.)
+            let rel_rows: Vec<(usize, usize)> =
+                window_rows.iter().map(|&(a, b)| (a - row_base, b - row_base)).collect();
+
+            let jcfg = &cfg.jasda;
+            let env_ro = &env;
+            let mut row_ctx = |v: &Variant| {
+                let slot = env_ro.slot[&v.job];
+                let age = if jcfg.age_priority {
+                    age_factor(env_ro.last_selected[slot], now, jcfg.age_scale)
+                } else {
+                    0.0
+                };
+                let (trust, hist) = if jcfg.calibration {
+                    (
+                        env_ro.calibration.trust_weight(v.job),
+                        env_ro.calibration.hist_avg(v.job),
+                    )
+                } else {
+                    (1.0, 0.0)
+                };
+                RowCtx { age, trust, hist }
+            };
+            let n_before = accepted_rows.len();
+            {
+                let shard_pool = &pool[row_base..];
+                let mut on_accept =
+                    |acc: Accepted<'_>| accepted_rows.push(row_base + acc.row);
+                let cstats = sh.engine.clear(
+                    jcfg,
+                    &announced,
+                    &rel_rows,
+                    shard_pool,
+                    &mut row_ctx,
+                    &mut sh.scorer,
+                    &sh.wpool,
+                    &mut on_accept,
+                );
+                out.cross_window_conflicts += cstats.cross_window_conflicts;
+            }
+            for &row in &accepted_rows[n_before..] {
+                reconciler.commit(&pool[row]);
+            }
+            announced_all.extend(announced);
+        }
+        if !any_window {
+            // All candidates were silent: the selection replays above
+            // are still leader decision work — account for them.
             let decide_ns = t_decide.elapsed().as_nanos() as u64;
             out.decision_ns += decide_ns;
             out.max_round_decision_ns = out.max_round_decision_ns.max(decide_ns);
@@ -683,40 +880,9 @@ pub fn run_protocol_traced(
             continue;
         }
         out.rounds_with_bids += 1;
-        // (Pool rows keep their agent-assigned ids; the engine and the
-        // award path identify variants by row index / `agent_vid`.)
 
-        let jcfg = &cfg.jasda;
-        let env_ro = &env;
-        let mut row_ctx = |v: &Variant| {
-            let slot = env_ro.slot[&v.job];
-            let age = if jcfg.age_priority {
-                age_factor(env_ro.last_selected[slot], now, jcfg.age_scale)
-            } else {
-                0.0
-            };
-            let (trust, hist) = if jcfg.calibration {
-                (env_ro.calibration.trust_weight(v.job), env_ro.calibration.hist_avg(v.job))
-            } else {
-                (1.0, 0.0)
-            };
-            RowCtx { age, trust, hist }
-        };
-        let mut accepted_rows: Vec<usize> = Vec::new();
-        let mut on_accept = |acc: Accepted<'_>| accepted_rows.push(acc.row);
-        let cstats = engine.clear(
-            jcfg,
-            &announced,
-            &window_rows,
-            &pool,
-            &mut row_ctx,
-            &mut scorer,
-            &wpool,
-            &mut on_accept,
-        );
-        out.cross_window_conflicts += cstats.cross_window_conflicts;
-
-        // 5. Award + reserve + realize, in commitment order; then notify
+        // 5. Award + reserve + realize, in commitment order (shard
+        // order, then each shard's reconciliation order); then notify
         // each winning agent once (BTreeMap keeps send order
         // deterministic; per-agent id order is acceptance order).
         let mut per_job_awards: std::collections::BTreeMap<JobId, Vec<u32>> =
@@ -740,14 +906,16 @@ pub fn run_protocol_traced(
             }
         }
         for (job, variant_ids) in per_job_awards {
-            let _ = agent_tx[env.slot[&job]]
-                .send(ToAgent::Awarded(Award { round, variant_ids, now }));
+            let msg = ToAgent::Awarded(Award { round, variant_ids, now });
+            if !transport.send(env.slot[&job], &msg) {
+                out.sends_dropped += 1;
+            }
         }
         let decide_ns = t_decide.elapsed().as_nanos() as u64;
         out.decision_ns += decide_ns;
         out.max_round_decision_ns = out.max_round_decision_ns.max(decide_ns);
         if let Some(t) = trace.as_deref_mut() {
-            t.push(RoundDecision { round, now, windows: announced, awards: round_awards });
+            t.push(RoundDecision { round, now, windows: announced_all, awards: round_awards });
         }
 
         now += period;
@@ -755,13 +923,7 @@ pub fn run_protocol_traced(
 
     now = env.drain(now);
     out.completed_jobs = env.completed_jobs;
-
-    for tx in &agent_tx {
-        let _ = tx.send(ToAgent::Shutdown);
-    }
-    for h in handles {
-        let _ = h.join();
-    }
+    transport.shutdown();
     out.final_time = now;
     out.wall = wall0.elapsed();
     out
@@ -905,7 +1067,9 @@ pub fn run_reference_traced(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::WindowPolicy;
     use crate::trp::{Phase, Trp};
+    use std::sync::mpsc;
 
     fn jobs(n: u32) -> Vec<Job> {
         (0..n)
@@ -937,6 +1101,7 @@ mod tests {
         assert!(out.variants >= out.bids);
         assert!(out.windows_announced > 0);
         assert!(out.decision_ns > 0);
+        assert_eq!(out.sends_dropped, 0, "synchronous rounds must never fill an inbox");
     }
 
     #[test]
@@ -1002,6 +1167,80 @@ mod tests {
     }
 
     #[test]
+    fn framed_transport_matches_loopback_decisions() {
+        // The wire codec must be decision-invisible: identical traces
+        // whether messages cross as typed values or as byte frames.
+        let mut c = cfg();
+        c.jasda.announce_per_slice = true;
+        let mut tl = Vec::new();
+        let mut tf = Vec::new();
+        let p = run_protocol_traced(c.clone(), jobs(4), 200_000, Some(&mut tl));
+        let mut cf = c;
+        cf.jasda.transport = TransportKind::Framed;
+        let f = run_protocol_traced(cf, jobs(4), 200_000, Some(&mut tf));
+        assert_eq!(p.completed_jobs, 4, "{p:?}");
+        assert_eq!(f.completed_jobs, 4, "{f:?}");
+        assert_eq!(tl.len(), tf.len());
+        for (a, b) in tl.iter().zip(&tf) {
+            assert_eq!(a, b);
+        }
+        assert_eq!(p.final_time, f.final_time);
+    }
+
+    #[test]
+    fn sharded_leader_completes_with_conflict_free_rounds() {
+        let mut c = cfg();
+        c.jasda.shards = 2;
+        c.jasda.announce_per_slice = true;
+        let mut trace = Vec::new();
+        let out = run_protocol_traced(c, jobs(6), 200_000, Some(&mut trace));
+        assert_eq!(out.completed_jobs, 6, "{out:?}");
+        for rd in &trace {
+            for (i, a) in rd.awards.iter().enumerate() {
+                for b in rd.awards.iter().skip(i + 1) {
+                    if a.job == b.job {
+                        assert!(
+                            !a.interval.overlaps(&b.interval),
+                            "round {}: job {} holds overlapping awards",
+                            rd.round,
+                            a.job
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn announce_top_caps_broadcast_and_still_completes() {
+        let mut c = cfg();
+        c.jasda.announce_top = 1;
+        c.jasda.announce_per_slice = true;
+        let out = run_protocol(c, jobs(5), 200_000);
+        assert_eq!(out.completed_jobs, 5, "{out:?}");
+        assert!(out.windows_suppressed > 0, "cap never engaged: {out:?}");
+    }
+
+    #[test]
+    fn announce_top_falls_back_after_silence() {
+        // Round-robin ranking eventually offers only the 10 GiB slices;
+        // a 14 GiB job is silent on those capped rounds, so the next
+        // round must re-broadcast the full set.
+        let mut c = cfg();
+        c.jasda.announce_top = 1;
+        c.jasda.window_policy = WindowPolicy::RoundRobin;
+        let trp =
+            Trp { phases: vec![Phase::new(800.0, 14.0, 0.2, 0.1)], duration_cv: 0.05 };
+        let job = Job::new(0, "p", 0, trp, None, 1.0, 300.0, 0.0);
+        let out = run_protocol(c, vec![job], 200_000);
+        assert_eq!(out.completed_jobs, 1, "{out:?}");
+        assert!(
+            out.announce_fallbacks > 0,
+            "silent capped round must trigger the full-set fallback: {out:?}"
+        );
+    }
+
+    #[test]
     fn agent_resolves_awards_by_agent_assigned_ids() {
         // Regression: award ids must be the agent's own numbering, so a
         // winning agent's reserved-work accounting actually moves. With
@@ -1014,7 +1253,9 @@ mod tests {
         let jcfg = crate::config::JasdaConfig { fmp_bins: 16, ..Default::default() };
         let (to_tx, to_rx) = mpsc::channel();
         let (re_tx, re_rx) = mpsc::channel();
-        let handle = std::thread::spawn(move || agent_task(job, jcfg, to_rx, re_tx));
+        let handle = std::thread::spawn(move || {
+            agent_loop(job, jcfg, || to_rx.recv().ok(), |reply| re_tx.send(reply).is_ok())
+        });
 
         let window = Window {
             slice: 0,

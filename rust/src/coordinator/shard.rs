@@ -1,0 +1,181 @@
+//! The shard layer of the protocol runtime: N leader shards, each
+//! owning a disjoint slice subset, plus the cross-shard reconciler.
+//!
+//! Slices are striped across shards by [`shard_of`] (`slice % shards`).
+//! Each shard carries its own [`WindowSelector`] (policy state such as
+//! the round-robin cursor is per-shard), its own [`ClearingEngine`]
+//! scratch, its own scorer, and its own [`WorkerPool`] slice of the
+//! configured `jasda.parallel` budget — shards share *nothing* mutable,
+//! which is what makes the decision phase embarrassingly shardable.
+//!
+//! What shards cannot decide alone is job-level consistency: a job may
+//! win in shard 0 and have an overlapping variant pending in shard 2.
+//! The [`ShardReconciler`] closes that hole by replaying the *identical*
+//! cross-window conflict rules
+//! ([`conflicts_with_accepted`](crate::jasda::clearing::conflicts_with_accepted))
+//! across shard boundaries: shards decide sequentially in shard order,
+//! every acceptance is recorded, and later shards' bid pools are
+//! pre-filtered against the record before their clearing runs. Within a
+//! shard the engine's own reconciliation still applies, so the union of
+//! both layers enforces exactly the single-leader invariants — the
+//! property tests assert `shards=1` is decision-identical to the
+//! pre-shard coordinator and `shards=N` never commits a conflict the
+//! single leader would have caught.
+
+use crate::jasda::clearing::{conflicts_with_accepted, ClearingEngine};
+use crate::jasda::pool::WorkerPool;
+use crate::jasda::scoring::NativeScorer;
+pub use crate::jasda::window::shard_of;
+use crate::jasda::window::WindowSelector;
+use crate::job::Variant;
+use crate::types::{Interval, JobId};
+
+/// One leader shard's private decision state.
+pub(super) struct LeaderShard {
+    /// Policy state (round-robin cursor, fragmentation scratch).
+    pub selector: WindowSelector,
+    /// Clearing scratch buffers.
+    pub engine: ClearingEngine,
+    /// Scoring backend.
+    pub scorer: NativeScorer,
+    /// This shard's slice of the worker budget.
+    pub wpool: WorkerPool,
+    /// Whether this shard's previous *capped* broadcast drew no bid
+    /// variants — the `announce_top` silence-fallback latch: when set,
+    /// the next round broadcasts the shard's full candidate set.
+    pub last_round_silent: bool,
+}
+
+/// Build `shards` leader shards, splitting the resolved `jasda.parallel`
+/// worker budget evenly (each shard gets at least 1). With one shard
+/// this is the exact pre-shard configuration: one selector, one engine,
+/// one pool with the full budget.
+pub(super) fn make_shards(shards: usize, parallel: usize) -> Vec<LeaderShard> {
+    let n = shards.max(1);
+    let per_shard = (WorkerPool::resolve_budget(parallel) / n).max(1);
+    (0..n)
+        .map(|_| LeaderShard {
+            selector: WindowSelector::new(),
+            engine: ClearingEngine::new(),
+            scorer: NativeScorer,
+            wpool: WorkerPool::new(per_shard),
+            last_round_silent: false,
+        })
+        .collect()
+}
+
+/// Cross-shard award record for one round: the same `(job, interval,
+/// work-range)` tuples the clearing engine reconciles windows with,
+/// promoted to shard scope.
+#[derive(Debug, Default)]
+pub struct ShardReconciler {
+    accepted: Vec<(JobId, Interval, f64, f64)>,
+}
+
+impl ShardReconciler {
+    /// Empty reconciler.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Forget the previous round's awards.
+    pub fn begin_round(&mut self) {
+        self.accepted.clear();
+    }
+
+    /// Would `v` violate a conflict rule against an earlier shard's
+    /// award this round? (Exactly the engine's cross-window predicate.)
+    pub fn conflicts(&self, v: &Variant) -> bool {
+        conflicts_with_accepted(&self.accepted, v)
+    }
+
+    /// Record an accepted variant so later shards filter against it.
+    pub fn commit(&mut self, v: &Variant) {
+        self.accepted.push((v.job, v.interval, v.work_offset, v.work_offset + v.work));
+    }
+
+    /// Awards recorded this round.
+    pub fn len(&self) -> usize {
+        self.accepted.len()
+    }
+
+    /// Whether no award has been recorded this round.
+    pub fn is_empty(&self) -> bool {
+        self.accepted.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::variants::{DeclaredFeatures, SysFeatures};
+    use crate::trp::Fmp;
+    use std::sync::Arc;
+
+    fn v(job: u32, start: u64, end: u64, work_offset: f64, work: f64) -> Variant {
+        Variant {
+            id: 0,
+            job,
+            slice: 0,
+            interval: Interval::new(start, end),
+            work,
+            work_offset,
+            fmp: Arc::new(Fmp { mu: vec![1.0], sigma: vec![0.1] }),
+            violation_prob: 0.0,
+            declared: DeclaredFeatures {
+                phi_honest: [0.0; 4],
+                phi: [0.0; 4],
+                h_tilde: 0.0,
+            },
+            sys: SysFeatures { util: 0.0, frag: 0.0 },
+        }
+    }
+
+    #[test]
+    fn shard_of_stripes_slices() {
+        assert_eq!(shard_of(0, 2), 0);
+        assert_eq!(shard_of(1, 2), 1);
+        assert_eq!(shard_of(2, 2), 0);
+        assert_eq!(shard_of(5, 1), 0);
+        assert_eq!(shard_of(5, 0), 0, "degenerate shard count maps to shard 0");
+    }
+
+    #[test]
+    fn reconciler_blocks_overlapping_interval_same_job_only() {
+        let mut r = ShardReconciler::new();
+        r.begin_round();
+        r.commit(&v(1, 100, 200, 0.0, 50.0));
+        // Same job, overlapping time, disjoint work range: conflict.
+        assert!(r.conflicts(&v(1, 150, 250, 100.0, 50.0)));
+        // Same job, disjoint time, overlapping work range: conflict.
+        assert!(r.conflicts(&v(1, 300, 400, 25.0, 50.0)));
+        // Same job, disjoint time and work: no conflict.
+        assert!(!r.conflicts(&v(1, 300, 400, 50.0, 50.0)));
+        // Different job, same everything: no conflict.
+        assert!(!r.conflicts(&v(2, 150, 250, 0.0, 50.0)));
+    }
+
+    #[test]
+    fn reconciler_resets_between_rounds() {
+        let mut r = ShardReconciler::new();
+        r.commit(&v(1, 0, 10, 0.0, 5.0));
+        assert_eq!(r.len(), 1);
+        r.begin_round();
+        assert!(r.is_empty());
+        assert!(!r.conflicts(&v(1, 0, 10, 0.0, 5.0)));
+    }
+
+    #[test]
+    fn make_shards_splits_budget() {
+        let shards = make_shards(4, 8);
+        assert_eq!(shards.len(), 4);
+        for s in &shards {
+            assert_eq!(s.wpool.budget(), 2);
+        }
+        // More shards than workers: every shard still gets a serial pool.
+        let shards = make_shards(4, 2);
+        for s in &shards {
+            assert_eq!(s.wpool.budget(), 1);
+        }
+    }
+}

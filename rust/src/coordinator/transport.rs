@@ -1,0 +1,317 @@
+//! The transport layer of the protocol runtime: how leader ↔ agent
+//! messages move, separated from *what* they mean.
+//!
+//! The leader drives a [`Transport`] and never touches channels or bytes
+//! directly. Two implementations:
+//!
+//! - [`LoopbackTransport`] — the original in-process plumbing, rebuilt on
+//!   **bounded** per-agent queues: typed [`ToAgent`] values over
+//!   `mpsc::sync_channel`, replies over one shared unbounded channel.
+//!   Default, and the reference for decision parity.
+//! - [`FramedTransport`] — every message crosses as a length-prefixed
+//!   byte frame through the [`wire`](super::wire) codec: encoded on
+//!   send, decoded on receive, on both sides. In-process transport of
+//!   real bytes — the deployment-shaped path, exercised by the parity
+//!   tests to prove serialization changes no decision.
+//!
+//! # Backpressure
+//!
+//! Each agent's inbox holds at most [`DEFAULT_AGENT_QUEUE`] messages and
+//! the leader only ever *tries* to send: when an agent has fallen behind
+//! far enough to fill its queue, the message is dropped and the send
+//! reports it. A dropped `Announce` means the leader does not wait for —
+//! and the round proceeds without — that agent's bids: a slow agent
+//! degrades only its own participation, never the round. Queue depth is
+//! sized so this cannot trigger in the synchronous-round runs (the
+//! leader blocks on reply collection each round, bounding in-flight
+//! messages per agent to a small constant), keeping Loopback
+//! bit-identical to the pre-transport coordinator.
+//!
+//! # Shutdown
+//!
+//! [`Transport::shutdown`] sends best-effort `Shutdown`s, then *closes*
+//! every agent inbox by dropping the senders. Agents drain what is
+//! queued and exit on channel disconnect, so a full queue (which would
+//! drop the `Shutdown` message itself) can never leave a thread hanging
+//! in `join`.
+
+use super::messages::{AgentReply, ToAgent};
+use super::wire;
+use crate::config::JasdaConfig;
+use crate::job::Job;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+/// Per-agent inbox capacity (messages). One synchronous round keeps at
+/// most a handful of messages in flight per agent (one `Announce`, one
+/// `Awarded`, a few `Completed`s — subjobs last ≥ τ_min, many rounds),
+/// so 64 is an order of magnitude of headroom, not a tuning knob.
+pub const DEFAULT_AGENT_QUEUE: usize = 64;
+
+/// Message plane between one leader and its job agents.
+///
+/// Sends are non-blocking and fallible (bounded queues — see the module
+/// docs); receive blocks until a reply or disconnect. Implementations
+/// own the agent threads and reclaim them in [`shutdown`](Self::shutdown).
+pub trait Transport {
+    /// Number of agents.
+    fn agents(&self) -> usize;
+
+    /// Try to deliver `msg` to agent `agent`. Returns `false` when the
+    /// message was dropped (inbox full, or the agent is gone).
+    fn send(&mut self, agent: usize, msg: &ToAgent) -> bool;
+
+    /// Deliver `msg` to every agent; returns the number delivered and
+    /// records the agents whose copy was dropped in `dropped`.
+    fn broadcast(&mut self, msg: &ToAgent, dropped: &mut Vec<usize>) -> usize {
+        dropped.clear();
+        let mut delivered = 0;
+        for agent in 0..self.agents() {
+            if self.send(agent, msg) {
+                delivered += 1;
+            } else {
+                dropped.push(agent);
+            }
+        }
+        delivered
+    }
+
+    /// Block for the next agent reply; `None` once every agent has
+    /// disconnected.
+    fn recv(&mut self) -> Option<AgentReply>;
+
+    /// Tear down: close every agent inbox and join the agent threads.
+    /// Idempotent.
+    fn shutdown(&mut self);
+}
+
+/// In-process transport: typed messages over std channels (default).
+pub struct LoopbackTransport {
+    to_agents: Vec<mpsc::SyncSender<ToAgent>>,
+    replies: mpsc::Receiver<AgentReply>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl LoopbackTransport {
+    /// Spawn one agent thread per job, each with a `queue`-deep inbox.
+    pub fn spawn(jobs: Vec<Job>, cfg: &JasdaConfig, queue: usize) -> Self {
+        let cap = queue.max(1);
+        let (reply_tx, replies) = mpsc::channel::<AgentReply>();
+        let mut to_agents = Vec::with_capacity(jobs.len());
+        let mut handles = Vec::with_capacity(jobs.len());
+        for job in jobs {
+            let (tx, rx) = mpsc::sync_channel::<ToAgent>(cap);
+            to_agents.push(tx);
+            let jcfg = cfg.clone();
+            let rtx = reply_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                super::agent_loop(job, jcfg, || rx.recv().ok(), |reply| rtx.send(reply).is_ok());
+            }));
+        }
+        drop(reply_tx);
+        LoopbackTransport { to_agents, replies, handles }
+    }
+}
+
+impl Transport for LoopbackTransport {
+    fn agents(&self) -> usize {
+        self.to_agents.len()
+    }
+
+    fn send(&mut self, agent: usize, msg: &ToAgent) -> bool {
+        self.to_agents[agent].try_send(msg.clone()).is_ok()
+    }
+
+    fn recv(&mut self) -> Option<AgentReply> {
+        self.replies.recv().ok()
+    }
+
+    fn shutdown(&mut self) {
+        for tx in &self.to_agents {
+            let _ = tx.try_send(ToAgent::Shutdown);
+        }
+        // Closing the inboxes is the reliable signal: agents drain and
+        // exit on disconnect even if the Shutdown above was dropped.
+        self.to_agents.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Byte-frame transport: every message is encoded by the [`wire`] codec
+/// into a length-prefixed frame on send and decoded on the receiving
+/// side, in both directions. Undecodable frames are dropped by the
+/// receiver (counted as silence), never propagated as panics.
+pub struct FramedTransport {
+    to_agents: Vec<mpsc::SyncSender<Vec<u8>>>,
+    replies: mpsc::Receiver<Vec<u8>>,
+    handles: Vec<JoinHandle<()>>,
+    /// Reused encode buffer (a broadcast encodes once, clones per agent).
+    scratch: Vec<u8>,
+}
+
+impl FramedTransport {
+    /// Spawn one agent thread per job; agent endpoints decode/encode the
+    /// same frames the leader side does.
+    pub fn spawn(jobs: Vec<Job>, cfg: &JasdaConfig, queue: usize) -> Self {
+        let cap = queue.max(1);
+        let (reply_tx, replies) = mpsc::channel::<Vec<u8>>();
+        let mut to_agents = Vec::with_capacity(jobs.len());
+        let mut handles = Vec::with_capacity(jobs.len());
+        for job in jobs {
+            let (tx, rx) = mpsc::sync_channel::<Vec<u8>>(cap);
+            to_agents.push(tx);
+            let jcfg = cfg.clone();
+            let rtx = reply_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut buf: Vec<u8> = Vec::new();
+                super::agent_loop(
+                    job,
+                    jcfg,
+                    || loop {
+                        let frame = rx.recv().ok()?;
+                        match wire::decode_to_agent(&frame) {
+                            Ok(msg) => return Some(msg),
+                            Err(_) => continue,
+                        }
+                    },
+                    |reply| {
+                        buf.clear();
+                        wire::encode_agent_reply(&reply, &mut buf);
+                        rtx.send(buf.clone()).is_ok()
+                    },
+                );
+            }));
+        }
+        drop(reply_tx);
+        FramedTransport { to_agents, replies, handles, scratch: Vec::new() }
+    }
+}
+
+impl Transport for FramedTransport {
+    fn agents(&self) -> usize {
+        self.to_agents.len()
+    }
+
+    fn send(&mut self, agent: usize, msg: &ToAgent) -> bool {
+        self.scratch.clear();
+        wire::encode_to_agent(msg, &mut self.scratch);
+        self.to_agents[agent].try_send(self.scratch.clone()).is_ok()
+    }
+
+    fn broadcast(&mut self, msg: &ToAgent, dropped: &mut Vec<usize>) -> usize {
+        dropped.clear();
+        self.scratch.clear();
+        wire::encode_to_agent(msg, &mut self.scratch);
+        let mut delivered = 0;
+        for (agent, tx) in self.to_agents.iter().enumerate() {
+            if tx.try_send(self.scratch.clone()).is_ok() {
+                delivered += 1;
+            } else {
+                dropped.push(agent);
+            }
+        }
+        delivered
+    }
+
+    fn recv(&mut self) -> Option<AgentReply> {
+        loop {
+            let frame = self.replies.recv().ok()?;
+            if let Ok(reply) = wire::decode_agent_reply(&frame) {
+                return Some(reply);
+            }
+        }
+    }
+
+    fn shutdown(&mut self) {
+        self.scratch.clear();
+        wire::encode_to_agent(&ToAgent::Shutdown, &mut self.scratch);
+        for tx in &self.to_agents {
+            let _ = tx.try_send(self.scratch.clone());
+        }
+        self.to_agents.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::messages::CompletionReport;
+    use super::*;
+
+    fn completed() -> ToAgent {
+        ToAgent::Completed(CompletionReport { planned_work: 1.0, realized_work: 1.0, at: 10 })
+    }
+
+    #[test]
+    fn loopback_backpressure_drops_when_queue_full() {
+        // A transport whose single "agent" never drains its depth-1
+        // inbox: the first send lands, the second is dropped — and only
+        // that agent is affected, the call never blocks.
+        let (tx, _rx_keepalive) = mpsc::sync_channel::<ToAgent>(1);
+        let (_reply_tx, replies) = mpsc::channel::<AgentReply>();
+        let mut t =
+            LoopbackTransport { to_agents: vec![tx], replies, handles: Vec::new() };
+        assert!(t.send(0, &completed()));
+        assert!(!t.send(0, &completed()), "full inbox must drop, not block");
+        let mut dropped = Vec::new();
+        assert_eq!(t.broadcast(&completed(), &mut dropped), 0);
+        assert_eq!(dropped, vec![0]);
+    }
+
+    #[test]
+    fn send_to_dead_agent_reports_drop() {
+        let (tx, rx) = mpsc::sync_channel::<ToAgent>(4);
+        drop(rx);
+        let (_reply_tx, replies) = mpsc::channel::<AgentReply>();
+        let mut t =
+            LoopbackTransport { to_agents: vec![tx], replies, handles: Vec::new() };
+        assert!(!t.send(0, &completed()));
+        t.shutdown();
+        t.shutdown(); // idempotent
+    }
+
+    #[test]
+    fn framed_backpressure_drops_when_queue_full() {
+        let (tx, _rx_keepalive) = mpsc::sync_channel::<Vec<u8>>(1);
+        let (_reply_tx, replies) = mpsc::channel::<Vec<u8>>();
+        let mut t = FramedTransport {
+            to_agents: vec![tx],
+            replies,
+            handles: Vec::new(),
+            scratch: Vec::new(),
+        };
+        assert!(t.send(0, &completed()));
+        assert!(!t.send(0, &completed()));
+    }
+
+    #[test]
+    fn framed_recv_skips_garbage_frames() {
+        let (reply_tx, replies) = mpsc::channel::<Vec<u8>>();
+        let mut t = FramedTransport {
+            to_agents: Vec::new(),
+            replies,
+            handles: Vec::new(),
+            scratch: Vec::new(),
+        };
+        reply_tx.send(vec![0xDE, 0xAD]).unwrap();
+        let mut good = Vec::new();
+        wire::encode_agent_reply(
+            &AgentReply::Bid { job: 3, round: 1, bids: vec![], done: false },
+            &mut good,
+        );
+        reply_tx.send(good).unwrap();
+        drop(reply_tx);
+        match t.recv() {
+            Some(AgentReply::Bid { job, round, .. }) => {
+                assert_eq!(job, 3);
+                assert_eq!(round, 1);
+            }
+            None => panic!("good frame after garbage must be delivered"),
+        }
+        assert!(t.recv().is_none(), "disconnect after draining");
+    }
+}

@@ -1,0 +1,674 @@
+//! Hand-rolled wire codec for the protocol messages (zero dependencies,
+//! no serde — the offline build constraint, and the same forward-only
+//! philosophy as the lazy-scan JSON reader in `util::json`: one cursor,
+//! no intermediate tree, no backtracking).
+//!
+//! # Frame layout
+//!
+//! Every message is one *frame*: a `u32` little-endian payload length
+//! followed by the payload. The payload starts with a one-byte tag and
+//! then the message fields in declaration order:
+//!
+//! - integers as LEB128 varints (u64; u32 fields are range-checked on
+//!   decode),
+//! - `f64` as the 8 little-endian bytes of [`f64::to_bits`] — bit-exact
+//!   round-trip, which is what keeps `FramedTransport` decisions
+//!   identical to `LoopbackTransport` (the parity property tests compare
+//!   them directly),
+//! - intervals as `start` + `len` varints (lengths compress better than
+//!   absolute ends),
+//! - bools as a single 0/1 byte.
+//!
+//! A [`AgentReply::Bid`] additionally carries an **FMP table**: the
+//! distinct [`Fmp`]s referenced by the reply's variants, in first-use
+//! order, each variant storing only its table index. Variants in one bid
+//! share FMPs through `Arc` (one per cached plan); the table keeps that
+//! sharing on the wire *and* restores it on decode, so a framed bid costs
+//! one FMP serialization per plan, not per variant.
+//!
+//! # Hostile input
+//!
+//! Decoding never panics and never trusts a length it has not yet seen
+//! bytes for: every read is bounds-checked ([`WireError::Eof`]), frames
+//! above [`MAX_FRAME`] are rejected before any allocation sized by them,
+//! vectors grow by `push` (never `with_capacity` from a wire length),
+//! FMP table indices are range-checked, and a decoded payload must be
+//! consumed exactly ([`WireError::Trailing`]). The truncation/garbage
+//! tests below drive every reject path.
+
+use super::messages::{AgentReply, Award, CompletionReport, ToAgent};
+use crate::job::variants::{DeclaredFeatures, SysFeatures};
+use crate::job::Variant;
+use crate::mig::Window;
+use crate::trp::Fmp;
+use crate::types::Interval;
+use std::sync::Arc;
+
+/// Hard cap on a frame's payload length (bytes). Generously above any
+/// real round (a 10k-variant bid is ~2 MB) while keeping a hostile
+/// length prefix from looking plausible.
+pub const MAX_FRAME: usize = 64 << 20;
+
+/// Message tags (first payload byte).
+const TAG_ANNOUNCE: u8 = 1;
+const TAG_AWARDED: u8 = 2;
+const TAG_COMPLETED: u8 = 3;
+const TAG_SHUTDOWN: u8 = 4;
+const TAG_BID: u8 = 0x11;
+
+/// Decoding failure. Encoding is infallible.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireError {
+    /// Ran out of bytes mid-value.
+    Eof,
+    /// Unknown message tag.
+    BadTag(u8),
+    /// Malformed varint (more than 10 continuation bytes) or a varint
+    /// value out of range for the field (e.g. a u32 field > u32::MAX).
+    Varint,
+    /// Frame-level violation: short/oversized length prefix, or a
+    /// payload field inconsistent with the data (bad bool byte, FMP
+    /// index past the table, interval overflow).
+    Frame,
+    /// The payload decoded cleanly but left unconsumed bytes.
+    Trailing,
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Eof => write!(f, "unexpected end of frame"),
+            WireError::BadTag(t) => write!(f, "unknown message tag {t:#04x}"),
+            WireError::Varint => write!(f, "malformed or out-of-range varint"),
+            WireError::Frame => write!(f, "malformed frame"),
+            WireError::Trailing => write!(f, "trailing bytes after message"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+// --- primitive writers ----------------------------------------------------
+
+fn put_var(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+fn put_bool(out: &mut Vec<u8>, v: bool) {
+    out.push(u8::from(v));
+}
+
+fn put_interval(out: &mut Vec<u8>, iv: &Interval) {
+    put_var(out, iv.start);
+    put_var(out, iv.end - iv.start);
+}
+
+// --- primitive reader -----------------------------------------------------
+
+/// Forward-only bounds-checked cursor over one frame payload.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    /// Wrap a payload.
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    /// Whether every byte has been consumed.
+    pub fn is_empty(&self) -> bool {
+        self.pos >= self.buf.len()
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        let b = *self.buf.get(self.pos).ok_or(WireError::Eof)?;
+        self.pos += 1;
+        Ok(b)
+    }
+
+    fn var(&mut self) -> Result<u64, WireError> {
+        let mut v: u64 = 0;
+        for shift in (0..64).step_by(7) {
+            let b = self.u8()?;
+            let low = u64::from(b & 0x7f);
+            // The 10th byte may only contribute the u64's top bit.
+            if shift == 63 && low > 1 {
+                return Err(WireError::Varint);
+            }
+            v |= low << shift;
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+        }
+        Err(WireError::Varint)
+    }
+
+    fn var_u32(&mut self) -> Result<u32, WireError> {
+        u32::try_from(self.var()?).map_err(|_| WireError::Varint)
+    }
+
+    fn var_usize(&mut self) -> Result<usize, WireError> {
+        usize::try_from(self.var()?).map_err(|_| WireError::Varint)
+    }
+
+    fn f64(&mut self) -> Result<f64, WireError> {
+        let end = self.pos.checked_add(8).ok_or(WireError::Eof)?;
+        let bytes = self.buf.get(self.pos..end).ok_or(WireError::Eof)?;
+        self.pos = end;
+        Ok(f64::from_bits(u64::from_le_bytes(bytes.try_into().expect("8-byte slice"))))
+    }
+
+    fn bool(&mut self) -> Result<bool, WireError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            _ => Err(WireError::Frame),
+        }
+    }
+
+    fn interval(&mut self) -> Result<Interval, WireError> {
+        let start = self.var()?;
+        let len = self.var()?;
+        let end = start.checked_add(len).ok_or(WireError::Frame)?;
+        Ok(Interval::new(start, end))
+    }
+}
+
+// --- framing --------------------------------------------------------------
+
+/// Reserve the 4-byte length prefix; returns its offset for
+/// [`end_frame`].
+fn begin_frame(out: &mut Vec<u8>) -> usize {
+    let at = out.len();
+    out.extend_from_slice(&[0u8; 4]);
+    at
+}
+
+/// Patch the length prefix reserved by [`begin_frame`].
+fn end_frame(out: &mut Vec<u8>, at: usize) {
+    let len = out.len() - at - 4;
+    debug_assert!(len <= MAX_FRAME, "outgoing frame over MAX_FRAME");
+    out[at..at + 4].copy_from_slice(&(len as u32).to_le_bytes());
+}
+
+/// Validate a frame's length prefix and return its payload.
+pub fn frame_payload(frame: &[u8]) -> Result<&[u8], WireError> {
+    let prefix = frame.get(..4).ok_or(WireError::Frame)?;
+    let len = u32::from_le_bytes(prefix.try_into().expect("4-byte slice")) as usize;
+    if len > MAX_FRAME {
+        return Err(WireError::Frame);
+    }
+    if frame.len() - 4 != len {
+        return Err(WireError::Frame);
+    }
+    Ok(&frame[4..])
+}
+
+// --- ToAgent --------------------------------------------------------------
+
+fn put_window(out: &mut Vec<u8>, w: &Window) {
+    put_var(out, u64::from(w.slice));
+    put_f64(out, w.capacity_gb);
+    put_f64(out, w.speed);
+    put_interval(out, &w.interval);
+}
+
+fn read_window(r: &mut Reader<'_>) -> Result<Window, WireError> {
+    Ok(Window {
+        slice: r.var_u32()?,
+        capacity_gb: r.f64()?,
+        speed: r.f64()?,
+        interval: r.interval()?,
+    })
+}
+
+/// Append one framed leader → agent message to `out`.
+pub fn encode_to_agent(msg: &ToAgent, out: &mut Vec<u8>) {
+    let at = begin_frame(out);
+    match msg {
+        ToAgent::Announce { round, now, windows } => {
+            out.push(TAG_ANNOUNCE);
+            put_var(out, *round);
+            put_var(out, *now);
+            put_var(out, windows.len() as u64);
+            for w in windows.iter() {
+                put_window(out, w);
+            }
+        }
+        ToAgent::Awarded(a) => {
+            out.push(TAG_AWARDED);
+            put_var(out, a.round);
+            put_var(out, a.now);
+            put_var(out, a.variant_ids.len() as u64);
+            for &id in &a.variant_ids {
+                put_var(out, u64::from(id));
+            }
+        }
+        ToAgent::Completed(c) => {
+            out.push(TAG_COMPLETED);
+            put_f64(out, c.planned_work);
+            put_f64(out, c.realized_work);
+            put_var(out, c.at);
+        }
+        ToAgent::Shutdown => out.push(TAG_SHUTDOWN),
+    }
+    end_frame(out, at);
+}
+
+/// Decode one framed leader → agent message.
+pub fn decode_to_agent(frame: &[u8]) -> Result<ToAgent, WireError> {
+    let mut r = Reader::new(frame_payload(frame)?);
+    let msg = match r.u8()? {
+        TAG_ANNOUNCE => {
+            let round = r.var()?;
+            let now = r.var()?;
+            let n = r.var_usize()?;
+            let mut windows = Vec::new();
+            for _ in 0..n {
+                windows.push(read_window(&mut r)?);
+            }
+            ToAgent::Announce { round, now, windows: Arc::new(windows) }
+        }
+        TAG_AWARDED => {
+            let round = r.var()?;
+            let now = r.var()?;
+            let n = r.var_usize()?;
+            let mut variant_ids = Vec::new();
+            for _ in 0..n {
+                variant_ids.push(r.var_u32()?);
+            }
+            ToAgent::Awarded(Award { round, variant_ids, now })
+        }
+        TAG_COMPLETED => ToAgent::Completed(CompletionReport {
+            planned_work: r.f64()?,
+            realized_work: r.f64()?,
+            at: r.var()?,
+        }),
+        TAG_SHUTDOWN => ToAgent::Shutdown,
+        t => return Err(WireError::BadTag(t)),
+    };
+    if !r.is_empty() {
+        return Err(WireError::Trailing);
+    }
+    Ok(msg)
+}
+
+// --- AgentReply -----------------------------------------------------------
+
+fn put_variant(out: &mut Vec<u8>, v: &Variant, fmp_index: usize) {
+    put_var(out, u64::from(v.id));
+    put_var(out, u64::from(v.slice));
+    put_interval(out, &v.interval);
+    put_f64(out, v.work);
+    put_f64(out, v.work_offset);
+    put_var(out, fmp_index as u64);
+    put_f64(out, v.violation_prob);
+    for x in v.declared.phi_honest {
+        put_f64(out, x);
+    }
+    for x in v.declared.phi {
+        put_f64(out, x);
+    }
+    put_f64(out, v.declared.h_tilde);
+    put_f64(out, v.sys.util);
+    put_f64(out, v.sys.frag);
+}
+
+fn read_variant(r: &mut Reader<'_>, job: u32, fmps: &[Arc<Fmp>]) -> Result<Variant, WireError> {
+    let id = r.var_u32()?;
+    let slice = r.var_u32()?;
+    let interval = r.interval()?;
+    let work = r.f64()?;
+    let work_offset = r.f64()?;
+    let fmp_index = r.var_usize()?;
+    let fmp = fmps.get(fmp_index).ok_or(WireError::Frame)?;
+    let violation_prob = r.f64()?;
+    let mut phi_honest = [0.0f64; 4];
+    for x in &mut phi_honest {
+        *x = r.f64()?;
+    }
+    let mut phi = [0.0f64; 4];
+    for x in &mut phi {
+        *x = r.f64()?;
+    }
+    let h_tilde = r.f64()?;
+    let util = r.f64()?;
+    let frag = r.f64()?;
+    Ok(Variant {
+        id,
+        job,
+        slice,
+        interval,
+        work,
+        work_offset,
+        fmp: Arc::clone(fmp),
+        violation_prob,
+        declared: DeclaredFeatures { phi_honest, phi, h_tilde },
+        sys: SysFeatures { util, frag },
+    })
+}
+
+/// Append one framed agent → leader message to `out`.
+///
+/// The variant `job` fields are not written (every variant in a bid
+/// belongs to the bidding job); decode restores them from the reply's
+/// `job` field.
+pub fn encode_agent_reply(msg: &AgentReply, out: &mut Vec<u8>) {
+    let AgentReply::Bid { job, round, bids, done } = msg;
+    let at = begin_frame(out);
+    out.push(TAG_BID);
+    put_var(out, u64::from(*job));
+    put_var(out, *round);
+    put_bool(out, *done);
+
+    // FMP table: distinct Arcs in first-use order. The distinct count is
+    // the number of cached plans (a handful), so the linear scan is fine.
+    let mut fmps: Vec<&Arc<Fmp>> = Vec::new();
+    for per_window in bids {
+        for v in per_window {
+            if !fmps.iter().any(|f| Arc::ptr_eq(f, &v.fmp)) {
+                fmps.push(&v.fmp);
+            }
+        }
+    }
+    put_var(out, fmps.len() as u64);
+    for f in &fmps {
+        debug_assert_eq!(f.mu.len(), f.sigma.len());
+        put_var(out, f.mu.len() as u64);
+        for &x in &f.mu {
+            put_f64(out, x);
+        }
+        for &x in &f.sigma {
+            put_f64(out, x);
+        }
+    }
+
+    put_var(out, bids.len() as u64);
+    for per_window in bids {
+        put_var(out, per_window.len() as u64);
+        for v in per_window {
+            let idx = fmps
+                .iter()
+                .position(|f| Arc::ptr_eq(f, &v.fmp))
+                .expect("every variant FMP is in the table");
+            put_variant(out, v, idx);
+        }
+    }
+    end_frame(out, at);
+}
+
+/// Decode one framed agent → leader message.
+pub fn decode_agent_reply(frame: &[u8]) -> Result<AgentReply, WireError> {
+    let mut r = Reader::new(frame_payload(frame)?);
+    match r.u8()? {
+        TAG_BID => {}
+        t => return Err(WireError::BadTag(t)),
+    }
+    let job = r.var_u32()?;
+    let round = r.var()?;
+    let done = r.bool()?;
+
+    let n_fmps = r.var_usize()?;
+    let mut fmps: Vec<Arc<Fmp>> = Vec::new();
+    for _ in 0..n_fmps {
+        let bins = r.var_usize()?;
+        let mut mu = Vec::new();
+        for _ in 0..bins {
+            mu.push(r.f64()?);
+        }
+        let mut sigma = Vec::new();
+        for _ in 0..bins {
+            sigma.push(r.f64()?);
+        }
+        fmps.push(Arc::new(Fmp { mu, sigma }));
+    }
+
+    let n_windows = r.var_usize()?;
+    let mut bids: Vec<Vec<Variant>> = Vec::new();
+    for _ in 0..n_windows {
+        let n_variants = r.var_usize()?;
+        let mut per_window = Vec::new();
+        for _ in 0..n_variants {
+            per_window.push(read_variant(&mut r, job, &fmps)?);
+        }
+        bids.push(per_window);
+    }
+    if !r.is_empty() {
+        return Err(WireError::Trailing);
+    }
+    Ok(AgentReply::Bid { job, round, bids, done })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fmp(seed: f64, bins: usize) -> Arc<Fmp> {
+        Arc::new(Fmp {
+            mu: (0..bins).map(|i| seed + i as f64 * 0.25).collect(),
+            sigma: (0..bins).map(|i| 0.1 + seed * i as f64).collect(),
+        })
+    }
+
+    fn variant(id: u32, job: u32, fmp: &Arc<Fmp>) -> Variant {
+        Variant {
+            id,
+            job,
+            slice: id % 3,
+            interval: Interval::new(100 + u64::from(id), 600 + u64::from(id) * 7),
+            work: 123.456 + f64::from(id),
+            work_offset: 0.5 * f64::from(id),
+            fmp: Arc::clone(fmp),
+            violation_prob: 0.0125,
+            declared: DeclaredFeatures {
+                phi_honest: [0.1, 0.2, 0.3, 0.4],
+                phi: [0.15, 0.2, 0.3, 0.4],
+                h_tilde: 0.2875,
+            },
+            sys: SysFeatures { util: 0.75, frag: 0.9 },
+        }
+    }
+
+    fn assert_variant_eq(a: &Variant, b: &Variant) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.job, b.job);
+        assert_eq!(a.slice, b.slice);
+        assert_eq!(a.interval, b.interval);
+        assert_eq!(a.work.to_bits(), b.work.to_bits());
+        assert_eq!(a.work_offset.to_bits(), b.work_offset.to_bits());
+        assert_eq!(a.fmp.mu, b.fmp.mu);
+        assert_eq!(a.fmp.sigma, b.fmp.sigma);
+        assert_eq!(a.violation_prob.to_bits(), b.violation_prob.to_bits());
+        for i in 0..4 {
+            assert_eq!(a.declared.phi_honest[i].to_bits(), b.declared.phi_honest[i].to_bits());
+            assert_eq!(a.declared.phi[i].to_bits(), b.declared.phi[i].to_bits());
+        }
+        assert_eq!(a.declared.h_tilde.to_bits(), b.declared.h_tilde.to_bits());
+        assert_eq!(a.sys.util.to_bits(), b.sys.util.to_bits());
+        assert_eq!(a.sys.frag.to_bits(), b.sys.frag.to_bits());
+    }
+
+    #[test]
+    fn announce_round_trips() {
+        let windows = vec![
+            Window {
+                slice: 0,
+                capacity_gb: 20.0,
+                speed: 3.0 / 7.0,
+                interval: Interval::new(25, 20_025),
+            },
+            Window { slice: 2, capacity_gb: 10.0, speed: 2.0 / 7.0, interval: Interval::new(0, 7) },
+        ];
+        let msg = ToAgent::Announce { round: 42, now: 1_050, windows: Arc::new(windows.clone()) };
+        let mut buf = Vec::new();
+        encode_to_agent(&msg, &mut buf);
+        match decode_to_agent(&buf).unwrap() {
+            ToAgent::Announce { round, now, windows: got } => {
+                assert_eq!(round, 42);
+                assert_eq!(now, 1_050);
+                assert_eq!(*got, windows);
+            }
+            other => panic!("wrong message: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn awarded_completed_shutdown_round_trip() {
+        let mut buf = Vec::new();
+        encode_to_agent(
+            &ToAgent::Awarded(Award { round: 7, variant_ids: vec![0, 3, u32::MAX], now: 175 }),
+            &mut buf,
+        );
+        match decode_to_agent(&buf).unwrap() {
+            ToAgent::Awarded(a) => {
+                assert_eq!(a.round, 7);
+                assert_eq!(a.variant_ids, vec![0, 3, u32::MAX]);
+                assert_eq!(a.now, 175);
+            }
+            other => panic!("wrong message: {other:?}"),
+        }
+
+        buf.clear();
+        let c = CompletionReport { planned_work: 300.5, realized_work: 299.25, at: 9_001 };
+        encode_to_agent(&ToAgent::Completed(c), &mut buf);
+        match decode_to_agent(&buf).unwrap() {
+            ToAgent::Completed(got) => {
+                assert_eq!(got.planned_work.to_bits(), 300.5f64.to_bits());
+                assert_eq!(got.realized_work.to_bits(), 299.25f64.to_bits());
+                assert_eq!(got.at, 9_001);
+            }
+            other => panic!("wrong message: {other:?}"),
+        }
+
+        buf.clear();
+        encode_to_agent(&ToAgent::Shutdown, &mut buf);
+        assert!(matches!(decode_to_agent(&buf).unwrap(), ToAgent::Shutdown));
+    }
+
+    #[test]
+    fn bid_round_trips_and_restores_fmp_sharing() {
+        let f0 = fmp(1.0, 16);
+        let f1 = fmp(2.0, 16);
+        // Window 0: two variants sharing f0 (one plan, two chunks), one
+        // on f1. Window 1: silent. Window 2: f0 again (same shape).
+        let bids = vec![
+            vec![variant(0, 9, &f0), variant(1, 9, &f0), variant(2, 9, &f1)],
+            vec![],
+            vec![variant(3, 9, &f0)],
+        ];
+        let msg = AgentReply::Bid { job: 9, round: 3, bids: bids.clone(), done: false };
+        let mut buf = Vec::new();
+        encode_agent_reply(&msg, &mut buf);
+        let AgentReply::Bid { job, round, bids: got, done } = decode_agent_reply(&buf).unwrap();
+        assert_eq!(job, 9);
+        assert_eq!(round, 3);
+        assert!(!done);
+        assert_eq!(got.len(), bids.len());
+        for (gw, bw) in got.iter().zip(&bids) {
+            assert_eq!(gw.len(), bw.len());
+            for (g, b) in gw.iter().zip(bw) {
+                assert_variant_eq(g, b);
+            }
+        }
+        // Arc sharing is restored: variants 0, 1, and 3 share one FMP
+        // allocation; variant 2 has its own.
+        assert!(Arc::ptr_eq(&got[0][0].fmp, &got[0][1].fmp));
+        assert!(Arc::ptr_eq(&got[0][0].fmp, &got[2][0].fmp));
+        assert!(!Arc::ptr_eq(&got[0][0].fmp, &got[0][2].fmp));
+    }
+
+    #[test]
+    fn truncated_frames_are_rejected() {
+        let f = fmp(1.5, 8);
+        let msg = AgentReply::Bid {
+            job: 4,
+            round: 11,
+            bids: vec![vec![variant(0, 4, &f)]],
+            done: true,
+        };
+        let mut buf = Vec::new();
+        encode_agent_reply(&msg, &mut buf);
+        // Any prefix shorter than the full frame fails the length check.
+        for cut in 0..buf.len() {
+            assert!(decode_agent_reply(&buf[..cut]).is_err(), "cut at {cut} accepted");
+        }
+        // Truncated payload with a "fixed up" length prefix fails inside
+        // the payload instead (Eof), never panics.
+        for cut in 5..buf.len() {
+            let mut short = buf[..cut].to_vec();
+            let plen = (cut - 4) as u32;
+            short[0..4].copy_from_slice(&plen.to_le_bytes());
+            assert!(decode_agent_reply(&short).is_err(), "patched cut at {cut} accepted");
+        }
+    }
+
+    #[test]
+    fn bad_tags_are_rejected() {
+        let mut buf = Vec::new();
+        encode_to_agent(&ToAgent::Shutdown, &mut buf);
+        let mut bad = buf.clone();
+        bad[4] = 0xEE;
+        assert_eq!(decode_to_agent(&bad).unwrap_err(), WireError::BadTag(0xEE));
+        // A ToAgent tag is not a valid AgentReply tag and vice versa.
+        assert_eq!(decode_agent_reply(&buf).unwrap_err(), WireError::BadTag(TAG_SHUTDOWN));
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected() {
+        let mut buf = Vec::new();
+        encode_to_agent(&ToAgent::Shutdown, &mut buf);
+        buf.push(0);
+        let plen = (buf.len() - 4) as u32;
+        buf[0..4].copy_from_slice(&plen.to_le_bytes());
+        assert_eq!(decode_to_agent(&buf).unwrap_err(), WireError::Trailing);
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected() {
+        let mut buf = vec![0u8; 8];
+        buf[0..4].copy_from_slice(&(u32::MAX).to_le_bytes());
+        assert_eq!(decode_to_agent(&buf).unwrap_err(), WireError::Frame);
+    }
+
+    #[test]
+    fn random_bytes_never_panic() {
+        // Deterministic xorshift fuzz: whatever the bytes, decode must
+        // return (Ok or Err), never panic or overflow.
+        let mut state = 0x9E3779B97F4A7C15u64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        for case in 0..2_000 {
+            let len = (next() % 64) as usize;
+            let mut frame = vec![0u8; len];
+            for b in frame.iter_mut() {
+                *b = next() as u8;
+            }
+            // Half the cases get a consistent length prefix so decoding
+            // reaches the payload logic.
+            if case % 2 == 0 && len >= 4 {
+                let plen = (len - 4) as u32;
+                frame[0..4].copy_from_slice(&plen.to_le_bytes());
+            }
+            let _ = decode_to_agent(&frame);
+            let _ = decode_agent_reply(&frame);
+        }
+    }
+}

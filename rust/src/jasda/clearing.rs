@@ -167,8 +167,11 @@ pub struct Accepted<'a> {
 
 /// Cross-window reconciliation predicate (§4.1): true if `v`'s job
 /// already won a temporally overlapping reservation — or an overlapping
-/// work range — earlier in this round.
-fn conflicts_with_accepted(accepted: &[(JobId, Interval, f64, f64)], v: &Variant) -> bool {
+/// work range `(w0, w1)` — earlier in this round. Public because the
+/// coordinator's cross-*shard* reconciler applies the identical rule
+/// between leader shards — one predicate, so the two layers can never
+/// disagree on what a conflict is.
+pub fn conflicts_with_accepted(accepted: &[(JobId, Interval, f64, f64)], v: &Variant) -> bool {
     accepted.iter().any(|&(job, iv, w0, w1)| {
         job == v.job
             && (iv.overlaps(&v.interval)

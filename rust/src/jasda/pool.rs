@@ -105,15 +105,21 @@ impl WorkerPool {
         WorkerPool { budget, tx: Some(tx), workers }
     }
 
-    /// Resolve a `jasda.parallel` config value (0 = autodetect) and build
-    /// the pool.
-    pub fn from_config(parallel: usize) -> Self {
-        let budget = if parallel > 0 {
+    /// Resolve a `jasda.parallel` config value (0 = autodetect) to a
+    /// concrete worker budget, without building a pool. The sharded
+    /// coordinator splits this total across its per-shard pools.
+    pub fn resolve_budget(parallel: usize) -> usize {
+        if parallel > 0 {
             parallel
         } else {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        };
-        Self::new(budget)
+        }
+    }
+
+    /// Resolve a `jasda.parallel` config value (0 = autodetect) and build
+    /// the pool.
+    pub fn from_config(parallel: usize) -> Self {
+        Self::new(Self::resolve_budget(parallel))
     }
 
     /// The pool's concurrency budget (what the scoped-thread paths called

@@ -33,6 +33,14 @@ pub fn announce_target(cfg: &JasdaConfig, candidates: &[Window]) -> usize {
     }
 }
 
+/// Which leader shard owns a slice: slices are striped round-robin
+/// (`slice % shards`), so every stock layout spreads its slice mix
+/// across shards instead of handing one shard all the big slices.
+/// `shards <= 1` maps everything to shard 0 (the single leader).
+pub fn shard_of(slice: SliceId, shards: usize) -> usize {
+    (slice as usize) % shards.max(1)
+}
+
 /// The round's effective window policy, applying the rolling-repack
 /// redirect (§3.5): the paper triggers a defragmentation step "when
 /// residual gaps become too small for further allocation". We count
@@ -43,9 +51,29 @@ pub fn announce_target(cfg: &JasdaConfig, candidates: &[Window]) -> usize {
 /// Returns the policy and whether the redirect fired — shared by the
 /// scheduler and the coordinator leader for decision parity.
 pub fn round_policy(cfg: &JasdaConfig, cluster: &Cluster, now: Time) -> (WindowPolicy, bool) {
+    shard_round_policy(cfg, cluster, now, 0, 1)
+}
+
+/// [`round_policy`] restricted to the slices one leader shard owns
+/// ([`shard_of`]): the repack redirect counts unusable residues over the
+/// shard's own slices only, so one fragmented shard redirects its own
+/// announcements without dragging its siblings along. With `shards == 1`
+/// this is exactly the global [`round_policy`].
+pub fn shard_round_policy(
+    cfg: &JasdaConfig,
+    cluster: &Cluster,
+    now: Time,
+    shard: usize,
+    shards: usize,
+) -> (WindowPolicy, bool) {
     if cfg.repack {
         let to = now.saturating_add(cfg.announce_horizon);
-        let unusable = cluster.count_unusable_residues(now, to, cfg.tau_min);
+        let unusable: usize = cluster
+            .slices()
+            .iter()
+            .filter(|s| shard_of(s.id, shards) == shard)
+            .map(|s| s.timeline.count_unusable_residues(now, to, cfg.tau_min))
+            .sum();
         if unusable >= 3 {
             return (WindowPolicy::FragmentationAware, true);
         }

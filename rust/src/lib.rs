@@ -19,7 +19,11 @@
 //!   substrate, baseline schedulers, workload generators, metrics, and a
 //!   thread-per-agent bid–response protocol runtime ([`coordinator`])
 //!   driving the same engine through multi-window `Announce`/`Bid`
-//!   rounds — property-tested decision-identical to the in-process loop.
+//!   rounds — behind a pluggable [`coordinator::transport::Transport`]
+//!   (in-process loopback or length-prefixed byte frames) and sharded
+//!   into N leaders with cross-shard reconciliation
+//!   ([`config::JasdaConfig::shards`]) — property-tested
+//!   decision-identical to the in-process loop.
 //!
 //! A top-level `README.md` maps the module layout; `docs/CONFIG.md` is
 //! the configuration reference.

@@ -239,6 +239,24 @@ fn protocol_matches_engine_population() {
 }
 
 #[test]
+fn sharded_framed_protocol_completes_generated_workload() {
+    // End-to-end over the deployment-shaped stack: two leader shards,
+    // every message crossing as wire frames, bandwidth-lean announces.
+    // The same workload the engine and the single-leader protocol
+    // complete must complete here too, with no backpressure drops.
+    let mut c = cfg(41, 15, 0.25);
+    c.jasda.shards = 2;
+    c.jasda.transport = jasda::config::TransportKind::Framed;
+    c.jasda.announce_top = 2;
+    c.jasda.announce_per_slice = true;
+    let jobs = WorkloadGenerator::new(c.workload.clone()).generate(c.seed);
+    let n = jobs.len();
+    let proto = jasda::coordinator::run_protocol(c, jobs, 3_000_000);
+    assert_eq!(proto.completed_jobs, n, "{proto:?}");
+    assert_eq!(proto.sends_dropped, 0, "synchronous rounds must not fill inboxes");
+}
+
+#[test]
 fn burst_arrival_storm_is_absorbed() {
     // Failure injection: all jobs arrive at t=0 (worst-case burst).
     let mut c = cfg(43, 50, 10.0);
