@@ -350,6 +350,59 @@ fn main() {
         }
     }
 
+    // ------------------------------------------------------------------
+    // ISSUE 7: what fault tolerance costs. Arming the round deadline
+    // without faults measures the pure overhead of the deadline-aware
+    // receive path (it should be noise — the deadline arm is never
+    // taken in a healthy run); the fault-storm row shows round latency
+    // under injected adversity, where timed-out rounds wait out the
+    // configured deadline and quarantine/Resync traffic joins the
+    // rounds.
+    // ------------------------------------------------------------------
+    header("fault-tolerant round latency (deadline armed / fault storm)");
+    for (label, timeout_ms, crash) in
+        [("no deadline", 0u64, 0.0f64), ("deadline armed", 1_000, 0.0), ("fault storm", 50, 0.5)]
+    {
+        let mut cfg = common::contended_cfg(81, if smoke { 10 } else { 30 });
+        cfg.jasda.announce_per_slice = true;
+        cfg.jasda.round_timeout_ms = timeout_ms;
+        if crash > 0.0 {
+            cfg.jasda.faults.seed = 81;
+            cfg.jasda.faults.crash = crash;
+            cfg.jasda.faults.delay = 0.3;
+            cfg.jasda.faults.horizon_rounds = 32;
+            cfg.jasda.faults.crash_rounds = 8;
+        }
+        cfg.validate().expect("bench fault config");
+        let jobs = common::workload(&cfg);
+        let proto = jasda::coordinator::run_protocol(cfg, jobs, 3_000_000);
+        println!(
+            "{label:<15}: proto {:>9.0} ns/round (max {:>9} ns)  timed-out {:>3}  \
+             quarantined {:>2}  readmitted {:>2}  wall {:.1?}",
+            proto.decision_ns_per_round(),
+            proto.max_round_decision_ns,
+            proto.rounds_timed_out,
+            proto.agents_quarantined,
+            proto.readmissions,
+            proto.wall,
+        );
+        proto_rows.push(Json::obj(vec![
+            ("announce", "K=slices".into()),
+            ("mode", label.into()),
+            ("round_timeout_ms", timeout_ms.into()),
+            ("fault_crash", crash.into()),
+            ("rounds", proto.rounds.into()),
+            ("rounds_timed_out", proto.rounds_timed_out.into()),
+            ("stragglers", proto.stragglers.into()),
+            ("agents_quarantined", proto.agents_quarantined.into()),
+            ("readmissions", proto.readmissions.into()),
+            ("proto_decision_ns_per_round", proto.decision_ns_per_round().into()),
+            ("proto_max_round_decision_ns", proto.max_round_decision_ns.into()),
+            ("proto_completed", proto.completed_jobs.into()),
+            ("proto_wall_ms", (proto.wall.as_nanos() as f64 / 1e6).into()),
+        ]));
+    }
+
     let out = Json::obj(vec![
         ("schema", "jasda.bench_iteration.v1".into()),
         ("smoke", smoke.into()),

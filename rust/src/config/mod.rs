@@ -261,6 +261,94 @@ impl BetaWeights {
     }
 }
 
+/// Deterministic fault-injection knobs for the protocol runtime
+/// (`jasda.faults.*`). All probabilities default to 0 — faults off, the
+/// protocol bit-identical to the fault-free coordinator. With any
+/// probability > 0 a seeded
+/// [`FaultPlan`](crate::coordinator::faults::FaultPlan) is drawn at
+/// protocol start and applied by a `FaultyTransport` wrapper; the run
+/// then also requires `jasda.round_timeout_ms > 0`, because a crashed
+/// agent's reply never arrives and only the round deadline keeps the
+/// collection loop live (enforced by [`JasdaConfig::validate`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultsConfig {
+    /// Seed of the fault plan (independent of the workload seed, so the
+    /// same trace can be replayed under different adversity).
+    pub seed: u64,
+    /// Per-agent probability of one crash window (unreachable for a
+    /// finite span of rounds). When > 0 at least one crash is forced
+    /// into the plan so a "crash test" can never silently degenerate
+    /// into a fault-free run.
+    pub crash: f64,
+    /// Per-agent probability of one straggler reply (held, delivered
+    /// rounds late, discarded by the round-tag check).
+    pub delay: f64,
+    /// Per-agent probability of one corrupted reply (surfaces to the
+    /// leader as a rejected frame).
+    pub corrupt: f64,
+    /// Per-agent probability of one dropped leader→agent send.
+    pub drop: f64,
+    /// Rounds `[0, horizon_rounds)` fault trigger points are drawn from.
+    pub horizon_rounds: u64,
+    /// Max crash-window length in rounds (crash windows are always
+    /// finite, so re-admission — and thus liveness — stays provable).
+    pub crash_rounds: u64,
+    /// Max straggler delay in rounds.
+    pub delay_rounds: u64,
+}
+
+impl Default for FaultsConfig {
+    fn default() -> Self {
+        FaultsConfig {
+            seed: 0,
+            crash: 0.0,
+            delay: 0.0,
+            corrupt: 0.0,
+            drop: 0.0,
+            horizon_rounds: 64,
+            crash_rounds: 8,
+            delay_rounds: 3,
+        }
+    }
+}
+
+impl FaultsConfig {
+    /// Whether any fault shape can fire (any probability > 0).
+    pub fn enabled(&self) -> bool {
+        self.crash > 0.0 || self.delay > 0.0 || self.corrupt > 0.0 || self.drop > 0.0
+    }
+
+    fn merge_json(&mut self, v: &Json) -> anyhow::Result<()> {
+        for (k, val) in expect_obj(v, "faults")? {
+            match k.as_str() {
+                "seed" => self.seed = need_u64(val, k)?,
+                "crash" => self.crash = need_f64(val, k)?,
+                "delay" => self.delay = need_f64(val, k)?,
+                "corrupt" => self.corrupt = need_f64(val, k)?,
+                "drop" => self.drop = need_f64(val, k)?,
+                "horizon_rounds" => self.horizon_rounds = need_u64(val, k)?,
+                "crash_rounds" => self.crash_rounds = need_u64(val, k)?,
+                "delay_rounds" => self.delay_rounds = need_u64(val, k)?,
+                other => anyhow::bail!("unknown faults key '{other}'"),
+            }
+        }
+        Ok(())
+    }
+
+    fn to_json(self) -> Json {
+        Json::obj(vec![
+            ("seed", self.seed.into()),
+            ("crash", self.crash.into()),
+            ("delay", self.delay.into()),
+            ("corrupt", self.corrupt.into()),
+            ("drop", self.drop.into()),
+            ("horizon_rounds", self.horizon_rounds.into()),
+            ("crash_rounds", self.crash_rounds.into()),
+            ("delay_rounds", self.delay_rounds.into()),
+        ])
+    }
+}
+
 /// All JASDA policy parameters.
 #[derive(Debug, Clone, PartialEq)]
 pub struct JasdaConfig {
@@ -324,6 +412,17 @@ pub struct JasdaConfig {
     /// runtime: in-process typed channels (`loopback`) or length-prefixed
     /// byte frames through the hand-rolled wire codec (`framed`).
     pub transport: TransportKind,
+    /// Per-round bid-collection deadline in wall-clock milliseconds for
+    /// the protocol runtime. `0` (default) = no deadline: the leader
+    /// blocks until every delivered announce is answered, the exact
+    /// pre-deadline behavior (bit-identity preserved). With a deadline,
+    /// a round clears with whatever bids arrived in time; stragglers'
+    /// bids for that round are discarded by the round-tag check and the
+    /// timeout is counted in `ProtocolOutcome::rounds_timed_out`.
+    pub round_timeout_ms: u64,
+    /// Deterministic fault injection (off by default); see
+    /// [`FaultsConfig`].
+    pub faults: FaultsConfig,
     /// Bandwidth-lean announcement: cap each shard's broadcast to the
     /// policy's top-N candidate windows (§5.1(a) bandwidth mitigation).
     /// `0` = no cap (broadcast the full candidate set). A shard whose
@@ -373,6 +472,8 @@ impl Default for JasdaConfig {
             parallel: 0,
             shards: 1,
             transport: TransportKind::Loopback,
+            round_timeout_ms: 0,
+            faults: FaultsConfig::default(),
             announce_top: 0,
             max_variants_per_job: 4,
             fmp_bins: 64,
@@ -419,6 +520,27 @@ impl JasdaConfig {
         if self.shards == 0 {
             anyhow::bail!("shards must be >= 1 (1 = the single-leader coordinator)");
         }
+        for (name, p) in [
+            ("faults.crash", self.faults.crash),
+            ("faults.delay", self.faults.delay),
+            ("faults.corrupt", self.faults.corrupt),
+            ("faults.drop", self.faults.drop),
+        ] {
+            if !(0.0..=1.0).contains(&p) {
+                anyhow::bail!("{name} must be a probability in [0,1], got {p}");
+            }
+        }
+        if self.faults.enabled() {
+            if self.round_timeout_ms == 0 {
+                anyhow::bail!(
+                    "fault injection requires round_timeout_ms > 0: a crashed agent's \
+                     reply never arrives, and only the round deadline keeps collection live"
+                );
+            }
+            if self.faults.horizon_rounds == 0 {
+                anyhow::bail!("faults.horizon_rounds must be > 0 when faults are enabled");
+            }
+        }
         Ok(())
     }
 
@@ -452,6 +574,8 @@ impl JasdaConfig {
                     self.transport = TransportKind::parse(name)
                         .ok_or_else(|| anyhow::anyhow!("unknown transport '{name}'"))?;
                 }
+                "round_timeout_ms" => self.round_timeout_ms = need_u64(val, k)?,
+                "faults" => self.faults.merge_json(val)?,
                 "announce_top" => self.announce_top = need_u64(val, k)? as usize,
                 "max_variants_per_job" => {
                     self.max_variants_per_job = need_u64(val, k)? as usize
@@ -495,6 +619,8 @@ impl JasdaConfig {
             ("parallel", self.parallel.into()),
             ("shards", self.shards.into()),
             ("transport", self.transport.name().into()),
+            ("round_timeout_ms", self.round_timeout_ms.into()),
+            ("faults", self.faults.to_json()),
             ("announce_top", self.announce_top.into()),
             ("max_variants_per_job", self.max_variants_per_job.into()),
             ("fmp_bins", self.fmp_bins.into()),
@@ -771,6 +897,10 @@ mod tests {
         cfg.jasda.shards = 3;
         cfg.jasda.transport = TransportKind::Framed;
         cfg.jasda.announce_top = 2;
+        cfg.jasda.round_timeout_ms = 250;
+        cfg.jasda.faults.seed = 99;
+        cfg.jasda.faults.crash = 0.25;
+        cfg.jasda.faults.delay_rounds = 5;
         cfg.workload.mix = vec![("analytics".into(), 1.0)];
         let text = cfg.to_json().to_string_pretty();
         let back = SimConfig::from_json_str(&text).unwrap();
@@ -793,6 +923,7 @@ mod tests {
         assert!(SimConfig::from_json_str(r#"{"jasda": {"lambada": 0.3}}"#).is_err());
         assert!(SimConfig::from_json_str(r#"{"jasda": {"window_policy": "bogus"}}"#).is_err());
         assert!(SimConfig::from_json_str(r#"{"jasda": {"transport": "tcp"}}"#).is_err());
+        assert!(SimConfig::from_json_str(r#"{"jasda": {"faults": {"crush": 1}}}"#).is_err());
         assert!(SimConfig::from_json_str(r#"{"workload": {"mix": [["a"]]}}"#).is_err());
     }
 
@@ -844,6 +975,20 @@ mod tests {
 
         let mut cfg = SimConfig::default();
         cfg.jasda.gamma = -0.1;
+        assert!(cfg.validate().is_err());
+
+        // Fault injection without a round deadline would wedge collection.
+        let mut cfg = SimConfig::default();
+        cfg.jasda.faults.crash = 0.5;
+        assert!(cfg.validate().is_err());
+        cfg.jasda.round_timeout_ms = 100;
+        cfg.validate().unwrap();
+        cfg.jasda.faults.horizon_rounds = 0;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = SimConfig::default();
+        cfg.jasda.faults.corrupt = 1.5; // not a probability
+        cfg.jasda.round_timeout_ms = 100;
         assert!(cfg.validate().is_err());
     }
 

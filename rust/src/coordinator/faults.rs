@@ -1,0 +1,457 @@
+//! Deterministic fault injection for the protocol runtime.
+//!
+//! Robustness claims need adversity that is *reproducible*: a flaky
+//! sleep-based chaos harness can neither bisect a liveness regression
+//! nor run in CI with a fixed seed grid. This module makes adversity a
+//! pure function of a seed: a [`FaultPlan`] is drawn once from
+//! [`FaultsConfig`](crate::config::FaultsConfig) and then applied
+//! mechanically by a [`FaultyTransport`] wrapped around any inner
+//! [`Transport`] — the leader and agents run unmodified, the message
+//! plane misbehaves on schedule.
+//!
+//! Four fault shapes, mirroring what a real deployment sees:
+//!
+//! - **Crash windows** ([`CrashWindow`]): agent `i` is unreachable for
+//!   rounds `[from, until)` — its sends fail and any replies it produces
+//!   are swallowed. With `after_announce` set, the round-`from` announce
+//!   is still *delivered* and only the reply is lost: the exact
+//!   "agent died after the announce landed" scenario that wedged the
+//!   deadline-less collection loop forever.
+//! - **Delays** ([`DelayFault`]): one reply is held and released `by`
+//!   rounds later, when the round-tag check discards it as stale — the
+//!   straggler path.
+//! - **Corruption**: one reply surfaces as [`Recv::Rejected`] (a frame
+//!   that fails wire decoding), feeding the leader's quarantine streak.
+//! - **Drops**: one leader→agent send is silently lost.
+//!
+//! The wrapper learns the current round by peeking at outgoing
+//! [`ToAgent::Announce`] messages, so a round-indexed plan needs no
+//! extra plumbing through the leader. Because every crash window is
+//! finite, a plan never makes an agent unreachable forever — the
+//! leader's backoff probes eventually land and liveness (every job
+//! completes) stays provable; the property tests in
+//! `tests/properties.rs` assert exactly that over randomized plans.
+
+use super::messages::{AgentReply, ToAgent};
+use super::transport::{Recv, Transport};
+use crate::config::FaultsConfig;
+use crate::sim::Rng;
+use crate::types::JobId;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Agent `agent` is unreachable for rounds `[from, until)`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CrashWindow {
+    /// Crashed agent index.
+    pub agent: usize,
+    /// First unreachable round.
+    pub from: u64,
+    /// First reachable round again (exclusive end; always finite).
+    pub until: u64,
+    /// When set, the round-`from` announce is still delivered and only
+    /// the agent's reply is swallowed — the crash happens *after* the
+    /// announce landed, so the leader is left waiting on a reply that
+    /// never comes (the wedge the round deadline exists for).
+    pub after_announce: bool,
+}
+
+/// One reply from `agent` in round `round` is delivered `by` rounds
+/// late (the round-tag check then discards it as stale).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DelayFault {
+    /// Delayed agent index.
+    pub agent: usize,
+    /// Round whose reply is held.
+    pub round: u64,
+    /// Rounds to hold it for.
+    pub by: u64,
+}
+
+/// A complete, deterministic schedule of adversity for one run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Unreachability windows.
+    pub crashes: Vec<CrashWindow>,
+    /// Straggler replies.
+    pub delays: Vec<DelayFault>,
+    /// One-shot reply corruptions: `(agent, round)` — the agent's reply
+    /// in that round surfaces as [`Recv::Rejected`].
+    pub corrupts: Vec<(usize, u64)>,
+    /// One-shot send drops: `(agent, round)` — one leader→agent send in
+    /// that round is lost.
+    pub drops: Vec<(usize, u64)>,
+}
+
+impl FaultPlan {
+    /// Draw a plan from the config knobs: each agent independently gets
+    /// each fault shape with the configured probability, with rounds
+    /// drawn uniformly from `[0, horizon_rounds)`. When `crash > 0` at
+    /// least one crash is forced so "test with crashes" cannot silently
+    /// degenerate into a fault-free run on an unlucky seed. Same seed +
+    /// same config + same agent count → identical plan.
+    pub fn random(cfg: &FaultsConfig, agents: usize) -> FaultPlan {
+        let mut plan = FaultPlan::default();
+        if agents == 0 || cfg.horizon_rounds == 0 {
+            return plan;
+        }
+        let mut rng = Rng::new(cfg.seed).fork(0xFA017);
+        let horizon = cfg.horizon_rounds;
+        for agent in 0..agents {
+            if cfg.crash > 0.0 && rng.chance(cfg.crash) {
+                plan.crashes.push(Self::rand_crash(&mut rng, agent, horizon, cfg.crash_rounds));
+            }
+            if cfg.delay > 0.0 && rng.chance(cfg.delay) {
+                let by = 1 + rng.below(cfg.delay_rounds.max(1));
+                plan.delays.push(DelayFault { agent, round: rng.below(horizon), by });
+            }
+            if cfg.corrupt > 0.0 && rng.chance(cfg.corrupt) {
+                plan.corrupts.push((agent, rng.below(horizon)));
+            }
+            if cfg.drop > 0.0 && rng.chance(cfg.drop) {
+                plan.drops.push((agent, rng.below(horizon)));
+            }
+        }
+        if cfg.crash > 0.0 && plan.crashes.is_empty() {
+            let agent = rng.index(agents);
+            plan.crashes.push(Self::rand_crash(&mut rng, agent, horizon, cfg.crash_rounds));
+        }
+        plan
+    }
+
+    fn rand_crash(rng: &mut Rng, agent: usize, horizon: u64, crash_rounds: u64) -> CrashWindow {
+        let from = rng.below(horizon);
+        let len = 1 + rng.below(crash_rounds.max(1));
+        CrashWindow { agent, from, until: from + len, after_announce: rng.chance(0.5) }
+    }
+
+    /// Is a leader→`agent` send in `round` eaten by a crash window?
+    /// `announce` marks announce-shaped sends, which an `after_announce`
+    /// crash still lets through in its first round.
+    fn send_crashed(&self, agent: usize, round: u64, announce: bool) -> bool {
+        self.crashes.iter().any(|c| {
+            c.agent == agent
+                && round >= c.from
+                && round < c.until
+                && !(announce && c.after_announce && round == c.from)
+        })
+    }
+
+    /// Is a reply from `agent` tagged `round` swallowed by a crash?
+    fn reply_crashed(&self, agent: usize, round: u64) -> bool {
+        self.crashes.iter().any(|c| c.agent == agent && round >= c.from && round < c.until)
+    }
+
+    fn take_delay(&mut self, agent: usize, round: u64) -> Option<u64> {
+        let i = self.delays.iter().position(|d| d.agent == agent && d.round == round)?;
+        Some(self.delays.swap_remove(i).by)
+    }
+
+    fn take_one_shot(shots: &mut Vec<(usize, u64)>, agent: usize, round: u64) -> bool {
+        match shots.iter().position(|&(a, r)| a == agent && r == round) {
+            Some(i) => {
+                shots.swap_remove(i);
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+/// Counters for the faults a [`FaultyTransport`] actually fired
+/// (a plan entry outside the rounds the run reached never fires).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FaultStats {
+    /// Leader→agent sends eaten by crash windows.
+    pub sends_crashed: u64,
+    /// Leader→agent sends eaten by one-shot drop faults.
+    pub sends_dropped: u64,
+    /// Agent replies swallowed by crash windows.
+    pub replies_swallowed: u64,
+    /// Agent replies held and re-delivered late.
+    pub replies_delayed: u64,
+    /// Agent replies surfaced as rejected frames.
+    pub replies_corrupted: u64,
+}
+
+/// A [`Transport`] wrapper that applies a [`FaultPlan`] to an inner
+/// transport. The leader cannot tell it apart from a genuinely
+/// misbehaving message plane: sends fail, replies vanish, stale replies
+/// straggle in, frames reject — all on the plan's deterministic
+/// schedule.
+pub struct FaultyTransport {
+    inner: Box<dyn Transport>,
+    plan: FaultPlan,
+    /// Job id → agent index, to attribute replies to plan entries.
+    slot: BTreeMap<JobId, usize>,
+    /// Current round, learned from outgoing `Announce` messages.
+    round: u64,
+    /// Delayed replies: `(release_round, reply)`.
+    held: Vec<(u64, AgentReply)>,
+    /// What actually fired.
+    pub stats: FaultStats,
+}
+
+impl FaultyTransport {
+    /// Wrap `inner`, applying `plan`. `slot` maps job ids to agent
+    /// indexes (the same mapping the leader uses).
+    pub fn new(inner: Box<dyn Transport>, plan: FaultPlan, slot: BTreeMap<JobId, usize>) -> Self {
+        FaultyTransport { inner, plan, slot, round: 0, held: Vec::new(), stats: FaultStats::default() }
+    }
+
+    /// Pop a held reply whose release round has arrived, if any.
+    fn release_held(&mut self) -> Option<AgentReply> {
+        let i = self.held.iter().position(|&(release, _)| release <= self.round)?;
+        self.stats.replies_delayed += 1;
+        Some(self.held.swap_remove(i).1)
+    }
+
+    /// Run one inner receive result through the plan. `None` means the
+    /// reply was absorbed (swallowed or held) and the caller should
+    /// receive again.
+    fn filter(&mut self, got: Recv) -> Option<Recv> {
+        let reply = match got {
+            Recv::Msg(reply) => reply,
+            other => return Some(other),
+        };
+        let AgentReply::Bid { job, round, .. } = &reply;
+        let Some(&agent) = self.slot.get(job) else { return Some(Recv::Msg(reply)) };
+        let tagged = *round;
+        if self.plan.reply_crashed(agent, tagged) {
+            self.stats.replies_swallowed += 1;
+            return None;
+        }
+        if let Some(by) = self.plan.take_delay(agent, tagged) {
+            self.held.push((tagged + by, reply));
+            return None;
+        }
+        if FaultPlan::take_one_shot(&mut self.plan.corrupts, agent, tagged) {
+            self.stats.replies_corrupted += 1;
+            return Some(Recv::Rejected { agent });
+        }
+        Some(Recv::Msg(reply))
+    }
+}
+
+impl Transport for FaultyTransport {
+    fn agents(&self) -> usize {
+        self.inner.agents()
+    }
+
+    fn send(&mut self, agent: usize, msg: &ToAgent) -> bool {
+        let announce = if let ToAgent::Announce { round, .. } = msg {
+            self.round = *round;
+            true
+        } else {
+            false
+        };
+        if self.plan.send_crashed(agent, self.round, announce) {
+            self.stats.sends_crashed += 1;
+            return false;
+        }
+        if FaultPlan::take_one_shot(&mut self.plan.drops, agent, self.round) {
+            self.stats.sends_dropped += 1;
+            return false;
+        }
+        self.inner.send(agent, msg)
+    }
+
+    fn recv_deadline(&mut self, deadline: Option<Instant>) -> Recv {
+        loop {
+            if let Some(reply) = self.release_held() {
+                return Recv::Msg(reply);
+            }
+            let got = self.inner.recv_deadline(deadline);
+            if let Some(out) = self.filter(got) {
+                return out;
+            }
+        }
+    }
+
+    fn try_recv(&mut self) -> Recv {
+        loop {
+            if let Some(reply) = self.release_held() {
+                return Recv::Msg(reply);
+            }
+            let got = self.inner.try_recv();
+            if let Some(out) = self.filter(got) {
+                return out;
+            }
+        }
+    }
+
+    fn frames_rejected(&self) -> u64 {
+        self.inner.frames_rejected() + self.stats.replies_corrupted
+    }
+
+    fn shutdown(&mut self) {
+        self.inner.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::VecDeque;
+
+    fn faults_cfg() -> FaultsConfig {
+        FaultsConfig { seed: 42, crash: 0.5, delay: 0.3, corrupt: 0.2, drop: 0.2, ..Default::default() }
+    }
+
+    #[test]
+    fn plans_are_deterministic_in_seed() {
+        let cfg = faults_cfg();
+        let a = FaultPlan::random(&cfg, 8);
+        let b = FaultPlan::random(&cfg, 8);
+        assert_eq!(a, b);
+        let other = FaultsConfig { seed: 43, ..cfg };
+        assert_ne!(FaultPlan::random(&other, 8), a, "different seeds should differ");
+    }
+
+    #[test]
+    fn crash_probability_forces_at_least_one_crash() {
+        // Even a tiny crash probability must yield a crash: scan seeds
+        // until one draws none organically, then check the forcing.
+        let mut cfg = FaultsConfig { crash: 0.01, ..faults_cfg() };
+        for seed in 0..64 {
+            cfg.seed = seed;
+            let plan = FaultPlan::random(&cfg, 4);
+            assert!(!plan.crashes.is_empty(), "seed {seed} produced a crash-free plan");
+            for c in &plan.crashes {
+                assert!(c.until > c.from, "crash windows must be non-empty");
+                assert!(c.agent < 4);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_or_disabled_configs_yield_empty_plans() {
+        assert_eq!(FaultPlan::random(&FaultsConfig::default(), 8), FaultPlan::default());
+        assert_eq!(FaultPlan::random(&faults_cfg(), 0), FaultPlan::default());
+        let no_horizon = FaultsConfig { horizon_rounds: 0, ..faults_cfg() };
+        assert_eq!(FaultPlan::random(&no_horizon, 8), FaultPlan::default());
+    }
+
+    /// Scripted inner transport: records sends, serves queued replies.
+    struct StubTransport {
+        agents: usize,
+        sent: Vec<(usize, ToAgent)>,
+        queue: VecDeque<AgentReply>,
+    }
+
+    impl StubTransport {
+        fn new(agents: usize, queue: Vec<AgentReply>) -> Self {
+            StubTransport { agents, sent: Vec::new(), queue: queue.into() }
+        }
+    }
+
+    impl Transport for StubTransport {
+        fn agents(&self) -> usize {
+            self.agents
+        }
+        fn send(&mut self, agent: usize, msg: &ToAgent) -> bool {
+            self.sent.push((agent, msg.clone()));
+            true
+        }
+        fn recv_deadline(&mut self, _deadline: Option<Instant>) -> Recv {
+            match self.queue.pop_front() {
+                Some(reply) => Recv::Msg(reply),
+                None => Recv::Empty,
+            }
+        }
+        fn try_recv(&mut self) -> Recv {
+            self.recv_deadline(None)
+        }
+        fn shutdown(&mut self) {}
+    }
+
+    fn bid(job: JobId, round: u64) -> AgentReply {
+        AgentReply::Bid { job, round, bids: vec![], done: false }
+    }
+
+    fn announce(round: u64) -> ToAgent {
+        ToAgent::Announce { round, now: 0, windows: std::sync::Arc::new(Vec::new()) }
+    }
+
+    fn slot2() -> BTreeMap<JobId, usize> {
+        [(10, 0), (20, 1)].into_iter().collect()
+    }
+
+    #[test]
+    fn crash_window_eats_sends_and_replies() {
+        let plan = FaultPlan {
+            crashes: vec![CrashWindow { agent: 0, from: 2, until: 4, after_announce: false }],
+            ..FaultPlan::default()
+        };
+        let stub = StubTransport::new(2, vec![bid(10, 2), bid(20, 2)]);
+        let mut t = FaultyTransport::new(Box::new(stub), plan, slot2());
+        assert!(t.send(0, &announce(1)), "round 1: before the window, send delivers");
+        assert!(!t.send(0, &announce(2)), "round 2: inside the window, send fails");
+        assert!(t.send(1, &announce(2)), "other agents unaffected");
+        // Agent 0's reply is swallowed, agent 1's passes through.
+        match t.recv_deadline(None) {
+            Recv::Msg(AgentReply::Bid { job, .. }) => assert_eq!(job, 20),
+            other => panic!("expected agent 1's bid, got {other:?}"),
+        }
+        assert_eq!(t.stats.sends_crashed, 1);
+        assert_eq!(t.stats.replies_swallowed, 1);
+        assert!(t.send(0, &announce(4)), "round 4: window over, send delivers again");
+    }
+
+    #[test]
+    fn after_announce_crash_delivers_announce_but_swallows_reply() {
+        let plan = FaultPlan {
+            crashes: vec![CrashWindow { agent: 0, from: 3, until: 4, after_announce: true }],
+            ..FaultPlan::default()
+        };
+        let stub = StubTransport::new(1, vec![bid(10, 3)]);
+        let mut t = FaultyTransport::new(Box::new(stub), plan, [(10, 0)].into_iter().collect());
+        assert!(t.send(0, &announce(3)), "the round-3 announce itself still lands");
+        assert!(!t.send(0, &ToAgent::Shutdown), "but nothing else that round does");
+        assert!(matches!(t.recv_deadline(None), Recv::Empty), "and the reply is swallowed");
+        assert_eq!(t.stats.replies_swallowed, 1);
+    }
+
+    #[test]
+    fn delayed_reply_released_when_round_advances() {
+        let plan = FaultPlan {
+            delays: vec![DelayFault { agent: 0, round: 1, by: 2 }],
+            ..FaultPlan::default()
+        };
+        let stub = StubTransport::new(1, vec![bid(10, 1)]);
+        let mut t = FaultyTransport::new(Box::new(stub), plan, [(10, 0)].into_iter().collect());
+        let _ = t.send(0, &announce(1));
+        assert!(matches!(t.recv_deadline(None), Recv::Empty), "held in round 1");
+        let _ = t.send(0, &announce(3));
+        match t.recv_deadline(None) {
+            Recv::Msg(AgentReply::Bid { job, round, .. }) => {
+                assert_eq!(job, 10);
+                assert_eq!(round, 1, "the straggler still carries its original round tag");
+            }
+            other => panic!("expected the released straggler, got {other:?}"),
+        }
+        assert_eq!(t.stats.replies_delayed, 1);
+    }
+
+    #[test]
+    fn corrupt_and_drop_fire_exactly_once() {
+        let plan = FaultPlan {
+            corrupts: vec![(0, 1)],
+            drops: vec![(0, 2)],
+            ..FaultPlan::default()
+        };
+        let stub = StubTransport::new(1, vec![bid(10, 1), bid(10, 1)]);
+        let mut t = FaultyTransport::new(Box::new(stub), plan, [(10, 0)].into_iter().collect());
+        assert!(t.send(0, &announce(1)), "round 1 has no send faults");
+        match t.recv_deadline(None) {
+            Recv::Rejected { agent } => assert_eq!(agent, 0),
+            other => panic!("expected one corrupt reply, got {other:?}"),
+        }
+        assert!(matches!(t.recv_deadline(None), Recv::Msg(_)), "second reply passes clean");
+        assert!(!t.send(0, &announce(2)), "the round-2 one-shot drop eats the next send");
+        assert!(t.send(0, &ToAgent::Shutdown), "and only that one");
+        assert_eq!(t.stats.replies_corrupted, 1);
+        assert_eq!(t.stats.sends_dropped, 1);
+        assert_eq!(t.frames_rejected(), 1);
+    }
+}

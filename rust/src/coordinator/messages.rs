@@ -26,6 +26,12 @@
 //!    │              realized_work, at }    │   cursor / completes
 //! ```
 //!
+//! Outside the happy path a fifth message, [`ToAgent::Resync`], carries
+//! the leader's ground-truth work accounting to an agent re-admitted
+//! after quarantine (see the failure-semantics section of the
+//! [coordinator module docs](super)); it flows down only as the
+//! re-admission probe, never during a healthy round.
+//!
 //! Why the announcement carries the whole candidate set rather than
 //! exactly K windows: the leader only *clears* up to K windows per
 //! round, but it cannot know in advance which candidates will draw no
@@ -69,8 +75,35 @@ pub enum ToAgent {
     Awarded(Award),
     /// A previously awarded subjob finished executing.
     Completed(CompletionReport),
+    /// Re-admission probe after quarantine: the leader's ground truth
+    /// for the agent's award/plan state, so a restarted (or long
+    /// partitioned) agent overwrites whatever award and completion
+    /// messages it missed and rejoins consistently.
+    Resync(Resync),
     /// Tear down the agent task.
     Shutdown,
+}
+
+/// Leader ground truth carried by a re-admission probe.
+///
+/// A quarantined agent may have missed any number of `Awarded` and
+/// `Completed` messages; its local `done_work`/`reserved_work` cursors
+/// are stale and its next bids would re-offer work the leader already
+/// holds in flight. The probe replaces both cursors with the leader's
+/// accounting, which is exactly the state the agent's bids must be
+/// consistent with.
+#[derive(Debug, Clone)]
+pub struct Resync {
+    /// Round the probe was sent in (diagnostics; the next `Announce`
+    /// carries the round the agent actually bids into).
+    pub round: u64,
+    /// Current leader time (drives activation, like `Announce`).
+    pub now: Time,
+    /// Work the leader has credited as realized (fired completions).
+    pub done_work: f64,
+    /// Planned work currently awarded and in flight — the agent's
+    /// outstanding awards, from the leader's completion slab.
+    pub outstanding_awards: f64,
 }
 
 /// Award notice (a subset of the agent's last bid).

@@ -86,7 +86,48 @@
 //! never violates a conflict rule the single leader would have caught.
 //! The protocol runtime is a *transport* for the paper's loop, not a
 //! different scheduler.
+//!
+//! # Failure semantics
+//!
+//! With `jasda.round_timeout_ms > 0` the bid-collection phase of every
+//! round runs under a hard wall-clock deadline, so agent failure —
+//! injectable deterministically through [`faults`] — degrades only the
+//! faulty agent, never the round:
+//!
+//! ```text
+//!  round r                                           deadline ──────┐
+//!  leader ──Announce──┬───────────── collect ───────────────────────┤ clear with
+//!                     │                                             │ whatever
+//!  agent A ───────────┴── Bid(r) ──▶ counted                        │ arrived;
+//!  agent B (crashed) ──── ∅          counted as a straggler at the  │ stragglers'
+//!                                    deadline; its Bid(r) arriving  │ late bids
+//!                                    next round is discarded by the │ discarded by
+//!                                    round-tag check                │ the round tag
+//!  agent C ────────────── garbage ─▶ Rejected{C}: counted as C's    │
+//!                                    reply (collection cannot       │
+//!                                    wedge) + fed to C's            │
+//!                                    quarantine streak              ▼
+//! ```
+//!
+//! An agent whose sends fail repeatedly (3 consecutive) or whose frames
+//! keep failing wire decode is **quarantined**: skipped in broadcasts
+//! (no deadline budget wasted on it) and probed with exponential
+//! backoff (2, 4, … up to 64 rounds). A probe that lands carries
+//! [`ToAgent::Resync`] — the leader's ground-truth work accounting — so
+//! a restarted or long-partitioned agent overwrites its stale
+//! `done_work`/`reserved_work` cursors and bids consistently from the
+//! next announce on. Short outages that dodge the quarantine threshold
+//! are healed the same way: an agent that missed any state-bearing
+//! message (`Completed`/`Awarded`) is marked dirty and probed every
+//! round until a `Resync` lands, so a transiently unreachable agent can
+//! never under-bid forever on cursors it failed to hear about.
+//! [`ProtocolOutcome`] counts every step
+//! (`rounds_timed_out`, `stragglers`, `frames_rejected`,
+//! `agents_quarantined`, `readmissions`). With the deadline off
+//! (default) none of this machinery can trigger and the run stays
+//! bit-identical to the pre-deadline coordinator.
 
+pub mod faults;
 pub mod messages;
 pub mod shard;
 pub mod transport;
@@ -102,11 +143,12 @@ use crate::job::{age_factor, Job, JobSet, JobState, Variant};
 use crate::mig::{Cluster, PartitionLayout, Reservation, Window};
 use crate::sim::{Rng, Scheduler, SubjobRecord};
 use crate::types::{Interval, JobId, SliceId, Time};
-use messages::{AgentReply, Award, CompletionReport, ToAgent};
+use faults::{FaultPlan, FaultyTransport};
+use messages::{AgentReply, Award, CompletionReport, Resync, ToAgent};
 use shard::{make_shards, shard_of, ShardReconciler};
 use std::collections::BinaryHeap;
 use std::sync::Arc;
-use transport::{FramedTransport, LoopbackTransport, Transport, DEFAULT_AGENT_QUEUE};
+use transport::{FramedTransport, LoopbackTransport, Recv, Transport, DEFAULT_AGENT_QUEUE};
 
 /// Outcome of a protocol run.
 #[derive(Debug, Clone)]
@@ -142,6 +184,24 @@ pub struct ProtocolOutcome {
     /// Messages dropped by transport backpressure (bounded agent
     /// inboxes) or dead agents.
     pub sends_dropped: u64,
+    /// Rounds whose bid collection hit the `round_timeout_ms` deadline
+    /// and cleared with a partial bid set (0 with the deadline off).
+    pub rounds_timed_out: u64,
+    /// Delivered announcements that had not been answered when their
+    /// round's deadline expired, summed over timed-out rounds.
+    pub stragglers: u64,
+    /// Reply frames that failed wire decoding (each counted as its
+    /// sender's reply so collection cannot wedge on a corrupt frame).
+    pub frames_rejected: u64,
+    /// Agents quarantined after repeated send failures or rejected
+    /// frames (counts entries into quarantine, so an agent that relapses
+    /// after re-admission is counted again).
+    pub agents_quarantined: u64,
+    /// Quarantined agents re-admitted by a delivered Resync probe.
+    pub readmissions: u64,
+    /// Bids naming a job id the leader does not know (counted as
+    /// replies, then skipped).
+    pub unknown_job_bids: u64,
     /// Jobs completed.
     pub completed_jobs: usize,
     /// Total jobs.
@@ -173,6 +233,12 @@ impl ProtocolOutcome {
             windows_suppressed: 0,
             announce_fallbacks: 0,
             sends_dropped: 0,
+            rounds_timed_out: 0,
+            stragglers: 0,
+            frames_rejected: 0,
+            agents_quarantined: 0,
+            readmissions: 0,
+            unknown_job_bids: 0,
             completed_jobs: 0,
             total_jobs,
             final_time: 0,
@@ -299,8 +365,89 @@ where
                     job.completed_at = Some(at);
                 }
             }
+            ToAgent::Resync(Resync { round: _, now, done_work, outstanding_awards }) => {
+                // Re-admission after quarantine: the agent may have
+                // missed any number of awards and completions, so its
+                // cursors are replaced wholesale with the leader's
+                // ground truth. Pending per-round state is stale too.
+                if job.state == JobState::Future && job.arrival <= now {
+                    job.state = JobState::Active;
+                }
+                job.done_work = done_work;
+                job.reserved_work = outstanding_awards;
+                last_bid.clear();
+                plans.clear();
+                if job.remaining_work() <= 1e-6 && job.state == JobState::Active {
+                    job.state = JobState::Completed;
+                    job.completed_at = Some(now);
+                }
+            }
             ToAgent::Shutdown => return,
         }
+    }
+}
+
+/// Consecutive send failures (or rejected frames) before an agent is
+/// quarantined. One transient inbox-full drop should not eject an
+/// agent; three in a row means it is not draining at all.
+const QUARANTINE_AFTER: u32 = 3;
+/// First re-admission probe fires this many rounds after quarantine.
+const PROBE_BACKOFF_START: u64 = 2;
+/// Probe backoff doubles up to this cap (rounds).
+const PROBE_BACKOFF_MAX: u64 = 64;
+
+/// Leader-side failure tracking for one agent. Healthy agents stay at
+/// the default state forever; the struct only changes when sends fail
+/// or frames reject, so the fault-free path is untouched.
+#[derive(Debug, Clone, Copy, Default)]
+struct AgentHealth {
+    /// Consecutive failed sends (reset by any delivered send).
+    send_failures: u32,
+    /// Consecutive rejected reply frames (reset by any decoded reply).
+    rejected_frames: u32,
+    /// Skipped in broadcasts; reachable only through probes.
+    quarantined: bool,
+    /// A state-bearing message (`Completed`/`Awarded`) failed to
+    /// deliver, so the agent's cursors may have diverged from the
+    /// leader's ground truth; it is healed with a `Resync` at the next
+    /// successful contact. (A dropped `Announce` costs only that
+    /// round's bid and does not set this.)
+    dirty: bool,
+    /// Round of the next re-admission probe.
+    next_probe: u64,
+    /// Current probe backoff (rounds).
+    backoff: u64,
+}
+
+impl AgentHealth {
+    /// Record a failed send; returns `true` when this crosses the
+    /// quarantine threshold (caller enters quarantine + counts it).
+    fn on_send_failed(&mut self) -> bool {
+        self.send_failures += 1;
+        !self.quarantined && self.send_failures >= QUARANTINE_AFTER
+    }
+
+    /// Record a rejected frame; same contract as [`Self::on_send_failed`].
+    fn on_frame_rejected(&mut self) -> bool {
+        self.rejected_frames += 1;
+        !self.quarantined && self.rejected_frames >= QUARANTINE_AFTER
+    }
+
+    fn enter_quarantine(&mut self, round: u64) {
+        self.quarantined = true;
+        self.backoff = PROBE_BACKOFF_START;
+        self.next_probe = round + self.backoff;
+    }
+
+    /// A probe failed to deliver: back off exponentially.
+    fn probe_failed(&mut self, round: u64) {
+        self.backoff = (self.backoff * 2).min(PROBE_BACKOFF_MAX);
+        self.next_probe = round + self.backoff;
+    }
+
+    /// A probe delivered: the agent is healthy again.
+    fn readmit(&mut self) {
+        *self = AgentHealth::default();
     }
 }
 
@@ -349,6 +496,9 @@ struct LeaderEnv {
     /// never used as indices.
     slot: std::collections::BTreeMap<JobId, usize>,
     trps: Vec<crate::trp::Trp>,
+    /// Total work per job, fixed at start (for Resync's `done_work`:
+    /// total − remaining is the leader's realized-work ground truth).
+    total_work: Vec<f64>,
     remaining: Vec<f64>,
     last_selected: Vec<Time>,
     seq: Vec<u32>,
@@ -374,6 +524,7 @@ impl LeaderEnv {
             rng: Rng::new(cfg.seed).fork(0xC00D),
             slot,
             trps: jobs.iter().map(|j| j.trp.clone()).collect(),
+            total_work: jobs.iter().map(|j| j.total_work()).collect(),
             remaining: jobs.iter().map(|j| j.total_work()).collect(),
             last_selected: jobs.iter().map(|j| j.arrival).collect(),
             seq: vec![0; jobs.len()],
@@ -502,6 +653,22 @@ impl LeaderEnv {
         self.event_seq += 1;
         self.events.push(std::cmp::Reverse((PendingKey(realized_end, self.event_seq), idx)));
         Some(work)
+    }
+
+    /// Ground truth for a re-admission probe: work realized so far and
+    /// planned work currently in flight (outstanding awards) for the
+    /// job in `slot` — exactly the two cursors an agent's bids must be
+    /// consistent with.
+    fn resync_state(&self, slot: usize) -> (f64, f64) {
+        let done = (self.total_work[slot] - self.remaining[slot]).max(0.0);
+        let outstanding: f64 = self
+            .pending
+            .iter()
+            .flatten()
+            .filter(|p| self.slot[&p.job] == slot)
+            .map(|p| p.planned_work)
+            .sum();
+        (done, outstanding)
     }
 
     /// Drain outstanding completions for final accounting; returns the
@@ -636,6 +803,17 @@ pub fn run_protocol_traced(
             Box::new(FramedTransport::spawn(jobs, &cfg.jasda, DEFAULT_AGENT_QUEUE))
         }
     };
+    // Fault injection wraps whichever transport was configured, so the
+    // leader below runs the identical code path with and without
+    // adversity (config validation guarantees a round deadline exists
+    // whenever faults are on).
+    if cfg.jasda.faults.enabled() {
+        transport = Box::new(FaultyTransport::new(
+            transport,
+            FaultPlan::random(&cfg.jasda.faults, n_jobs),
+            env.slot.clone(),
+        ));
+    }
 
     let mut out = ProtocolOutcome::new(n_jobs);
     let period = cfg.engine.iteration_period;
@@ -649,25 +827,80 @@ pub fn run_protocol_traced(
     let mut shard_cands: Vec<Vec<Window>> = vec![Vec::new(); shards_n];
     let mut shard_ranges: Vec<(usize, usize)> = vec![(0, 0); shards_n];
     let mut dropped: Vec<usize> = Vec::new();
+    // Per-agent failure tracking and the broadcast skip mask it feeds
+    // (all-healthy and never written on the fault-free path).
+    let mut health: Vec<AgentHealth> = vec![AgentHealth::default(); n_jobs];
+    let mut skip: Vec<bool> = vec![false; n_jobs];
 
     for round in 0..max_rounds {
         out.rounds = round + 1;
         // 1. Fire due completions; report to the owning agents.
+        // Quarantined agents get nothing (their Resync probe will carry
+        // the consolidated ground truth instead); a failed send feeds
+        // the owner's quarantine streak.
         let transport_ref = &mut transport;
-        let dropped_ref = &mut out.sends_dropped;
+        let out_ref = &mut out;
+        let health_ref = &mut health;
         env.fire_due(now, &alpha, &mut |f: &Fired| {
+            if health_ref[f.slot].quarantined {
+                out_ref.sends_dropped += 1;
+                return;
+            }
             let report = ToAgent::Completed(CompletionReport {
                 planned_work: f.planned_work,
                 realized_work: f.realized_work,
                 at: f.realized_end,
             });
-            if !transport_ref.send(f.slot, &report) {
-                *dropped_ref += 1;
+            if transport_ref.send(f.slot, &report) {
+                health_ref[f.slot].send_failures = 0;
+            } else {
+                out_ref.sends_dropped += 1;
+                health_ref[f.slot].dirty = true;
+                if health_ref[f.slot].on_send_failed() {
+                    health_ref[f.slot].enter_quarantine(round);
+                    out_ref.agents_quarantined += 1;
+                }
             }
         });
         out.completed_jobs = env.completed_jobs;
         if env.completed_jobs == n_jobs {
             break;
+        }
+
+        // 1b. Resync probes (before candidate enumeration, so
+        // candidate-less rounds cannot starve them). Quarantined agents
+        // are probed on their exponential backoff; dirty agents (a
+        // state-bearing send failed, their cursors may have diverged)
+        // are probed every round until one lands. A delivered probe
+        // carries the leader's ground truth and restores the agent to
+        // full health; a failed one backs off (quarantined) or feeds
+        // the failure streak (dirty).
+        for slot in 0..n_jobs {
+            if env.done[slot] {
+                continue;
+            }
+            let due = if health[slot].quarantined {
+                round >= health[slot].next_probe
+            } else {
+                health[slot].dirty
+            };
+            if !due {
+                continue;
+            }
+            let (done_work, outstanding_awards) = env.resync_state(slot);
+            let msg = ToAgent::Resync(Resync { round, now, done_work, outstanding_awards });
+            if transport.send(slot, &msg) {
+                out.readmissions += u64::from(health[slot].quarantined);
+                health[slot].readmit();
+            } else if health[slot].quarantined {
+                health[slot].probe_failed(round);
+            } else {
+                out.sends_dropped += 1;
+                if health[slot].on_send_failed() {
+                    health[slot].enter_quarantine(round);
+                    out.agents_quarantined += 1;
+                }
+            }
         }
 
         // 2. Enumerate candidate windows, stripe them across shards, and
@@ -734,26 +967,59 @@ pub fn run_protocol_traced(
         out.announcements += 1;
 
         // 3. One broadcast (bounded inboxes: a slow agent's copy is
-        // dropped and the round proceeds without its bids), then collect
-        // one reply per *delivered* announcement.
+        // dropped and the round proceeds without its bids; quarantined
+        // agents are skipped outright), then collect one reply per
+        // *delivered* announcement — under the round deadline when
+        // `round_timeout_ms` is set.
         let windows = Arc::new(combined);
         let announce =
             ToAgent::Announce { round, now, windows: Arc::clone(&windows) };
-        let delivered = transport.broadcast(&announce, &mut dropped);
+        for (slot, s) in skip.iter_mut().enumerate() {
+            *s = health[slot].quarantined;
+        }
+        let delivered = transport.broadcast(&announce, &skip, &mut dropped);
         out.sends_dropped += dropped.len() as u64;
+        // A delivered broadcast resets the owner's failure streak; a
+        // dropped one extends it (only agents that were actually
+        // attempted — skipped ones keep their state untouched).
+        for slot in 0..n_jobs {
+            if !skip[slot] && !dropped.contains(&slot) {
+                health[slot].send_failures = 0;
+            }
+        }
+        for &slot in &dropped {
+            if health[slot].on_send_failed() {
+                health[slot].enter_quarantine(round);
+                out.agents_quarantined += 1;
+            }
+        }
         for b in bids_by_slot.iter_mut() {
             b.clear();
             b.resize(windows.len(), Vec::new());
         }
+        let deadline = if cfg.jasda.round_timeout_ms > 0 {
+            Some(
+                std::time::Instant::now()
+                    + std::time::Duration::from_millis(cfg.jasda.round_timeout_ms),
+            )
+        } else {
+            None
+        };
         let mut replies = 0usize;
         while replies < delivered {
-            match transport.recv() {
-                Some(AgentReply::Bid { job, round: r, bids, done: _ }) => {
-                    let Some(&slot) = env.slot.get(&job) else { continue };
+            match transport.recv_deadline(deadline) {
+                Recv::Msg(AgentReply::Bid { job, round: r, bids, done: _ }) => {
                     if r != round {
+                        // Straggler from a timed-out round: not part of
+                        // this round's accounting at all.
                         continue;
                     }
                     replies += 1;
+                    let Some(&slot) = env.slot.get(&job) else {
+                        out.unknown_job_bids += 1;
+                        continue;
+                    };
+                    health[slot].rejected_frames = 0;
                     let n: usize = bids.iter().map(|b| b.len()).sum();
                     if n > 0 {
                         out.bids += 1;
@@ -763,7 +1029,24 @@ pub fn run_protocol_traced(
                         bids_by_slot[slot] = bids;
                     }
                 }
-                None => break,
+                Recv::Rejected { agent } => {
+                    // An undecodable frame is still its sender's reply
+                    // for this round — collection must not wedge on it —
+                    // and feeds the sender's quarantine streak.
+                    out.frames_rejected += 1;
+                    replies += 1;
+                    if health[agent].on_frame_rejected() {
+                        health[agent].enter_quarantine(round);
+                        out.agents_quarantined += 1;
+                    }
+                }
+                Recv::Empty => {
+                    // Deadline expired: clear with what arrived.
+                    out.rounds_timed_out += 1;
+                    out.stragglers += (delivered - replies) as u64;
+                    break;
+                }
+                Recv::Disconnected => break,
             }
         }
 
@@ -907,8 +1190,16 @@ pub fn run_protocol_traced(
         }
         for (job, variant_ids) in per_job_awards {
             let msg = ToAgent::Awarded(Award { round, variant_ids, now });
-            if !transport.send(env.slot[&job], &msg) {
+            let slot = env.slot[&job];
+            if transport.send(slot, &msg) {
+                health[slot].send_failures = 0;
+            } else {
                 out.sends_dropped += 1;
+                health[slot].dirty = true;
+                if health[slot].on_send_failed() {
+                    health[slot].enter_quarantine(round);
+                    out.agents_quarantined += 1;
+                }
             }
         }
         let decide_ns = t_decide.elapsed().as_nanos() as u64;
@@ -1185,6 +1476,51 @@ mod tests {
             assert_eq!(a, b);
         }
         assert_eq!(p.final_time, f.final_time);
+    }
+
+    #[test]
+    fn generous_round_deadline_changes_no_decision() {
+        // With healthy agents a deadline the agents comfortably beat
+        // must be invisible: same decisions, no timed-out rounds.
+        let mut timed = cfg();
+        timed.jasda.round_timeout_ms = 5_000;
+        let mut tt = Vec::new();
+        let mut tb = Vec::new();
+        let t = run_protocol_traced(timed, jobs(4), 200_000, Some(&mut tt));
+        let b = run_protocol_traced(cfg(), jobs(4), 200_000, Some(&mut tb));
+        assert_eq!(t.completed_jobs, 4, "{t:?}");
+        assert_eq!(t.rounds_timed_out, 0, "healthy agents must beat a 5s deadline: {t:?}");
+        assert_eq!(t.stragglers, 0);
+        assert_eq!(tt, tb, "a generous deadline must not alter decisions");
+    }
+
+    #[test]
+    fn crashed_agents_recover_and_all_jobs_complete() {
+        // Deterministic crash plans (forced non-empty): rounds must
+        // keep terminating under the deadline and every finite crash
+        // must end in recovery — all jobs complete on every seed. The
+        // quarantine/readmission machinery must engage on at least one
+        // of the seeds.
+        let mut quarantined = 0u64;
+        let mut readmitted = 0u64;
+        let mut dropped = 0u64;
+        for seed in 0..4 {
+            let mut c = cfg();
+            c.jasda.round_timeout_ms = 500;
+            c.jasda.faults.crash = 0.6;
+            c.jasda.faults.seed = seed;
+            c.jasda.faults.horizon_rounds = 24;
+            c.jasda.faults.crash_rounds = 10;
+            c.validate().unwrap();
+            let out = run_protocol(c, jobs(4), 200_000);
+            assert_eq!(out.completed_jobs, 4, "seed {seed}: jobs must survive crashes: {out:?}");
+            quarantined += out.agents_quarantined;
+            readmitted += out.readmissions;
+            dropped += out.sends_dropped;
+        }
+        assert!(dropped > 0, "no seed's crash windows ate a send");
+        assert!(quarantined > 0, "no seed engaged quarantine");
+        assert!(readmitted > 0, "no quarantined agent was re-admitted");
     }
 
     #[test]

@@ -21,6 +21,15 @@
 //! property tests assert `shards=1` is decision-identical to the
 //! pre-shard coordinator and `shards=N` never commits a conflict the
 //! single leader would have caught.
+//!
+//! Partial bid sets need no special handling here: under a round
+//! deadline (`jasda.round_timeout_ms`) or agent faults, some agents'
+//! portfolios are simply absent from `bids_by_slot` when the shards
+//! decide, which is indistinguishable from those agents bidding empty —
+//! each shard clears whatever arrived, and the reconciler's predicate
+//! is per-award, so cross-shard conflict-freedom holds for any subset
+//! of bidders (the fault-injection property tests assert this under
+//! randomized crash/straggler plans).
 
 use crate::jasda::clearing::{conflicts_with_accepted, ClearingEngine};
 use crate::jasda::pool::WorkerPool;

@@ -14,6 +14,10 @@
 //!   real bytes — the deployment-shaped path, exercised by the parity
 //!   tests to prove serialization changes no decision.
 //!
+//! A third, [`FaultyTransport`](super::faults::FaultyTransport), wraps
+//! either of these to inject deterministic adversity (crashes, delays,
+//! corruption, drops) for the robustness tests.
+//!
 //! # Backpressure
 //!
 //! Each agent's inbox holds at most [`DEFAULT_AGENT_QUEUE`] messages and
@@ -26,6 +30,27 @@
 //! leader blocks on reply collection each round, bounding in-flight
 //! messages per agent to a small constant), keeping Loopback
 //! bit-identical to the pre-transport coordinator.
+//!
+//! # Deadlines
+//!
+//! Receives are deadline-aware: [`Transport::recv_deadline`] blocks at
+//! most until a caller-chosen instant and reports [`Recv::Empty`] when
+//! the deadline passes, and [`Transport::try_recv`] never blocks at
+//! all. The leader's per-round bid deadline (`jasda.round_timeout_ms`)
+//! is built on exactly this: a round clears with whatever bids arrived
+//! in time, instead of blocking forever on an agent that died after the
+//! announce was delivered. Passing `None` as the deadline restores the
+//! original block-until-reply behavior bit for bit.
+//!
+//! # Decode failures
+//!
+//! A reply frame that fails wire decoding is **not** silently dropped:
+//! the framed transport reports it as [`Recv::Rejected`] with the
+//! sending agent's index and counts it in
+//! [`Transport::frames_rejected`]. The leader counts the reject as that
+//! agent's reply (so collection cannot wedge on a corrupt frame) and
+//! feeds its quarantine streak. The typed loopback transport cannot
+//! produce rejects.
 //!
 //! # Shutdown
 //!
@@ -41,6 +66,7 @@ use crate::config::JasdaConfig;
 use crate::job::Job;
 use std::sync::mpsc;
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 /// Per-agent inbox capacity (messages). One synchronous round keeps at
 /// most a handful of messages in flight per agent (one `Announce`, one
@@ -48,11 +74,30 @@ use std::thread::JoinHandle;
 /// so 64 is an order of magnitude of headroom, not a tuning knob.
 pub const DEFAULT_AGENT_QUEUE: usize = 64;
 
+/// One receive attempt's outcome.
+#[derive(Debug)]
+pub enum Recv {
+    /// A decoded agent reply.
+    Msg(AgentReply),
+    /// A frame arrived but failed wire decoding; `agent` is the sender.
+    /// Produced by the framed transport (and by injected corruption),
+    /// never by the typed loopback path.
+    Rejected {
+        /// Index of the agent whose frame was rejected.
+        agent: usize,
+    },
+    /// Nothing arrived before the deadline ([`Transport::recv_deadline`])
+    /// or nothing was queued ([`Transport::try_recv`]).
+    Empty,
+    /// Every agent endpoint has disconnected.
+    Disconnected,
+}
+
 /// Message plane between one leader and its job agents.
 ///
 /// Sends are non-blocking and fallible (bounded queues — see the module
-/// docs); receive blocks until a reply or disconnect. Implementations
-/// own the agent threads and reclaim them in [`shutdown`](Self::shutdown).
+/// docs); receives are deadline-aware. Implementations own the agent
+/// threads and reclaim them in [`shutdown`](Self::shutdown).
 pub trait Transport {
     /// Number of agents.
     fn agents(&self) -> usize;
@@ -61,12 +106,17 @@ pub trait Transport {
     /// message was dropped (inbox full, or the agent is gone).
     fn send(&mut self, agent: usize, msg: &ToAgent) -> bool;
 
-    /// Deliver `msg` to every agent; returns the number delivered and
-    /// records the agents whose copy was dropped in `dropped`.
-    fn broadcast(&mut self, msg: &ToAgent, dropped: &mut Vec<usize>) -> usize {
+    /// Deliver `msg` to every agent not masked out by `skip` (an empty
+    /// slice skips nobody; the leader passes its quarantine mask);
+    /// returns the number delivered and records the agents whose copy
+    /// was dropped in `dropped`.
+    fn broadcast(&mut self, msg: &ToAgent, skip: &[bool], dropped: &mut Vec<usize>) -> usize {
         dropped.clear();
         let mut delivered = 0;
         for agent in 0..self.agents() {
+            if skip.get(agent).copied().unwrap_or(false) {
+                continue;
+            }
             if self.send(agent, msg) {
                 delivered += 1;
             } else {
@@ -76,9 +126,21 @@ pub trait Transport {
         delivered
     }
 
-    /// Block for the next agent reply; `None` once every agent has
-    /// disconnected.
-    fn recv(&mut self) -> Option<AgentReply>;
+    /// Block for the next agent reply. With `Some(deadline)` give up at
+    /// that instant and return [`Recv::Empty`]; with `None` block until
+    /// a reply or disconnect (the pre-deadline behavior).
+    fn recv_deadline(&mut self, deadline: Option<Instant>) -> Recv;
+
+    /// Non-blocking receive: whatever is queued right now, else
+    /// [`Recv::Empty`].
+    fn try_recv(&mut self) -> Recv;
+
+    /// Reply frames rejected by wire decoding so far. Typed transports
+    /// return 0; the framed transport counts every [`Recv::Rejected`]
+    /// it reported.
+    fn frames_rejected(&self) -> u64 {
+        0
+    }
 
     /// Tear down: close every agent inbox and join the agent threads.
     /// Idempotent.
@@ -111,6 +173,18 @@ impl LoopbackTransport {
         drop(reply_tx);
         LoopbackTransport { to_agents, replies, handles }
     }
+
+    /// Build a transport over externally created endpoints — for test
+    /// harnesses and custom agent implementations. `to_agents[i]` is
+    /// agent `i`'s inbox, `replies` the shared reply stream, `handles`
+    /// the threads to join on shutdown (may be empty).
+    pub fn from_parts(
+        to_agents: Vec<mpsc::SyncSender<ToAgent>>,
+        replies: mpsc::Receiver<AgentReply>,
+        handles: Vec<JoinHandle<()>>,
+    ) -> Self {
+        LoopbackTransport { to_agents, replies, handles }
+    }
 }
 
 impl Transport for LoopbackTransport {
@@ -122,8 +196,29 @@ impl Transport for LoopbackTransport {
         self.to_agents[agent].try_send(msg.clone()).is_ok()
     }
 
-    fn recv(&mut self) -> Option<AgentReply> {
-        self.replies.recv().ok()
+    fn recv_deadline(&mut self, deadline: Option<Instant>) -> Recv {
+        match deadline {
+            None => match self.replies.recv() {
+                Ok(reply) => Recv::Msg(reply),
+                Err(_) => Recv::Disconnected,
+            },
+            Some(d) => {
+                let left = d.saturating_duration_since(Instant::now());
+                match self.replies.recv_timeout(left) {
+                    Ok(reply) => Recv::Msg(reply),
+                    Err(mpsc::RecvTimeoutError::Timeout) => Recv::Empty,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => Recv::Disconnected,
+                }
+            }
+        }
+    }
+
+    fn try_recv(&mut self) -> Recv {
+        match self.replies.try_recv() {
+            Ok(reply) => Recv::Msg(reply),
+            Err(mpsc::TryRecvError::Empty) => Recv::Empty,
+            Err(mpsc::TryRecvError::Disconnected) => Recv::Disconnected,
+        }
     }
 
     fn shutdown(&mut self) {
@@ -141,14 +236,18 @@ impl Transport for LoopbackTransport {
 
 /// Byte-frame transport: every message is encoded by the [`wire`] codec
 /// into a length-prefixed frame on send and decoded on the receiving
-/// side, in both directions. Undecodable frames are dropped by the
-/// receiver (counted as silence), never propagated as panics.
+/// side, in both directions. Reply frames carry the sending agent's
+/// index out of band (in deployment this is the connection identity),
+/// so an undecodable frame is attributed — reported as
+/// [`Recv::Rejected`] and counted — instead of silently lost.
 pub struct FramedTransport {
     to_agents: Vec<mpsc::SyncSender<Vec<u8>>>,
-    replies: mpsc::Receiver<Vec<u8>>,
+    replies: mpsc::Receiver<(usize, Vec<u8>)>,
     handles: Vec<JoinHandle<()>>,
     /// Reused encode buffer (a broadcast encodes once, clones per agent).
     scratch: Vec<u8>,
+    /// Reply frames that failed wire decoding.
+    frames_rejected: u64,
 }
 
 impl FramedTransport {
@@ -156,10 +255,10 @@ impl FramedTransport {
     /// same frames the leader side does.
     pub fn spawn(jobs: Vec<Job>, cfg: &JasdaConfig, queue: usize) -> Self {
         let cap = queue.max(1);
-        let (reply_tx, replies) = mpsc::channel::<Vec<u8>>();
+        let (reply_tx, replies) = mpsc::channel::<(usize, Vec<u8>)>();
         let mut to_agents = Vec::with_capacity(jobs.len());
         let mut handles = Vec::with_capacity(jobs.len());
-        for job in jobs {
+        for (agent, job) in jobs.into_iter().enumerate() {
             let (tx, rx) = mpsc::sync_channel::<Vec<u8>>(cap);
             to_agents.push(tx);
             let jcfg = cfg.clone();
@@ -179,13 +278,34 @@ impl FramedTransport {
                     |reply| {
                         buf.clear();
                         wire::encode_agent_reply(&reply, &mut buf);
-                        rtx.send(buf.clone()).is_ok()
+                        rtx.send((agent, buf.clone())).is_ok()
                     },
                 );
             }));
         }
         drop(reply_tx);
-        FramedTransport { to_agents, replies, handles, scratch: Vec::new() }
+        FramedTransport { to_agents, replies, handles, scratch: Vec::new(), frames_rejected: 0 }
+    }
+
+    /// Build a transport over externally created endpoints — the framed
+    /// counterpart of [`LoopbackTransport::from_parts`]. Reply frames
+    /// are `(agent index, frame bytes)` pairs.
+    pub fn from_parts(
+        to_agents: Vec<mpsc::SyncSender<Vec<u8>>>,
+        replies: mpsc::Receiver<(usize, Vec<u8>)>,
+        handles: Vec<JoinHandle<()>>,
+    ) -> Self {
+        FramedTransport { to_agents, replies, handles, scratch: Vec::new(), frames_rejected: 0 }
+    }
+
+    fn decode_reply(&mut self, agent: usize, frame: &[u8]) -> Recv {
+        match wire::decode_agent_reply(frame) {
+            Ok(reply) => Recv::Msg(reply),
+            Err(_) => {
+                self.frames_rejected += 1;
+                Recv::Rejected { agent }
+            }
+        }
     }
 }
 
@@ -200,12 +320,15 @@ impl Transport for FramedTransport {
         self.to_agents[agent].try_send(self.scratch.clone()).is_ok()
     }
 
-    fn broadcast(&mut self, msg: &ToAgent, dropped: &mut Vec<usize>) -> usize {
+    fn broadcast(&mut self, msg: &ToAgent, skip: &[bool], dropped: &mut Vec<usize>) -> usize {
         dropped.clear();
         self.scratch.clear();
         wire::encode_to_agent(msg, &mut self.scratch);
         let mut delivered = 0;
         for (agent, tx) in self.to_agents.iter().enumerate() {
+            if skip.get(agent).copied().unwrap_or(false) {
+                continue;
+            }
             if tx.try_send(self.scratch.clone()).is_ok() {
                 delivered += 1;
             } else {
@@ -215,13 +338,35 @@ impl Transport for FramedTransport {
         delivered
     }
 
-    fn recv(&mut self) -> Option<AgentReply> {
-        loop {
-            let frame = self.replies.recv().ok()?;
-            if let Ok(reply) = wire::decode_agent_reply(&frame) {
-                return Some(reply);
+    fn recv_deadline(&mut self, deadline: Option<Instant>) -> Recv {
+        let (agent, frame) = match deadline {
+            None => match self.replies.recv() {
+                Ok(got) => got,
+                Err(_) => return Recv::Disconnected,
+            },
+            Some(d) => {
+                let left = d.saturating_duration_since(Instant::now());
+                match self.replies.recv_timeout(left) {
+                    Ok(got) => got,
+                    Err(mpsc::RecvTimeoutError::Timeout) => return Recv::Empty,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => return Recv::Disconnected,
+                }
             }
-        }
+        };
+        self.decode_reply(agent, &frame)
+    }
+
+    fn try_recv(&mut self) -> Recv {
+        let (agent, frame) = match self.replies.try_recv() {
+            Ok(got) => got,
+            Err(mpsc::TryRecvError::Empty) => return Recv::Empty,
+            Err(mpsc::TryRecvError::Disconnected) => return Recv::Disconnected,
+        };
+        self.decode_reply(agent, &frame)
+    }
+
+    fn frames_rejected(&self) -> u64 {
+        self.frames_rejected
     }
 
     fn shutdown(&mut self) {
@@ -241,6 +386,7 @@ impl Transport for FramedTransport {
 mod tests {
     use super::super::messages::CompletionReport;
     use super::*;
+    use std::time::Duration;
 
     fn completed() -> ToAgent {
         ToAgent::Completed(CompletionReport { planned_work: 1.0, realized_work: 1.0, at: 10 })
@@ -253,13 +399,26 @@ mod tests {
         // that agent is affected, the call never blocks.
         let (tx, _rx_keepalive) = mpsc::sync_channel::<ToAgent>(1);
         let (_reply_tx, replies) = mpsc::channel::<AgentReply>();
-        let mut t =
-            LoopbackTransport { to_agents: vec![tx], replies, handles: Vec::new() };
+        let mut t = LoopbackTransport::from_parts(vec![tx], replies, Vec::new());
         assert!(t.send(0, &completed()));
         assert!(!t.send(0, &completed()), "full inbox must drop, not block");
         let mut dropped = Vec::new();
-        assert_eq!(t.broadcast(&completed(), &mut dropped), 0);
+        assert_eq!(t.broadcast(&completed(), &[], &mut dropped), 0);
         assert_eq!(dropped, vec![0]);
+    }
+
+    #[test]
+    fn broadcast_skip_mask_excludes_agents() {
+        let (tx0, _k0) = mpsc::sync_channel::<ToAgent>(4);
+        let (tx1, _k1) = mpsc::sync_channel::<ToAgent>(4);
+        let (_reply_tx, replies) = mpsc::channel::<AgentReply>();
+        let mut t = LoopbackTransport::from_parts(vec![tx0, tx1], replies, Vec::new());
+        let mut dropped = Vec::new();
+        // Skipped agents are neither delivered to nor reported dropped.
+        assert_eq!(t.broadcast(&completed(), &[true, false], &mut dropped), 1);
+        assert!(dropped.is_empty());
+        assert_eq!(_k1.try_recv().ok().map(|_| ()), Some(()));
+        assert!(_k0.try_recv().is_err(), "skipped agent must not receive the broadcast");
     }
 
     #[test]
@@ -267,51 +426,60 @@ mod tests {
         let (tx, rx) = mpsc::sync_channel::<ToAgent>(4);
         drop(rx);
         let (_reply_tx, replies) = mpsc::channel::<AgentReply>();
-        let mut t =
-            LoopbackTransport { to_agents: vec![tx], replies, handles: Vec::new() };
+        let mut t = LoopbackTransport::from_parts(vec![tx], replies, Vec::new());
         assert!(!t.send(0, &completed()));
         t.shutdown();
         t.shutdown(); // idempotent
     }
 
     #[test]
+    fn recv_deadline_times_out_and_delivers_late_nothing() {
+        let (_reply_tx, replies) = mpsc::channel::<AgentReply>();
+        let mut t = LoopbackTransport::from_parts(Vec::new(), replies, Vec::new());
+        let deadline = Instant::now() + Duration::from_millis(5);
+        assert!(matches!(t.recv_deadline(Some(deadline)), Recv::Empty));
+        assert!(Instant::now() >= deadline, "deadline receive must wait out the deadline");
+        assert!(matches!(t.try_recv(), Recv::Empty));
+        drop(_reply_tx);
+        assert!(matches!(t.try_recv(), Recv::Disconnected));
+    }
+
+    #[test]
     fn framed_backpressure_drops_when_queue_full() {
         let (tx, _rx_keepalive) = mpsc::sync_channel::<Vec<u8>>(1);
-        let (_reply_tx, replies) = mpsc::channel::<Vec<u8>>();
-        let mut t = FramedTransport {
-            to_agents: vec![tx],
-            replies,
-            handles: Vec::new(),
-            scratch: Vec::new(),
-        };
+        let (_reply_tx, replies) = mpsc::channel::<(usize, Vec<u8>)>();
+        let mut t = FramedTransport::from_parts(vec![tx], replies, Vec::new());
         assert!(t.send(0, &completed()));
         assert!(!t.send(0, &completed()));
     }
 
     #[test]
-    fn framed_recv_skips_garbage_frames() {
-        let (reply_tx, replies) = mpsc::channel::<Vec<u8>>();
-        let mut t = FramedTransport {
-            to_agents: Vec::new(),
-            replies,
-            handles: Vec::new(),
-            scratch: Vec::new(),
-        };
-        reply_tx.send(vec![0xDE, 0xAD]).unwrap();
+    fn framed_recv_reports_garbage_frames_with_sender() {
+        let (reply_tx, replies) = mpsc::channel::<(usize, Vec<u8>)>();
+        let mut t = FramedTransport::from_parts(Vec::new(), replies, Vec::new());
+        reply_tx.send((7, vec![0xDE, 0xAD])).unwrap();
         let mut good = Vec::new();
         wire::encode_agent_reply(
             &AgentReply::Bid { job: 3, round: 1, bids: vec![], done: false },
             &mut good,
         );
-        reply_tx.send(good).unwrap();
+        reply_tx.send((0, good)).unwrap();
         drop(reply_tx);
-        match t.recv() {
-            Some(AgentReply::Bid { job, round, .. }) => {
+        // The garbage frame is surfaced — attributed to its sender and
+        // counted — not swallowed.
+        match t.recv_deadline(None) {
+            Recv::Rejected { agent } => assert_eq!(agent, 7),
+            other => panic!("garbage frame must be rejected, got {other:?}"),
+        }
+        assert_eq!(t.frames_rejected(), 1);
+        match t.recv_deadline(None) {
+            Recv::Msg(AgentReply::Bid { job, round, .. }) => {
                 assert_eq!(job, 3);
                 assert_eq!(round, 1);
             }
-            None => panic!("good frame after garbage must be delivered"),
+            other => panic!("good frame after garbage must be delivered, got {other:?}"),
         }
-        assert!(t.recv().is_none(), "disconnect after draining");
+        assert!(matches!(t.recv_deadline(None), Recv::Disconnected), "disconnect after draining");
+        assert_eq!(t.frames_rejected(), 1);
     }
 }

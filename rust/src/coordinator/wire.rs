@@ -36,7 +36,7 @@
 //! consumed exactly ([`WireError::Trailing`]). The truncation/garbage
 //! tests below drive every reject path.
 
-use super::messages::{AgentReply, Award, CompletionReport, ToAgent};
+use super::messages::{AgentReply, Award, CompletionReport, Resync, ToAgent};
 use crate::job::variants::{DeclaredFeatures, SysFeatures};
 use crate::job::Variant;
 use crate::mig::Window;
@@ -54,6 +54,7 @@ const TAG_ANNOUNCE: u8 = 1;
 const TAG_AWARDED: u8 = 2;
 const TAG_COMPLETED: u8 = 3;
 const TAG_SHUTDOWN: u8 = 4;
+const TAG_RESYNC: u8 = 5;
 const TAG_BID: u8 = 0x11;
 
 /// Decoding failure. Encoding is infallible.
@@ -264,6 +265,13 @@ pub fn encode_to_agent(msg: &ToAgent, out: &mut Vec<u8>) {
             put_f64(out, c.realized_work);
             put_var(out, c.at);
         }
+        ToAgent::Resync(rs) => {
+            out.push(TAG_RESYNC);
+            put_var(out, rs.round);
+            put_var(out, rs.now);
+            put_f64(out, rs.done_work);
+            put_f64(out, rs.outstanding_awards);
+        }
         ToAgent::Shutdown => out.push(TAG_SHUTDOWN),
     }
     end_frame(out, at);
@@ -297,6 +305,12 @@ pub fn decode_to_agent(frame: &[u8]) -> Result<ToAgent, WireError> {
             planned_work: r.f64()?,
             realized_work: r.f64()?,
             at: r.var()?,
+        }),
+        TAG_RESYNC => ToAgent::Resync(Resync {
+            round: r.var()?,
+            now: r.var()?,
+            done_work: r.f64()?,
+            outstanding_awards: r.f64()?,
         }),
         TAG_SHUTDOWN => ToAgent::Shutdown,
         t => return Err(WireError::BadTag(t)),
@@ -557,6 +571,31 @@ mod tests {
         buf.clear();
         encode_to_agent(&ToAgent::Shutdown, &mut buf);
         assert!(matches!(decode_to_agent(&buf).unwrap(), ToAgent::Shutdown));
+    }
+
+    #[test]
+    fn resync_round_trips_bit_exact() {
+        let mut buf = Vec::new();
+        let rs = Resync {
+            round: 19,
+            now: 4_750,
+            done_work: 123.456789,
+            outstanding_awards: 0.015625,
+        };
+        encode_to_agent(&ToAgent::Resync(rs), &mut buf);
+        match decode_to_agent(&buf).unwrap() {
+            ToAgent::Resync(got) => {
+                assert_eq!(got.round, 19);
+                assert_eq!(got.now, 4_750);
+                assert_eq!(got.done_work.to_bits(), 123.456789f64.to_bits());
+                assert_eq!(got.outstanding_awards.to_bits(), 0.015625f64.to_bits());
+            }
+            other => panic!("wrong message: {other:?}"),
+        }
+        // A truncated Resync fails cleanly like every other message.
+        for cut in 0..buf.len() {
+            assert!(decode_to_agent(&buf[..cut]).is_err(), "cut at {cut} accepted");
+        }
     }
 
     #[test]

@@ -197,6 +197,20 @@ fn cmd_protocol(args: &Args, cfg: SimConfig) -> anyhow::Result<()> {
         out.wall,
         out.decision_ns_per_round(),
     );
+    if out.rounds_timed_out + out.frames_rejected + out.agents_quarantined + out.sends_dropped > 0
+    {
+        println!(
+            "faults: timed_out_rounds={} stragglers={} frames_rejected={} quarantined={} \
+             readmitted={} sends_dropped={} unknown_job_bids={}",
+            out.rounds_timed_out,
+            out.stragglers,
+            out.frames_rejected,
+            out.agents_quarantined,
+            out.readmissions,
+            out.sends_dropped,
+            out.unknown_job_bids,
+        );
+    }
     Ok(())
 }
 

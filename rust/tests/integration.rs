@@ -331,6 +331,140 @@ fn repack_mode_completes_and_reports() {
 }
 
 #[test]
+fn slow_agent_bids_are_dropped_without_blocking_the_round() {
+    // ISSUE 7 satellite: drop-don't-block at the transport boundary.
+    // Two responsive hand-rolled agents plus one stalled agent whose
+    // depth-1 inbox is already full: the announce broadcast drops only
+    // the slow agent's copy, the round's collection sees exactly the
+    // fast agents' bids, and nothing ever blocks.
+    use jasda::coordinator::messages::{AgentReply, CompletionReport, ToAgent};
+    use jasda::coordinator::transport::{LoopbackTransport, Recv, Transport};
+    use std::sync::mpsc;
+    use std::time::{Duration, Instant};
+
+    let (reply_tx, replies) = mpsc::channel::<AgentReply>();
+    let mut to_agents = Vec::new();
+    let mut handles = Vec::new();
+    for agent in 0..2u32 {
+        let (tx, rx) = mpsc::sync_channel::<ToAgent>(4);
+        to_agents.push(tx);
+        let rtx = reply_tx.clone();
+        handles.push(std::thread::spawn(move || {
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    ToAgent::Announce { round, .. } => {
+                        let _ = rtx.send(AgentReply::Bid {
+                            job: agent,
+                            round,
+                            bids: vec![],
+                            done: false,
+                        });
+                    }
+                    ToAgent::Shutdown => break,
+                    _ => {}
+                }
+            }
+        }));
+    }
+    // The slow agent: a depth-1 inbox nobody drains, pre-filled so the
+    // next send must drop rather than block.
+    let (slow_tx, _slow_rx_keepalive) = mpsc::sync_channel::<ToAgent>(1);
+    slow_tx
+        .try_send(ToAgent::Completed(CompletionReport {
+            planned_work: 1.0,
+            realized_work: 1.0,
+            at: 0,
+        }))
+        .unwrap();
+    to_agents.push(slow_tx);
+    drop(reply_tx);
+    let mut t = LoopbackTransport::from_parts(to_agents, replies, handles);
+
+    let announce =
+        ToAgent::Announce { round: 9, now: 0, windows: std::sync::Arc::new(Vec::new()) };
+    let mut dropped = Vec::new();
+    let delivered = t.broadcast(&announce, &[], &mut dropped);
+    assert_eq!(delivered, 2, "both fast agents get the announce");
+    assert_eq!(dropped, vec![2], "only the stalled agent's copy is dropped");
+
+    // Collect exactly `delivered` replies under a deadline: the round
+    // completes with the fast agents' bids and no trace of agent 2.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let mut got = Vec::new();
+    while got.len() < delivered {
+        match t.recv_deadline(Some(deadline)) {
+            Recv::Msg(AgentReply::Bid { job, round, .. }) => {
+                assert_eq!(round, 9);
+                got.push(job);
+            }
+            other => panic!("expected a fast agent's bid, got {other:?}"),
+        }
+    }
+    got.sort_unstable();
+    assert_eq!(got, vec![0, 1], "exactly the fast agents' bids, nobody else's");
+    assert!(matches!(t.try_recv(), Recv::Empty), "no stray replies");
+    t.shutdown();
+}
+
+#[test]
+fn corrupt_reply_frames_surface_and_do_not_wedge_the_protocol() {
+    // ISSUE 7 satellite: a reply frame that fails wire decoding is a
+    // leader-visible event, not a silent loss. With `corrupt = 1.0`
+    // every agent's reply is corrupted exactly once somewhere in the
+    // fault horizon; the run must still complete every job, the rejects
+    // must be counted — and because a reject is *counted as that
+    // agent's reply*, no round waits out its deadline for it.
+    let mut c = cfg(41, 8, 0.25);
+    c.jasda.transport = jasda::config::TransportKind::Framed;
+    c.jasda.round_timeout_ms = 500;
+    c.jasda.faults.seed = 7;
+    c.jasda.faults.corrupt = 1.0;
+    c.jasda.faults.horizon_rounds = 16;
+    c.validate().unwrap();
+    let jobs = WorkloadGenerator::new(c.workload.clone()).generate(c.seed);
+    let n = jobs.len();
+    let proto = jasda::coordinator::run_protocol(c, jobs, 3_000_000);
+    assert_eq!(proto.completed_jobs, n, "{proto:?}");
+    assert!(proto.frames_rejected >= 1, "corrupt frames must be counted: {proto:?}");
+    assert_eq!(
+        proto.rounds_timed_out, 0,
+        "a reject is a counted reply — it must not burn the deadline: {proto:?}"
+    );
+}
+
+#[test]
+fn protocol_survives_randomized_fault_storm_with_counters() {
+    // ISSUE 7 tentpole, end-to-end over a generated workload: crash
+    // windows (including after-announce crashes — the scenario that
+    // wedged the deadline-less loop), stragglers, corruption, and drops
+    // all at once. The run must complete every job — which exercises
+    // deadline expiry, quarantine, backoff probes, and Resync healing —
+    // and the outcome counters must show the storm actually happened.
+    let mut c = cfg(41, 10, 0.25);
+    c.jasda.round_timeout_ms = 400;
+    c.jasda.faults.seed = 11;
+    c.jasda.faults.crash = 0.7;
+    c.jasda.faults.delay = 0.4;
+    c.jasda.faults.corrupt = 0.4;
+    c.jasda.faults.drop = 0.4;
+    c.jasda.faults.horizon_rounds = 32;
+    c.jasda.faults.crash_rounds = 10;
+    c.validate().unwrap();
+    let jobs = WorkloadGenerator::new(c.workload.clone()).generate(c.seed);
+    let n = jobs.len();
+    let proto = jasda::coordinator::run_protocol(c, jobs, 3_000_000);
+    assert_eq!(proto.completed_jobs, n, "fault storm must not lose jobs: {proto:?}");
+    assert!(
+        proto.rounds_timed_out
+            + proto.stragglers
+            + proto.sends_dropped
+            + proto.frames_rejected
+            > 0,
+        "the storm must leave a trace in the counters: {proto:?}"
+    );
+}
+
+#[test]
 fn duration_weighted_clearing_reduces_atomization() {
     let c0 = cfg(61, 40, 0.35);
     let jobs = WorkloadGenerator::new(c0.workload.clone()).generate(c0.seed);

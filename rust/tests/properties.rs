@@ -1191,3 +1191,200 @@ fn prop_wire_codec_round_trips_random_messages() {
         check(wire::decode_to_agent(buf).expect("round trip"));
     }
 }
+
+// ---------------------------------------------------------------------
+// Fault-tolerant negotiation rounds (ISSUE 7): the round deadline is
+// decision-invisible without faults, and under randomized fault plans
+// every round still terminates and stays conflict-free.
+// ---------------------------------------------------------------------
+
+/// Seed grid for the fault-injection sweep. CI's fault-matrix step sets
+/// `JASDA_FAULT_SEEDS` (a whitespace-separated list of u64s) to widen
+/// the grid; the built-in default keeps local runs fast.
+fn fault_seeds() -> Vec<u64> {
+    match std::env::var("JASDA_FAULT_SEEDS") {
+        Ok(s) => {
+            let seeds: Vec<u64> = s
+                .split_whitespace()
+                .map(|t| {
+                    t.parse().unwrap_or_else(|_| panic!("bad JASDA_FAULT_SEEDS token '{t}'"))
+                })
+                .collect();
+            assert!(!seeds.is_empty(), "JASDA_FAULT_SEEDS is set but holds no seeds");
+            seeds
+        }
+        Err(_) => vec![1, 2, 3],
+    }
+}
+
+#[test]
+fn prop_round_deadline_without_faults_is_decision_invisible() {
+    // ISSUE 7 acceptance: configuring `jasda.round_timeout_ms` without
+    // fault injection changes *nothing* — in a healthy run every reply
+    // arrives long before any sane deadline, so the deadline arm is
+    // never taken. For K in {1, 2, per-slice}, shards in {1, 2, 4},
+    // over both transports: the deadline-on trace is bit-identical to
+    // the deadline-off trace, no round times out, no straggler is
+    // discarded — and at shards=1 both match `run_reference` (the
+    // sharded decision paths diverge from the unsharded oracle by
+    // design, so reference parity is a shards=1 claim, exactly as in
+    // `prop_coordinator_decisions_match_scheduler`).
+    let mut rng = Rng::new(0xDEAD71);
+    for case in 0..6 {
+        let (k, per_slice) = [(1usize, false), (2, false), (1, true)][case % 3];
+        let shards = [1usize, 2, 4][case % 3];
+        let mut c = jasda::config::SimConfig::default();
+        c.seed = 17_000 + case as u64;
+        c.cluster.layout = "balanced".into();
+        c.engine.iteration_period = 25;
+        c.jasda.fmp_bins = 16;
+        c.jasda.announce_k = k;
+        c.jasda.announce_per_slice = per_slice;
+        c.jasda.shards = shards;
+        c.jasda.parallel = if case % 2 == 0 { 1 } else { 4 };
+        if case % 2 == 1 {
+            c.jasda.transport = jasda::config::TransportKind::Framed;
+        }
+        let jobs = random_trace(&mut rng, 3 + case % 3);
+
+        let mut base_trace = Vec::new();
+        let base = jasda::coordinator::run_protocol_traced(
+            c.clone(),
+            jobs.clone(),
+            400_000,
+            Some(&mut base_trace),
+        );
+        let mut timed_cfg = c.clone();
+        timed_cfg.jasda.round_timeout_ms = 5_000;
+        timed_cfg.validate().expect("deadline-only config is valid");
+        let mut timed_trace = Vec::new();
+        let timed = jasda::coordinator::run_protocol_traced(
+            timed_cfg,
+            jobs.clone(),
+            400_000,
+            Some(&mut timed_trace),
+        );
+
+        assert_eq!(timed.rounds_timed_out, 0, "case {case}: healthy rounds never time out");
+        assert_eq!(timed.stragglers, 0, "case {case}: no straggler without faults");
+        assert_eq!(timed.agents_quarantined, 0, "case {case}");
+        assert_eq!(timed_trace.len(), base_trace.len(), "case {case}: round count");
+        for (t, b) in timed_trace.iter().zip(&base_trace) {
+            assert_eq!(
+                t, b,
+                "case {case} K={k} ps={per_slice} shards={shards}: round {} decisions \
+                 diverged under a generous deadline",
+                t.round
+            );
+        }
+        assert_eq!(timed.rounds, base.rounds, "case {case}");
+        assert_eq!(timed.awards, base.awards, "case {case}");
+        assert_eq!(timed.windows_announced, base.windows_announced, "case {case}");
+        assert_eq!(timed.final_time, base.final_time, "case {case}");
+
+        if shards == 1 {
+            let mut ref_trace = Vec::new();
+            jasda::coordinator::run_reference_traced(c, jobs, 400_000, Some(&mut ref_trace));
+            assert_eq!(timed_trace.len(), ref_trace.len(), "case {case}: vs reference");
+            for (t, r) in timed_trace.iter().zip(&ref_trace) {
+                assert_eq!(
+                    t, r,
+                    "case {case}: round {} diverged from run_reference with the \
+                     deadline armed",
+                    t.round
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_faulty_rounds_terminate_and_stay_conflict_free() {
+    // ISSUE 7 acceptance: under a randomized `FaultPlan` that crashes a
+    // non-empty subset of agents mid-run (crash > 0 forces at least one
+    // crash window, and `after_announce` windows reproduce the exact
+    // "announce landed, reply never comes" wedge), with delays,
+    // corruptions, and drops layered on top:
+    //   - every round terminates under the deadline — proved by the run
+    //     finishing at all, since a single wedged collection loop would
+    //     hang the whole run;
+    //   - surviving jobs still make progress: every job completes, which
+    //     needs quarantine re-admission and Resync healing to work;
+    //   - no round's award set has same-job interval overlaps or
+    //     same-slice double bookings, across shard counts and both
+    //     transports (partial bid sets must clear like empty bids).
+    let mut rng = Rng::new(0xFA7A1);
+    let mut adversity = 0u64;
+    for (i, &seed) in fault_seeds().iter().enumerate() {
+        for &shards in &[1usize, 2] {
+            let mut c = jasda::config::SimConfig::default();
+            c.seed = 23_000 + seed;
+            c.cluster.layout = "balanced".into();
+            c.engine.iteration_period = 25;
+            c.jasda.fmp_bins = 16;
+            c.jasda.shards = shards;
+            c.jasda.parallel = 2;
+            if (i + shards) % 2 == 0 {
+                c.jasda.transport = jasda::config::TransportKind::Framed;
+            }
+            c.jasda.round_timeout_ms = 400;
+            c.jasda.faults.seed = seed;
+            c.jasda.faults.crash = 0.5;
+            c.jasda.faults.delay = 0.25;
+            c.jasda.faults.corrupt = 0.25;
+            c.jasda.faults.drop = 0.25;
+            c.jasda.faults.horizon_rounds = 24;
+            c.jasda.faults.crash_rounds = 8;
+            c.validate().expect("fault config with deadline is valid");
+            let jobs = random_trace(&mut rng, 4);
+            let n = jobs.len();
+
+            let mut trace = Vec::new();
+            let out = jasda::coordinator::run_protocol_traced(
+                c,
+                jobs,
+                400_000,
+                Some(&mut trace),
+            );
+            assert_eq!(
+                out.completed_jobs, n,
+                "seed {seed} shards={shards}: all jobs must survive the fault plan: {out:?}"
+            );
+            adversity += out.rounds_timed_out
+                + out.stragglers
+                + out.sends_dropped
+                + out.frames_rejected
+                + out.agents_quarantined;
+            for rd in &trace {
+                for (a_i, a) in rd.awards.iter().enumerate() {
+                    for b in rd.awards.iter().skip(a_i + 1) {
+                        if a.job == b.job {
+                            assert!(
+                                !a.interval.overlaps(&b.interval),
+                                "seed {seed} shards={shards} round {}: job {} holds \
+                                 overlapping awards {:?} / {:?} under faults",
+                                rd.round,
+                                a.job,
+                                a.interval,
+                                b.interval
+                            );
+                        }
+                        if a.slice == b.slice {
+                            assert!(
+                                !a.interval.overlaps(&b.interval),
+                                "seed {seed} shards={shards} round {}: slice {} \
+                                 double-booked under faults",
+                                rd.round,
+                                a.slice
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+    // The sweep must actually have been adversarial: a forced crash
+    // window inside the horizon always eats a send or burns a deadline,
+    // so zero observed fault effects means the injection is dead code.
+    assert!(adversity > 0, "fault sweep observed no fault effects at all");
+}
