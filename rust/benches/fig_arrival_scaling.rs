@@ -109,6 +109,90 @@ fn main() {
     }
     println!("\n{}", ktable.to_markdown());
 
+    // Clearing-policy sweep (ISSUE 8): exact global clearing vs the
+    // greedy baseline per K at the contended burst point. Welfare is the
+    // run's summed composite score of accepted variants
+    // (`award_score_sum`); K = 1 must tie exactly (no cross-window
+    // constraints to improve on).
+    println!("\nFigure: cleared welfare, greedy vs exact clearing per K\n");
+    let mut etable = Table::new(
+        "JASDA clearing policy (burst arrivals, budget 50ms)",
+        &[
+            "announce_k",
+            "welfare(greedy)",
+            "welfare(exact)",
+            "uplift%",
+            "util(greedy)",
+            "util(exact)",
+            "exact_rounds",
+            "improved",
+            "nodes",
+        ],
+    );
+    for (label, k, per_slice) in
+        [("1", 1usize, false), ("2", 2, false), ("4", 4, false), ("per-slice", 1, true)]
+    {
+        let mut results: Vec<(f64, f64, u64, u64, u64)> = Vec::new();
+        for clearing in [jasda::config::ClearingMode::Greedy, jasda::config::ClearingMode::Exact]
+        {
+            let mut cfg = common::contended_cfg(47, 60);
+            cfg.workload.arrival_rate_per_sec = 1e6; // burst: worst-case contention
+            cfg.engine.iteration_period = 500;
+            cfg.jasda.announce_k = k;
+            cfg.jasda.announce_per_slice = per_slice;
+            cfg.jasda.clearing = clearing;
+            cfg.jasda.clearing_budget_ms = 50;
+            let jobs = WorkloadGenerator::new(cfg.workload.clone()).generate(cfg.seed);
+            let out = SimEngine::new(
+                cfg.clone(),
+                Box::new(JasdaScheduler::new(cfg.jasda.clone())),
+            )
+            .run(jobs);
+            let g64 = |key: &str| {
+                out.scheduler_stats.get(key).and_then(|v| v.as_u64()).unwrap_or(0)
+            };
+            let welfare = out
+                .scheduler_stats
+                .get("award_score_sum")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0);
+            results.push((
+                welfare,
+                out.metrics.utilization,
+                g64("exact_rounds"),
+                g64("exact_improved"),
+                g64("exact_nodes"),
+            ));
+        }
+        let (gw, gu, ..) = results[0];
+        let (ew, eu, rounds, improved, nodes) = results[1];
+        etable.push_row(vec![
+            label.to_string(),
+            format!("{gw:.3}"),
+            format!("{ew:.3}"),
+            format!("{:+.2}", (ew - gw) / gw.max(1e-9) * 100.0),
+            format!("{gu:.3}"),
+            format!("{eu:.3}"),
+            format!("{rounds}"),
+            format!("{improved}"),
+            format!("{nodes}"),
+        ]);
+        // Per-*round* exact welfare dominates greedy by construction
+        // (property-tested in tests/properties.rs); across a whole run
+        // the trajectories diverge after the first improved round, so
+        // only the K=1 identity is asserted here: a single window has
+        // no cross-window constraints, the solver never runs, and the
+        // two modes must be bit-identical end to end.
+        if label == "1" {
+            assert!(
+                (ew - gw).abs() < 1e-9 && rounds == 0,
+                "K=1 exact must be bit-identical to greedy (welfare {ew} vs {gw}, \
+                 {rounds} exact rounds)"
+            );
+        }
+    }
+    println!("{}", etable.to_markdown());
+
     // Pipeline latency (ISSUE 2): serial vs parallel clearing at the
     // contended burst point, per-slice announcement on a 2-GPU cluster.
     // The parallel pipeline must cut iteration latency while making the

@@ -403,6 +403,51 @@ fn main() {
         ]));
     }
 
+    // ------------------------------------------------------------------
+    // ISSUE 8: exact global clearing — branch-and-bound node counts and
+    // solve latency as the `jasda.clearing_budget_ms` budget tightens.
+    // Budget 0 is the instant-fallback floor (greedy incumbent, zero
+    // search); larger budgets let the solver run until exhaustion or
+    // proof of optimality.
+    // ------------------------------------------------------------------
+    header("exact clearing solve latency vs budget (branch-and-bound)");
+    use jasda::config::ClearingMode;
+    for &budget_ms in if smoke { &[0u64, 5][..] } else { &[0u64, 1, 5, 20][..] } {
+        let mut cfg = common::contended_cfg(81, if smoke { 10 } else { 30 });
+        cfg.jasda.announce_per_slice = true;
+        cfg.jasda.clearing = ClearingMode::Exact;
+        cfg.jasda.clearing_budget_ms = budget_ms;
+        let jobs = common::workload(&cfg);
+        let proto = jasda::coordinator::run_protocol(cfg, jobs, 3_000_000);
+        let exact_ns_per_round =
+            proto.exact_ns as f64 / proto.exact_rounds.max(1) as f64;
+        println!(
+            "budget {budget_ms:>2} ms: proto {:>9.0} ns/round  exact rounds {:>4}  \
+             nodes {:>6}  improved {:>3}  exhausted {:>4}  solve {:>9.0} ns/round",
+            proto.decision_ns_per_round(),
+            proto.exact_rounds,
+            proto.exact_nodes,
+            proto.exact_improved,
+            proto.exact_budget_exhausted,
+            exact_ns_per_round,
+        );
+        proto_rows.push(Json::obj(vec![
+            ("announce", "K=slices".into()),
+            ("mode", "exact".into()),
+            ("clearing_budget_ms", budget_ms.into()),
+            ("rounds", proto.rounds.into()),
+            ("exact_rounds", proto.exact_rounds.into()),
+            ("exact_nodes", proto.exact_nodes.into()),
+            ("exact_improved", proto.exact_improved.into()),
+            ("exact_budget_exhausted", proto.exact_budget_exhausted.into()),
+            ("exact_solve_ns_per_round", exact_ns_per_round.into()),
+            ("proto_decision_ns_per_round", proto.decision_ns_per_round().into()),
+            ("proto_max_round_decision_ns", proto.max_round_decision_ns.into()),
+            ("proto_completed", proto.completed_jobs.into()),
+            ("proto_wall_ms", (proto.wall.as_nanos() as f64 / 1e6).into()),
+        ]));
+    }
+
     let out = Json::obj(vec![
         ("schema", "jasda.bench_iteration.v1".into()),
         ("smoke", smoke.into()),

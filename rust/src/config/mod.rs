@@ -109,6 +109,47 @@ impl TransportKind {
     pub const ALL: [TransportKind; 2] = [TransportKind::Loopback, TransportKind::Framed];
 }
 
+/// How the round's cross-window conflict graph is cleared once the
+/// per-window WIS solutions exist (`jasda.clearing`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClearingMode {
+    /// Sequential reconciliation in announcement order (default): each
+    /// window keeps its WIS optimum after filtering against earlier
+    /// windows' awards. The paper's behavior, and the exact solver's
+    /// incumbent/fallback and test oracle.
+    Greedy,
+    /// Global branch-and-bound over the round's job × window conflict
+    /// graph: greedy solution as incumbent, per-window WIS relaxation as
+    /// upper bound, best-first expansion. Falls back to the greedy
+    /// incumbent when `jasda.clearing_budget_ms` is exhausted, so round
+    /// deadlines are never violated.
+    Exact,
+}
+
+impl Default for ClearingMode {
+    fn default() -> Self {
+        ClearingMode::Greedy
+    }
+}
+
+impl ClearingMode {
+    /// Config-file name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ClearingMode::Greedy => "greedy",
+            ClearingMode::Exact => "exact",
+        }
+    }
+
+    /// Parse from a config-file name.
+    pub fn parse(s: &str) -> Option<ClearingMode> {
+        Self::ALL.iter().copied().find(|m| m.name() == s)
+    }
+
+    /// All clearing modes.
+    pub const ALL: [ClearingMode; 2] = [ClearingMode::Greedy, ClearingMode::Exact];
+}
+
 /// Which backend evaluates the batched scoring pipeline.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ScoringBackend {
@@ -446,6 +487,21 @@ pub struct JasdaConfig {
     /// weighting makes the clearing objective approximate score-weighted
     /// *busy time* instead.
     pub duration_weighted_clearing: bool,
+    /// Cross-window clearing policy: `greedy` reconciles windows
+    /// sequentially in announcement order (the paper's loop, and the
+    /// oracle every property test compares against); `exact` solves the
+    /// round's job × window conflict graph globally by branch-and-bound,
+    /// using the greedy result as incumbent and falling back to it when
+    /// the latency budget runs out. K = 1 rounds have no cross-window
+    /// constraints, so both modes are bit-identical there.
+    pub clearing: ClearingMode,
+    /// Wall-clock budget (ms) for the exact clearing solve per round.
+    /// When exhausted mid-search the engine commits the best solution
+    /// found so far (at worst the greedy incumbent), so `clearing=exact`
+    /// can never stall a round past the PR-7 deadline semantics. `0`
+    /// skips the search entirely — `exact` then is decision-identical to
+    /// `greedy` by construction. Ignored under `clearing=greedy`.
+    pub clearing_budget_ms: u64,
     /// Scoring backend (native mirror vs PJRT artifact).
     pub backend: ScoringBackend,
 }
@@ -479,6 +535,8 @@ impl Default for JasdaConfig {
             fmp_bins: 64,
             repack: false,
             duration_weighted_clearing: false,
+            clearing: ClearingMode::Greedy,
+            clearing_budget_ms: 10,
             backend: ScoringBackend::Native,
         }
     }
@@ -585,6 +643,12 @@ impl JasdaConfig {
                 "duration_weighted_clearing" => {
                     self.duration_weighted_clearing = need_bool(val, k)?
                 }
+                "clearing" => {
+                    let name = need_str(val, k)?;
+                    self.clearing = ClearingMode::parse(name)
+                        .ok_or_else(|| anyhow::anyhow!("unknown clearing mode '{name}'"))?;
+                }
+                "clearing_budget_ms" => self.clearing_budget_ms = need_u64(val, k)?,
                 "backend" => {
                     self.backend = match need_str(val, k)? {
                         "native" => ScoringBackend::Native,
@@ -626,6 +690,8 @@ impl JasdaConfig {
             ("fmp_bins", self.fmp_bins.into()),
             ("repack", self.repack.into()),
             ("duration_weighted_clearing", self.duration_weighted_clearing.into()),
+            ("clearing", self.clearing.name().into()),
+            ("clearing_budget_ms", self.clearing_budget_ms.into()),
             (
                 "backend",
                 match self.backend {
@@ -898,6 +964,8 @@ mod tests {
         cfg.jasda.transport = TransportKind::Framed;
         cfg.jasda.announce_top = 2;
         cfg.jasda.round_timeout_ms = 250;
+        cfg.jasda.clearing = ClearingMode::Exact;
+        cfg.jasda.clearing_budget_ms = 25;
         cfg.jasda.faults.seed = 99;
         cfg.jasda.faults.crash = 0.25;
         cfg.jasda.faults.delay_rounds = 5;
@@ -923,6 +991,7 @@ mod tests {
         assert!(SimConfig::from_json_str(r#"{"jasda": {"lambada": 0.3}}"#).is_err());
         assert!(SimConfig::from_json_str(r#"{"jasda": {"window_policy": "bogus"}}"#).is_err());
         assert!(SimConfig::from_json_str(r#"{"jasda": {"transport": "tcp"}}"#).is_err());
+        assert!(SimConfig::from_json_str(r#"{"jasda": {"clearing": "simplex"}}"#).is_err());
         assert!(SimConfig::from_json_str(r#"{"jasda": {"faults": {"crush": 1}}}"#).is_err());
         assert!(SimConfig::from_json_str(r#"{"workload": {"mix": [["a"]]}}"#).is_err());
     }
@@ -941,6 +1010,15 @@ mod tests {
             assert_eq!(TransportKind::parse(t.name()), Some(t));
         }
         assert_eq!(TransportKind::parse("zzz"), None);
+    }
+
+    #[test]
+    fn clearing_mode_name_round_trip() {
+        for m in ClearingMode::ALL {
+            assert_eq!(ClearingMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(ClearingMode::parse("lp"), None);
+        assert_eq!(ClearingMode::default(), ClearingMode::Greedy);
     }
 
     #[test]

@@ -202,6 +202,22 @@ pub struct ProtocolOutcome {
     /// Bids naming a job id the leader does not know (counted as
     /// replies, then skipped).
     pub unknown_job_bids: u64,
+    /// Shard-rounds in which the exact global clearing solver ran
+    /// (`jasda.clearing = "exact"` with more than one announced window;
+    /// 0 under `clearing=greedy`).
+    pub exact_rounds: u64,
+    /// Branch-and-bound nodes evaluated by the exact solver, summed over
+    /// shard-rounds.
+    pub exact_nodes: u64,
+    /// Exact solves cut short by the `jasda.clearing_budget_ms` budget
+    /// (each fell back to the best feasible solution found so far, at
+    /// worst the greedy incumbent).
+    pub exact_budget_exhausted: u64,
+    /// Shard-rounds where the exact solution strictly improved on the
+    /// greedy incumbent's welfare.
+    pub exact_improved: u64,
+    /// Wall time spent in the exact solver, summed over shard-rounds.
+    pub exact_ns: u64,
     /// Jobs completed.
     pub completed_jobs: usize,
     /// Total jobs.
@@ -239,6 +255,11 @@ impl ProtocolOutcome {
             agents_quarantined: 0,
             readmissions: 0,
             unknown_job_bids: 0,
+            exact_rounds: 0,
+            exact_nodes: 0,
+            exact_budget_exhausted: 0,
+            exact_improved: 0,
+            exact_ns: 0,
             completed_jobs: 0,
             total_jobs,
             final_time: 0,
@@ -1147,6 +1168,11 @@ pub fn run_protocol_traced(
                     &mut on_accept,
                 );
                 out.cross_window_conflicts += cstats.cross_window_conflicts;
+                out.exact_rounds += cstats.exact_rounds;
+                out.exact_nodes += cstats.exact_nodes;
+                out.exact_budget_exhausted += cstats.exact_budget_exhausted;
+                out.exact_improved += cstats.exact_improved;
+                out.exact_ns += cstats.exact_ns;
             }
             for &row in &accepted_rows[n_before..] {
                 reconciler.commit(&pool[row]);

@@ -30,14 +30,21 @@
 //! is per-award, so cross-shard conflict-freedom holds for any subset
 //! of bidders (the fault-injection property tests assert this under
 //! randomized crash/straggler plans).
+//!
+//! Clearing policy composes the same way: under `jasda.clearing =
+//! "exact"` each shard's engine emits exactly one final solution (the
+//! branch-and-bound result, or its greedy incumbent on budget
+//! exhaustion) through `on_accept`, and those are the only awards the
+//! leader commits here — so the cross-shard record always reflects the
+//! same global decision the shard made, never a provisional greedy pass
+//! the solver later replaced.
 
-use crate::jasda::clearing::{conflicts_with_accepted, ClearingEngine};
+use crate::jasda::clearing::{conflicts_with_accepted, variant_key, AwardKey, ClearingEngine};
 use crate::jasda::pool::WorkerPool;
 use crate::jasda::scoring::NativeScorer;
 pub use crate::jasda::window::shard_of;
 use crate::jasda::window::WindowSelector;
 use crate::job::Variant;
-use crate::types::{Interval, JobId};
 
 /// One leader shard's private decision state.
 pub(super) struct LeaderShard {
@@ -78,7 +85,7 @@ pub(super) fn make_shards(shards: usize, parallel: usize) -> Vec<LeaderShard> {
 /// promoted to shard scope.
 #[derive(Debug, Default)]
 pub struct ShardReconciler {
-    accepted: Vec<(JobId, Interval, f64, f64)>,
+    accepted: Vec<AwardKey>,
 }
 
 impl ShardReconciler {
@@ -100,7 +107,7 @@ impl ShardReconciler {
 
     /// Record an accepted variant so later shards filter against it.
     pub fn commit(&mut self, v: &Variant) {
-        self.accepted.push((v.job, v.interval, v.work_offset, v.work_offset + v.work));
+        self.accepted.push(variant_key(v));
     }
 
     /// Awards recorded this round.
@@ -119,6 +126,7 @@ mod tests {
     use super::*;
     use crate::job::variants::{DeclaredFeatures, SysFeatures};
     use crate::trp::Fmp;
+    use crate::types::Interval;
     use std::sync::Arc;
 
     fn v(job: u32, start: u64, end: u64, work_offset: f64, work: f64) -> Variant {

@@ -25,8 +25,46 @@
 //!   same inputs, so "coordinator round" and "scheduler iteration" are
 //!   decision-identical by construction (property-tested in
 //!   `tests/properties.rs`).
+//!
+//! # Exact global clearing (`jasda.clearing = "exact"`)
+//!
+//! The reconciliation merge above is *greedy in announcement order*: a
+//! job that wins an early window is filtered out of later overlapping
+//! ones, which can leave welfare on the table as K grows. Under
+//! `jasda.clearing = "exact"` the engine additionally solves the round's
+//! job × window conflict graph *globally* with an in-tree, LP-free
+//! branch-and-bound:
+//!
+//! * **Incumbent (lower bound)** — the greedy reconciliation result.
+//!   It is always feasible, so the exact round can never award less
+//!   welfare than greedy, and ties keep greedy's decisions verbatim.
+//! * **Relaxation (upper bound)** — drop the cross-window constraints:
+//!   each window's WIS over its non-excluded items is per-window
+//!   optimal, so the sum of per-window WIS totals bounds every feasible
+//!   completion of a node. The speculative per-window solutions the
+//!   engine already computes are exactly the root node's columns.
+//! * **Branching** — a node whose relaxed solution violates a
+//!   cross-window rule on the pair (a, b) spawns two children, one
+//!   excluding a and one excluding b; no feasible solution contains
+//!   both, so the union of the children covers the node's feasible set.
+//! * **Search** — best-first by bound (deterministic `(bound, seq)`
+//!   ordering) in fixed-size waves whose children are evaluated on the
+//!   [`WorkerPool`]; the wave size never depends on the pool budget, so
+//!   the search trajectory is bit-identical at every `jasda.parallel`
+//!   setting.
+//!
+//! The search runs under the `jasda.clearing_budget_ms` wall-clock
+//! budget: when it expires (or the node cap trips) the engine commits
+//! the best feasible solution found so far — at worst the greedy
+//! incumbent — so the round-deadline semantics of the protocol runtime
+//! are never violated. A zero budget, and any K = 1 round (a single
+//! window has no cross-window constraints), skip the search entirely
+//! and are decision-identical to `greedy` by construction. Whatever
+//! mode wins, the engine emits exactly one final solution through
+//! `on_accept`, so downstream layers (commitments, the cross-shard
+//! reconciler) always consume the same global decision.
 
-use crate::config::JasdaConfig;
+use crate::config::{ClearingMode, JasdaConfig};
 use crate::jasda::pool::{workers_for, WorkerPool};
 use crate::jasda::scoring::{ScoreBatch, ScoreOutput, ScorerBackend};
 use crate::job::Variant;
@@ -149,6 +187,20 @@ pub struct ClearStats {
     pub scoring_ns: u64,
     /// Wall time of the WIS + reconciliation pass.
     pub clearing_ns: u64,
+    /// Rounds in which the exact global solver was consulted (0 or 1
+    /// per `clear` call; K = 1 rounds never consult it).
+    pub exact_rounds: u64,
+    /// Branch-and-bound nodes evaluated by the exact solver.
+    pub exact_nodes: u64,
+    /// Rounds whose exact search was cut short by
+    /// `jasda.clearing_budget_ms` (or the node cap) and fell back to
+    /// the best feasible solution found so far.
+    pub exact_budget_exhausted: u64,
+    /// Rounds where the exact solution strictly improved on the greedy
+    /// incumbent's welfare.
+    pub exact_improved: u64,
+    /// Wall time of the exact solve (0 under `clearing=greedy`).
+    pub exact_ns: u64,
 }
 
 /// One accepted variant, handed to the caller's `on_accept` sink in
@@ -165,18 +217,35 @@ pub struct Accepted<'a> {
     pub window: &'a Window,
 }
 
+/// Conflict key of one (potential) award: `(job, interval, work range)`
+/// — the tuple both reconciliation layers and the exact solver compare.
+pub type AwardKey = (JobId, Interval, f64, f64);
+
+/// The one cross-window conflict rule (§4.1), on award keys: same job
+/// AND (temporal overlap OR work-range overlap). Every layer — the
+/// engine's greedy merge, the exact solver's feasibility scan, and the
+/// cross-shard reconciler via [`conflicts_with_accepted`] — routes
+/// through this predicate, so they can never disagree.
+#[inline]
+pub fn keys_conflict(a: &AwardKey, b: &AwardKey) -> bool {
+    a.0 == b.0 && (a.1.overlaps(&b.1) || (b.2 < a.3 - 1e-9 && a.2 < b.3 - 1e-9))
+}
+
+/// Conflict key of a variant.
+#[inline]
+pub fn variant_key(v: &Variant) -> AwardKey {
+    (v.job, v.interval, v.work_offset, v.work_offset + v.work)
+}
+
 /// Cross-window reconciliation predicate (§4.1): true if `v`'s job
 /// already won a temporally overlapping reservation — or an overlapping
 /// work range `(w0, w1)` — earlier in this round. Public because the
 /// coordinator's cross-*shard* reconciler applies the identical rule
 /// between leader shards — one predicate, so the two layers can never
 /// disagree on what a conflict is.
-pub fn conflicts_with_accepted(accepted: &[(JobId, Interval, f64, f64)], v: &Variant) -> bool {
-    accepted.iter().any(|&(job, iv, w0, w1)| {
-        job == v.job
-            && (iv.overlaps(&v.interval)
-                || (v.work_offset < w1 - 1e-9 && w0 < v.work_offset + v.work - 1e-9))
-    })
+pub fn conflicts_with_accepted(accepted: &[AwardKey], v: &Variant) -> bool {
+    let key = variant_key(v);
+    accepted.iter().any(|a| keys_conflict(a, &key))
 }
 
 /// The shared K-window clearing core (steps 4a–4b of Algorithm 1,
@@ -195,10 +264,21 @@ pub struct ClearingEngine {
     /// Speculative per-window WIS solutions.
     solutions: Vec<WisSolution>,
     /// Accepted (job, interval, work range) tuples for reconciliation.
-    accepted: Vec<(JobId, Interval, f64, f64)>,
+    accepted: Vec<AwardKey>,
     /// Filtered WIS input for conflict replays.
     replay_items: Vec<WisItem>,
     replay_rows: Vec<usize>,
+    /// Per-replay-item index back into the window's unfiltered item
+    /// list, so the exact solver and the emission pass share one item
+    /// coordinate space.
+    replay_idx: Vec<usize>,
+    /// The round's chosen solution as (window, item-in-window) picks.
+    /// Populated by the greedy merge, possibly replaced by the exact
+    /// solver, and emitted through `on_accept` exactly once at the end
+    /// of `clear` — the single emission site is what makes it
+    /// impossible for the exact path to double-commit a variant the
+    /// greedy pass already accepted in the same round.
+    pending: Vec<(usize, usize)>,
 }
 
 impl ClearingEngine {
@@ -360,11 +440,20 @@ impl ClearingEngine {
             });
         }
 
-        // Sequential reconciliation merge in announcement order.
+        // Sequential greedy reconciliation merge in announcement order.
+        // Under `clearing=greedy` this IS the round's decision; under
+        // `clearing=exact` it is the incumbent the branch-and-bound must
+        // strictly beat. Either way nothing is emitted from inside the
+        // merge: picks land in `self.pending` and a single emission pass
+        // at the end commits exactly one final solution (emitting from
+        // the two reconciliation branches directly, as this loop once
+        // did, would let a second global pass double-commit awards the
+        // greedy pass had already handed out).
         self.accepted.clear();
+        self.pending.clear();
+        let mut greedy_welfare = 0.0f64;
         let mut fallback = WisSolution { selected: vec![], total_score: 0.0 };
         for widx in 0..n_windows {
-            let window = &windows[widx];
             let mut n_conflicts = 0u64;
             if !self.accepted.is_empty() {
                 for &i in &self.item_rows[widx] {
@@ -381,28 +470,18 @@ impl ClearingEngine {
                 }
                 let sol = if speculate { &self.solutions[widx] } else { &fallback };
                 stats.variants_eligible += self.items[widx].len() as u64;
+                greedy_welfare += sol.total_score;
                 for &sel in &sol.selected {
                     let i = self.item_rows[widx][sel];
-                    let v = &pool[i];
-                    self.accepted.push((
-                        v.job,
-                        v.interval,
-                        v.work_offset,
-                        v.work_offset + v.work,
-                    ));
-                    stats.variants_selected += 1;
-                    on_accept(Accepted {
-                        row: i,
-                        variant: v,
-                        score: self.scored.score[i] as f64,
-                        window,
-                    });
+                    self.accepted.push(variant_key(&pool[i]));
+                    self.pending.push((widx, sel));
                 }
             } else {
                 // Replay on the filtered pool — the sequential path.
                 stats.wis_replays += 1;
                 self.replay_items.clear();
                 self.replay_rows.clear();
+                self.replay_idx.clear();
                 for k in 0..self.item_rows[widx].len() {
                     let i = self.item_rows[widx][k];
                     if conflicts_with_accepted(&self.accepted, &pool[i]) {
@@ -410,31 +489,323 @@ impl ClearingEngine {
                     }
                     self.replay_items.push(self.items[widx][k]);
                     self.replay_rows.push(i);
+                    self.replay_idx.push(k);
                 }
                 stats.variants_eligible += self.replay_items.len() as u64;
                 let sol = select_best_compatible(&self.replay_items);
+                greedy_welfare += sol.total_score;
                 for &k in &sol.selected {
                     let i = self.replay_rows[k];
-                    let v = &pool[i];
-                    self.accepted.push((
-                        v.job,
-                        v.interval,
-                        v.work_offset,
-                        v.work_offset + v.work,
-                    ));
-                    stats.variants_selected += 1;
-                    on_accept(Accepted {
-                        row: i,
-                        variant: v,
-                        score: self.scored.score[i] as f64,
-                        window,
-                    });
+                    self.accepted.push(variant_key(&pool[i]));
+                    self.pending.push((widx, self.replay_idx[k]));
                 }
             }
+        }
+
+        // Exact global pass: branch-and-bound over the same per-window
+        // item space, with the greedy result as incumbent. K = 1 has no
+        // cross-window constraints (the single window's WIS is already
+        // optimal) and a zero budget never starts the search — both are
+        // decision-identical to greedy by construction.
+        if cfg.clearing == ClearingMode::Exact && n_windows >= 2 {
+            stats.exact_rounds = 1;
+            let t2 = std::time::Instant::now();
+            if cfg.clearing_budget_ms == 0 {
+                stats.exact_budget_exhausted = 1;
+            } else {
+                let root_sols: Vec<WisSolution> = if speculate {
+                    self.solutions[..n_windows].to_vec()
+                } else {
+                    self.items[..n_windows].iter().map(|it| select_best_compatible(it)).collect()
+                };
+                let keys: Vec<Vec<AwardKey>> = (0..n_windows)
+                    .map(|w| self.item_rows[w].iter().map(|&i| variant_key(&pool[i])).collect())
+                    .collect();
+                let outcome = solve_exact(
+                    &self.items[..n_windows],
+                    &keys,
+                    root_sols,
+                    greedy_welfare,
+                    std::time::Duration::from_millis(cfg.clearing_budget_ms),
+                    workers,
+                );
+                stats.exact_nodes = outcome.nodes;
+                if outcome.exhausted {
+                    stats.exact_budget_exhausted = 1;
+                }
+                if let Some(sel) = outcome.improved {
+                    // Adopt the strictly better global solution: rebuild
+                    // the pending picks and the accepted record from
+                    // scratch so the emission pass commits it — and only
+                    // it — downstream.
+                    stats.exact_improved = 1;
+                    self.pending.clear();
+                    self.accepted.clear();
+                    for (w, items) in sel.iter().enumerate() {
+                        for &k in items {
+                            self.pending.push((w, k));
+                            self.accepted.push(keys[w][k]);
+                        }
+                    }
+                }
+            }
+            stats.exact_ns = t2.elapsed().as_nanos() as u64;
+        }
+
+        // Single emission site: commit the chosen solution, greedy or
+        // exact, in window order then start order.
+        for &(widx, k) in &self.pending {
+            let i = self.item_rows[widx][k];
+            stats.variants_selected += 1;
+            on_accept(Accepted {
+                row: i,
+                variant: &pool[i],
+                score: self.scored.score[i] as f64,
+                window: &windows[widx],
+            });
         }
         stats.clearing_ns = t1.elapsed().as_nanos() as u64;
         stats
     }
+}
+
+/// Incumbent replacements (and bound pruning) require strict float
+/// improvement beyond this epsilon, so welfare ties keep the greedy
+/// decisions verbatim and summation-order noise can't flip a round.
+const EXACT_EPS: f64 = 1e-9;
+
+/// Node-count safety cap for one exact solve; counts as budget
+/// exhaustion. Bounds heap memory on adversarial conflict graphs the
+/// wall-clock budget alone would let grow large.
+const EXACT_MAX_NODES: u64 = 50_000;
+
+/// Nodes expanded per best-first wave. Fixed — never derived from the
+/// pool budget — so the search trajectory (and therefore the decision)
+/// is bit-identical at every `jasda.parallel` setting; the pool only
+/// changes how fast a wave's children are evaluated.
+const EXACT_WAVE: usize = 8;
+
+/// One open branch-and-bound node: a set of excluded (window, item)
+/// pairs, the per-window WIS solutions under those exclusions, their
+/// summed bound, and the first cross-window violation to branch on.
+struct BbNode {
+    bound: f64,
+    /// Creation sequence number — the deterministic tie-break.
+    seq: u64,
+    excluded: Vec<(u32, u32)>,
+    sols: Vec<WisSolution>,
+    violation: ((u32, u32), (u32, u32)),
+}
+
+impl PartialEq for BbNode {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+impl Eq for BbNode {}
+impl PartialOrd for BbNode {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for BbNode {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Max-heap: higher bound first; among equal bounds, the earlier
+        // created node (lower seq) wins — fully deterministic order.
+        self.bound.total_cmp(&other.bound).then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Result of evaluating one child node (pure, pool-parallelizable).
+struct ChildEval {
+    bound: f64,
+    excluded: Vec<(u32, u32)>,
+    sols: Vec<WisSolution>,
+    violation: Option<((u32, u32), (u32, u32))>,
+}
+
+/// What one exact solve produced.
+struct ExactOutcome {
+    /// Per-window selected item indices, only when strictly better than
+    /// the greedy incumbent (ties keep greedy).
+    improved: Option<Vec<Vec<usize>>>,
+    /// Nodes evaluated (root + children).
+    nodes: u64,
+    /// Whether the wall-clock budget or node cap cut the search before
+    /// the tree was exhausted (the result is then the best feasible
+    /// solution found so far, at worst the greedy incumbent).
+    exhausted: bool,
+}
+
+/// First cross-window conflict in a relaxed solution, scanning windows
+/// in announcement order and selections in start order — deterministic,
+/// and deliberately blind to *within*-window pairs (WIS already enforces
+/// temporal compatibility there, and greedy applies the job-level rule
+/// only across windows, so the exact solver must too or it would search
+/// a smaller space than its own incumbent).
+fn first_violation(
+    sols: &[WisSolution],
+    keys: &[Vec<AwardKey>],
+) -> Option<((u32, u32), (u32, u32))> {
+    let mut acc: Vec<(u32, u32)> = Vec::new();
+    for (w, sol) in sols.iter().enumerate() {
+        for &s in &sol.selected {
+            let key = &keys[w][s];
+            for &(aw, ai) in &acc {
+                if keys_conflict(&keys[aw as usize][ai as usize], key) {
+                    return Some(((aw, ai), (w as u32, s as u32)));
+                }
+            }
+        }
+        // Earlier windows only: append this window's picks after it is
+        // fully scanned.
+        acc.extend(sol.selected.iter().map(|&s| (w as u32, s as u32)));
+    }
+    None
+}
+
+/// WIS over one window's items minus the exclusions recorded for window
+/// `w`, with the selection mapped back to unfiltered item indices.
+fn wis_excluding(items: &[WisItem], excluded: &[(u32, u32)], w: u32) -> WisSolution {
+    let mut filtered: Vec<WisItem> = Vec::with_capacity(items.len());
+    let mut map: Vec<usize> = Vec::with_capacity(items.len());
+    for (i, it) in items.iter().enumerate() {
+        if excluded.iter().any(|&(ew, ei)| ew == w && ei as usize == i) {
+            continue;
+        }
+        filtered.push(*it);
+        map.push(i);
+    }
+    let sol = select_best_compatible(&filtered);
+    WisSolution {
+        selected: sol.selected.iter().map(|&k| map[k]).collect(),
+        total_score: sol.total_score,
+    }
+}
+
+/// Evaluate one child of `parent`: exclude one side of the parent's
+/// violated pair, re-solve only that window's WIS, re-bound, re-scan.
+fn eval_child(
+    items: &[Vec<WisItem>],
+    keys: &[Vec<AwardKey>],
+    parent: &BbNode,
+    side: usize,
+) -> ChildEval {
+    let (w, i) = if side == 0 { parent.violation.0 } else { parent.violation.1 };
+    let mut excluded = parent.excluded.clone();
+    excluded.push((w, i));
+    let mut sols = parent.sols.clone();
+    sols[w as usize] = wis_excluding(&items[w as usize], &excluded, w);
+    let bound = sols.iter().map(|s| s.total_score).sum();
+    let violation = first_violation(&sols, keys);
+    ChildEval { bound, excluded, sols, violation }
+}
+
+/// Best-first branch-and-bound over the round's job × window conflict
+/// graph (see the module docs for the bound structure). Returns a
+/// strictly-better-than-greedy solution when one is proven (or found
+/// before the budget ran out), `None` to keep the greedy incumbent.
+fn solve_exact(
+    items: &[Vec<WisItem>],
+    keys: &[Vec<AwardKey>],
+    root_sols: Vec<WisSolution>,
+    incumbent: f64,
+    budget: std::time::Duration,
+    workers: &WorkerPool,
+) -> ExactOutcome {
+    let t0 = std::time::Instant::now();
+    let mut nodes = 1u64; // the root
+    let mut exhausted = false;
+    let mut best_val = incumbent;
+    let mut best_sel: Option<Vec<Vec<usize>>> = None;
+    let mut seq = 0u64;
+    let mut heap: std::collections::BinaryHeap<BbNode> = std::collections::BinaryHeap::new();
+
+    let root_bound: f64 = root_sols.iter().map(|s| s.total_score).sum();
+    if root_bound > best_val + EXACT_EPS {
+        match first_violation(&root_sols, keys) {
+            None => {
+                // The unconstrained per-window optima are already
+                // feasible — the global optimum, no search needed.
+                best_val = root_bound;
+                best_sel = Some(root_sols.iter().map(|s| s.selected.clone()).collect());
+            }
+            Some(violation) => {
+                heap.push(BbNode {
+                    bound: root_bound,
+                    seq,
+                    excluded: Vec::new(),
+                    sols: root_sols,
+                    violation,
+                });
+            }
+        }
+    }
+
+    while !heap.is_empty() {
+        if t0.elapsed() >= budget || nodes >= EXACT_MAX_NODES {
+            exhausted = true;
+            break;
+        }
+        // Pop one wave of the best open nodes. The heap is bound-ordered,
+        // so the first pruned pop proves the whole frontier is pruned.
+        let mut wave: Vec<BbNode> = Vec::with_capacity(EXACT_WAVE);
+        while wave.len() < EXACT_WAVE {
+            match heap.pop() {
+                Some(n) if n.bound > best_val + EXACT_EPS => wave.push(n),
+                Some(_) => {
+                    heap.clear();
+                    break;
+                }
+                None => break,
+            }
+        }
+        if wave.is_empty() {
+            break;
+        }
+        // Evaluate every child of the wave on the worker pool (pure
+        // work, disjoint output slots — the same chunking contract as
+        // the speculative WIS fan-out).
+        let mut evals: Vec<Option<ChildEval>> = Vec::new();
+        evals.resize_with(wave.len() * 2, || None);
+        workers.scope(|scope| {
+            let mut rest = evals.as_mut_slice();
+            for parent in &wave {
+                for side in 0..2 {
+                    let (slot, r) = rest.split_at_mut(1);
+                    rest = r;
+                    scope.spawn(move || {
+                        slot[0] = Some(eval_child(items, keys, parent, side));
+                    });
+                }
+            }
+        });
+        // Merge sequentially in wave order — deterministic regardless of
+        // which worker evaluated which child.
+        for ev in evals.into_iter().flatten() {
+            nodes += 1;
+            if ev.bound <= best_val + EXACT_EPS {
+                continue;
+            }
+            match ev.violation {
+                None => {
+                    best_val = ev.bound;
+                    best_sel = Some(ev.sols.iter().map(|s| s.selected.clone()).collect());
+                }
+                Some(violation) => {
+                    seq += 1;
+                    heap.push(BbNode {
+                        bound: ev.bound,
+                        seq,
+                        excluded: ev.excluded,
+                        sols: ev.sols,
+                        violation,
+                    });
+                }
+            }
+        }
+    }
+    ExactOutcome { improved: best_sel, nodes, exhausted }
 }
 
 /// Exhaustive reference solver for verification (exponential; tests only).

@@ -94,6 +94,23 @@ struct JasdaStats {
     /// Windows whose speculative WIS solution was discarded because an
     /// earlier window's acceptances touched their eligible pool.
     wis_replays: u64,
+    /// Iterations whose round consulted the exact global solver
+    /// (`jasda.clearing = "exact"` with K > 1 windows).
+    exact_rounds: u64,
+    /// Branch-and-bound nodes evaluated by the exact solver.
+    exact_nodes: u64,
+    /// Exact solves cut short by `jasda.clearing_budget_ms` (falling
+    /// back to the best feasible solution found, at worst greedy).
+    exact_budget_exhausted: u64,
+    /// Rounds where the exact solution strictly beat the greedy
+    /// incumbent's welfare.
+    exact_improved: u64,
+    /// Wall time spent in the exact solver.
+    exact_ns: u64,
+    /// Sum of accepted variants' composite scores over the run — the
+    /// cleared-welfare series the clearing-policy benches compare
+    /// (greedy vs exact uplift per K).
+    award_score_sum: f64,
 }
 
 /// One bidder's entry in the per-iteration bidder index.
@@ -426,7 +443,9 @@ impl Scheduler for JasdaScheduler {
             };
             RowCtx { age, trust, hist }
         };
+        let mut score_sum = 0.0f64;
         let mut on_accept = |acc: Accepted<'_>| {
+            score_sum += acc.score;
             commitments.push(Commitment {
                 job: acc.variant.job,
                 slice: acc.variant.slice,
@@ -451,6 +470,12 @@ impl Scheduler for JasdaScheduler {
         self.stats.variants_selected += cstats.variants_selected;
         self.stats.cross_window_conflicts += cstats.cross_window_conflicts;
         self.stats.wis_replays += cstats.wis_replays;
+        self.stats.exact_rounds += cstats.exact_rounds;
+        self.stats.exact_nodes += cstats.exact_nodes;
+        self.stats.exact_budget_exhausted += cstats.exact_budget_exhausted;
+        self.stats.exact_improved += cstats.exact_improved;
+        self.stats.exact_ns += cstats.exact_ns;
+        self.stats.award_score_sum += score_sum;
         self.stats.scoring_ns += cstats.scoring_ns;
         self.stats.clearing_ns += cstats.clearing_ns;
 
@@ -484,6 +509,12 @@ impl Scheduler for JasdaScheduler {
             ("plan_cache_hits", self.stats.plan_cache_hits.into()),
             ("bidders_skipped", self.stats.bidders_skipped.into()),
             ("wis_replays", self.stats.wis_replays.into()),
+            ("exact_rounds", self.stats.exact_rounds.into()),
+            ("exact_nodes", self.stats.exact_nodes.into()),
+            ("exact_budget_exhausted", self.stats.exact_budget_exhausted.into()),
+            ("exact_improved", self.stats.exact_improved.into()),
+            ("exact_ns", self.stats.exact_ns.into()),
+            ("award_score_sum", self.stats.award_score_sum.into()),
             ("threads", (self.pool.budget() as u64).into()),
             ("mean_rho", self.mean_rho().into()),
         ])
