@@ -309,9 +309,11 @@ fn main() {
     }
 
     // ------------------------------------------------------------------
-    // ISSUE 6: shards x transport sweep — what the wire codec costs per
-    // round, and what N-leader clearing buys (or costs, once the
-    // reconciler's sequential pass is counted) on a contended workload.
+    // ISSUE 6 + 9: shards x transport sweep — what the wire codec costs
+    // per round, what real sockets add on top of it (tcp/unix rows ride
+    // in via TransportKind::ALL), and what N-leader clearing buys (or
+    // costs, once the reconciler's sequential pass is counted) on a
+    // contended workload.
     // ------------------------------------------------------------------
     header("sharded coordinator round latency (shards x transport)");
     use jasda::config::TransportKind;

@@ -83,6 +83,15 @@ pub enum TransportKind {
     /// bit-identical in decisions because the codec round-trips every
     /// field exactly.
     Framed,
+    /// The same frames over real TCP sockets: agents connect to the
+    /// leader's listener (`jasda.listen_addr`, default `127.0.0.1:0`)
+    /// and the leader serves every connection from one poll-driven I/O
+    /// thread. Decisions stay bit-identical to `loopback`.
+    Tcp,
+    /// The same frames over Unix-domain sockets (`jasda.listen_addr` a
+    /// filesystem path, default a fresh socket under the system temp
+    /// directory). Unix targets only.
+    Unix,
 }
 
 impl Default for TransportKind {
@@ -97,6 +106,8 @@ impl TransportKind {
         match self {
             TransportKind::Loopback => "loopback",
             TransportKind::Framed => "framed",
+            TransportKind::Tcp => "tcp",
+            TransportKind::Unix => "unix",
         }
     }
 
@@ -106,7 +117,12 @@ impl TransportKind {
     }
 
     /// All transports.
-    pub const ALL: [TransportKind; 2] = [TransportKind::Loopback, TransportKind::Framed];
+    pub const ALL: [TransportKind; 4] = [
+        TransportKind::Loopback,
+        TransportKind::Framed,
+        TransportKind::Tcp,
+        TransportKind::Unix,
+    ];
 }
 
 /// How the round's cross-window conflict graph is cleared once the
@@ -450,9 +466,22 @@ pub struct JasdaConfig {
     /// this; the in-process scheduler is unaffected.
     pub shards: usize,
     /// Transport carrying leader ↔ agent messages in the protocol
-    /// runtime: in-process typed channels (`loopback`) or length-prefixed
-    /// byte frames through the hand-rolled wire codec (`framed`).
+    /// runtime: in-process typed channels (`loopback`), length-prefixed
+    /// byte frames through the hand-rolled wire codec (`framed`), or the
+    /// same frames over real sockets (`tcp` / `unix`, Unix targets
+    /// only), served by one poll-driven leader I/O thread.
     pub transport: TransportKind,
+    /// Listen address for the socket transports. For `tcp` a
+    /// `host:port` pair (empty = `127.0.0.1:0`, an ephemeral port); for
+    /// `unix` a filesystem path (empty = a fresh socket under the
+    /// system temp directory, removed on shutdown). Ignored by
+    /// `loopback`/`framed`.
+    pub listen_addr: String,
+    /// Per-connection write-buffer capacity (frames) for the socket
+    /// transports' drop-don't-block backpressure, ≥ 1. A frame that
+    /// would overflow a slow connection's buffer is dropped and counted
+    /// in `sends_dropped`, mirroring the bounded in-process queues.
+    pub socket_queue: usize,
     /// Per-round bid-collection deadline in wall-clock milliseconds for
     /// the protocol runtime. `0` (default) = no deadline: the leader
     /// blocks until every delivered announce is answered, the exact
@@ -528,6 +557,8 @@ impl Default for JasdaConfig {
             parallel: 0,
             shards: 1,
             transport: TransportKind::Loopback,
+            listen_addr: String::new(),
+            socket_queue: 64,
             round_timeout_ms: 0,
             faults: FaultsConfig::default(),
             announce_top: 0,
@@ -577,6 +608,9 @@ impl JasdaConfig {
         }
         if self.shards == 0 {
             anyhow::bail!("shards must be >= 1 (1 = the single-leader coordinator)");
+        }
+        if self.socket_queue == 0 {
+            anyhow::bail!("socket_queue must be >= 1 (per-connection write-buffer frames)");
         }
         for (name, p) in [
             ("faults.crash", self.faults.crash),
@@ -632,6 +666,8 @@ impl JasdaConfig {
                     self.transport = TransportKind::parse(name)
                         .ok_or_else(|| anyhow::anyhow!("unknown transport '{name}'"))?;
                 }
+                "listen_addr" => self.listen_addr = need_str(val, k)?.to_string(),
+                "socket_queue" => self.socket_queue = need_u64(val, k)? as usize,
                 "round_timeout_ms" => self.round_timeout_ms = need_u64(val, k)?,
                 "faults" => self.faults.merge_json(val)?,
                 "announce_top" => self.announce_top = need_u64(val, k)? as usize,
@@ -683,6 +719,8 @@ impl JasdaConfig {
             ("parallel", self.parallel.into()),
             ("shards", self.shards.into()),
             ("transport", self.transport.name().into()),
+            ("listen_addr", self.listen_addr.as_str().into()),
+            ("socket_queue", self.socket_queue.into()),
             ("round_timeout_ms", self.round_timeout_ms.into()),
             ("faults", self.faults.to_json()),
             ("announce_top", self.announce_top.into()),
@@ -962,6 +1000,8 @@ mod tests {
         cfg.jasda.parallel = 4;
         cfg.jasda.shards = 3;
         cfg.jasda.transport = TransportKind::Framed;
+        cfg.jasda.listen_addr = "127.0.0.1:7070".into();
+        cfg.jasda.socket_queue = 8;
         cfg.jasda.announce_top = 2;
         cfg.jasda.round_timeout_ms = 250;
         cfg.jasda.clearing = ClearingMode::Exact;
@@ -990,7 +1030,7 @@ mod tests {
         assert!(SimConfig::from_json_str(r#"{"sede": 7}"#).is_err());
         assert!(SimConfig::from_json_str(r#"{"jasda": {"lambada": 0.3}}"#).is_err());
         assert!(SimConfig::from_json_str(r#"{"jasda": {"window_policy": "bogus"}}"#).is_err());
-        assert!(SimConfig::from_json_str(r#"{"jasda": {"transport": "tcp"}}"#).is_err());
+        assert!(SimConfig::from_json_str(r#"{"jasda": {"transport": "pigeon"}}"#).is_err());
         assert!(SimConfig::from_json_str(r#"{"jasda": {"clearing": "simplex"}}"#).is_err());
         assert!(SimConfig::from_json_str(r#"{"jasda": {"faults": {"crush": 1}}}"#).is_err());
         assert!(SimConfig::from_json_str(r#"{"workload": {"mix": [["a"]]}}"#).is_err());

@@ -128,7 +128,11 @@ impl FaultPlan {
     /// Is a leader→`agent` send in `round` eaten by a crash window?
     /// `announce` marks announce-shaped sends, which an `after_announce`
     /// crash still lets through in its first round.
-    fn send_crashed(&self, agent: usize, round: u64, announce: bool) -> bool {
+    ///
+    /// `pub(crate)` because the socket transport applies the same plan
+    /// at the connection layer (see `coordinator::socket`) instead of
+    /// through a [`FaultyTransport`] wrapper.
+    pub(crate) fn send_crashed(&self, agent: usize, round: u64, announce: bool) -> bool {
         self.crashes.iter().any(|c| {
             c.agent == agent
                 && round >= c.from
@@ -138,16 +142,16 @@ impl FaultPlan {
     }
 
     /// Is a reply from `agent` tagged `round` swallowed by a crash?
-    fn reply_crashed(&self, agent: usize, round: u64) -> bool {
+    pub(crate) fn reply_crashed(&self, agent: usize, round: u64) -> bool {
         self.crashes.iter().any(|c| c.agent == agent && round >= c.from && round < c.until)
     }
 
-    fn take_delay(&mut self, agent: usize, round: u64) -> Option<u64> {
+    pub(crate) fn take_delay(&mut self, agent: usize, round: u64) -> Option<u64> {
         let i = self.delays.iter().position(|d| d.agent == agent && d.round == round)?;
         Some(self.delays.swap_remove(i).by)
     }
 
-    fn take_one_shot(shots: &mut Vec<(usize, u64)>, agent: usize, round: u64) -> bool {
+    pub(crate) fn take_one_shot(shots: &mut Vec<(usize, u64)>, agent: usize, round: u64) -> bool {
         match shots.iter().position(|&(a, r)| a == agent && r == round) {
             Some(i) => {
                 shots.swap_remove(i);

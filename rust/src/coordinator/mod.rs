@@ -16,7 +16,10 @@
 //!   trait with bounded per-agent queues and drop-don't-block
 //!   backpressure; [`LoopbackTransport`] carries typed values over
 //!   channels (default), [`FramedTransport`] carries length-prefixed
-//!   byte frames through the hand-rolled [`wire`] codec.
+//!   byte frames through the hand-rolled [`wire`] codec, and
+//!   [`SocketTransport`](socket::SocketTransport) carries those same
+//!   frames over real TCP or Unix-domain sockets, the leader side
+//!   served by a single poll-driven I/O thread (no thread per agent).
 //! - **Shards** ([`shard`]): who decides. `jasda.shards` leader shards
 //!   each own the slices with `slice % shards == shard` and run the
 //!   shared [`ClearingEngine`](crate::jasda::clearing::ClearingEngine)
@@ -40,8 +43,10 @@
 //!    │    set again after a silent capped round)     │
 //!    │                                               │
 //!    │ 2. Announce { round, now, windows } ────────▶ │  one broadcast
-//!    │    (bounded inbox: a slow agent's copy is     │  (loopback values
-//!    │     dropped, the round proceeds without it)   │   or wire frames)
+//!    │    (bounded inbox: a slow agent's copy is     │  (loopback values,
+//!    │     dropped, the round proceeds without it)   │   wire frames, or
+//!    │                                               │   frames over a
+//!    │                                               │   tcp/unix socket)
 //!    │                                               │
 //!    │                      3. each agent plans once │
 //!    │                         per window *shape*    │
@@ -91,8 +96,11 @@
 //!
 //! With `jasda.round_timeout_ms > 0` the bid-collection phase of every
 //! round runs under a hard wall-clock deadline, so agent failure —
-//! injectable deterministically through [`faults`] — degrades only the
-//! faulty agent, never the round:
+//! injectable deterministically through [`faults`] (wrapped around the
+//! in-process transports; applied directly at the connection layer by
+//! the socket transport: crash = close + refuse reconnect, corrupt =
+//! flip a byte on the stream, delay = hold the received frame) —
+//! degrades only the faulty agent, never the round:
 //!
 //! ```text
 //!  round r                                           deadline ──────┐
@@ -130,6 +138,8 @@
 pub mod faults;
 pub mod messages;
 pub mod shard;
+#[cfg(unix)]
+pub mod socket;
 pub mod transport;
 pub mod wire;
 
@@ -815,7 +825,13 @@ pub fn run_protocol_traced(
     let mut shards = make_shards(shards_n, cfg.jasda.parallel);
     let mut reconciler = ShardReconciler::new();
 
-    // Spawn agents behind the configured transport.
+    // Spawn agents behind the configured transport. One seeded fault
+    // plan serves both injection styles below.
+    let plan = if cfg.jasda.faults.enabled() {
+        FaultPlan::random(&cfg.jasda.faults, n_jobs)
+    } else {
+        FaultPlan::default()
+    };
     let mut transport: Box<dyn Transport> = match cfg.jasda.transport {
         TransportKind::Loopback => {
             Box::new(LoopbackTransport::spawn(jobs, &cfg.jasda, DEFAULT_AGENT_QUEUE))
@@ -823,17 +839,26 @@ pub fn run_protocol_traced(
         TransportKind::Framed => {
             Box::new(FramedTransport::spawn(jobs, &cfg.jasda, DEFAULT_AGENT_QUEUE))
         }
+        // The socket transport applies the plan itself, at the
+        // connection layer (crash = close, corrupt = flip a stream
+        // byte, delay = hold the frame) — no wrapper.
+        #[cfg(unix)]
+        TransportKind::Tcp | TransportKind::Unix => {
+            Box::new(socket::SocketTransport::spawn(jobs, &cfg.jasda, plan.clone()))
+        }
+        #[cfg(not(unix))]
+        TransportKind::Tcp | TransportKind::Unix => {
+            panic!("socket transports require a Unix target")
+        }
     };
-    // Fault injection wraps whichever transport was configured, so the
-    // leader below runs the identical code path with and without
-    // adversity (config validation guarantees a round deadline exists
-    // whenever faults are on).
-    if cfg.jasda.faults.enabled() {
-        transport = Box::new(FaultyTransport::new(
-            transport,
-            FaultPlan::random(&cfg.jasda.faults, n_jobs),
-            env.slot.clone(),
-        ));
+    // Fault injection wraps the in-process transports, so the leader
+    // below runs the identical code path with and without adversity
+    // (config validation guarantees a round deadline exists whenever
+    // faults are on).
+    if cfg.jasda.faults.enabled()
+        && !matches!(cfg.jasda.transport, TransportKind::Tcp | TransportKind::Unix)
+    {
+        transport = Box::new(FaultyTransport::new(transport, plan, env.slot.clone()));
     }
 
     let mut out = ProtocolOutcome::new(n_jobs);
@@ -1502,6 +1527,33 @@ mod tests {
             assert_eq!(a, b);
         }
         assert_eq!(p.final_time, f.final_time);
+    }
+
+    #[test]
+    #[cfg(unix)]
+    fn socket_transports_match_loopback_decisions() {
+        // Real sockets must be decision-invisible too: the spawn
+        // barrier plus blocking collection (no deadline) means no
+        // frame is ever dropped in a healthy run, so tcp and unix
+        // traces are bit-identical to the loopback trace.
+        let mut c = cfg();
+        c.jasda.announce_per_slice = true;
+        let mut tl = Vec::new();
+        let p = run_protocol_traced(c.clone(), jobs(4), 200_000, Some(&mut tl));
+        assert_eq!(p.completed_jobs, 4, "{p:?}");
+        for kind in [TransportKind::Tcp, TransportKind::Unix] {
+            let mut cs = c.clone();
+            cs.jasda.transport = kind;
+            let mut ts = Vec::new();
+            let s = run_protocol_traced(cs, jobs(4), 200_000, Some(&mut ts));
+            assert_eq!(s.completed_jobs, 4, "{kind:?}: {s:?}");
+            assert_eq!(s.sends_dropped, 0, "{kind:?}: healthy run must drop nothing");
+            assert_eq!(tl.len(), ts.len(), "{kind:?}");
+            for (a, b) in tl.iter().zip(&ts) {
+                assert_eq!(a, b, "{kind:?}");
+            }
+            assert_eq!(p.final_time, s.final_time, "{kind:?}");
+        }
     }
 
     #[test]

@@ -1,0 +1,1121 @@
+//! Real-socket transport for the protocol runtime: the [`wire`] frames
+//! of [`FramedTransport`](super::transport::FramedTransport) carried
+//! over TCP or Unix-domain sockets (`jasda.transport = "tcp" | "unix"`).
+//!
+//! The protocol is unchanged — only the I/O moves. Agents connect to
+//! the leader's listener, identify themselves with a 4-byte
+//! little-endian agent-index hello, and then exchange the exact
+//! length-prefixed frames the framed transport exchanges over channels.
+//! Decisions stay bit-identical to
+//! [`LoopbackTransport`](super::transport::LoopbackTransport)
+//! (`tests/properties.rs` asserts it): the codec round-trips every
+//! field exactly, the spawn barrier delivers round 0 to every agent,
+//! and the leader collects bids by slot, so arrival order is
+//! irrelevant.
+//!
+//! # One poll loop, not a thread per agent
+//!
+//! The leader side runs a **single** I/O thread that serves every
+//! connection from one `poll(2)` readiness loop — no blocking read per
+//! agent, which is what lets one leader hold a thousand agent sockets
+//! (the ROADMAP's 10k-agent target is a listener away, not a thread
+//! pool away). Per connection the thread keeps:
+//!
+//! - a [`wire::FrameReader`] reassembling frames from partial reads —
+//!   the same single validation path (`wire::frame_len`) the framed
+//!   transport uses, so there is no second codec to drift;
+//! - a bounded write buffer (`jasda.socket_queue` frames) with a
+//!   partial-write cursor: the leader's send path only ever *enqueues*,
+//!   and a frame that would overflow a slow connection's buffer is
+//!   dropped and reported (`sends_dropped`) — drop-don't-block, exactly
+//!   the in-process backpressure contract.
+//!
+//! A wake pipe (socketpair) gets one byte after every enqueue, so the
+//! poll loop never waits on a timeout to notice work: leader sends and
+//! agent replies both land on the next loop pass.
+//!
+//! # Failure semantics
+//!
+//! - A reply stream that desynchronizes (bad length prefix) surfaces as
+//!   [`Recv::Rejected`] for that agent — feeding the leader's
+//!   quarantine streak — and the connection is closed; a frame that
+//!   arrives intact but fails decode is likewise `Rejected`.
+//! - A disconnected agent's sends fail until it reconnects, which marks
+//!   it dirty on the leader and routes it through the existing
+//!   `Resync` re-admission path. Reconnects re-identify with the same
+//!   hello; buffered frames from the dead connection are discarded
+//!   (they were lost on the wire).
+//! - [`Transport::recv_deadline`] routes through the shared
+//!   `recv_deadline_on` helper, so the pinned already-expired deadline
+//!   semantics are identical across transports.
+//!
+//! # Fault injection at the socket layer
+//!
+//! The seeded [`FaultPlan`] applies directly to the connections instead
+//! of through a `FaultyTransport` wrapper, so the PR-7 property suite
+//! runs unmodified against real sockets:
+//!
+//! - **crash** = close the connection (flushing first when the plan
+//!   says the announce still lands) and refuse the agent's reconnect
+//!   hello until the crash window passes;
+//! - **corrupt** = flip a byte on the received stream (the frame's tag
+//!   byte), so the real decode path rejects it;
+//! - **delay** = buffer the received reply frame at the socket boundary
+//!   and release it rounds later, when the round-tag check discards it
+//!   as stale;
+//! - **drop** = lose one leader→agent frame before it is written.
+//!
+//! The plan's round index tracks the leader's announces (an atomic
+//! updated on every `Announce` send), mirroring how `FaultyTransport`
+//! learns the round by peeking at outgoing messages.
+
+use super::faults::FaultPlan;
+use super::messages::ToAgent;
+use super::transport::{recv_deadline_on, Recv, RecvEnd, Transport};
+use super::wire;
+use crate::config::{JasdaConfig, TransportKind};
+use crate::job::Job;
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+// Minimal poll(2) binding — the only libc surface this module needs,
+// declared by hand because the crate is std-only.
+#[repr(C)]
+struct PollFd {
+    fd: RawFd,
+    events: i16,
+    revents: i16,
+}
+
+const POLLIN: i16 = 0x001;
+const POLLOUT: i16 = 0x004;
+const POLLERR: i16 = 0x008;
+const POLLHUP: i16 = 0x010;
+const POLLNVAL: i16 = 0x020;
+
+#[cfg(target_os = "macos")]
+type NFds = std::os::raw::c_uint;
+#[cfg(not(target_os = "macos"))]
+type NFds = std::os::raw::c_ulong;
+
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: NFds, timeout: i32) -> i32;
+}
+
+/// Poll-loop pass timeout (ms). The wake pipe makes the loop reactive;
+/// the timeout only bounds how late a stop flag or a held straggler
+/// release can be noticed when nothing else is happening.
+const POLL_TIMEOUT_MS: i32 = 100;
+/// Agent-endpoint blocking-read timeout: how often a parked agent
+/// re-checks the stop flag.
+const AGENT_READ_TIMEOUT: Duration = Duration::from_millis(25);
+/// Agent reconnect retry pause.
+const RECONNECT_PAUSE: Duration = Duration::from_millis(5);
+/// How long [`Transport::shutdown`] waits for queued `Shutdown`
+/// frames to flush before tearing the I/O thread down.
+const SHUTDOWN_FLUSH: Duration = Duration::from_millis(500);
+/// Spawn-barrier limit: every agent must have said hello by then.
+const CONNECT_BARRIER: Duration = Duration::from_secs(30);
+
+/// Distinguishes concurrently running transports' default Unix socket
+/// paths within one process (tests run many in parallel).
+static SOCK_SEQ: AtomicU64 = AtomicU64::new(0);
+
+enum Listener {
+    Tcp(TcpListener),
+    Unix(UnixListener),
+}
+
+impl Listener {
+    fn as_raw_fd(&self) -> RawFd {
+        match self {
+            Listener::Tcp(l) => l.as_raw_fd(),
+            Listener::Unix(l) => l.as_raw_fd(),
+        }
+    }
+
+    fn accept(&self) -> std::io::Result<Conn> {
+        match self {
+            Listener::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                let _ = s.set_nodelay(true);
+                Ok(Conn::Tcp(s))
+            }
+            Listener::Unix(l) => {
+                let (s, _) = l.accept()?;
+                Ok(Conn::Unix(s))
+            }
+        }
+    }
+}
+
+/// Where agent endpoints connect.
+#[derive(Clone)]
+enum ConnectTo {
+    Tcp(SocketAddr),
+    Unix(PathBuf),
+}
+
+impl ConnectTo {
+    fn connect(&self) -> std::io::Result<Conn> {
+        match self {
+            ConnectTo::Tcp(addr) => {
+                let s = TcpStream::connect(addr)?;
+                let _ = s.set_nodelay(true);
+                Ok(Conn::Tcp(s))
+            }
+            ConnectTo::Unix(path) => UnixStream::connect(path).map(Conn::Unix),
+        }
+    }
+}
+
+/// One stream of either family, so the poll loop and the agent
+/// endpoints are written once.
+enum Conn {
+    Tcp(TcpStream),
+    Unix(UnixStream),
+}
+
+impl Conn {
+    fn as_raw_fd(&self) -> RawFd {
+        match self {
+            Conn::Tcp(s) => s.as_raw_fd(),
+            Conn::Unix(s) => s.as_raw_fd(),
+        }
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.set_nonblocking(nb),
+            Conn::Unix(s) => s.set_nonblocking(nb),
+        }
+    }
+
+    fn set_read_timeout(&self, t: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.set_read_timeout(t),
+            Conn::Unix(s) => s.set_read_timeout(t),
+        }
+    }
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.read(buf),
+            Conn::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.write(buf),
+            Conn::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.flush(),
+            Conn::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// Per-agent bounded write buffer, shared between the leader's send
+/// path (enqueue) and the I/O thread (drain).
+#[derive(Default)]
+struct SendQueue {
+    /// The agent has a live, identified connection. Sends to a dead
+    /// agent fail immediately (→ dirty-mark → `Resync` on reconnect).
+    alive: bool,
+    /// Close this connection once `frames` is flushed (crash
+    /// injection; set with `frames` cleared for an immediate close).
+    kill: bool,
+    /// Encoded frames awaiting the socket.
+    frames: VecDeque<Vec<u8>>,
+}
+
+/// State shared between the leader handle, the I/O thread, and the
+/// agent endpoints.
+struct Shared {
+    queues: Vec<Mutex<SendQueue>>,
+    /// Per-connection write-buffer capacity (frames).
+    cap: usize,
+    /// Current round, learned from outgoing `Announce`s — indexes the
+    /// fault plan, exactly as `FaultyTransport` tracks it.
+    round: AtomicU64,
+    /// Tear-down flag: the I/O thread and every agent endpoint exit.
+    stop: AtomicBool,
+    /// Agents that have said hello at least once (spawn barrier).
+    connected: AtomicUsize,
+    /// Reply-side fault plan (crash swallows, delays, corruption),
+    /// applied by the I/O thread as frames arrive.
+    reply_faults: Mutex<FaultPlan>,
+}
+
+/// What the I/O thread hands the leader per received frame.
+enum IoEvent {
+    /// A complete frame from `agent` (possibly corrupted by the plan).
+    Frame(usize, Vec<u8>),
+    /// `agent`'s stream desynchronized (bad length prefix); the
+    /// connection was closed. Surfaces as [`Recv::Rejected`].
+    Desync(usize),
+}
+
+/// Leader-side state for one live connection in the poll loop.
+struct ConnState {
+    conn: Conn,
+    reader: wire::FrameReader,
+    /// Partially written frame and its cursor.
+    in_flight: Option<(Vec<u8>, usize)>,
+}
+
+/// An accepted connection whose 4-byte hello has not fully arrived.
+struct Pending {
+    conn: Conn,
+    hello: [u8; 4],
+    got: usize,
+}
+
+/// TCP / Unix-domain-socket [`Transport`]: one poll-driven leader I/O
+/// thread, one endpoint thread per agent. See the module docs.
+pub struct SocketTransport {
+    n: usize,
+    shared: Arc<Shared>,
+    replies: mpsc::Receiver<IoEvent>,
+    /// Write end of the wake pipe (nonblocking; a full pipe means the
+    /// I/O thread already has a wake pending).
+    wake: UnixStream,
+    io_handle: Option<JoinHandle<()>>,
+    agent_handles: Vec<JoinHandle<()>>,
+    /// Send-side fault plan (crash windows, one-shot drops).
+    plan: FaultPlan,
+    /// Reused encode buffer (a broadcast encodes once).
+    scratch: Vec<u8>,
+    frames_rejected: u64,
+    /// Default Unix socket path to unlink on shutdown.
+    unix_path: Option<PathBuf>,
+    shut: bool,
+}
+
+impl SocketTransport {
+    /// Bind the listener, start the I/O thread, spawn one endpoint
+    /// thread per job, and block until every agent has said hello —
+    /// the barrier that makes round 0 reach everyone, which (with
+    /// ample queues) is what keeps healthy socket runs bit-identical
+    /// to loopback. `cfg.transport` picks TCP vs Unix; `plan` is the
+    /// seeded fault schedule (empty = no adversity).
+    ///
+    /// Panics when the listen address cannot be bound — the protocol
+    /// runtime has no error path, and an unusable address is a
+    /// configuration mistake, not a runtime condition.
+    pub fn spawn(jobs: Vec<Job>, cfg: &JasdaConfig, plan: FaultPlan) -> SocketTransport {
+        let n = jobs.len();
+        let (listener, target, unix_path) = bind(cfg);
+        let shared = Arc::new(Shared {
+            queues: (0..n).map(|_| Mutex::new(SendQueue::default())).collect(),
+            cap: cfg.socket_queue.max(1),
+            round: AtomicU64::new(0),
+            stop: AtomicBool::new(false),
+            connected: AtomicUsize::new(0),
+            reply_faults: Mutex::new(plan.clone()),
+        });
+        let (reply_tx, replies) = mpsc::channel();
+        let (wake, wake_rx) = UnixStream::pair().expect("wake socketpair");
+        wake.set_nonblocking(true).expect("nonblocking wake");
+        wake_rx.set_nonblocking(true).expect("nonblocking wake");
+
+        let io_shared = Arc::clone(&shared);
+        let io_handle = Some(std::thread::spawn(move || {
+            io_loop(io_shared, listener, wake_rx, reply_tx);
+        }));
+
+        let mut agent_handles = Vec::with_capacity(n);
+        for (agent, job) in jobs.into_iter().enumerate() {
+            let jcfg = cfg.clone();
+            let target = target.clone();
+            let sh = Arc::clone(&shared);
+            agent_handles.push(std::thread::spawn(move || {
+                agent_endpoint(agent, job, jcfg, target, sh);
+            }));
+        }
+
+        let t0 = Instant::now();
+        while shared.connected.load(Ordering::SeqCst) < n {
+            assert!(
+                t0.elapsed() < CONNECT_BARRIER,
+                "socket transport: {}/{} agents connected within {CONNECT_BARRIER:?}",
+                shared.connected.load(Ordering::SeqCst),
+                n
+            );
+            std::thread::sleep(Duration::from_millis(1));
+        }
+
+        SocketTransport {
+            n,
+            shared,
+            replies,
+            wake,
+            io_handle,
+            agent_handles,
+            plan,
+            scratch: Vec::new(),
+            frames_rejected: 0,
+            unix_path,
+            shut: false,
+        }
+    }
+
+    fn wake(&self) {
+        // WouldBlock = the pipe is full = a wake is already pending.
+        let _ = (&self.wake).write(&[1]);
+    }
+
+    /// Enqueue one already-encoded frame for `agent`, applying the
+    /// send-side fault plan. Returns `false` when the frame was not
+    /// queued (dead agent, full buffer, or an injected fault).
+    fn enqueue(&mut self, agent: usize, announce: bool) -> bool {
+        let round = self.shared.round.load(Ordering::SeqCst);
+        if self.plan.send_crashed(agent, round, announce) {
+            // Crash window: fail the send and close the live
+            // connection (immediately — pending frames are lost).
+            let mut q = self.shared.queues[agent].lock().unwrap();
+            q.frames.clear();
+            q.kill = true;
+            return false;
+        }
+        let deliver_then_crash = announce
+            && self
+                .plan
+                .crashes
+                .iter()
+                .any(|c| c.agent == agent && c.after_announce && round == c.from);
+        if FaultPlan::take_one_shot(&mut self.plan.drops, agent, round) {
+            return false;
+        }
+        let mut q = self.shared.queues[agent].lock().unwrap();
+        if !q.alive || q.frames.len() >= self.shared.cap {
+            return false;
+        }
+        q.frames.push_back(self.scratch.clone());
+        if deliver_then_crash {
+            // The agent "dies after the announce landed": flush this
+            // frame, then close the connection.
+            q.kill = true;
+        }
+        true
+    }
+
+    fn map_event(&mut self, ev: IoEvent) -> Recv {
+        match ev {
+            IoEvent::Frame(agent, frame) => match wire::decode_agent_reply(&frame) {
+                Ok(reply) => Recv::Msg(reply),
+                Err(_) => {
+                    self.frames_rejected += 1;
+                    Recv::Rejected { agent }
+                }
+            },
+            IoEvent::Desync(agent) => {
+                self.frames_rejected += 1;
+                Recv::Rejected { agent }
+            }
+        }
+    }
+}
+
+impl Transport for SocketTransport {
+    fn agents(&self) -> usize {
+        self.n
+    }
+
+    fn send(&mut self, agent: usize, msg: &ToAgent) -> bool {
+        let announce = if let ToAgent::Announce { round, .. } = msg {
+            self.shared.round.store(*round, Ordering::SeqCst);
+            true
+        } else {
+            false
+        };
+        self.scratch.clear();
+        if wire::encode_to_agent(msg, &mut self.scratch).is_err() {
+            return false;
+        }
+        let ok = self.enqueue(agent, announce);
+        self.wake();
+        ok
+    }
+
+    fn broadcast(&mut self, msg: &ToAgent, skip: &[bool], dropped: &mut Vec<usize>) -> usize {
+        dropped.clear();
+        let announce = if let ToAgent::Announce { round, .. } = msg {
+            self.shared.round.store(*round, Ordering::SeqCst);
+            true
+        } else {
+            false
+        };
+        self.scratch.clear();
+        // Oversize encode: the leader's fault — deliver to nobody,
+        // blame nobody (same no-poison contract as FramedTransport).
+        if wire::encode_to_agent(msg, &mut self.scratch).is_err() {
+            return 0;
+        }
+        let mut delivered = 0;
+        for agent in 0..self.n {
+            if skip.get(agent).copied().unwrap_or(false) {
+                continue;
+            }
+            if self.enqueue(agent, announce) {
+                delivered += 1;
+            } else {
+                dropped.push(agent);
+            }
+        }
+        self.wake();
+        delivered
+    }
+
+    fn recv_deadline(&mut self, deadline: Option<Instant>) -> Recv {
+        match recv_deadline_on(&self.replies, deadline) {
+            Ok(ev) => self.map_event(ev),
+            Err(RecvEnd::Empty) => Recv::Empty,
+            Err(RecvEnd::Disconnected) => Recv::Disconnected,
+        }
+    }
+
+    fn try_recv(&mut self) -> Recv {
+        match self.replies.try_recv() {
+            Ok(ev) => self.map_event(ev),
+            Err(mpsc::TryRecvError::Empty) => Recv::Empty,
+            Err(mpsc::TryRecvError::Disconnected) => Recv::Disconnected,
+        }
+    }
+
+    fn frames_rejected(&self) -> u64 {
+        self.frames_rejected
+    }
+
+    fn shutdown(&mut self) {
+        if self.shut {
+            return;
+        }
+        self.shut = true;
+        // Best-effort Shutdown frame to every live agent…
+        self.scratch.clear();
+        if wire::encode_to_agent(&ToAgent::Shutdown, &mut self.scratch).is_ok() {
+            for q in self.shared.queues.iter() {
+                let mut q = q.lock().unwrap();
+                if q.alive && q.frames.len() < self.shared.cap {
+                    q.frames.push_back(self.scratch.clone());
+                }
+            }
+        }
+        self.wake();
+        // …give the I/O thread a bounded window to flush it…
+        let t0 = Instant::now();
+        while t0.elapsed() < SHUTDOWN_FLUSH {
+            let busy = self
+                .shared
+                .queues
+                .iter()
+                .any(|q| {
+                    let q = q.lock().unwrap();
+                    q.alive && !q.frames.is_empty()
+                });
+            if !busy {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // …then stop everything. Agents that missed the frame see the
+        // stop flag on their next read-timeout pass and exit anyway.
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.wake();
+        if let Some(h) = self.io_handle.take() {
+            let _ = h.join();
+        }
+        for h in self.agent_handles.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(p) = self.unix_path.take() {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+impl Drop for SocketTransport {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Bind the configured listener; returns it with the agents' connect
+/// target and the Unix socket path to unlink on shutdown (if any).
+fn bind(cfg: &JasdaConfig) -> (Listener, ConnectTo, Option<PathBuf>) {
+    match cfg.transport {
+        TransportKind::Tcp => {
+            let addr =
+                if cfg.listen_addr.is_empty() { "127.0.0.1:0" } else { cfg.listen_addr.as_str() };
+            let l = TcpListener::bind(addr)
+                .unwrap_or_else(|e| panic!("jasda: cannot bind tcp listener on {addr}: {e}"));
+            l.set_nonblocking(true).expect("nonblocking listener");
+            let local = l.local_addr().expect("listener address");
+            (Listener::Tcp(l), ConnectTo::Tcp(local), None)
+        }
+        TransportKind::Unix => {
+            let path = if cfg.listen_addr.is_empty() {
+                std::env::temp_dir().join(format!(
+                    "jasda-{}-{}.sock",
+                    std::process::id(),
+                    SOCK_SEQ.fetch_add(1, Ordering::SeqCst)
+                ))
+            } else {
+                PathBuf::from(&cfg.listen_addr)
+            };
+            // A stale socket file from a crashed run blocks bind.
+            let _ = std::fs::remove_file(&path);
+            let l = UnixListener::bind(&path).unwrap_or_else(|e| {
+                panic!("jasda: cannot bind unix listener on {}: {e}", path.display())
+            });
+            l.set_nonblocking(true).expect("nonblocking listener");
+            (Listener::Unix(l), ConnectTo::Unix(path.clone()), Some(path))
+        }
+        other => panic!("SocketTransport::spawn called with transport '{}'", other.name()),
+    }
+}
+
+/// Close `agent`'s connection (if any) and mark its queue dead.
+fn disconnect(shared: &Shared, conns: &mut [Option<ConnState>], agent: usize) {
+    if conns[agent].take().is_some() {
+        let mut q = shared.queues[agent].lock().unwrap();
+        q.alive = false;
+        // Unflushed frames died with the connection.
+        q.frames.clear();
+    }
+}
+
+/// Drain readable bytes from one connection, reassembling and
+/// delivering frames. Returns `false` when the connection must close.
+fn service_read(
+    shared: &Shared,
+    reply_tx: &mpsc::Sender<IoEvent>,
+    held: &mut Vec<(u64, usize, Vec<u8>)>,
+    st: &mut ConnState,
+    agent: usize,
+    buf: &mut [u8],
+) -> bool {
+    loop {
+        match st.conn.read(buf) {
+            Ok(0) => return false,
+            Ok(k) => {
+                st.reader.feed(&buf[..k]);
+                loop {
+                    match st.reader.next_frame() {
+                        Ok(Some(frame)) => deliver_reply(shared, reply_tx, held, agent, frame),
+                        Ok(None) => break,
+                        Err(_) => {
+                            // Desynchronized stream: every later byte is
+                            // garbage. Reject + drop the connection.
+                            let _ = reply_tx.send(IoEvent::Desync(agent));
+                            return false;
+                        }
+                    }
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return true,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return false,
+        }
+    }
+}
+
+/// Run one received reply frame through the reply-side fault plan, then
+/// hand it to the leader.
+fn deliver_reply(
+    shared: &Shared,
+    reply_tx: &mpsc::Sender<IoEvent>,
+    held: &mut Vec<(u64, usize, Vec<u8>)>,
+    agent: usize,
+    mut frame: Vec<u8>,
+) {
+    let round = shared.round.load(Ordering::SeqCst);
+    let mut plan = shared.reply_faults.lock().unwrap();
+    if plan.reply_crashed(agent, round) {
+        return;
+    }
+    if let Some(by) = plan.take_delay(agent, round) {
+        held.push((round + by, agent, frame));
+        return;
+    }
+    if FaultPlan::take_one_shot(&mut plan.corrupts, agent, round) && frame.len() > 4 {
+        // Flip the tag byte on the stream: the frame still parses as a
+        // frame but fails wire decoding → `Recv::Rejected`.
+        frame[4] ^= 0xFF;
+    }
+    drop(plan);
+    let _ = reply_tx.send(IoEvent::Frame(agent, frame));
+}
+
+/// Flush `agent`'s write buffer as far as the socket accepts. Returns
+/// `false` when the connection must close.
+fn service_write(shared: &Shared, st: &mut ConnState, agent: usize) -> bool {
+    loop {
+        if st.in_flight.is_none() {
+            let mut q = shared.queues[agent].lock().unwrap();
+            match q.frames.pop_front() {
+                Some(f) => st.in_flight = Some((f, 0)),
+                None => return true,
+            }
+        }
+        let (frame, pos) = st.in_flight.as_mut().expect("in-flight frame");
+        match st.conn.write(&frame[*pos..]) {
+            Ok(0) => return false,
+            Ok(k) => {
+                *pos += k;
+                if *pos == frame.len() {
+                    st.in_flight = None;
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return true,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return false,
+        }
+    }
+}
+
+/// A completed hello: attach (or refuse) the connection.
+fn admit(shared: &Shared, conns: &mut [Option<ConnState>], seen: &mut [bool], p: Pending) {
+    let agent = u32::from_le_bytes(p.hello) as usize;
+    if agent >= conns.len() {
+        return; // bogus hello: drop the connection
+    }
+    let round = shared.round.load(Ordering::SeqCst);
+    let refused = shared.reply_faults.lock().unwrap().send_crashed(agent, round, false);
+    if !refused {
+        // Replace any previous connection for this agent.
+        disconnect(shared, conns, agent);
+        {
+            let mut q = shared.queues[agent].lock().unwrap();
+            q.alive = true;
+            q.kill = false;
+            q.frames.clear();
+        }
+        let conn = p.conn;
+        conns[agent] = Some(ConnState { conn, reader: wire::FrameReader::new(), in_flight: None });
+    }
+    // Count the hello either way — the spawn barrier must not hang on
+    // an agent whose crash window opens at round 0. Counted last, so a
+    // leader that saw the barrier complete also sees the live queue.
+    if !seen[agent] {
+        seen[agent] = true;
+        shared.connected.fetch_add(1, Ordering::SeqCst);
+    }
+}
+
+/// The leader's single I/O thread: poll readiness across the wake
+/// pipe, the listener, half-identified connections, and every live
+/// agent connection; then service exactly what is ready.
+fn io_loop(
+    shared: Arc<Shared>,
+    listener: Listener,
+    wake_rx: UnixStream,
+    reply_tx: mpsc::Sender<IoEvent>,
+) {
+    let n = shared.queues.len();
+    let mut conns: Vec<Option<ConnState>> = (0..n).map(|_| None).collect();
+    let mut pending: Vec<Pending> = Vec::new();
+    // Delayed reply frames: `(release_round, agent, frame)`.
+    let mut held: Vec<(u64, usize, Vec<u8>)> = Vec::new();
+    let mut seen = vec![false; n];
+    let mut fds: Vec<PollFd> = Vec::new();
+    let mut conn_rows: Vec<usize> = Vec::new();
+    let mut buf = vec![0u8; 64 * 1024];
+
+    while !shared.stop.load(Ordering::SeqCst) {
+        // Release held stragglers whose round has come.
+        let round = shared.round.load(Ordering::SeqCst);
+        let mut i = 0;
+        while i < held.len() {
+            if held[i].0 <= round {
+                let (_, agent, frame) = held.swap_remove(i);
+                let _ = reply_tx.send(IoEvent::Frame(agent, frame));
+            } else {
+                i += 1;
+            }
+        }
+
+        // Crash kills: close marked connections once flushed.
+        for agent in 0..n {
+            let flushed = {
+                let q = shared.queues[agent].lock().unwrap();
+                q.kill && q.frames.is_empty()
+            };
+            let in_flight_done =
+                conns[agent].as_ref().map_or(true, |c| c.in_flight.is_none());
+            if flushed && in_flight_done {
+                disconnect(&shared, &mut conns, agent);
+                shared.queues[agent].lock().unwrap().kill = false;
+            }
+        }
+
+        // Build the poll set: wake pipe, listener, pending hellos,
+        // live connections (write interest only with queued output).
+        fds.clear();
+        fds.push(PollFd { fd: wake_rx.as_raw_fd(), events: POLLIN, revents: 0 });
+        fds.push(PollFd { fd: listener.as_raw_fd(), events: POLLIN, revents: 0 });
+        let pend0 = fds.len();
+        for p in &pending {
+            fds.push(PollFd { fd: p.conn.as_raw_fd(), events: POLLIN, revents: 0 });
+        }
+        let n_pending = pending.len();
+        conn_rows.clear();
+        for (agent, slot) in conns.iter().enumerate() {
+            if let Some(st) = slot {
+                let mut events = POLLIN;
+                let want_write = st.in_flight.is_some()
+                    || !shared.queues[agent].lock().unwrap().frames.is_empty();
+                if want_write {
+                    events |= POLLOUT;
+                }
+                fds.push(PollFd { fd: st.conn.as_raw_fd(), events, revents: 0 });
+                conn_rows.push(agent);
+            }
+        }
+
+        let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as NFds, POLL_TIMEOUT_MS) };
+        if rc < 0 {
+            continue; // EINTR: just re-enter the loop
+        }
+
+        // Wake pipe: drain it (its only job is ending the poll call).
+        if fds[0].revents != 0 {
+            loop {
+                match (&wake_rx).read(&mut buf) {
+                    Ok(0) => break,
+                    Ok(_) => continue,
+                    Err(_) => break,
+                }
+            }
+        }
+
+        // Live connections: read replies, flush queued frames.
+        for (k, &agent) in conn_rows.iter().enumerate() {
+            let r = fds[pend0 + n_pending + k].revents;
+            if r == 0 {
+                continue;
+            }
+            let mut dead = false;
+            if let Some(st) = conns[agent].as_mut() {
+                if r & (POLLIN | POLLERR | POLLHUP | POLLNVAL) != 0 {
+                    dead = !service_read(&shared, &reply_tx, &mut held, st, agent, &mut buf);
+                }
+                if !dead && r & POLLOUT != 0 {
+                    dead = !service_write(&shared, st, agent);
+                }
+            }
+            if dead {
+                disconnect(&shared, &mut conns, agent);
+            }
+        }
+
+        // Pending hellos (descending index: swap_remove-safe).
+        for idx in (0..n_pending).rev() {
+            let r = fds[pend0 + idx].revents;
+            if r == 0 {
+                continue;
+            }
+            let p = &mut pending[idx];
+            match p.conn.read(&mut p.hello[p.got..]) {
+                Ok(0) => {
+                    pending.swap_remove(idx);
+                }
+                Ok(k) => {
+                    p.got += k;
+                    if p.got == 4 {
+                        let p = pending.swap_remove(idx);
+                        admit(&shared, &mut conns, &mut seen, p);
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {}
+                Err(_) => {
+                    pending.swap_remove(idx);
+                }
+            }
+        }
+
+        // New connections.
+        if fds[1].revents != 0 {
+            loop {
+                match listener.accept() {
+                    Ok(conn) => {
+                        if conn.set_nonblocking(true).is_ok() {
+                            pending.push(Pending { conn, hello: [0; 4], got: 0 });
+                        }
+                    }
+                    Err(_) => break,
+                }
+            }
+        }
+    }
+    // Dropping `conns` and `listener` closes every socket; agents see
+    // EOF, check the stop flag, and exit.
+}
+
+/// One agent endpoint: connect (with retry), say hello, then run the
+/// shared `agent_loop` over the socket — reconnecting on any stream
+/// failure until the leader's stop flag is set. The identical job
+/// logic drives loopback channels, in-process frames, and sockets.
+fn agent_endpoint(agent: usize, job: Job, cfg: JasdaConfig, target: ConnectTo, shared: Arc<Shared>) {
+    struct Link {
+        conn: Option<Conn>,
+        reader: wire::FrameReader,
+    }
+    let link = Rc::new(RefCell::new(Link { conn: None, reader: wire::FrameReader::new() }));
+    let hello = (agent as u32).to_le_bytes();
+
+    let connect = {
+        let link = Rc::clone(&link);
+        let shared = Arc::clone(&shared);
+        let target = target.clone();
+        move || -> bool {
+            // Ensure a live, identified connection; `false` = stopping.
+            loop {
+                if shared.stop.load(Ordering::SeqCst) {
+                    return false;
+                }
+                if link.borrow().conn.is_some() {
+                    return true;
+                }
+                match target.connect() {
+                    Ok(mut c) => {
+                        let _ = c.set_read_timeout(Some(AGENT_READ_TIMEOUT));
+                        if c.write_all(&hello).is_ok() {
+                            let mut l = link.borrow_mut();
+                            l.reader.clear();
+                            l.conn = Some(c);
+                        }
+                    }
+                    Err(_) => std::thread::sleep(RECONNECT_PAUSE),
+                }
+            }
+        }
+    };
+
+    let recv = {
+        let link = Rc::clone(&link);
+        move || -> Option<ToAgent> {
+            let mut buf = [0u8; 16 * 1024];
+            loop {
+                if !connect() {
+                    return None;
+                }
+                let mut l = link.borrow_mut();
+                // Drain frames already reassembled before reading more.
+                loop {
+                    match l.reader.next_frame() {
+                        Ok(Some(frame)) => match wire::decode_to_agent(&frame) {
+                            Ok(msg) => return Some(msg),
+                            Err(_) => continue, // skip an undecodable frame
+                        },
+                        Ok(None) => break,
+                        Err(_) => {
+                            // Desync: drop the stream, reconnect clean.
+                            l.conn = None;
+                            l.reader.clear();
+                            break;
+                        }
+                    }
+                }
+                if l.conn.is_none() {
+                    continue;
+                }
+                match l.conn.as_mut().expect("live connection").read(&mut buf) {
+                    Ok(0) => {
+                        // EOF: the leader closed us (crash injection or
+                        // replacement). Pause before reconnecting so a
+                        // refuse-on-hello crash window doesn't become a
+                        // tight accept/close spin.
+                        l.conn = None;
+                        l.reader.clear();
+                        drop(l);
+                        std::thread::sleep(RECONNECT_PAUSE);
+                    }
+                    Ok(k) => {
+                        let chunk = buf[..k].to_vec();
+                        l.reader.feed(&chunk);
+                    }
+                    Err(e)
+                        if e.kind() == ErrorKind::WouldBlock
+                            || e.kind() == ErrorKind::TimedOut =>
+                    {
+                        // Read timeout: loop to re-check the stop flag.
+                    }
+                    Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                    Err(_) => {
+                        l.conn = None;
+                        l.reader.clear();
+                    }
+                }
+            }
+        }
+    };
+
+    let send = {
+        let link = Rc::clone(&link);
+        let mut out: Vec<u8> = Vec::new();
+        move |reply| -> bool {
+            out.clear();
+            if wire::encode_agent_reply(&reply, &mut out).is_err() {
+                // Oversized reply: the agent's own loss — swallow it
+                // (the leader's round deadline covers the missing bid).
+                return true;
+            }
+            let mut l = link.borrow_mut();
+            if let Some(c) = l.conn.as_mut() {
+                if c.write_all(&out).is_err() {
+                    // The reply died with the stream; reconnect on the
+                    // next receive. A lost reply is a crash-shaped
+                    // fault the leader's deadline already covers.
+                    l.conn = None;
+                    l.reader.clear();
+                }
+            }
+            true
+        }
+    };
+
+    super::agent_loop(job, cfg, recv, send);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::messages::{AgentReply, CompletionReport};
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::trp::{Phase, Trp};
+
+    fn jobs(n: u32) -> Vec<Job> {
+        (0..n)
+            .map(|i| {
+                let trp = Trp {
+                    phases: vec![Phase::new(800.0, 4.0, 0.2, 0.1)],
+                    duration_cv: 0.05,
+                };
+                Job::new(i, "p", (i as u64) * 100, trp, None, 1.0, 300.0, 0.0)
+            })
+            .collect()
+    }
+
+    fn jcfg(kind: TransportKind) -> JasdaConfig {
+        let mut c = SimConfig::default().jasda;
+        c.transport = kind;
+        c.fmp_bins = 16;
+        c
+    }
+
+    #[test]
+    fn round_trips_frames_over_unix_sockets() {
+        let cfg = jcfg(TransportKind::Unix);
+        let mut t = SocketTransport::spawn(jobs(3), &cfg, FaultPlan::default());
+        assert_eq!(t.agents(), 3);
+        let announce = ToAgent::Announce {
+            round: 0,
+            now: 200,
+            windows: Arc::new(vec![crate::mig::Window {
+                slice: 0,
+                capacity_gb: 20.0,
+                speed: 1.0,
+                interval: crate::types::Interval::new(200, 10_000),
+            }]),
+        };
+        let mut dropped = Vec::new();
+        let delivered = t.broadcast(&announce, &[], &mut dropped);
+        assert_eq!(delivered, 3);
+        assert!(dropped.is_empty());
+        let mut replies = 0;
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while replies < delivered {
+            match t.recv_deadline(Some(deadline)) {
+                Recv::Msg(AgentReply::Bid { round, .. }) => {
+                    assert_eq!(round, 0);
+                    replies += 1;
+                }
+                other => panic!("expected a bid, got {other:?}"),
+            }
+        }
+        t.shutdown();
+        t.shutdown(); // idempotent
+    }
+
+    #[test]
+    fn round_trips_frames_over_tcp() {
+        let cfg = jcfg(TransportKind::Tcp);
+        let mut t = SocketTransport::spawn(jobs(2), &cfg, FaultPlan::default());
+        let msg = ToAgent::Completed(CompletionReport {
+            planned_work: 1.0,
+            realized_work: 1.0,
+            at: 10,
+        });
+        assert!(t.send(0, &msg), "send to a connected agent must land");
+        t.shutdown();
+    }
+
+    #[test]
+    fn expired_deadline_is_empty_even_with_replies_queued() {
+        let cfg = jcfg(TransportKind::Unix);
+        let mut t = SocketTransport::spawn(jobs(1), &cfg, FaultPlan::default());
+        let announce = ToAgent::Announce {
+            round: 0,
+            now: 0,
+            windows: Arc::new(vec![crate::mig::Window {
+                slice: 0,
+                capacity_gb: 20.0,
+                speed: 1.0,
+                interval: crate::types::Interval::new(0, 10_000),
+            }]),
+        };
+        assert!(t.send(0, &announce));
+        // Let the reply arrive at the leader's queue…
+        std::thread::sleep(Duration::from_millis(100));
+        // …then an already-expired deadline still dequeues nothing.
+        let expired = Instant::now();
+        assert!(matches!(t.recv_deadline(Some(expired)), Recv::Empty));
+        match t.recv_deadline(Some(Instant::now() + Duration::from_secs(10))) {
+            Recv::Msg(AgentReply::Bid { round, .. }) => assert_eq!(round, 0),
+            other => panic!("queued bid must survive the expired receive, got {other:?}"),
+        }
+        t.shutdown();
+    }
+
+    #[test]
+    fn desynced_stream_surfaces_as_rejected() {
+        // A raw client that says hello and then writes garbage where a
+        // length prefix belongs: the leader must attribute the reject
+        // and survive.
+        let mut cfg = jcfg(TransportKind::Unix);
+        cfg.listen_addr = String::new();
+        let mut t = SocketTransport::spawn(jobs(1), &cfg, FaultPlan::default());
+        let path = t.unix_path.clone().expect("unix transport binds a path");
+        let mut rogue = UnixStream::connect(path).expect("connect rogue");
+        rogue.write_all(&0u32.to_le_bytes()).expect("hello");
+        let huge = (u32::MAX).to_le_bytes();
+        rogue.write_all(&huge).expect("bogus prefix");
+        match t.recv_deadline(Some(Instant::now() + Duration::from_secs(10))) {
+            Recv::Rejected { agent } => assert_eq!(agent, 0),
+            other => panic!("desync must surface as Rejected, got {other:?}"),
+        }
+        assert_eq!(t.frames_rejected(), 1);
+        t.shutdown();
+    }
+}

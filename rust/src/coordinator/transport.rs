@@ -13,10 +13,20 @@
 //!   send, decoded on receive, on both sides. In-process transport of
 //!   real bytes — the deployment-shaped path, exercised by the parity
 //!   tests to prove serialization changes no decision.
+//! - [`SocketTransport`](super::socket::SocketTransport) — the same
+//!   frames over real TCP or Unix-domain sockets (`jasda.transport =
+//!   "tcp" | "unix"`): agents connect to the leader's listener and the
+//!   leader serves every connection from **one** poll-driven I/O
+//!   thread, reassembling frames from partial reads with
+//!   [`wire::FrameReader`](super::wire::FrameReader). Same protocol,
+//!   real I/O.
 //!
-//! A third, [`FaultyTransport`](super::faults::FaultyTransport), wraps
-//! either of these to inject deterministic adversity (crashes, delays,
-//! corruption, drops) for the robustness tests.
+//! [`FaultyTransport`](super::faults::FaultyTransport) wraps the
+//! in-process transports to inject deterministic adversity (crashes,
+//! delays, corruption, drops) for the robustness tests; the socket
+//! transport applies the same [`FaultPlan`](super::faults::FaultPlan)
+//! directly at the socket layer (crash = close the connection, corrupt
+//! = flip bytes on the stream, delay = hold the write).
 //!
 //! # Backpressure
 //!
@@ -41,6 +51,13 @@
 //! in time, instead of blocking forever on an agent that died after the
 //! announce was delivered. Passing `None` as the deadline restores the
 //! original block-until-reply behavior bit for bit.
+//!
+//! An **already-expired** deadline dequeues nothing: expiry is checked
+//! before any receive attempt, so a queued reply can never be delivered
+//! *after* an instant the caller already declared passed (a bare
+//! `recv_timeout` with a zero duration does not guarantee that). All
+//! bundled transports route through one shared helper, so the pinned
+//! semantics cannot drift between them.
 //!
 //! # Decode failures
 //!
@@ -129,6 +146,10 @@ pub trait Transport {
     /// Block for the next agent reply. With `Some(deadline)` give up at
     /// that instant and return [`Recv::Empty`]; with `None` block until
     /// a reply or disconnect (the pre-deadline behavior).
+    ///
+    /// An already-expired deadline must return [`Recv::Empty`] without
+    /// dequeuing anything, even when replies are queued — see the
+    /// module docs (# Deadlines).
     fn recv_deadline(&mut self, deadline: Option<Instant>) -> Recv;
 
     /// Non-blocking receive: whatever is queued right now, else
@@ -145,6 +166,46 @@ pub trait Transport {
     /// Tear down: close every agent inbox and join the agent threads.
     /// Idempotent.
     fn shutdown(&mut self);
+}
+
+/// How a deadline-aware receive ended without a message.
+pub(crate) enum RecvEnd {
+    /// Deadline passed (or was already expired) with nothing dequeued.
+    Empty,
+    /// Every sender is gone.
+    Disconnected,
+}
+
+/// Deadline-aware receive on an `mpsc` reply stream — the one
+/// implementation of the pinned `recv_deadline` semantics, shared by
+/// every bundled transport (loopback, framed, socket).
+///
+/// The intended already-expired behavior, pinned here: a deadline at or
+/// before "now" returns [`RecvEnd::Empty`] **without dequeuing**, even
+/// if a reply is sitting in the queue. `recv_timeout` with a zero
+/// duration does not guarantee that — it may still take an available
+/// message, delivering a reply *after* the round deadline the
+/// collection loop already declared passed — so expiry is checked
+/// before any receive attempt. `None` blocks until a reply or
+/// disconnect.
+pub(crate) fn recv_deadline_on<T>(
+    rx: &mpsc::Receiver<T>,
+    deadline: Option<Instant>,
+) -> Result<T, RecvEnd> {
+    match deadline {
+        None => rx.recv().map_err(|_| RecvEnd::Disconnected),
+        Some(d) => {
+            let now = Instant::now();
+            if d <= now {
+                return Err(RecvEnd::Empty);
+            }
+            match rx.recv_timeout(d - now) {
+                Ok(got) => Ok(got),
+                Err(mpsc::RecvTimeoutError::Timeout) => Err(RecvEnd::Empty),
+                Err(mpsc::RecvTimeoutError::Disconnected) => Err(RecvEnd::Disconnected),
+            }
+        }
+    }
 }
 
 /// In-process transport: typed messages over std channels (default).
@@ -197,19 +258,10 @@ impl Transport for LoopbackTransport {
     }
 
     fn recv_deadline(&mut self, deadline: Option<Instant>) -> Recv {
-        match deadline {
-            None => match self.replies.recv() {
-                Ok(reply) => Recv::Msg(reply),
-                Err(_) => Recv::Disconnected,
-            },
-            Some(d) => {
-                let left = d.saturating_duration_since(Instant::now());
-                match self.replies.recv_timeout(left) {
-                    Ok(reply) => Recv::Msg(reply),
-                    Err(mpsc::RecvTimeoutError::Timeout) => Recv::Empty,
-                    Err(mpsc::RecvTimeoutError::Disconnected) => Recv::Disconnected,
-                }
-            }
+        match recv_deadline_on(&self.replies, deadline) {
+            Ok(reply) => Recv::Msg(reply),
+            Err(RecvEnd::Empty) => Recv::Empty,
+            Err(RecvEnd::Disconnected) => Recv::Disconnected,
         }
     }
 
@@ -277,8 +329,15 @@ impl FramedTransport {
                     },
                     |reply| {
                         buf.clear();
-                        wire::encode_agent_reply(&reply, &mut buf);
-                        rtx.send((agent, buf.clone())).is_ok()
+                        match wire::encode_agent_reply(&reply, &mut buf) {
+                            Ok(()) => rtx.send((agent, buf.clone())).is_ok(),
+                            // An oversized reply is this agent's own
+                            // loss: swallow it (the leader's round
+                            // deadline covers the missing bid) rather
+                            // than tearing the agent down over one bad
+                            // message.
+                            Err(_) => true,
+                        }
                     },
                 );
             }));
@@ -316,14 +375,23 @@ impl Transport for FramedTransport {
 
     fn send(&mut self, agent: usize, msg: &ToAgent) -> bool {
         self.scratch.clear();
-        wire::encode_to_agent(msg, &mut self.scratch);
+        if wire::encode_to_agent(msg, &mut self.scratch).is_err() {
+            return false;
+        }
         self.to_agents[agent].try_send(self.scratch.clone()).is_ok()
     }
 
     fn broadcast(&mut self, msg: &ToAgent, skip: &[bool], dropped: &mut Vec<usize>) -> usize {
         dropped.clear();
         self.scratch.clear();
-        wire::encode_to_agent(msg, &mut self.scratch);
+        // An encode failure (oversized frame) is the *sender's* fault:
+        // deliver to nobody and blame nobody. Reporting every receiver
+        // in `dropped` would feed their quarantine streaks for a frame
+        // the leader produced — the poisoning the encode-time cap
+        // exists to prevent.
+        if wire::encode_to_agent(msg, &mut self.scratch).is_err() {
+            return 0;
+        }
         let mut delivered = 0;
         for (agent, tx) in self.to_agents.iter().enumerate() {
             if skip.get(agent).copied().unwrap_or(false) {
@@ -339,19 +407,10 @@ impl Transport for FramedTransport {
     }
 
     fn recv_deadline(&mut self, deadline: Option<Instant>) -> Recv {
-        let (agent, frame) = match deadline {
-            None => match self.replies.recv() {
-                Ok(got) => got,
-                Err(_) => return Recv::Disconnected,
-            },
-            Some(d) => {
-                let left = d.saturating_duration_since(Instant::now());
-                match self.replies.recv_timeout(left) {
-                    Ok(got) => got,
-                    Err(mpsc::RecvTimeoutError::Timeout) => return Recv::Empty,
-                    Err(mpsc::RecvTimeoutError::Disconnected) => return Recv::Disconnected,
-                }
-            }
+        let (agent, frame) = match recv_deadline_on(&self.replies, deadline) {
+            Ok(got) => got,
+            Err(RecvEnd::Empty) => return Recv::Empty,
+            Err(RecvEnd::Disconnected) => return Recv::Disconnected,
         };
         self.decode_reply(agent, &frame)
     }
@@ -371,9 +430,10 @@ impl Transport for FramedTransport {
 
     fn shutdown(&mut self) {
         self.scratch.clear();
-        wire::encode_to_agent(&ToAgent::Shutdown, &mut self.scratch);
-        for tx in &self.to_agents {
-            let _ = tx.try_send(self.scratch.clone());
+        if wire::encode_to_agent(&ToAgent::Shutdown, &mut self.scratch).is_ok() {
+            for tx in &self.to_agents {
+                let _ = tx.try_send(self.scratch.clone());
+            }
         }
         self.to_agents.clear();
         for h in self.handles.drain(..) {
@@ -462,7 +522,8 @@ mod tests {
         wire::encode_agent_reply(
             &AgentReply::Bid { job: 3, round: 1, bids: vec![], done: false },
             &mut good,
-        );
+        )
+        .unwrap();
         reply_tx.send((0, good)).unwrap();
         drop(reply_tx);
         // The garbage frame is surfaced — attributed to its sender and
@@ -481,5 +542,61 @@ mod tests {
         }
         assert!(matches!(t.recv_deadline(None), Recv::Disconnected), "disconnect after draining");
         assert_eq!(t.frames_rejected(), 1);
+    }
+
+    #[test]
+    fn expired_deadline_never_dequeues_a_waiting_reply() {
+        // Regression (pinned in `recv_deadline_on`): a deadline that
+        // has already passed returns Empty even when a reply is queued.
+        // The old per-transport code computed a saturating zero wait
+        // and called recv_timeout, which may still dequeue — delivering
+        // a reply *after* the round deadline the collection loop had
+        // declared passed. Every transport shares the helper, so one
+        // queue-backed check covers loopback, framed, and socket.
+        let (reply_tx, replies) = mpsc::channel::<AgentReply>();
+        let mut t = LoopbackTransport::from_parts(Vec::new(), replies, Vec::new());
+        reply_tx.send(AgentReply::Bid { job: 1, round: 0, bids: vec![], done: false }).unwrap();
+        let expired = Instant::now();
+        for _ in 0..3 {
+            assert!(
+                matches!(t.recv_deadline(Some(expired)), Recv::Empty),
+                "expired deadline must not dequeue"
+            );
+        }
+        // The reply was left in place: a live deadline still takes it.
+        match t.recv_deadline(Some(Instant::now() + Duration::from_secs(5))) {
+            Recv::Msg(AgentReply::Bid { job, .. }) => assert_eq!(job, 1),
+            other => panic!("queued reply must survive expired receives, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn framed_broadcast_oversize_poisons_nobody() {
+        use crate::mig::Window;
+        use crate::types::Interval;
+        use std::sync::Arc;
+        // Enough windows to push the Announce frame over MAX_FRAME
+        // (19 encoded bytes per window at these field values).
+        let n = wire::MAX_FRAME / 16;
+        let windows: Vec<Window> = (0..n)
+            .map(|_| Window {
+                slice: 1,
+                capacity_gb: 10.0,
+                speed: 0.5,
+                interval: Interval::new(1, 2),
+            })
+            .collect();
+        let msg = ToAgent::Announce { round: 1, now: 0, windows: Arc::new(windows) };
+        let (tx, rx) = mpsc::sync_channel::<Vec<u8>>(4);
+        let (_reply_tx, replies) = mpsc::channel::<(usize, Vec<u8>)>();
+        let mut t = FramedTransport::from_parts(vec![tx], replies, Vec::new());
+        let mut dropped = Vec::new();
+        // The leader produced the bad frame: deliver to nobody, blame
+        // nobody — receivers reported as dropped would feed quarantine
+        // streaks for the sender's fault.
+        assert_eq!(t.broadcast(&msg, &[], &mut dropped), 0);
+        assert!(dropped.is_empty(), "oversize encode must not blame receivers");
+        assert!(!t.send(0, &msg), "single-send of an oversized message fails too");
+        assert!(rx.try_recv().is_err(), "no frame may reach the agent");
     }
 }

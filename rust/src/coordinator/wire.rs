@@ -35,6 +35,17 @@
 //! FMP table indices are range-checked, and a decoded payload must be
 //! consumed exactly ([`WireError::Trailing`]). The truncation/garbage
 //! tests below drive every reject path.
+//!
+//! The cap cuts both ways: encoding enforces [`MAX_FRAME`] too
+//! ([`WireError::Oversize`]), so a leader can never emit a frame its
+//! own peers are guaranteed to reject — see [`end_frame`].
+//!
+//! # Frame validation
+//!
+//! There is exactly one frame-validation path: [`frame_len`] checks a
+//! length prefix against [`MAX_FRAME`], and both [`frame_payload`]
+//! (whole-frame transports) and [`FrameReader`] (byte-stream
+//! transports) go through it, so the two framings cannot drift.
 
 use super::messages::{AgentReply, Award, CompletionReport, Resync, ToAgent};
 use crate::job::variants::{DeclaredFeatures, SysFeatures};
@@ -57,7 +68,9 @@ const TAG_SHUTDOWN: u8 = 4;
 const TAG_RESYNC: u8 = 5;
 const TAG_BID: u8 = 0x11;
 
-/// Decoding failure. Encoding is infallible.
+/// Codec failure. Every variant but [`Oversize`](WireError::Oversize)
+/// is a decode-side reject; `Oversize` is the single encode-side error
+/// (a message whose frame would exceed [`MAX_FRAME`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum WireError {
     /// Ran out of bytes mid-value.
@@ -73,6 +86,10 @@ pub enum WireError {
     Frame,
     /// The payload decoded cleanly but left unconsumed bytes.
     Trailing,
+    /// Encode-side reject: the message's frame would exceed
+    /// [`MAX_FRAME`]. The output buffer is restored to its pre-frame
+    /// length, so nothing half-written can reach the wire.
+    Oversize,
 }
 
 impl std::fmt::Display for WireError {
@@ -83,6 +100,7 @@ impl std::fmt::Display for WireError {
             WireError::Varint => write!(f, "malformed or out-of-range varint"),
             WireError::Frame => write!(f, "malformed frame"),
             WireError::Trailing => write!(f, "trailing bytes after message"),
+            WireError::Oversize => write!(f, "message exceeds MAX_FRAME at encode time"),
         }
     }
 }
@@ -200,23 +218,108 @@ fn begin_frame(out: &mut Vec<u8>) -> usize {
 }
 
 /// Patch the length prefix reserved by [`begin_frame`].
-fn end_frame(out: &mut Vec<u8>, at: usize) {
+///
+/// Enforces [`MAX_FRAME`] at encode time: an over-cap message truncates
+/// `out` back to where the frame began and reports
+/// [`WireError::Oversize`], so the sender sees the failure instead of
+/// emitting a frame every receiver is guaranteed to reject (which,
+/// with receiver-attributed rejects feeding quarantine, would punish
+/// the *peers* for a frame the sender produced).
+fn end_frame(out: &mut Vec<u8>, at: usize) -> Result<(), WireError> {
     let len = out.len() - at - 4;
-    debug_assert!(len <= MAX_FRAME, "outgoing frame over MAX_FRAME");
+    if len > MAX_FRAME {
+        out.truncate(at);
+        return Err(WireError::Oversize);
+    }
     out[at..at + 4].copy_from_slice(&(len as u32).to_le_bytes());
+    Ok(())
+}
+
+/// Validate a 4-byte length prefix and return the payload length.
+///
+/// The **single** frame-validation gate: [`frame_payload`] and
+/// [`FrameReader`] both call this, so whole-frame and byte-stream
+/// transports apply the identical [`MAX_FRAME`] cap.
+pub fn frame_len(prefix: [u8; 4]) -> Result<usize, WireError> {
+    let len = u32::from_le_bytes(prefix) as usize;
+    if len > MAX_FRAME {
+        return Err(WireError::Frame);
+    }
+    Ok(len)
 }
 
 /// Validate a frame's length prefix and return its payload.
 pub fn frame_payload(frame: &[u8]) -> Result<&[u8], WireError> {
-    let prefix = frame.get(..4).ok_or(WireError::Frame)?;
-    let len = u32::from_le_bytes(prefix.try_into().expect("4-byte slice")) as usize;
-    if len > MAX_FRAME {
-        return Err(WireError::Frame);
-    }
+    let prefix: [u8; 4] =
+        frame.get(..4).ok_or(WireError::Frame)?.try_into().expect("4-byte slice");
+    let len = frame_len(prefix)?;
     if frame.len() - 4 != len {
         return Err(WireError::Frame);
     }
     Ok(&frame[4..])
+}
+
+/// Incremental frame reassembler for byte-stream transports.
+///
+/// A socket read hands back an arbitrary run of bytes — possibly half a
+/// length prefix, possibly three frames and a bit of a fourth. `feed`
+/// the bytes as they arrive and drain complete frames with
+/// [`next_frame`]; each yielded `Vec<u8>` is a full frame (prefix
+/// included), ready for [`decode_to_agent`] / [`decode_agent_reply`].
+///
+/// Length prefixes are validated through [`frame_len`] — the same gate
+/// [`frame_payload`] uses — before any allocation sized by them. An
+/// `Err` from [`next_frame`] means the stream is desynchronized (there
+/// is no way to find the next frame boundary after a bad prefix): the
+/// caller must drop the connection and [`clear`](FrameReader::clear)
+/// the reader before reusing it.
+#[derive(Default)]
+pub struct FrameReader {
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl FrameReader {
+    /// An empty reader.
+    pub fn new() -> Self {
+        FrameReader::default()
+    }
+
+    /// Append bytes read off the stream. Consumed frames are compacted
+    /// away here, so the buffer never holds more than the unconsumed
+    /// tail plus this read.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        if self.pos > 0 {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Pop the next complete frame, `Ok(None)` if more bytes are
+    /// needed, or `Err` if the stream is desynchronized (bad length
+    /// prefix — drop the connection).
+    pub fn next_frame(&mut self) -> Result<Option<Vec<u8>>, WireError> {
+        let avail = self.buf.len() - self.pos;
+        if avail < 4 {
+            return Ok(None);
+        }
+        let prefix: [u8; 4] =
+            self.buf[self.pos..self.pos + 4].try_into().expect("4-byte slice");
+        let len = frame_len(prefix)?;
+        if avail < 4 + len {
+            return Ok(None);
+        }
+        let frame = self.buf[self.pos..self.pos + 4 + len].to_vec();
+        self.pos += 4 + len;
+        Ok(Some(frame))
+    }
+
+    /// Drop all buffered bytes (reconnect path).
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.pos = 0;
+    }
 }
 
 // --- ToAgent --------------------------------------------------------------
@@ -238,7 +341,10 @@ fn read_window(r: &mut Reader<'_>) -> Result<Window, WireError> {
 }
 
 /// Append one framed leader → agent message to `out`.
-pub fn encode_to_agent(msg: &ToAgent, out: &mut Vec<u8>) {
+///
+/// Fails only with [`WireError::Oversize`] (frame over [`MAX_FRAME`]),
+/// in which case `out` is restored to its incoming length.
+pub fn encode_to_agent(msg: &ToAgent, out: &mut Vec<u8>) -> Result<(), WireError> {
     let at = begin_frame(out);
     match msg {
         ToAgent::Announce { round, now, windows } => {
@@ -274,7 +380,7 @@ pub fn encode_to_agent(msg: &ToAgent, out: &mut Vec<u8>) {
         }
         ToAgent::Shutdown => out.push(TAG_SHUTDOWN),
     }
-    end_frame(out, at);
+    end_frame(out, at)
 }
 
 /// Decode one framed leader → agent message.
@@ -381,7 +487,10 @@ fn read_variant(r: &mut Reader<'_>, job: u32, fmps: &[Arc<Fmp>]) -> Result<Varia
 /// The variant `job` fields are not written (every variant in a bid
 /// belongs to the bidding job); decode restores them from the reply's
 /// `job` field.
-pub fn encode_agent_reply(msg: &AgentReply, out: &mut Vec<u8>) {
+///
+/// Fails only with [`WireError::Oversize`] (frame over [`MAX_FRAME`]),
+/// in which case `out` is restored to its incoming length.
+pub fn encode_agent_reply(msg: &AgentReply, out: &mut Vec<u8>) -> Result<(), WireError> {
     let AgentReply::Bid { job, round, bids, done } = msg;
     let at = begin_frame(out);
     out.push(TAG_BID);
@@ -422,7 +531,7 @@ pub fn encode_agent_reply(msg: &AgentReply, out: &mut Vec<u8>) {
             put_variant(out, v, idx);
         }
     }
-    end_frame(out, at);
+    end_frame(out, at)
 }
 
 /// Decode one framed agent → leader message.
@@ -529,7 +638,7 @@ mod tests {
         ];
         let msg = ToAgent::Announce { round: 42, now: 1_050, windows: Arc::new(windows.clone()) };
         let mut buf = Vec::new();
-        encode_to_agent(&msg, &mut buf);
+        encode_to_agent(&msg, &mut buf).unwrap();
         match decode_to_agent(&buf).unwrap() {
             ToAgent::Announce { round, now, windows: got } => {
                 assert_eq!(round, 42);
@@ -546,7 +655,8 @@ mod tests {
         encode_to_agent(
             &ToAgent::Awarded(Award { round: 7, variant_ids: vec![0, 3, u32::MAX], now: 175 }),
             &mut buf,
-        );
+        )
+        .unwrap();
         match decode_to_agent(&buf).unwrap() {
             ToAgent::Awarded(a) => {
                 assert_eq!(a.round, 7);
@@ -558,7 +668,7 @@ mod tests {
 
         buf.clear();
         let c = CompletionReport { planned_work: 300.5, realized_work: 299.25, at: 9_001 };
-        encode_to_agent(&ToAgent::Completed(c), &mut buf);
+        encode_to_agent(&ToAgent::Completed(c), &mut buf).unwrap();
         match decode_to_agent(&buf).unwrap() {
             ToAgent::Completed(got) => {
                 assert_eq!(got.planned_work.to_bits(), 300.5f64.to_bits());
@@ -569,7 +679,7 @@ mod tests {
         }
 
         buf.clear();
-        encode_to_agent(&ToAgent::Shutdown, &mut buf);
+        encode_to_agent(&ToAgent::Shutdown, &mut buf).unwrap();
         assert!(matches!(decode_to_agent(&buf).unwrap(), ToAgent::Shutdown));
     }
 
@@ -582,7 +692,7 @@ mod tests {
             done_work: 123.456789,
             outstanding_awards: 0.015625,
         };
-        encode_to_agent(&ToAgent::Resync(rs), &mut buf);
+        encode_to_agent(&ToAgent::Resync(rs), &mut buf).unwrap();
         match decode_to_agent(&buf).unwrap() {
             ToAgent::Resync(got) => {
                 assert_eq!(got.round, 19);
@@ -611,7 +721,7 @@ mod tests {
         ];
         let msg = AgentReply::Bid { job: 9, round: 3, bids: bids.clone(), done: false };
         let mut buf = Vec::new();
-        encode_agent_reply(&msg, &mut buf);
+        encode_agent_reply(&msg, &mut buf).unwrap();
         let AgentReply::Bid { job, round, bids: got, done } = decode_agent_reply(&buf).unwrap();
         assert_eq!(job, 9);
         assert_eq!(round, 3);
@@ -640,7 +750,7 @@ mod tests {
             done: true,
         };
         let mut buf = Vec::new();
-        encode_agent_reply(&msg, &mut buf);
+        encode_agent_reply(&msg, &mut buf).unwrap();
         // Any prefix shorter than the full frame fails the length check.
         for cut in 0..buf.len() {
             assert!(decode_agent_reply(&buf[..cut]).is_err(), "cut at {cut} accepted");
@@ -658,7 +768,7 @@ mod tests {
     #[test]
     fn bad_tags_are_rejected() {
         let mut buf = Vec::new();
-        encode_to_agent(&ToAgent::Shutdown, &mut buf);
+        encode_to_agent(&ToAgent::Shutdown, &mut buf).unwrap();
         let mut bad = buf.clone();
         bad[4] = 0xEE;
         assert_eq!(decode_to_agent(&bad).unwrap_err(), WireError::BadTag(0xEE));
@@ -669,7 +779,7 @@ mod tests {
     #[test]
     fn trailing_bytes_are_rejected() {
         let mut buf = Vec::new();
-        encode_to_agent(&ToAgent::Shutdown, &mut buf);
+        encode_to_agent(&ToAgent::Shutdown, &mut buf).unwrap();
         buf.push(0);
         let plen = (buf.len() - 4) as u32;
         buf[0..4].copy_from_slice(&plen.to_le_bytes());
@@ -709,5 +819,116 @@ mod tests {
             let _ = decode_to_agent(&frame);
             let _ = decode_agent_reply(&frame);
         }
+    }
+
+    #[test]
+    fn over_cap_message_fails_to_encode_and_restores_buffer() {
+        // A just-over-cap bid must fail at *encode* time with a real
+        // error — not ship a frame every receiver rejects (poisoning
+        // the round and the receivers' health streaks). 16 bytes/bin
+        // (mu + sigma), so this many bins crosses MAX_FRAME by a hair.
+        let bins = MAX_FRAME / 16 + 1;
+        let big = Arc::new(Fmp { mu: vec![0.5; bins], sigma: vec![0.25; bins] });
+        let msg = AgentReply::Bid {
+            job: 1,
+            round: 2,
+            bids: vec![vec![variant(0, 1, &big)]],
+            done: false,
+        };
+        let mut buf = b"prior".to_vec();
+        assert_eq!(encode_agent_reply(&msg, &mut buf), Err(WireError::Oversize));
+        assert_eq!(buf, b"prior", "failed encode must not leave a partial frame");
+        // The buffer stays usable: an in-cap message encodes after the
+        // failure and decodes cleanly.
+        buf.clear();
+        encode_to_agent(&ToAgent::Shutdown, &mut buf).unwrap();
+        assert!(matches!(decode_to_agent(&buf).unwrap(), ToAgent::Shutdown));
+    }
+
+    /// A three-frame stream exercising every message shape the reader
+    /// will see: a windowed announce, a multi-variant bid, a shutdown.
+    fn sample_stream() -> (Vec<u8>, Vec<Vec<u8>>) {
+        let f = fmp(1.0, 8);
+        let mut frames = Vec::new();
+        let mut one = Vec::new();
+        encode_to_agent(
+            &ToAgent::Announce {
+                round: 3,
+                now: 250,
+                windows: Arc::new(vec![Window {
+                    slice: 1,
+                    capacity_gb: 10.0,
+                    speed: 2.0 / 7.0,
+                    interval: Interval::new(50, 900),
+                }]),
+            },
+            &mut one,
+        )
+        .unwrap();
+        frames.push(one.clone());
+        one.clear();
+        encode_agent_reply(
+            &AgentReply::Bid {
+                job: 4,
+                round: 3,
+                bids: vec![vec![variant(0, 4, &f), variant(1, 4, &f)]],
+                done: false,
+            },
+            &mut one,
+        )
+        .unwrap();
+        frames.push(one.clone());
+        one.clear();
+        encode_to_agent(&ToAgent::Shutdown, &mut one).unwrap();
+        frames.push(one);
+        let stream: Vec<u8> = frames.iter().flatten().copied().collect();
+        (stream, frames)
+    }
+
+    fn drain(r: &mut FrameReader) -> Vec<Vec<u8>> {
+        let mut out = Vec::new();
+        while let Some(f) = r.next_frame().expect("valid stream") {
+            out.push(f);
+        }
+        out
+    }
+
+    #[test]
+    fn frame_reader_reassembles_at_every_split_point() {
+        // Per-byte fragmentation sweep: whatever point the stream is
+        // cut at — mid-prefix, mid-payload, on a frame boundary — the
+        // reader yields the identical frame sequence.
+        let (stream, frames) = sample_stream();
+        for split in 0..=stream.len() {
+            let mut r = FrameReader::new();
+            let mut got = Vec::new();
+            r.feed(&stream[..split]);
+            got.extend(drain(&mut r));
+            r.feed(&stream[split..]);
+            got.extend(drain(&mut r));
+            assert_eq!(got, frames, "split at {split} changed the frame sequence");
+        }
+        // Worst case: one byte per read.
+        let mut r = FrameReader::new();
+        let mut got = Vec::new();
+        for &b in &stream {
+            r.feed(&[b]);
+            got.extend(drain(&mut r));
+        }
+        assert_eq!(got, frames, "byte-at-a-time feed changed the frame sequence");
+    }
+
+    #[test]
+    fn frame_reader_rejects_oversized_prefix_and_recovers_on_clear() {
+        let mut r = FrameReader::new();
+        r.feed(&u32::MAX.to_le_bytes());
+        assert_eq!(r.next_frame(), Err(WireError::Frame), "same cap as frame_payload");
+        // Desync is sticky until the caller clears (drop-connection
+        // path); after clear the reader works again.
+        assert_eq!(r.next_frame(), Err(WireError::Frame));
+        r.clear();
+        let (stream, frames) = sample_stream();
+        r.feed(&stream);
+        assert_eq!(drain(&mut r), frames);
     }
 }

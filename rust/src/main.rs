@@ -178,9 +178,10 @@ fn cmd_protocol(args: &Args, cfg: SimConfig) -> anyhow::Result<()> {
     let max_rounds =
         args.opt_parse("max-rounds", 200_000u64).map_err(|e| anyhow::anyhow!("{e}"))?;
     let jobs = workload(&cfg, None)?;
+    let transport = cfg.jasda.transport.name();
     let out = jasda::coordinator::run_protocol(cfg, jobs, max_rounds);
     println!(
-        "protocol: rounds={} announcements={} windows={} (+{} silent) bids={} \
+        "protocol[{transport}]: rounds={} announcements={} windows={} (+{} silent) bids={} \
          variants={} awards={} conflicts={} completed={}/{} vtime={} wall={:?} \
          decision={:.0}ns/round",
         out.rounds,

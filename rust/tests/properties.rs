@@ -905,6 +905,121 @@ fn prop_coordinator_decisions_match_scheduler() {
 }
 
 #[test]
+#[cfg(unix)]
+fn prop_socket_transports_decision_identical_to_loopback() {
+    // ISSUE 9 acceptance: moving the frames onto real sockets changes
+    // no decision. For tcp and unix x shards in {1, 2, 4}, the traced
+    // per-round windows and awards are bit-identical to the loopback
+    // run of the same case — and at shards=1 to `run_reference`, the
+    // in-process oracle. This holds because the spawn barrier delivers
+    // round 0 to every agent, collection without a deadline blocks for
+    // every reply, bids are stored by slot (arrival order free), and
+    // the bounded write buffers never fill in a healthy run.
+    let mut rng = Rng::new(0x50CC37);
+    for (case, &shards) in [1usize, 2, 4].iter().enumerate() {
+        let mut c = jasda::config::SimConfig::default();
+        c.seed = 31_000 + case as u64;
+        c.cluster.layout = "balanced".into();
+        c.engine.iteration_period = 25;
+        c.jasda.fmp_bins = 16;
+        c.jasda.announce_per_slice = true;
+        c.jasda.shards = shards;
+        c.jasda.parallel = if case % 2 == 0 { 1 } else { 4 };
+        let jobs = random_trace(&mut rng, 4);
+
+        let mut base_trace = Vec::new();
+        let base = jasda::coordinator::run_protocol_traced(
+            c.clone(),
+            jobs.clone(),
+            400_000,
+            Some(&mut base_trace),
+        );
+        assert_eq!(
+            base.completed_jobs, base.total_jobs,
+            "case {case}: loopback baseline must finish: {base:?}"
+        );
+        for kind in [jasda::config::TransportKind::Tcp, jasda::config::TransportKind::Unix] {
+            let mut sc = c.clone();
+            sc.jasda.transport = kind;
+            let mut strace = Vec::new();
+            let sout = jasda::coordinator::run_protocol_traced(
+                sc,
+                jobs.clone(),
+                400_000,
+                Some(&mut strace),
+            );
+            assert_eq!(
+                sout.completed_jobs, sout.total_jobs,
+                "case {case} {}: socket run must finish: {sout:?}",
+                kind.name()
+            );
+            assert_eq!(
+                sout.sends_dropped, 0,
+                "case {case} {}: a healthy socket run must drop nothing",
+                kind.name()
+            );
+            assert_eq!(
+                strace.len(),
+                base_trace.len(),
+                "case {case} {} shards={shards}: decision-round count",
+                kind.name()
+            );
+            for (s, b) in strace.iter().zip(&base_trace) {
+                assert_eq!(
+                    s, b,
+                    "case {case} {} shards={shards}: round {} decisions diverged \
+                     over sockets",
+                    kind.name(),
+                    s.round
+                );
+            }
+            assert_eq!(sout.final_time, base.final_time, "case {case} {}", kind.name());
+        }
+        if shards == 1 {
+            let mut ref_trace = Vec::new();
+            jasda::coordinator::run_reference_traced(c, jobs, 400_000, Some(&mut ref_trace));
+            assert_eq!(base_trace.len(), ref_trace.len(), "case {case}: vs reference");
+            for (b, r) in base_trace.iter().zip(&ref_trace) {
+                assert_eq!(b, r, "case {case}: round {} diverged from the oracle", b.round);
+            }
+        }
+    }
+}
+
+#[test]
+#[cfg(unix)]
+fn prop_socket_smoke_1k_agents_1k_slices() {
+    // ISSUE 9 acceptance: a 1000-agent x 1001-slice round completes
+    // over unix sockets — only possible because the leader serves every
+    // connection from one poll-driven I/O thread; a thread-per-agent
+    // blocking-read leader at this scale is exactly what the socket
+    // transport exists to avoid. Two rounds, then shut down (completing
+    // 1000 jobs at announce_k=2 would take thousands of rounds).
+    let mut c = jasda::config::SimConfig::default();
+    c.cluster.layout = "7x1g".into();
+    c.cluster.num_gpus = 143; // 143 GPUs x 7 slices = 1001 slices
+    c.engine.iteration_period = 25;
+    c.jasda.fmp_bins = 16;
+    c.jasda.announce_k = 2;
+    c.jasda.transport = jasda::config::TransportKind::Unix;
+    let jobs: Vec<Job> = (0..1000u32)
+        .map(|id| {
+            let trp = Trp {
+                phases: vec![Phase::new(800.0, 4.0, 0.2, 0.1)],
+                duration_cv: 0.05,
+            };
+            Job::new(id, "p", 0, trp, None, 1.0, 300.0, 0.0)
+        })
+        .collect();
+    let out = jasda::coordinator::run_protocol(c, jobs, 2);
+    assert_eq!(out.rounds, 2, "{out:?}");
+    assert!(out.announcements >= 2, "{out:?}");
+    assert!(out.bids > 0, "1000 live agents must bid in a smoke round: {out:?}");
+    assert_eq!(out.sends_dropped, 0, "healthy smoke run must drop nothing: {out:?}");
+    assert_eq!(out.frames_rejected, 0, "{out:?}");
+}
+
+#[test]
 fn prop_worker_pool_bit_identical_to_scoped_threads() {
     // ISSUE 3 invariant: the persistent WorkerPool fan-out computes the
     // same bits as the per-iteration `std::thread::scope` fan-out it
@@ -1143,7 +1258,7 @@ fn prop_wire_codec_round_trips_random_messages() {
                     .collect();
                 let done = rng.chance(0.5);
                 let msg = AgentReply::Bid { job, round: rng.next_u64(), bids: bids.clone(), done };
-                wire::encode_agent_reply(&msg, &mut buf);
+                wire::encode_agent_reply(&msg, &mut buf).expect("in-cap reply encodes");
                 let AgentReply::Bid { job: gj, bids: got, done: gd, .. } =
                     wire::decode_agent_reply(&buf).unwrap_or_else(|e| {
                         panic!("case {case}: decode failed: {e}")
@@ -1187,7 +1302,7 @@ fn prop_wire_codec_round_trips_random_messages() {
         buf: &mut Vec<u8>,
         check: impl FnOnce(ToAgent),
     ) {
-        wire::encode_to_agent(msg, buf);
+        wire::encode_to_agent(msg, buf).expect("in-cap message encodes");
         check(wire::decode_to_agent(buf).expect("round trip"));
     }
 }
@@ -1332,7 +1447,18 @@ fn prop_faulty_rounds_terminate_and_stay_conflict_free() {
                 c.jasda.fmp_bins = 16;
                 c.jasda.shards = shards;
                 c.jasda.parallel = 2;
-                if (i + shards) % 2 == 0 {
+                // Cycle every transport across the sweep, so the same
+                // plans are exercised both through the FaultyTransport
+                // wrapper (loopback, framed) and at the socket layer
+                // (crash = closed connection + refused reconnect,
+                // corrupt = bent stream byte, delay = held frame).
+                let kinds = jasda::config::TransportKind::ALL;
+                c.jasda.transport = kinds[(i + shards) % kinds.len()];
+                #[cfg(not(unix))]
+                if matches!(
+                    c.jasda.transport,
+                    jasda::config::TransportKind::Tcp | jasda::config::TransportKind::Unix
+                ) {
                     c.jasda.transport = jasda::config::TransportKind::Framed;
                 }
                 c.jasda.clearing = mode;
