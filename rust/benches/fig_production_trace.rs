@@ -1,0 +1,133 @@
+//! Production-scale trace harness (ISSUE 10): run every scheduler over
+//! one scenario-generated heavy-tailed multi-tenant trace twice — once
+//! with the exact in-memory [`jasda::metrics::RunMetrics`] oracle and
+//! once with the O(buckets) streaming layer — and emit the side-by-side
+//! comparison rows into `BENCH_iteration.json` (override the path with
+//! `BENCH_OUT`; set `BENCH_SMOKE=1` for a fast CI smoke run). The two
+//! rows per scheduler must agree on counts/means and differ on
+//! percentiles by at most the sketch's relative accuracy.
+
+use jasda::baselines::{by_name, ALL_SCHEDULERS};
+use jasda::config::SimConfig;
+use jasda::metrics::streaming::{StreamingMetrics, DEFAULT_REL_ACCURACY};
+use jasda::report::{comparison_headers, comparison_row, streaming_comparison_row, Table};
+use jasda::sim::SimEngine;
+use jasda::util::Json;
+use jasda::workload::ScenarioGenerator;
+
+/// The production-shaped scenario: heavy-tailed Pareto sizes, diurnal +
+/// bursty arrivals, four fairness groups, SLO deadlines on ~a third of
+/// jobs.
+fn scenario_cfg(smoke: bool) -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.seed = 81;
+    cfg.cluster.num_gpus = 2;
+    cfg.cluster.layout = "heterogeneous".into();
+    // Bound pathological runs so the bench always terminates.
+    cfg.engine.max_time = 80_000_000;
+    let s = &mut cfg.jasda.scenario;
+    s.jobs = if smoke { 400 } else { 8_000 };
+    s.seed = 4242;
+    s.tenants = 4;
+    s.burst_prob = 0.05;
+    s.metrics_window = 5_000;
+    cfg
+}
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").map_or(false, |v| v != "0" && !v.is_empty());
+    let cfg = scenario_cfg(smoke);
+    cfg.validate().expect("bench scenario config");
+    let jobs = ScenarioGenerator::new(cfg.jasda.scenario.clone()).generate(cfg.seed);
+
+    let schedulers: &[&str] = if smoke { &["jasda", "fcfs", "sjf"] } else { &ALL_SCHEDULERS };
+    let mut table = Table::new(
+        format!(
+            "Production trace — {} jobs, {} tenants, seed {} (exact vs streaming)",
+            jobs.len(),
+            cfg.jasda.scenario.tenants,
+            cfg.jasda.scenario.seed
+        ),
+        &comparison_headers(),
+    );
+    let mut rows: Vec<Json> = Vec::new();
+
+    for &name in schedulers {
+        let sched = by_name(name, &cfg.jasda).expect("known scheduler");
+        let t0 = std::time::Instant::now();
+        let exact = SimEngine::new(cfg.clone(), sched).run(jobs.clone());
+        let exact_wall = t0.elapsed();
+        table.push_row(comparison_row(&exact.metrics));
+
+        let sched = by_name(name, &cfg.jasda).expect("known scheduler");
+        let sm = StreamingMetrics::new(cfg.jasda.scenario.metrics_window, DEFAULT_REL_ACCURACY)
+            .with_sink(Box::new(std::io::sink()));
+        let t0 = std::time::Instant::now();
+        let run = SimEngine::new(cfg.clone(), sched).with_streaming(sm).run(jobs.clone());
+        let stream_wall = t0.elapsed();
+        let sm = run.streaming.as_ref().expect("streaming path");
+        let mut row = streaming_comparison_row(sm);
+        row[0].push_str("+stream");
+        table.push_row(row);
+
+        let jct_delta = match (exact.metrics.jct_percentile(0.95), sm.jct_percentile(0.95)) {
+            (Some(e), Some(s)) => (e - s).abs() / e.max(1.0),
+            _ => 0.0,
+        };
+        println!(
+            "{name:<12} exact {:>7.1?}  stream {:>7.1?}  buckets {:>4}  windows {:>5}  \
+             p95_jct delta {:.4}",
+            exact_wall,
+            stream_wall,
+            sm.total_buckets(),
+            sm.lines_emitted(),
+            jct_delta,
+        );
+        let exact_completed =
+            exact.metrics.jobs.iter().filter(|j| j.completed.is_some()).count();
+        rows.push(Json::obj(vec![
+            ("scheduler", name.into()),
+            ("jobs", jobs.len().into()),
+            ("exact_completed", exact_completed.into()),
+            ("stream_completed", sm.completed().into()),
+            ("exact_unfinished", exact.metrics.unfinished.into()),
+            ("stream_unfinished", sm.unfinished().into()),
+            ("exact_util", exact.metrics.utilization.into()),
+            ("stream_util", sm.utilization().into()),
+            ("exact_p95_jct", exact.metrics.jct_percentile(0.95).unwrap_or(-1.0).into()),
+            ("stream_p95_jct", sm.jct_percentile(0.95).unwrap_or(-1.0).into()),
+            ("p95_jct_rel_delta", jct_delta.into()),
+            ("stream_buckets", sm.total_buckets().into()),
+            ("stream_windows_emitted", sm.lines_emitted().into()),
+            ("exact_wall_ms", (exact_wall.as_nanos() as f64 / 1e6).into()),
+            ("stream_wall_ms", (stream_wall.as_nanos() as f64 / 1e6).into()),
+        ]));
+    }
+
+    println!();
+    print!("{}", table.to_markdown());
+
+    // Merge into the shared bench artifact rather than clobbering rows
+    // other bench targets may already have written there.
+    let path = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_iteration.json".into());
+    let production = Json::obj(vec![
+        ("smoke", smoke.into()),
+        ("rel_accuracy", DEFAULT_REL_ACCURACY.into()),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let merged = match std::fs::read_to_string(&path).ok().and_then(|s| Json::parse(&s).ok()) {
+        Some(Json::Obj(mut m)) => {
+            m.insert("production".into(), production);
+            Json::Obj(m)
+        }
+        _ => Json::obj(vec![
+            ("schema", "jasda.bench_iteration.v1".into()),
+            ("smoke", smoke.into()),
+            ("production", production),
+        ]),
+    };
+    match std::fs::write(&path, merged.to_string_pretty()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => println!("\ncould not write {path}: {e}"),
+    }
+}

@@ -406,6 +406,220 @@ impl FaultsConfig {
     }
 }
 
+/// Production-scale scenario harness knobs (`jasda.scenario.*`).
+///
+/// When `jobs > 0` the CLI's workload source switches from the
+/// class-mix [`WorkloadConfig`] generator to the trace-driven
+/// [`ScenarioGenerator`](crate::workload::ScenarioGenerator):
+/// heavy-tailed (truncated-Pareto) job sizes, a diurnal + bursty
+/// arrival process, multi-tenant fairness groups with geometric
+/// weights, and a deadline/SLO job fraction — the workload shape the
+/// multi-tenant MIG literature evaluates on. The `adversity` preset
+/// additionally drives the protocol runtime's
+/// [`FaultsConfig`]/`FaultPlan` from scenario config (see
+/// [`JasdaConfig::apply_scenario_adversity`]), and `metrics_window`
+/// sizes the windowed counters of the streaming metrics layer
+/// ([`crate::metrics::streaming`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioConfig {
+    /// Jobs to generate. `0` (default) disables the scenario harness —
+    /// the classic `workload.*` generator stays in charge.
+    pub jobs: usize,
+    /// Scenario RNG seed; `0` = derive from the run's master `seed`.
+    /// A trace is bit-reproducible from this seed alone.
+    pub seed: u64,
+    /// Mean arrival rate (jobs per simulated second) before diurnal and
+    /// burst modulation.
+    pub base_rate_per_sec: f64,
+    /// Diurnal modulation depth in [0,1): the instantaneous rate swings
+    /// between `base·(1−a)` and `base·(1+a)` over one period.
+    pub diurnal_amplitude: f64,
+    /// Diurnal period in ticks (`0` disables the sinusoid).
+    pub diurnal_period: Duration,
+    /// Per-arrival probability of starting a burst episode.
+    pub burst_prob: f64,
+    /// Rate multiplier while a burst episode is active (≥ 1).
+    pub burst_mult: f64,
+    /// Mean burst episode length in ticks (exponentially distributed).
+    pub burst_mean_len: Duration,
+    /// Pareto tail index of job sizes (> 1 keeps the mean finite;
+    /// smaller = heavier tail).
+    pub work_alpha: f64,
+    /// Minimum job work in ticks (the Pareto scale parameter).
+    pub work_min: f64,
+    /// Hard truncation of job work in ticks (≥ `work_min`).
+    pub work_cap: f64,
+    /// Number of multi-tenant fairness groups (≥ 1). Jobs are labelled
+    /// `t<g>:<shape>` so per-group metrics can be recovered from the
+    /// class string alone.
+    pub tenants: usize,
+    /// Geometric tenant weight ratio: group `g` carries weight
+    /// `ratio^g` (1.0 = all tenants equal).
+    pub tenant_weight_ratio: f64,
+    /// Fraction of jobs carrying an SLO deadline, in [0,1].
+    pub deadline_fraction: f64,
+    /// Deadline slack: `deadline = arrival + slack × ideal_runtime`
+    /// (> 1 for satisfiable SLOs).
+    pub deadline_slack: f64,
+    /// Protocol adversity preset driving the seeded fault plan:
+    /// `none` | `light` | `heavy`.
+    pub adversity: String,
+    /// Window length (ticks) of the streaming metrics layer's windowed
+    /// counters.
+    pub metrics_window: Duration,
+}
+
+impl Default for ScenarioConfig {
+    fn default() -> Self {
+        ScenarioConfig {
+            jobs: 0,
+            seed: 0,
+            base_rate_per_sec: 4.0,
+            diurnal_amplitude: 0.6,
+            diurnal_period: 100_000,
+            burst_prob: 0.02,
+            burst_mult: 4.0,
+            burst_mean_len: 2_000,
+            work_alpha: 1.6,
+            work_min: 150.0,
+            work_cap: 60_000.0,
+            tenants: 4,
+            tenant_weight_ratio: 2.0,
+            deadline_fraction: 0.35,
+            deadline_slack: 8.0,
+            adversity: "none".into(),
+            metrics_window: 5_000,
+        }
+    }
+}
+
+impl ScenarioConfig {
+    /// Known adversity preset names.
+    pub const ADVERSITY_PRESETS: [&'static str; 3] = ["none", "light", "heavy"];
+
+    /// Whether the scenario harness drives workload generation.
+    pub fn enabled(&self) -> bool {
+        self.jobs > 0
+    }
+
+    /// The scenario seed, falling back to the run seed when unset.
+    pub fn seed_or(&self, run_seed: u64) -> u64 {
+        if self.seed != 0 {
+            self.seed
+        } else {
+            run_seed
+        }
+    }
+
+    /// Validate ranges (always checked, so a disabled-but-misspelled
+    /// scenario section still surfaces typos).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if !Self::ADVERSITY_PRESETS.contains(&self.adversity.as_str()) {
+            anyhow::bail!(
+                "unknown scenario adversity preset '{}' (want none|light|heavy)",
+                self.adversity
+            );
+        }
+        if self.base_rate_per_sec <= 0.0 {
+            anyhow::bail!("scenario.base_rate_per_sec must be > 0");
+        }
+        if !(0.0..1.0).contains(&self.diurnal_amplitude) {
+            anyhow::bail!(
+                "scenario.diurnal_amplitude must be in [0,1), got {}",
+                self.diurnal_amplitude
+            );
+        }
+        if !(0.0..=1.0).contains(&self.burst_prob) {
+            anyhow::bail!("scenario.burst_prob must be in [0,1], got {}", self.burst_prob);
+        }
+        if self.burst_mult < 1.0 {
+            anyhow::bail!("scenario.burst_mult must be >= 1, got {}", self.burst_mult);
+        }
+        if self.burst_prob > 0.0 && self.burst_mean_len == 0 {
+            anyhow::bail!("scenario.burst_mean_len must be > 0 when bursts are enabled");
+        }
+        if self.work_alpha <= 1.0 {
+            anyhow::bail!(
+                "scenario.work_alpha must be > 1 (finite-mean Pareto tail), got {}",
+                self.work_alpha
+            );
+        }
+        if self.work_min < 50.0 {
+            anyhow::bail!("scenario.work_min must be >= 50 ticks, got {}", self.work_min);
+        }
+        if self.work_cap < self.work_min {
+            anyhow::bail!("scenario.work_cap must be >= work_min");
+        }
+        if self.tenants == 0 {
+            anyhow::bail!("scenario.tenants must be >= 1");
+        }
+        if self.tenant_weight_ratio <= 0.0 {
+            anyhow::bail!("scenario.tenant_weight_ratio must be > 0");
+        }
+        if !(0.0..=1.0).contains(&self.deadline_fraction) {
+            anyhow::bail!(
+                "scenario.deadline_fraction must be in [0,1], got {}",
+                self.deadline_fraction
+            );
+        }
+        if self.deadline_fraction > 0.0 && self.deadline_slack <= 1.0 {
+            anyhow::bail!("scenario.deadline_slack must be > 1 for satisfiable SLOs");
+        }
+        if self.metrics_window == 0 {
+            anyhow::bail!("scenario.metrics_window must be > 0");
+        }
+        Ok(())
+    }
+
+    fn merge_json(&mut self, v: &Json) -> anyhow::Result<()> {
+        for (k, val) in expect_obj(v, "scenario")? {
+            match k.as_str() {
+                "jobs" => self.jobs = need_u64(val, k)? as usize,
+                "seed" => self.seed = need_u64(val, k)?,
+                "base_rate_per_sec" => self.base_rate_per_sec = need_f64(val, k)?,
+                "diurnal_amplitude" => self.diurnal_amplitude = need_f64(val, k)?,
+                "diurnal_period" => self.diurnal_period = need_u64(val, k)?,
+                "burst_prob" => self.burst_prob = need_f64(val, k)?,
+                "burst_mult" => self.burst_mult = need_f64(val, k)?,
+                "burst_mean_len" => self.burst_mean_len = need_u64(val, k)?,
+                "work_alpha" => self.work_alpha = need_f64(val, k)?,
+                "work_min" => self.work_min = need_f64(val, k)?,
+                "work_cap" => self.work_cap = need_f64(val, k)?,
+                "tenants" => self.tenants = need_u64(val, k)? as usize,
+                "tenant_weight_ratio" => self.tenant_weight_ratio = need_f64(val, k)?,
+                "deadline_fraction" => self.deadline_fraction = need_f64(val, k)?,
+                "deadline_slack" => self.deadline_slack = need_f64(val, k)?,
+                "adversity" => self.adversity = need_str(val, k)?.to_string(),
+                "metrics_window" => self.metrics_window = need_u64(val, k)?,
+                other => anyhow::bail!("unknown scenario key '{other}'"),
+            }
+        }
+        Ok(())
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("jobs", self.jobs.into()),
+            ("seed", self.seed.into()),
+            ("base_rate_per_sec", self.base_rate_per_sec.into()),
+            ("diurnal_amplitude", self.diurnal_amplitude.into()),
+            ("diurnal_period", self.diurnal_period.into()),
+            ("burst_prob", self.burst_prob.into()),
+            ("burst_mult", self.burst_mult.into()),
+            ("burst_mean_len", self.burst_mean_len.into()),
+            ("work_alpha", self.work_alpha.into()),
+            ("work_min", self.work_min.into()),
+            ("work_cap", self.work_cap.into()),
+            ("tenants", self.tenants.into()),
+            ("tenant_weight_ratio", self.tenant_weight_ratio.into()),
+            ("deadline_fraction", self.deadline_fraction.into()),
+            ("deadline_slack", self.deadline_slack.into()),
+            ("adversity", self.adversity.as_str().into()),
+            ("metrics_window", self.metrics_window.into()),
+        ])
+    }
+}
+
 /// All JASDA policy parameters.
 #[derive(Debug, Clone, PartialEq)]
 pub struct JasdaConfig {
@@ -493,6 +707,9 @@ pub struct JasdaConfig {
     /// Deterministic fault injection (off by default); see
     /// [`FaultsConfig`].
     pub faults: FaultsConfig,
+    /// Production-scale scenario harness (off by default); see
+    /// [`ScenarioConfig`].
+    pub scenario: ScenarioConfig,
     /// Bandwidth-lean announcement: cap each shard's broadcast to the
     /// policy's top-N candidate windows (§5.1(a) bandwidth mitigation).
     /// `0` = no cap (broadcast the full candidate set). A shard whose
@@ -561,6 +778,7 @@ impl Default for JasdaConfig {
             socket_queue: 64,
             round_timeout_ms: 0,
             faults: FaultsConfig::default(),
+            scenario: ScenarioConfig::default(),
             announce_top: 0,
             max_variants_per_job: 4,
             fmp_bins: 64,
@@ -633,6 +851,43 @@ impl JasdaConfig {
                 anyhow::bail!("faults.horizon_rounds must be > 0 when faults are enabled");
             }
         }
+        self.scenario.validate()?;
+        Ok(())
+    }
+
+    /// Expand the scenario's `adversity` preset into concrete
+    /// [`FaultsConfig`] probabilities driving the protocol runtime's
+    /// seeded `FaultPlan` (agent crashes mid-round, stragglers,
+    /// corrupt/shaded bids, dropped sends). Explicitly-set fault
+    /// probabilities win over the preset; a preset also supplies the
+    /// round deadline fault injection requires if none is configured.
+    /// The `heavy` preset mirrors the CI fault matrix's proven-live
+    /// plan shape. Call once after loading config, before `validate`.
+    pub fn apply_scenario_adversity(&mut self) -> anyhow::Result<()> {
+        let (crash, delay, corrupt, drop) = match self.scenario.adversity.as_str() {
+            "none" => return Ok(()),
+            "light" => (0.15, 0.1, 0.05, 0.05),
+            "heavy" => (0.5, 0.25, 0.25, 0.25),
+            other => anyhow::bail!(
+                "unknown scenario adversity preset '{other}' (want none|light|heavy)"
+            ),
+        };
+        if !self.faults.enabled() {
+            self.faults.crash = crash;
+            self.faults.delay = delay;
+            self.faults.corrupt = corrupt;
+            self.faults.drop = drop;
+            self.faults.horizon_rounds = 24;
+            self.faults.crash_rounds = 8;
+            if self.faults.seed == 0 {
+                // Derive from the scenario seed so the same trace replays
+                // under the same adversity by default.
+                self.faults.seed = self.scenario.seed.wrapping_add(1).max(1);
+            }
+        }
+        if self.round_timeout_ms == 0 {
+            self.round_timeout_ms = 400;
+        }
         Ok(())
     }
 
@@ -670,6 +925,7 @@ impl JasdaConfig {
                 "socket_queue" => self.socket_queue = need_u64(val, k)? as usize,
                 "round_timeout_ms" => self.round_timeout_ms = need_u64(val, k)?,
                 "faults" => self.faults.merge_json(val)?,
+                "scenario" => self.scenario.merge_json(val)?,
                 "announce_top" => self.announce_top = need_u64(val, k)? as usize,
                 "max_variants_per_job" => {
                     self.max_variants_per_job = need_u64(val, k)? as usize
@@ -723,6 +979,7 @@ impl JasdaConfig {
             ("socket_queue", self.socket_queue.into()),
             ("round_timeout_ms", self.round_timeout_ms.into()),
             ("faults", self.faults.to_json()),
+            ("scenario", self.scenario.to_json()),
             ("announce_top", self.announce_top.into()),
             ("max_variants_per_job", self.max_variants_per_job.into()),
             ("fmp_bins", self.fmp_bins.into()),
@@ -1009,6 +1266,12 @@ mod tests {
         cfg.jasda.faults.seed = 99;
         cfg.jasda.faults.crash = 0.25;
         cfg.jasda.faults.delay_rounds = 5;
+        cfg.jasda.scenario.jobs = 50_000;
+        cfg.jasda.scenario.seed = 77;
+        cfg.jasda.scenario.tenants = 6;
+        cfg.jasda.scenario.work_alpha = 1.3;
+        cfg.jasda.scenario.adversity = "heavy".into();
+        cfg.jasda.scenario.metrics_window = 2_500;
         cfg.workload.mix = vec![("analytics".into(), 1.0)];
         let text = cfg.to_json().to_string_pretty();
         let back = SimConfig::from_json_str(&text).unwrap();
@@ -1033,6 +1296,7 @@ mod tests {
         assert!(SimConfig::from_json_str(r#"{"jasda": {"transport": "pigeon"}}"#).is_err());
         assert!(SimConfig::from_json_str(r#"{"jasda": {"clearing": "simplex"}}"#).is_err());
         assert!(SimConfig::from_json_str(r#"{"jasda": {"faults": {"crush": 1}}}"#).is_err());
+        assert!(SimConfig::from_json_str(r#"{"jasda": {"scenario": {"jbos": 9}}}"#).is_err());
         assert!(SimConfig::from_json_str(r#"{"workload": {"mix": [["a"]]}}"#).is_err());
     }
 
@@ -1108,6 +1372,59 @@ mod tests {
         cfg.jasda.faults.corrupt = 1.5; // not a probability
         cfg.jasda.round_timeout_ms = 100;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn scenario_validation_and_adversity_presets() {
+        // Range checks surface even with the harness disabled (jobs=0).
+        let mut cfg = SimConfig::default();
+        cfg.jasda.scenario.adversity = "chaos".into();
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = SimConfig::default();
+        cfg.jasda.scenario.work_alpha = 1.0; // infinite-mean tail
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = SimConfig::default();
+        cfg.jasda.scenario.diurnal_amplitude = 1.0; // rate would hit 0
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = SimConfig::default();
+        cfg.jasda.scenario.work_cap = 10.0; // below work_min
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = SimConfig::default();
+        cfg.jasda.scenario.tenants = 0;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = SimConfig::default();
+        cfg.jasda.scenario.metrics_window = 0;
+        assert!(cfg.validate().is_err());
+
+        // "none" is a no-op.
+        let mut cfg = SimConfig::default();
+        cfg.jasda.apply_scenario_adversity().unwrap();
+        assert!(!cfg.jasda.faults.enabled());
+        assert_eq!(cfg.jasda.round_timeout_ms, 0);
+
+        // A preset turns faults on and supplies the required deadline,
+        // producing a config that validates as-is.
+        let mut cfg = SimConfig::default();
+        cfg.jasda.scenario.adversity = "light".into();
+        cfg.jasda.apply_scenario_adversity().unwrap();
+        assert!(cfg.jasda.faults.enabled());
+        assert!(cfg.jasda.faults.seed > 0);
+        assert!(cfg.jasda.round_timeout_ms > 0);
+        cfg.validate().unwrap();
+
+        // Explicit fault probabilities win over the preset.
+        let mut cfg = SimConfig::default();
+        cfg.jasda.scenario.adversity = "heavy".into();
+        cfg.jasda.faults.crash = 0.01;
+        cfg.jasda.apply_scenario_adversity().unwrap();
+        assert_eq!(cfg.jasda.faults.crash, 0.01);
+        assert_eq!(cfg.jasda.faults.drop, 0.0);
+        cfg.validate().unwrap();
     }
 
     #[test]

@@ -12,10 +12,11 @@
 use jasda::baselines::{by_name, ALL_SCHEDULERS};
 use jasda::config::{ScoringBackend, SimConfig};
 use jasda::jasda::JasdaScheduler;
+use jasda::metrics::streaming::{StreamingMetrics, DEFAULT_REL_ACCURACY};
 use jasda::report::{comparison_headers, comparison_row, Table};
 use jasda::sim::SimEngine;
 use jasda::util::cli::Args;
-use jasda::workload::{load_trace, save_trace, WorkloadGenerator};
+use jasda::workload::{load_trace, save_trace, ScenarioGenerator, WorkloadGenerator};
 use std::path::{Path, PathBuf};
 
 const USAGE: &str = "\
@@ -37,11 +38,19 @@ OPTIONS:
   --seed <u64>           Override the RNG seed
   --scheduler <name>     run: jasda|fcfs|sjf|edf|backfill|sja_central|themis_like
   --trace <file.jsonl>   run/compare: load workload from a trace
+  --stream-metrics <f>   run: stream windowed metrics to <f> as JSONL and keep
+                         only O(buckets) metric state (production-scale runs)
   --lambdas <a,b,c>      sweep: λ values (default 0.3,0.5,0.7)
   --max-rounds <n>       protocol: round cap (default 200000)
   --pjrt                 run: use the PJRT scoring backend (needs `make artifacts`)
   --json                 run: emit full metrics as JSON
   --csv                  compare: emit CSV instead of markdown
+
+Setting jasda.scenario.jobs > 0 in the config switches workload
+generation to the production-scale scenario harness (heavy-tailed sizes,
+diurnal+bursty arrivals, fairness groups, SLO deadlines; see
+docs/CONFIG.md), and jasda.scenario.adversity = light|heavy arms the
+seeded protocol fault plan for `protocol` runs.
 ";
 
 fn load_config(args: &Args) -> anyhow::Result<SimConfig> {
@@ -52,6 +61,7 @@ fn load_config(args: &Args) -> anyhow::Result<SimConfig> {
     if let Some(seed) = args.opt("seed") {
         cfg.seed = seed.parse().map_err(|_| anyhow::anyhow!("bad --seed '{seed}'"))?;
     }
+    cfg.jasda.apply_scenario_adversity()?;
     cfg.validate()?;
     Ok(cfg)
 }
@@ -59,6 +69,9 @@ fn load_config(args: &Args) -> anyhow::Result<SimConfig> {
 fn workload(cfg: &SimConfig, trace: Option<&str>) -> anyhow::Result<Vec<jasda::job::Job>> {
     match trace {
         Some(p) => load_trace(Path::new(p)),
+        None if cfg.jasda.scenario.enabled() => {
+            Ok(ScenarioGenerator::new(cfg.jasda.scenario.clone()).generate(cfg.seed))
+        }
         None => Ok(WorkloadGenerator::new(cfg.workload.clone()).generate(cfg.seed)),
     }
 }
@@ -66,7 +79,7 @@ fn workload(cfg: &SimConfig, trace: Option<&str>) -> anyhow::Result<Vec<jasda::j
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(
         std::env::args().skip(1),
-        &["config", "seed", "scheduler", "trace", "lambdas", "max-rounds"],
+        &["config", "seed", "scheduler", "trace", "stream-metrics", "lambdas", "max-rounds"],
         &["pjrt", "json", "csv", "help"],
     )
     .map_err(|e| anyhow::anyhow!("{e}\n\n{USAGE}"))?;
@@ -103,8 +116,23 @@ fn cmd_run(args: &Args, cfg: SimConfig) -> anyhow::Result<()> {
         by_name(scheduler, &cfg.jasda)
             .ok_or_else(|| anyhow::anyhow!("unknown scheduler '{scheduler}'"))?
     };
-    let out = SimEngine::new(cfg, sched).run(jobs);
-    if args.flag("json") {
+    let out = if let Some(path) = args.opt("stream-metrics") {
+        let file = std::fs::File::create(path)
+            .map_err(|e| anyhow::anyhow!("cannot create --stream-metrics file '{path}': {e}"))?;
+        let sm = StreamingMetrics::new(cfg.jasda.scenario.metrics_window, DEFAULT_REL_ACCURACY)
+            .with_sink(Box::new(std::io::BufWriter::new(file)));
+        SimEngine::new(cfg, sched).with_streaming(sm).run(jobs)
+    } else {
+        SimEngine::new(cfg, sched).run(jobs)
+    };
+    if let Some(sm) = &out.streaming {
+        if args.flag("json") {
+            println!("{}", sm.summary_json().to_string_pretty());
+        } else {
+            println!("{}", sm.summary_line());
+            println!("scheduler stats: {}", out.scheduler_stats);
+        }
+    } else if args.flag("json") {
         println!("{}", out.metrics.to_json().to_string_pretty());
     } else {
         println!("{}", out.metrics.summary());

@@ -4,6 +4,8 @@
 
 use crate::types::{Duration, JobId, Time};
 
+pub mod streaming;
+
 /// Per-job outcome record.
 #[derive(Debug, Clone)]
 pub struct JobMetrics {
@@ -79,12 +81,17 @@ pub struct RunMetrics {
     pub unfinished: usize,
 }
 
+/// Ceil-based nearest-rank percentile: the smallest sample value `v`
+/// such that at least `p·n` of the sample is `≤ v`. The previous
+/// `round((n-1)·p)` indexing under-reported tail percentiles on small
+/// samples (e.g. p95 of n=12 picked the 11th value, not the 12th).
 fn percentile(sorted: &[f64], p: f64) -> Option<f64> {
     if sorted.is_empty() {
         return None;
     }
-    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
-    Some(sorted[idx.min(sorted.len() - 1)])
+    let n = sorted.len();
+    let rank = (p * n as f64).ceil() as usize;
+    Some(sorted[rank.clamp(1, n) - 1])
 }
 
 impl RunMetrics {
@@ -345,10 +352,22 @@ mod tests {
     #[test]
     fn percentiles() {
         let m = sample();
-        // sorted jcts [2000, 2000, 4000]; p95 -> index round(2*0.95)=2
+        // sorted jcts [2000, 2000, 4000]; p95 -> rank ceil(3*0.95)=3
         assert_eq!(m.jct_percentile(0.95), Some(4000.0));
         assert_eq!(m.jct_percentile(0.0), Some(2000.0));
         assert!(m.p95_wait().unwrap() >= 700.0);
+    }
+
+    #[test]
+    fn percentile_uses_ceil_nearest_rank() {
+        // n=12: ceil-rank p95 = rank 12 (the max). The old round((n-1)p)
+        // indexing picked index 10 -> 11.0, under-reporting the tail.
+        let sorted: Vec<f64> = (1..=12).map(|x| x as f64).collect();
+        assert_eq!(percentile(&sorted, 0.95), Some(12.0));
+        assert_eq!(percentile(&sorted, 0.5), Some(6.0));
+        assert_eq!(percentile(&sorted, 1.0), Some(12.0));
+        assert_eq!(percentile(&sorted, 0.0), Some(1.0));
+        assert_eq!(percentile(&[], 0.5), None);
     }
 
     #[test]

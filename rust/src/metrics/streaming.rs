@@ -1,0 +1,744 @@
+//! Streaming metrics for production-scale traces.
+//!
+//! The exact [`RunMetrics`](super::RunMetrics) keeps one
+//! [`JobMetrics`](super::JobMetrics) record per job, which is fine for the
+//! synthetic evaluation traces but caps runs far below the "millions of
+//! jobs" north star. This module provides the O(buckets) alternative the
+//! production harness (see [`crate::workload::ScenarioGenerator`]) runs on:
+//!
+//! * [`HistogramSketch`] — a DDSketch-style log-bucketed histogram with a
+//!   configurable relative accuracy. Memory is `O(ln(max/min) / ln γ)`
+//!   buckets regardless of how many values are recorded (≈700 buckets for
+//!   1% accuracy over a `[1, 10⁶]` tick range), and any percentile is
+//!   answered within the configured relative error.
+//! * [`StreamingMetrics`] — the run-level aggregator: JCT / wait /
+//!   slowdown sketches, per-fairness-group counters, deadline hit rates,
+//!   and fixed-width time windows that are emitted incrementally as JSONL
+//!   to an optional sink while the run progresses.
+//!
+//! Sums, counts, means, utilization, and the Jain index are computed from
+//! exact accumulators and therefore match the in-memory oracle bit for
+//! bit; only percentiles are sketch-approximate (within one histogram
+//! bucket). The differential property test in `tests/properties.rs` holds
+//! both implementations to that contract on randomized small traces.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+
+use crate::job::Job;
+use crate::types::{Duration, Time};
+use crate::util::Json;
+
+/// Default relative accuracy for percentile sketches (1%).
+pub const DEFAULT_REL_ACCURACY: f64 = 0.01;
+
+/// DDSketch-style log-bucketed histogram over non-negative values.
+///
+/// Values `< 1.0` (sub-tick) collapse into a dedicated zero bucket;
+/// values `≥ 1.0` land in bucket `ceil(ln v / ln γ)` with
+/// `γ = (1 + rel) / (1 - rel)`, so every bucket's representative value is
+/// within `rel` relative error of anything stored in it. Count, sum, sum
+/// of squares, min, and max are tracked exactly.
+#[derive(Debug, Clone)]
+pub struct HistogramSketch {
+    rel: f64,
+    gamma: f64,
+    gamma_ln: f64,
+    buckets: BTreeMap<i64, u64>,
+    zero: u64,
+    count: u64,
+    sum: f64,
+    sum_sq: f64,
+    min: f64,
+    max: f64,
+}
+
+impl HistogramSketch {
+    /// New sketch with the given relative accuracy (in `(0, 1)`).
+    pub fn new(rel: f64) -> Self {
+        assert!(rel > 0.0 && rel < 1.0, "relative accuracy must be in (0,1)");
+        let gamma = (1.0 + rel) / (1.0 - rel);
+        HistogramSketch {
+            rel,
+            gamma,
+            gamma_ln: gamma.ln(),
+            buckets: BTreeMap::new(),
+            zero: 0,
+            count: 0,
+            sum: 0.0,
+            sum_sq: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Record one value. Negative or non-finite values are ignored.
+    pub fn record(&mut self, v: f64) {
+        if !v.is_finite() || v < 0.0 {
+            return;
+        }
+        self.count += 1;
+        self.sum += v;
+        self.sum_sq += v * v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        if v < 1.0 {
+            self.zero += 1;
+        } else {
+            let idx = (v.ln() / self.gamma_ln).ceil() as i64;
+            *self.buckets.entry(idx).or_insert(0) += 1;
+        }
+    }
+
+    /// Ceil-based nearest-rank percentile (`p` in `[0, 1]`), answered from
+    /// bucket representatives and clamped to the observed `[min, max]`.
+    pub fn percentile(&self, p: f64) -> Option<f64> {
+        if self.count == 0 {
+            return None;
+        }
+        let rank = ((p * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = self.zero;
+        if rank <= seen {
+            // Sub-tick values: everything in the zero bucket is < 1.0,
+            // so the observed minimum is the tightest representative.
+            return Some(self.min);
+        }
+        for (&idx, &n) in &self.buckets {
+            seen += n;
+            if rank <= seen {
+                let rep = ((idx as f64 - 1.0) * self.gamma_ln).exp() * (1.0 + self.gamma) / 2.0;
+                return Some(rep.clamp(self.min, self.max));
+            }
+        }
+        Some(self.max)
+    }
+
+    /// Number of recorded values.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact sum of recorded values.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Exact sum of squares of recorded values.
+    pub fn sum_sq(&self) -> f64 {
+        self.sum_sq
+    }
+
+    /// Exact mean, if any values were recorded.
+    pub fn mean(&self) -> Option<f64> {
+        if self.count == 0 {
+            None
+        } else {
+            Some(self.sum / self.count as f64)
+        }
+    }
+
+    /// Exact minimum recorded value.
+    pub fn min(&self) -> Option<f64> {
+        if self.count == 0 {
+            None
+        } else {
+            Some(self.min)
+        }
+    }
+
+    /// Exact maximum recorded value.
+    pub fn max(&self) -> Option<f64> {
+        if self.count == 0 {
+            None
+        } else {
+            Some(self.max)
+        }
+    }
+
+    /// Number of occupied buckets — the sketch's memory footprint.
+    pub fn bucket_count(&self) -> usize {
+        self.buckets.len() + usize::from(self.zero > 0)
+    }
+
+    /// Configured relative accuracy.
+    pub fn relative_accuracy(&self) -> f64 {
+        self.rel
+    }
+}
+
+/// One fixed-width emission window's counters.
+#[derive(Debug, Clone, Default)]
+struct Window {
+    idx: u64,
+    completions: u64,
+    commits: u64,
+    work: f64,
+    deadline_hits: u64,
+    deadline_total: u64,
+}
+
+impl Window {
+    fn is_empty(&self) -> bool {
+        self.completions == 0 && self.commits == 0
+    }
+}
+
+/// Per-fairness-group exact accumulators (keyed by the tenant prefix of
+/// the job class, i.e. the part before the first `:`).
+#[derive(Debug, Clone, Default)]
+pub struct GroupStats {
+    /// Completed jobs in this group.
+    pub jobs: u64,
+    /// Tenant weight (last seen; constant per group by construction).
+    pub weight: f64,
+    /// Sum of JCTs (ticks) over completed jobs.
+    pub jct_sum: f64,
+    /// Sum of slowdowns over completed jobs with positive work.
+    pub slowdown_sum: f64,
+}
+
+/// Streaming replacement for [`RunMetrics`](super::RunMetrics) on large
+/// runs: O(buckets) memory, optional incremental JSONL emission.
+///
+/// The engine calls [`record_commit`](Self::record_commit) per committed
+/// subjob, [`record_job`](Self::record_job) per completed job,
+/// [`record_unfinished_wait`](Self::record_unfinished_wait) for jobs that
+/// never finished, and [`finalize`](Self::finalize) once at the end of the
+/// run. Window lines are emitted as each window closes; `finalize` emits
+/// the terminal `{"type":"summary",...}` line.
+pub struct StreamingMetrics {
+    /// Scheduler name that produced the run (stamped by the engine).
+    pub scheduler: String,
+    window_len: u64,
+    cur: Window,
+    sink: Option<Box<dyn Write>>,
+    jct: HistogramSketch,
+    wait: HistogramSketch,
+    slowdown: HistogramSketch,
+    groups: BTreeMap<String, GroupStats>,
+    completed: u64,
+    deadline_hits: u64,
+    deadline_total: u64,
+    unfinished: u64,
+    subjobs_sum: u64,
+    utilization: f64,
+    mean_fragmentation: f64,
+    makespan: Time,
+    lines_emitted: u64,
+    sink_errors: u64,
+}
+
+impl std::fmt::Debug for StreamingMetrics {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("StreamingMetrics")
+            .field("scheduler", &self.scheduler)
+            .field("completed", &self.completed)
+            .field("unfinished", &self.unfinished)
+            .field("jct_buckets", &self.jct.bucket_count())
+            .field("windows_emitted", &self.lines_emitted)
+            .finish_non_exhaustive()
+    }
+}
+
+fn group_key(class: &str) -> &str {
+    class.split(':').next().unwrap_or(class)
+}
+
+impl StreamingMetrics {
+    /// New aggregator with the given window length (ticks) and percentile
+    /// sketch relative accuracy.
+    pub fn new(window_len: u64, rel: f64) -> Self {
+        assert!(window_len > 0, "window length must be positive");
+        StreamingMetrics {
+            scheduler: String::new(),
+            window_len,
+            cur: Window::default(),
+            sink: None,
+            jct: HistogramSketch::new(rel),
+            wait: HistogramSketch::new(rel),
+            slowdown: HistogramSketch::new(rel),
+            groups: BTreeMap::new(),
+            completed: 0,
+            deadline_hits: 0,
+            deadline_total: 0,
+            unfinished: 0,
+            subjobs_sum: 0,
+            utilization: 0.0,
+            mean_fragmentation: 0.0,
+            makespan: 0,
+            lines_emitted: 0,
+            sink_errors: 0,
+        }
+    }
+
+    /// Attach a JSONL sink (e.g. a buffered file). Without a sink the
+    /// aggregator still maintains every statistic; it just emits nothing.
+    pub fn with_sink(mut self, sink: Box<dyn Write>) -> Self {
+        self.sink = Some(sink);
+        self
+    }
+
+    /// Advance the current window to the one containing `t`, flushing the
+    /// previous window's line if it saw any activity. Event times are
+    /// monotone in the engine, so windows close exactly once.
+    fn roll(&mut self, t: Time) {
+        let w = t / self.window_len;
+        if w != self.cur.idx {
+            self.flush_window();
+            self.cur.idx = w;
+        }
+    }
+
+    fn flush_window(&mut self) {
+        if self.cur.is_empty() {
+            return;
+        }
+        if let Some(sink) = self.sink.as_mut() {
+            let line = Json::obj(vec![
+                ("type", "window".into()),
+                ("t0", (self.cur.idx * self.window_len).into()),
+                ("t1", ((self.cur.idx + 1) * self.window_len).into()),
+                ("completions", self.cur.completions.into()),
+                ("commits", self.cur.commits.into()),
+                ("work", self.cur.work.into()),
+                ("deadline_hits", self.cur.deadline_hits.into()),
+                ("deadline_total", self.cur.deadline_total.into()),
+            ]);
+            if writeln!(sink, "{line}").is_err() {
+                self.sink_errors += 1;
+            } else {
+                self.lines_emitted += 1;
+            }
+        }
+        self.cur = Window { idx: self.cur.idx, ..Window::default() };
+    }
+
+    /// Record one committed subjob at time `now`.
+    pub fn record_commit(&mut self, now: Time) {
+        self.roll(now);
+        self.cur.commits += 1;
+    }
+
+    /// Record one completed job from its raw fields.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_completion(
+        &mut self,
+        class: &str,
+        weight: f64,
+        arrival: Time,
+        completed: Time,
+        work: f64,
+        subjobs: u32,
+        max_wait: Duration,
+        deadline: Option<Time>,
+    ) {
+        self.roll(completed);
+        self.completed += 1;
+        self.subjobs_sum += u64::from(subjobs);
+        let jct = completed.saturating_sub(arrival) as f64;
+        self.jct.record(jct);
+        self.wait.record(max_wait as f64);
+        let slowdown = if work > 0.0 {
+            let s = jct / work;
+            self.slowdown.record(s);
+            s
+        } else {
+            0.0
+        };
+        self.cur.completions += 1;
+        self.cur.work += work;
+        if let Some(d) = deadline {
+            self.deadline_total += 1;
+            self.cur.deadline_total += 1;
+            if completed <= d {
+                self.deadline_hits += 1;
+                self.cur.deadline_hits += 1;
+            }
+        }
+        let key = group_key(class);
+        if let Some(g) = self.groups.get_mut(key) {
+            g.jobs += 1;
+            g.jct_sum += jct;
+            g.slowdown_sum += slowdown;
+        } else {
+            self.groups.insert(
+                key.to_string(),
+                GroupStats { jobs: 1, weight, jct_sum: jct, slowdown_sum: slowdown },
+            );
+        }
+    }
+
+    /// Record one completed job (adapter over [`record_completion`]).
+    ///
+    /// [`record_completion`]: Self::record_completion
+    pub fn record_job(&mut self, job: &Job, max_wait: Duration) {
+        let completed = job.completed_at.expect("record_job requires a completed job");
+        self.record_completion(
+            &job.class,
+            job.weight,
+            job.arrival,
+            completed,
+            job.trp.total_work(),
+            job.subjobs_done,
+            max_wait,
+            job.deadline,
+        );
+    }
+
+    /// Record a job that never completed within the run. Its longest wait
+    /// still feeds the wait sketch, matching the exact oracle.
+    pub fn record_unfinished_wait(&mut self, max_wait: Duration) {
+        self.unfinished += 1;
+        self.wait.record(max_wait as f64);
+    }
+
+    /// Close the run: flush the last window, stamp run-level quantities
+    /// (computed exactly by the engine), and emit the summary line.
+    pub fn finalize(&mut self, utilization: f64, mean_fragmentation: f64, makespan: Time) {
+        self.utilization = utilization;
+        self.mean_fragmentation = mean_fragmentation;
+        self.makespan = makespan;
+        self.flush_window();
+        if let Some(sink) = self.sink.as_mut() {
+            let line = self.render_summary();
+            let mut ok = writeln!(sink, "{line}").is_ok();
+            ok &= sink.flush().is_ok();
+            if ok {
+                self.lines_emitted += 1;
+            } else {
+                self.sink_errors += 1;
+            }
+        }
+    }
+
+    fn render_summary(&self) -> String {
+        self.summary_json().to_string()
+    }
+
+    /// Exact mean JCT over completed jobs.
+    pub fn mean_jct(&self) -> Option<f64> {
+        self.jct.mean()
+    }
+
+    /// Sketch-approximate JCT percentile over completed jobs.
+    pub fn jct_percentile(&self, p: f64) -> Option<f64> {
+        self.jct.percentile(p)
+    }
+
+    /// Exact mean slowdown over completed jobs with positive work.
+    pub fn mean_slowdown(&self) -> Option<f64> {
+        self.slowdown.mean()
+    }
+
+    /// Exact max slowdown.
+    pub fn max_slowdown(&self) -> Option<f64> {
+        self.slowdown.max()
+    }
+
+    /// Jain fairness index over slowdowns, computed exactly from the
+    /// sketch's sum / sum-of-squares accumulators.
+    pub fn jain_fairness(&self) -> Option<f64> {
+        let n = self.slowdown.count();
+        if n == 0 {
+            return None;
+        }
+        let s1 = self.slowdown.sum();
+        let s2 = self.slowdown.sum_sq();
+        if s2 == 0.0 {
+            return None;
+        }
+        Some(s1 * s1 / (n as f64 * s2))
+    }
+
+    /// Sketch-approximate p95 of per-job longest waits (all jobs,
+    /// finished or not).
+    pub fn p95_wait(&self) -> Option<f64> {
+        self.wait.percentile(0.95)
+    }
+
+    /// Exact maximum per-job wait (ticks).
+    pub fn max_starvation(&self) -> u64 {
+        self.wait.max().map_or(0, |m| m as u64)
+    }
+
+    /// Exact fraction of deadline-carrying completed jobs that met their
+    /// deadline.
+    pub fn deadline_met_rate(&self) -> Option<f64> {
+        if self.deadline_total == 0 {
+            None
+        } else {
+            Some(self.deadline_hits as f64 / self.deadline_total as f64)
+        }
+    }
+
+    /// Jobs completed per simulated second.
+    pub fn throughput_per_sec(&self) -> f64 {
+        if self.makespan == 0 {
+            return 0.0;
+        }
+        self.completed as f64 / (self.makespan as f64 / 1000.0)
+    }
+
+    /// Exact mean subjobs per completed job.
+    pub fn mean_subjobs(&self) -> Option<f64> {
+        if self.completed == 0 {
+            None
+        } else {
+            Some(self.subjobs_sum as f64 / self.completed as f64)
+        }
+    }
+
+    /// Completed-job count.
+    pub fn completed(&self) -> u64 {
+        self.completed
+    }
+
+    /// Jobs that never completed within the run.
+    pub fn unfinished(&self) -> u64 {
+        self.unfinished
+    }
+
+    /// Compute-weighted utilization (stamped at finalize).
+    pub fn utilization(&self) -> f64 {
+        self.utilization
+    }
+
+    /// Mean per-slice fragmentation (stamped at finalize).
+    pub fn mean_fragmentation(&self) -> f64 {
+        self.mean_fragmentation
+    }
+
+    /// Run makespan (stamped at finalize).
+    pub fn makespan(&self) -> Time {
+        self.makespan
+    }
+
+    /// Per-fairness-group accumulators.
+    pub fn groups(&self) -> &BTreeMap<String, GroupStats> {
+        &self.groups
+    }
+
+    /// Window JSONL lines successfully emitted (incl. the summary line).
+    pub fn lines_emitted(&self) -> u64 {
+        self.lines_emitted
+    }
+
+    /// Sink write failures (counted, never panicking the run).
+    pub fn sink_errors(&self) -> u64 {
+        self.sink_errors
+    }
+
+    /// Total occupied histogram buckets across all three sketches — the
+    /// aggregator's distribution-memory footprint.
+    pub fn total_buckets(&self) -> usize {
+        self.jct.bucket_count() + self.wait.bucket_count() + self.slowdown.bucket_count()
+    }
+
+    /// Run summary as JSON (schema `jasda.stream_metrics.v1`). This is
+    /// also the terminal JSONL line emitted by [`finalize`](Self::finalize).
+    pub fn summary_json(&self) -> Json {
+        let opt = |x: Option<f64>| x.map_or(Json::Null, Json::Num);
+        Json::obj(vec![
+            ("schema", "jasda.stream_metrics.v1".into()),
+            ("type", "summary".into()),
+            ("scheduler", self.scheduler.clone().into()),
+            ("makespan", self.makespan.into()),
+            ("utilization", self.utilization.into()),
+            ("mean_fragmentation", self.mean_fragmentation.into()),
+            ("completed", self.completed.into()),
+            ("unfinished", self.unfinished.into()),
+            ("mean_jct", opt(self.mean_jct())),
+            ("p50_jct", opt(self.jct_percentile(0.5))),
+            ("p95_jct", opt(self.jct_percentile(0.95))),
+            ("p99_jct", opt(self.jct_percentile(0.99))),
+            ("mean_slowdown", opt(self.mean_slowdown())),
+            ("max_slowdown", opt(self.max_slowdown())),
+            ("jain_fairness", opt(self.jain_fairness())),
+            ("p95_wait", opt(self.p95_wait())),
+            ("max_starvation", self.max_starvation().into()),
+            ("deadline_met_rate", opt(self.deadline_met_rate())),
+            ("throughput_per_sec", self.throughput_per_sec().into()),
+            ("mean_subjobs", opt(self.mean_subjobs())),
+            ("total_buckets", self.total_buckets().into()),
+            ("windows_emitted", self.lines_emitted.into()),
+            ("sink_errors", self.sink_errors.into()),
+            (
+                "groups",
+                Json::Arr(
+                    self.groups
+                        .iter()
+                        .map(|(k, g)| {
+                            let n = g.jobs.max(1) as f64;
+                            Json::obj(vec![
+                                ("group", k.clone().into()),
+                                ("jobs", g.jobs.into()),
+                                ("weight", g.weight.into()),
+                                ("mean_jct", (g.jct_sum / n).into()),
+                                ("mean_slowdown", (g.slowdown_sum / n).into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// One-line human summary (streaming counterpart of
+    /// [`RunMetrics::summary`](super::RunMetrics::summary)).
+    pub fn summary_line(&self) -> String {
+        format!(
+            "{} [streaming]: util={:.3} done={} meanJCT={:.0} p95JCT={:.0} jain={:.3} starv={} unfinished={}",
+            self.scheduler,
+            self.utilization,
+            self.completed,
+            self.mean_jct().unwrap_or(f64::NAN),
+            self.jct_percentile(0.95).unwrap_or(f64::NAN),
+            self.jain_fairness().unwrap_or(f64::NAN),
+            self.max_starvation(),
+            self.unfinished,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    /// A `Write` sink whose buffer stays inspectable after the box moves
+    /// into the aggregator.
+    #[derive(Clone, Default)]
+    struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+    impl Write for SharedBuf {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn sketch_percentiles_within_relative_error() {
+        let mut h = HistogramSketch::new(0.01);
+        for v in 1..=10_000u64 {
+            h.record(v as f64);
+        }
+        for &p in &[0.01, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0] {
+            let exact = (p * 10_000.0).ceil().max(1.0);
+            let got = h.percentile(p).unwrap();
+            let rel_err = (got - exact).abs() / exact;
+            assert!(rel_err <= 0.0201, "p{p}: got {got}, exact {exact}, err {rel_err}");
+        }
+        assert_eq!(h.count(), 10_000);
+        assert_eq!(h.min(), Some(1.0));
+        assert_eq!(h.max(), Some(10_000.0));
+        assert!((h.mean().unwrap() - 5_000.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sketch_memory_is_log_bounded() {
+        let mut h = HistogramSketch::new(0.01);
+        // 200k values spanning [1, 1e6): bucket count tracks the span's
+        // log, not the record count.
+        for i in 0..200_000u64 {
+            h.record(1.0 + (i as f64 * 4.999)); // up to ~1e6
+        }
+        let bound = ((1e6f64).ln() / ((1.02f64 / 0.98).ln()) + 8.0) as usize;
+        assert!(h.bucket_count() <= bound, "{} buckets > bound {bound}", h.bucket_count());
+        assert!(h.bucket_count() < 1_000);
+    }
+
+    #[test]
+    fn sketch_zero_bucket_and_empty() {
+        let empty = HistogramSketch::new(0.05);
+        assert_eq!(empty.percentile(0.5), None);
+        assert_eq!(empty.mean(), None);
+        assert_eq!(empty.min(), None);
+        assert_eq!(empty.max(), None);
+        assert_eq!(empty.bucket_count(), 0);
+
+        let mut h = HistogramSketch::new(0.05);
+        h.record(0.0);
+        h.record(0.25);
+        h.record(f64::NAN); // ignored
+        h.record(-3.0); // ignored
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.percentile(0.5), Some(0.0));
+        assert_eq!(h.bucket_count(), 1);
+    }
+
+    #[test]
+    fn windows_emit_jsonl_and_summary() {
+        let buf = SharedBuf::default();
+        let mut m =
+            StreamingMetrics::new(1_000, DEFAULT_REL_ACCURACY).with_sink(Box::new(buf.clone()));
+        m.scheduler = "jasda".into();
+        m.record_commit(100);
+        m.record_completion("t0:inf", 1.0, 0, 500, 400.0, 2, 50, Some(600));
+        m.record_commit(1_500); // closes window 0
+        m.record_completion("t1:train", 2.0, 200, 2_400, 2_000.0, 3, 120, Some(2_000));
+        m.record_unfinished_wait(4_000);
+        m.finalize(0.8, 0.1, 2_400);
+
+        let text = String::from_utf8(buf.0.lock().unwrap().clone()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        // Window 0, window 1, window 2, summary.
+        assert_eq!(lines.len(), 4, "{text}");
+        for l in &lines {
+            Json::parse(l).expect("every emitted line parses as JSON");
+        }
+        assert!(lines[0].contains("\"type\":\"window\""));
+        assert!(lines[3].contains("\"type\":\"summary\""));
+        assert!(lines[3].contains("\"schema\":\"jasda.stream_metrics.v1\""));
+        assert_eq!(m.lines_emitted(), 4);
+        assert_eq!(m.sink_errors(), 0);
+        assert_eq!(m.completed(), 2);
+        assert_eq!(m.unfinished(), 1);
+        // Deadline: job 0 met (500 <= 600), job 1 missed (2400 > 2000).
+        assert_eq!(m.deadline_met_rate(), Some(0.5));
+        // Groups keyed by tenant prefix.
+        assert_eq!(m.groups().len(), 2);
+        assert_eq!(m.groups()["t0"].jobs, 1);
+        assert_eq!(m.groups()["t1"].weight, 2.0);
+        // Wait sketch includes the unfinished job's wait.
+        assert_eq!(m.max_starvation(), 4_000);
+    }
+
+    #[test]
+    fn no_sink_still_aggregates() {
+        let mut m = StreamingMetrics::new(500, 0.01);
+        for i in 0..100u64 {
+            m.record_completion("t0:mix", 1.0, i * 10, i * 10 + 200, 100.0, 1, 5, None);
+        }
+        m.finalize(0.5, 0.0, 1_200);
+        assert_eq!(m.completed(), 100);
+        assert_eq!(m.lines_emitted(), 0);
+        assert_eq!(m.mean_jct(), Some(200.0));
+        // All slowdowns equal -> Jain index exactly 1.
+        assert!((m.jain_fairness().unwrap() - 1.0).abs() < 1e-12);
+        assert_eq!(m.summary_json().get("completed").and_then(Json::as_u64), Some(100));
+    }
+
+    #[test]
+    fn sink_errors_are_counted_not_fatal() {
+        struct Failing;
+        impl Write for Failing {
+            fn write(&mut self, _: &[u8]) -> std::io::Result<usize> {
+                Err(std::io::Error::other("nope"))
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Err(std::io::Error::other("nope"))
+            }
+        }
+        let mut m = StreamingMetrics::new(100, 0.01).with_sink(Box::new(Failing));
+        m.record_completion("t0:inf", 1.0, 0, 50, 10.0, 1, 0, None);
+        m.record_commit(500); // rolls + fails to write window 0
+        m.finalize(1.0, 0.0, 500);
+        assert!(m.sink_errors() >= 2);
+        assert_eq!(m.lines_emitted(), 0);
+        assert_eq!(m.completed(), 1);
+    }
+}

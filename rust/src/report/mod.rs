@@ -1,6 +1,7 @@
 //! Table renderers: markdown and CSV output for benches, examples, and
 //! the CLI — the machinery that regenerates the paper's tables.
 
+use crate::metrics::streaming::StreamingMetrics;
 use crate::metrics::RunMetrics;
 
 /// A simple column-aligned table.
@@ -101,22 +102,54 @@ pub fn comparison_headers() -> Vec<&'static str> {
     ]
 }
 
+/// One numeric cell. Tables are machine-parsed downstream (CSV), so a
+/// non-finite value renders as an explicit `-` cell instead of leaking a
+/// literal `NaN`/`inf` (only the human summary line may carry NaN).
+fn cell(v: f64, prec: usize) -> String {
+    if v.is_finite() {
+        format!("{v:.prec$}")
+    } else {
+        "-".to_string()
+    }
+}
+
 /// Format one run's metrics as a comparison row.
 pub fn comparison_row(m: &RunMetrics) -> Vec<String> {
-    let f = |x: Option<f64>| x.map_or("-".to_string(), |v| format!("{v:.3}"));
-    let f0 = |x: Option<f64>| x.map_or("-".to_string(), |v| format!("{v:.0}"));
+    let f = |x: Option<f64>| x.map_or("-".to_string(), |v| cell(v, 3));
+    let f0 = |x: Option<f64>| x.map_or("-".to_string(), |v| cell(v, 0));
     vec![
         m.scheduler.clone(),
-        format!("{:.3}", m.utilization),
+        cell(m.utilization, 3),
         f0(m.mean_jct()),
         f0(m.jct_percentile(0.95)),
         f(m.mean_slowdown()),
         f(m.jain_fairness()),
         format!("{}", m.max_starvation()),
         f(m.deadline_met_rate()),
-        format!("{:.3}", m.mean_fragmentation),
+        cell(m.mean_fragmentation, 3),
         f(m.mean_subjobs()),
         format!("{}", m.unfinished),
+    ]
+}
+
+/// Format one streaming run as the same comparison row (headers from
+/// [`comparison_headers`]), so production-trace benches can put exact
+/// and streaming schedulers side by side in one table.
+pub fn streaming_comparison_row(m: &StreamingMetrics) -> Vec<String> {
+    let f = |x: Option<f64>| x.map_or("-".to_string(), |v| cell(v, 3));
+    let f0 = |x: Option<f64>| x.map_or("-".to_string(), |v| cell(v, 0));
+    vec![
+        m.scheduler.clone(),
+        cell(m.utilization(), 3),
+        f0(m.mean_jct()),
+        f0(m.jct_percentile(0.95)),
+        f(m.mean_slowdown()),
+        f(m.jain_fairness()),
+        format!("{}", m.max_starvation()),
+        f(m.deadline_met_rate()),
+        cell(m.mean_fragmentation(), 3),
+        f(m.mean_subjobs()),
+        format!("{}", m.unfinished()),
     ]
 }
 
@@ -162,5 +195,39 @@ mod tests {
         assert_eq!(row.len(), comparison_headers().len());
         assert_eq!(row[0], "x");
         assert_eq!(row[2], "-", "no completed jobs -> dash");
+    }
+
+    #[test]
+    fn non_finite_cells_render_as_dash() {
+        // Regression: an all-unfinished run must not leak `NaN` into the
+        // machine-parsed CSV — every cell is either a number or `-`.
+        let m = RunMetrics {
+            scheduler: "x".into(),
+            utilization: f64::NAN,
+            mean_fragmentation: f64::INFINITY,
+            ..Default::default()
+        };
+        let row = comparison_row(&m);
+        for c in &row {
+            assert!(!c.contains("NaN") && !c.contains("inf"), "leaked non-finite: {c}");
+        }
+        assert_eq!(row[1], "-");
+        assert_eq!(row[8], "-");
+    }
+
+    #[test]
+    fn streaming_row_matches_headers() {
+        let mut m = StreamingMetrics::new(1_000, 0.01);
+        m.scheduler = "stream".into();
+        let row = streaming_comparison_row(&m);
+        assert_eq!(row.len(), comparison_headers().len());
+        assert_eq!(row[0], "stream");
+        assert_eq!(row[2], "-", "no completions -> dash");
+        m.record_completion("t0:inf", 1.0, 0, 100, 50.0, 1, 10, None);
+        m.finalize(0.5, 0.1, 100);
+        let row = streaming_comparison_row(&m);
+        assert_eq!(row[1], "0.500");
+        assert_eq!(row[2], "100");
+        assert_eq!(row[10], "0");
     }
 }

@@ -16,6 +16,7 @@
 
 use crate::config::SimConfig;
 use crate::job::{utility, JobSet, JobState};
+use crate::metrics::streaming::StreamingMetrics;
 use crate::metrics::{JobMetrics, RunMetrics};
 use crate::mig::{Cluster, PartitionLayout, Reservation};
 use crate::sim::rng::Rng;
@@ -114,7 +115,8 @@ struct HeapKey(Time, u64);
 /// Result of a full simulation run.
 #[derive(Debug)]
 pub struct RunOutcome {
-    /// Aggregated metrics.
+    /// Aggregated metrics. On the streaming path `metrics.jobs` is left
+    /// empty (no per-job vector); run-level counters are still filled.
     pub metrics: RunMetrics,
     /// Final cluster state (timelines retain uncompacted history).
     pub cluster: Cluster,
@@ -122,6 +124,9 @@ pub struct RunOutcome {
     pub jobs: JobSet,
     /// Scheduler diagnostics (`Scheduler::stats`).
     pub scheduler_stats: crate::util::Json,
+    /// Streaming metrics, if the engine ran with
+    /// [`SimEngine::with_streaming`] (production-scale path).
+    pub streaming: Option<StreamingMetrics>,
 }
 
 /// The simulation engine.
@@ -136,6 +141,7 @@ pub struct SimEngine {
     pending: Vec<Option<PendingCompletion>>,
     free_slots: Vec<usize>,
     event_seq: u64,
+    streaming: Option<StreamingMetrics>,
 }
 
 impl SimEngine {
@@ -148,7 +154,17 @@ impl SimEngine {
             pending: Vec::new(),
             free_slots: Vec::new(),
             event_seq: 0,
+            streaming: None,
         }
+    }
+
+    /// Attach a streaming metrics aggregator (the production-scale
+    /// path): per-job bookkeeping is dropped as soon as each job
+    /// completes and `RunMetrics::jobs` stays empty, so metrics memory
+    /// is O(histogram buckets + active jobs) instead of O(total jobs).
+    pub fn with_streaming(mut self, streaming: StreamingMetrics) -> Self {
+        self.streaming = Some(streaming);
+        self
     }
 
     /// Take a fired completion out of its slab slot, recycling the slot.
@@ -172,12 +188,20 @@ impl SimEngine {
             scheduler: self.scheduler.name().to_string(),
             ..RunMetrics::default()
         };
+        if let Some(sm) = self.streaming.as_mut() {
+            sm.scheduler = self.scheduler.name().to_string();
+        }
         // Starvation bookkeeping is keyed by JobId (not slot index):
         // trace workloads may carry non-contiguous or non-zero-based ids.
+        // Populated lazily on a job's first commitment (with the arrival
+        // time as the fallback baseline), so the maps never hold more
+        // than the jobs that have actually been touched — and on the
+        // streaming path entries are dropped again at job completion.
         let mut max_waits: BTreeMap<JobId, u64> = BTreeMap::new();
-        let mut last_progress: BTreeMap<JobId, Time> =
-            jobs.iter().map(|j| (j.id, j.arrival)).collect();
+        let mut last_progress: BTreeMap<JobId, Time> = BTreeMap::new();
         let mut last_event_time: Time = 0;
+        let mut completed_jobs: usize = 0;
+        let total_jobs = jobs.len();
 
         let period = self.cfg.engine.iteration_period;
         let mut now: Time = jobs.iter().map(|j| j.arrival).min().unwrap_or(0);
@@ -195,7 +219,12 @@ impl SimEngine {
                 }
                 self.events.pop();
                 let pc = self.take_pending(idx);
-                self.handle_completion(&pc, &mut cluster, &mut jobs, &mut metrics);
+                if let Some(done) =
+                    self.handle_completion(&pc, &mut cluster, &mut jobs, &mut metrics)
+                {
+                    completed_jobs += 1;
+                    self.note_job_finished(done, &jobs, &mut max_waits, &mut last_progress);
+                }
                 last_event_time = last_event_time.max(pc.rec.realized_end);
             }
 
@@ -219,8 +248,14 @@ impl SimEngine {
                 if self.apply_commitment(&c, now, &mut cluster, &mut jobs, &mut rng, &mut metrics)
                 {
                     applied_commits += 1;
+                    if let Some(sm) = self.streaming.as_mut() {
+                        sm.record_commit(now);
+                    }
                 }
-                let since = last_progress.get(&c.job).copied().unwrap_or(now);
+                let since = last_progress
+                    .get(&c.job)
+                    .copied()
+                    .unwrap_or_else(|| jobs.get(c.job).arrival);
                 let wait = now.saturating_sub(since);
                 let w = max_waits.entry(c.job).or_insert(0);
                 *w = (*w).max(wait);
@@ -244,8 +279,9 @@ impl SimEngine {
                 last_compact = now;
             }
 
-            // 7. Termination.
-            if jobs.all_completed() && self.events.is_empty() {
+            // 7. Termination. (The running counter mirrors
+            // `jobs.all_completed()` without an O(jobs) scan per tick.)
+            if completed_jobs == total_jobs && self.events.is_empty() {
                 break;
             }
             if now >= self.cfg.engine.max_time {
@@ -258,9 +294,13 @@ impl SimEngine {
         while let Some(Reverse((HeapKey(t, _), idx))) = self.events.pop() {
             let _ = t;
             let pc = self.take_pending(idx);
-            self.handle_completion(&pc, &mut cluster, &mut jobs, &mut metrics);
+            if let Some(done) = self.handle_completion(&pc, &mut cluster, &mut jobs, &mut metrics) {
+                completed_jobs += 1;
+                self.note_job_finished(done, &jobs, &mut max_waits, &mut last_progress);
+            }
             last_event_time = last_event_time.max(pc.rec.realized_end);
         }
+        let _ = completed_jobs;
 
         // Finalize waiting gaps for unfinished jobs.
         for j in jobs.iter() {
@@ -293,26 +333,58 @@ impl SimEngine {
         // Fragmentation over the retained (uncompacted) span.
         metrics.mean_fragmentation = cluster.mean_fragmentation(compact_base.max(first_arrival), busy_end);
         metrics.unfinished = jobs.iter().filter(|j| j.state != JobState::Completed).count();
-        metrics.jobs = jobs
-            .iter()
-            .map(|j| JobMetrics {
-                job: j.id,
-                class: j.class.clone(),
-                arrival: j.arrival,
-                completed: j.completed_at,
-                work: j.total_work(),
-                subjobs: j.subjobs_done,
-                max_wait: max_waits.get(&j.id).copied().unwrap_or(0),
-                deadline_met: j.deadline.map(|d| j.completed_at.map_or(false, |c| c <= d)),
-                weight: j.weight,
-            })
-            .collect();
+        if let Some(sm) = self.streaming.as_mut() {
+            // Streaming path: completed jobs were recorded (and their
+            // bookkeeping dropped) as they finished; only the unfinished
+            // stragglers' waits remain to be folded in. `metrics.jobs`
+            // stays empty — no per-job vector on this path.
+            for j in jobs.iter() {
+                if j.state != JobState::Completed {
+                    sm.record_unfinished_wait(max_waits.get(&j.id).copied().unwrap_or(0));
+                }
+            }
+            sm.finalize(metrics.utilization, metrics.mean_fragmentation, makespan);
+        } else {
+            metrics.jobs = jobs
+                .iter()
+                .map(|j| JobMetrics {
+                    job: j.id,
+                    class: j.class.clone(),
+                    arrival: j.arrival,
+                    completed: j.completed_at,
+                    work: j.total_work(),
+                    subjobs: j.subjobs_done,
+                    max_wait: max_waits.get(&j.id).copied().unwrap_or(0),
+                    deadline_met: j.deadline.map(|d| j.completed_at.map_or(false, |c| c <= d)),
+                    weight: j.weight,
+                })
+                .collect();
+        }
 
         RunOutcome {
             metrics,
             cluster,
             jobs,
             scheduler_stats: self.scheduler.stats(),
+            streaming: self.streaming.take(),
+        }
+    }
+
+    /// Streaming-path completion hook: fold the finished job into the
+    /// aggregator and drop its per-job bookkeeping so memory tracks
+    /// *active* jobs, not total jobs. No-op on the exact path (the final
+    /// per-job pass still needs the maps there).
+    fn note_job_finished(
+        &mut self,
+        id: JobId,
+        jobs: &JobSet,
+        max_waits: &mut BTreeMap<JobId, u64>,
+        last_progress: &mut BTreeMap<JobId, Time>,
+    ) {
+        if let Some(sm) = self.streaming.as_mut() {
+            let wait = max_waits.remove(&id).unwrap_or(0);
+            last_progress.remove(&id);
+            sm.record_job(jobs.get(id), wait);
         }
     }
 
@@ -413,14 +485,15 @@ impl SimEngine {
     }
 
     /// Fire a completion: credit work, free unused reservation tail,
-    /// notify the scheduler, finalize the job if done.
+    /// notify the scheduler, finalize the job if done. Returns the job's
+    /// id when this completion finished the whole job.
     fn handle_completion(
         &mut self,
         pc: &PendingCompletion,
         cluster: &mut Cluster,
         jobs: &mut JobSet,
         metrics: &mut RunMetrics,
-    ) {
+    ) -> Option<JobId> {
         let _ = (pc.speed, pc.window_len, pc.realized_duration, pc.fire_at);
         let rec = &pc.rec;
         let job = jobs.get_mut(rec.job);
@@ -437,12 +510,16 @@ impl SimEngine {
             );
         }
 
-        if job.remaining_work() <= 1e-6 && job.state == JobState::Active {
+        let finished = if job.remaining_work() <= 1e-6 && job.state == JobState::Active {
             job.state = JobState::Completed;
             job.completed_at = Some(rec.realized_end);
-        }
+            Some(rec.job)
+        } else {
+            None
+        };
         let _ = metrics;
         self.scheduler.on_subjob_complete(rec);
+        finished
     }
 }
 
@@ -625,6 +702,24 @@ mod tests {
         // Every slot is free again after the run drains.
         assert_eq!(eng.free_slots.len(), eng.pending.len());
         assert!(eng.pending.iter().all(|s| s.is_none()));
+    }
+
+    #[test]
+    fn streaming_matches_exact_on_small_run() {
+        let exact = SimEngine::new(test_cfg(), Box::new(GreedyFcfs)).run(tiny_jobs(4));
+        let sm = crate::metrics::streaming::StreamingMetrics::new(1_000, 0.01);
+        let out =
+            SimEngine::new(test_cfg(), Box::new(GreedyFcfs)).with_streaming(sm).run(tiny_jobs(4));
+        let s = out.streaming.expect("streaming outcome present");
+        assert!(out.metrics.jobs.is_empty(), "no per-job vector on the streaming path");
+        assert_eq!(s.utilization(), exact.metrics.utilization);
+        assert_eq!(s.makespan(), exact.metrics.makespan);
+        let done = exact.metrics.jobs.iter().filter(|j| j.completed.is_some()).count();
+        assert_eq!(s.completed() as usize, done);
+        assert_eq!(s.unfinished() as usize, exact.metrics.unfinished);
+        let (a, b) = (s.mean_jct().unwrap(), exact.metrics.mean_jct().unwrap());
+        assert!((a - b).abs() < 1e-9 * b.max(1.0), "mean jct {a} vs {b}");
+        assert_eq!(s.max_starvation(), exact.metrics.max_starvation());
     }
 
     #[test]

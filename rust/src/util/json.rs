@@ -118,6 +118,13 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
+                // Whole numbers print without a fraction, but only inside
+                // the f64-exact integer range (|x| < 2^53): beyond it the
+                // `as i64` cast would be lossy and — past 2^63 — saturate
+                // to i64::MAX, silently corrupting values like 1e300.
+                // Such magnitudes fall through to Rust's f64 formatter,
+                // which emits a full (exponent-free) decimal expansion
+                // that parses back to the identical f64.
                 if x.fract() == 0.0 && x.abs() < 2f64.powi(53) {
                     out.push_str(&format!("{}", *x as i64));
                 } else if x.is_finite() {
@@ -496,6 +503,26 @@ mod tests {
         assert_eq!(Json::Num(5.0).to_string(), "5");
         assert_eq!(Json::Num(5.5).to_string(), "5.5");
         assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+    }
+
+    #[test]
+    fn huge_whole_floats_do_not_saturate() {
+        // Regression: whole floats outside the i64-exact range must use
+        // the float formatter, never an `as i64` cast (which is lossy
+        // from 2^53 and saturates to i64::MAX from 2^63 — 1e300 must not
+        // serialize as 9223372036854775807).
+        for v in [1e300, -1e300, 2f64.powi(63), 2f64.powi(53), -(2f64.powi(53))] {
+            let text = Json::Num(v).to_string();
+            assert!(
+                !text.contains("9223372036854775807"),
+                "{v} saturated to i64::MAX: {text}"
+            );
+            assert_eq!(Json::parse(&text).unwrap(), Json::Num(v), "{v} failed round-trip");
+        }
+        // The largest exactly-representable integers still print as
+        // integers; the first value past the boundary does not break.
+        assert_eq!(Json::Num(2f64.powi(53) - 1.0).to_string(), "9007199254740991");
+        assert_eq!(Json::parse("9007199254740992").unwrap(), Json::Num(2f64.powi(53)));
     }
 
     #[test]

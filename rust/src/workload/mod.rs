@@ -7,6 +7,7 @@
 //! the §4.6 asymptotics.
 
 pub mod classes;
+pub mod scenario;
 pub mod trace;
 
 use crate::config::WorkloadConfig;
@@ -15,6 +16,7 @@ use crate::sim::Rng;
 use crate::types::Time;
 
 pub use classes::{JobClass, JobClassSpec};
+pub use scenario::ScenarioGenerator;
 pub use trace::{load_trace, save_trace, TraceRecord};
 
 /// Generates reproducible job populations from a [`WorkloadConfig`].

@@ -1,0 +1,354 @@
+//! Production-scale scenario generator.
+//!
+//! The classic [`WorkloadGenerator`](super::WorkloadGenerator) draws from
+//! hand-tuned job classes under stationary Poisson arrivals — right for
+//! the paper's controlled experiments, wrong for the production-shaped
+//! traces the multi-tenant MIG literature evaluates on. This generator
+//! produces those instead, configured by
+//! [`ScenarioConfig`](crate::config::ScenarioConfig):
+//!
+//! * **Heavy-tailed sizes** — total work is truncated-Pareto
+//!   (`work_alpha`, `work_min`, `work_cap`), so a small fraction of jobs
+//!   carries most of the demand.
+//! * **Diurnal + bursty arrivals** — a sinusoidal day/night rate envelope
+//!   with exponentially-sized burst episodes layered on top.
+//! * **Multi-tenant fairness groups** — each job belongs to tenant `g`
+//!   with geometric weight `tenant_weight_ratio^g`, encoded in the class
+//!   name as `t<g>:<shape>` so group metrics need no side table.
+//! * **Deadline/SLO classes** — a configured fraction of jobs carries an
+//!   absolute deadline at `arrival + deadline_slack × ideal_runtime`.
+//!
+//! Everything is drawn from forked substreams of one seed, so a trace is
+//! bit-reproducible from `(config, seed)` alone, and
+//! [`for_each`](ScenarioGenerator::for_each) yields jobs one at a time so
+//! million-job traces never need to be materialized to be inspected.
+
+use crate::config::ScenarioConfig;
+use crate::job::Job;
+use crate::sim::Rng;
+use crate::trp::{Phase, Trp};
+use crate::types::Time;
+
+/// Substream ids (see [`Rng::fork`]): one per concern, so adding draws to
+/// one never perturbs the others.
+const STREAM_ARRIVALS: u64 = 0xA221;
+const STREAM_SIZES: u64 = 0x512E;
+const STREAM_TENANT: u64 = 0x7E4A;
+
+/// Job shape bucket, picked by total work.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Shape {
+    /// Short inference-like job: fast ramp, small memory, fine atoms.
+    Inf,
+    /// Mid-size analytics-like job: spiky memory, medium atoms.
+    Mix,
+    /// Long training-like job: warm-up ramp, high memory, coarse atoms.
+    Train,
+}
+
+impl Shape {
+    const ALL: [Shape; 3] = [Shape::Inf, Shape::Mix, Shape::Train];
+
+    fn of_work(work: f64) -> Shape {
+        if work < 1_000.0 {
+            Shape::Inf
+        } else if work < 8_000.0 {
+            Shape::Mix
+        } else {
+            Shape::Train
+        }
+    }
+
+    fn name(self) -> &'static str {
+        match self {
+            Shape::Inf => "inf",
+            Shape::Mix => "mix",
+            Shape::Train => "train",
+        }
+    }
+
+    /// (mem log-normal (mu, sigma), mem noise fraction, atom fraction,
+    /// duration CV) — scale parameters per shape, mirroring the built-in
+    /// class specs.
+    fn params(self) -> ((f64, f64), f64, f64, f64) {
+        match self {
+            Shape::Inf => ((1.0, 0.3), 0.08, 0.34, 0.12),
+            Shape::Mix => ((1.6, 0.35), 0.18, 0.25, 0.15),
+            Shape::Train => ((2.4, 0.25), 0.05, 0.15, 0.1),
+        }
+    }
+}
+
+/// Generates production-shaped job traces, deterministic in one seed.
+#[derive(Debug, Clone)]
+pub struct ScenarioGenerator {
+    cfg: ScenarioConfig,
+    /// `class_names[g][shape]` — interned `t<g>:<shape>` labels so the
+    /// per-job cost is one `String` clone, not a `format!`.
+    class_names: Vec<[String; 3]>,
+}
+
+impl ScenarioGenerator {
+    /// Build a generator. The config must already be validated.
+    pub fn new(cfg: ScenarioConfig) -> Self {
+        let class_names = (0..cfg.tenants)
+            .map(|g| {
+                [
+                    format!("t{g}:{}", Shape::Inf.name()),
+                    format!("t{g}:{}", Shape::Mix.name()),
+                    format!("t{g}:{}", Shape::Train.name()),
+                ]
+            })
+            .collect();
+        ScenarioGenerator { cfg, class_names }
+    }
+
+    /// Generate the full trace as a vector (small/medium runs).
+    pub fn generate(&self, run_seed: u64) -> Vec<Job> {
+        let mut jobs = Vec::with_capacity(self.cfg.jobs);
+        self.for_each(run_seed, |j| jobs.push(j));
+        jobs
+    }
+
+    /// Stream the trace one job at a time in arrival order, O(1) memory
+    /// per job — the path million-job traces use.
+    pub fn for_each<F: FnMut(Job)>(&self, run_seed: u64, mut f: F) {
+        let root = Rng::new(self.cfg.seed_or(run_seed));
+        let mut arr_rng = root.fork(STREAM_ARRIVALS);
+        let mut size_rng = root.fork(STREAM_SIZES);
+        let mut ten_rng = root.fork(STREAM_TENANT);
+
+        let base_per_tick = self.cfg.base_rate_per_sec / 1000.0;
+        let two_pi = 2.0 * std::f64::consts::PI;
+        let mut t = 0.0f64;
+        // Remaining ticks of the active burst episode (0 = not bursting).
+        let mut burst_left = 0.0f64;
+
+        for id in 0..self.cfg.jobs {
+            if burst_left <= 0.0
+                && self.cfg.burst_mean_len > 0
+                && arr_rng.chance(self.cfg.burst_prob)
+            {
+                burst_left = arr_rng.exponential(1.0 / self.cfg.burst_mean_len as f64);
+            }
+            let diurnal = if self.cfg.diurnal_period == 0 {
+                1.0
+            } else {
+                let phase = two_pi * t / self.cfg.diurnal_period as f64;
+                1.0 + self.cfg.diurnal_amplitude * phase.sin()
+            };
+            let mult = if burst_left > 0.0 { self.cfg.burst_mult } else { 1.0 };
+            let gap = arr_rng.exponential(base_per_tick * diurnal * mult);
+            t += gap;
+            burst_left -= gap;
+            let arrival = t.round() as Time;
+
+            f(self.instantiate(id as u32, arrival, &mut size_rng, &mut ten_rng));
+        }
+    }
+
+    /// Draw one job: truncated-Pareto work, shape-dependent TRP, tenant
+    /// label/weight, and an optional SLO deadline.
+    fn instantiate(&self, id: u32, arrival: Time, size_rng: &mut Rng, ten_rng: &mut Rng) -> Job {
+        // Inverse-CDF truncated Pareto: u in [0,1) so (1-u) is in (0,1]
+        // and the draw is >= work_min; the cap bounds the tail.
+        let u = size_rng.uniform();
+        let work = (self.cfg.work_min * (1.0 - u).powf(-1.0 / self.cfg.work_alpha))
+            .min(self.cfg.work_cap);
+        let shape = Shape::of_work(work);
+        let ((mem_mu, mem_sigma), noise_frac, atom_frac, duration_cv) = shape.params();
+
+        // Same memory envelope as the built-in classes: clamp so every
+        // job fits a 20 GiB slice even at its bursty tail.
+        let mem = size_rng.log_normal(mem_mu, mem_sigma).clamp(0.5, 13.5);
+        let noise = (mem * noise_frac).max(0.05);
+
+        let mut phases = match shape {
+            Shape::Inf => vec![
+                Phase::new(work * 0.2, mem, noise, 0.4),
+                Phase::new(work * 0.8, mem, noise, 0.0),
+            ],
+            Shape::Mix => vec![
+                Phase::new(work * 0.3, mem * 0.6, noise, 0.3),
+                Phase::new(work * 0.3, mem * 1.1, noise * 1.8, 0.1),
+                Phase::new(work * 0.4, mem * 0.8, noise, 0.1),
+            ],
+            Shape::Train => vec![
+                Phase::new(work * 0.1, mem * 0.75, noise, 0.6),
+                Phase::new(work * 0.8, mem, noise, 0.15),
+                Phase::new(work * 0.1, mem * 1.05, noise * 2.0, 0.1),
+            ],
+        };
+        // Schedulability by construction (as in `classes.rs`): keep
+        // mu + 3.3 sigma <= 19 GiB on every phase.
+        let worst = phases.iter().map(|p| p.mem_gb + 3.3 * p.mem_std_gb).fold(0.0, f64::max);
+        if worst > 19.0 {
+            let scale = 19.0 / worst;
+            for p in &mut phases {
+                p.mem_gb *= scale;
+                p.mem_std_gb *= scale;
+            }
+        }
+
+        let tenant = ten_rng.index(self.cfg.tenants);
+        let weight = self.cfg.tenant_weight_ratio.powi(tenant as i32);
+        let class = self.class_names[tenant][shape as usize].clone();
+
+        let trp = Trp { phases, duration_cv };
+        let total = trp.total_work();
+        let deadline = if ten_rng.chance(self.cfg.deadline_fraction) {
+            Some(arrival + (total * self.cfg.deadline_slack).round() as Time)
+        } else {
+            None
+        };
+        let atom = (total * atom_frac).max(50.0);
+        Job::new(id, class, arrival, trp, deadline, weight, atom, 0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg(jobs: usize) -> ScenarioConfig {
+        ScenarioConfig { jobs, seed: 42, ..ScenarioConfig::default() }
+    }
+
+    #[test]
+    fn generates_count_with_monotone_arrivals_and_ids() {
+        let jobs = ScenarioGenerator::new(small_cfg(300)).generate(0);
+        assert_eq!(jobs.len(), 300);
+        for w in jobs.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+        for (i, j) in jobs.iter().enumerate() {
+            assert_eq!(j.id as usize, i);
+            assert!(j.total_work() > 0.0);
+            assert!(j.atom_work >= 50.0);
+        }
+    }
+
+    #[test]
+    fn bit_reproducible_from_seed() {
+        let g = ScenarioGenerator::new(small_cfg(200));
+        let a = g.generate(0);
+        let b = ScenarioGenerator::new(small_cfg(200)).generate(0);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.class, y.class);
+            assert_eq!(x.weight, y.weight);
+            assert_eq!(x.deadline, y.deadline);
+            assert_eq!(x.trp, y.trp);
+            assert_eq!(x.atom_work, y.atom_work);
+        }
+        // The scenario's own seed wins over the run seed.
+        let c = g.generate(12345);
+        assert_eq!(a[7].arrival, c[7].arrival);
+        assert_eq!(a[7].trp, c[7].trp);
+    }
+
+    #[test]
+    fn work_is_heavy_tailed_and_truncated() {
+        let cfg = small_cfg(2_000);
+        let jobs = ScenarioGenerator::new(cfg.clone()).generate(0);
+        let mut works: Vec<f64> = jobs.iter().map(|j| j.total_work()).collect();
+        works.sort_by(f64::total_cmp);
+        let median = works[works.len() / 2];
+        let max = *works.last().unwrap();
+        for &w in &works {
+            assert!(w >= cfg.work_min * 0.999, "work {w} below scale");
+            assert!(w <= cfg.work_cap * 1.001, "work {w} above cap");
+        }
+        // Pareto alpha=1.6: the max dwarfs the median.
+        assert!(max > 20.0 * median, "max {max} vs median {median}");
+        // The cap actually binds somewhere in a 2k draw.
+        assert!(max > cfg.work_cap * 0.999, "cap never reached: {max}");
+    }
+
+    #[test]
+    fn tenants_weights_and_shapes_cover() {
+        let mut cfg = small_cfg(1_500);
+        cfg.tenants = 3;
+        cfg.tenant_weight_ratio = 2.0;
+        let jobs = ScenarioGenerator::new(cfg).generate(0);
+        let mut seen_tenant = [false; 3];
+        let mut seen_shape = [false; 3];
+        for j in &jobs {
+            let (t, shape) = j.class.split_once(':').expect("class is t<g>:<shape>");
+            let g: usize = t.strip_prefix('t').unwrap().parse().unwrap();
+            seen_tenant[g] = true;
+            let si = Shape::ALL.iter().position(|s| s.name() == shape).unwrap();
+            seen_shape[si] = true;
+            assert_eq!(j.weight, 2.0f64.powi(g as i32));
+        }
+        assert!(seen_tenant.iter().all(|&b| b), "{seen_tenant:?}");
+        assert!(seen_shape.iter().all(|&b| b), "{seen_shape:?}");
+    }
+
+    #[test]
+    fn deadline_fraction_and_slack_hold() {
+        let mut cfg = small_cfg(2_000);
+        cfg.deadline_fraction = 0.4;
+        cfg.deadline_slack = 6.0;
+        let jobs = ScenarioGenerator::new(cfg).generate(0);
+        let with: Vec<&Job> = jobs.iter().filter(|j| j.deadline.is_some()).collect();
+        let frac = with.len() as f64 / jobs.len() as f64;
+        assert!((frac - 0.4).abs() < 0.05, "deadline fraction {frac}");
+        for j in with {
+            let d = j.deadline.unwrap();
+            let expect = j.arrival + (j.total_work() * 6.0).round() as Time;
+            assert_eq!(d, expect);
+        }
+    }
+
+    #[test]
+    fn memory_stays_schedulable() {
+        let jobs = ScenarioGenerator::new(small_cfg(1_000)).generate(0);
+        for j in &jobs {
+            for p in &j.trp.phases {
+                assert!(
+                    p.mem_gb + 3.3 * p.mem_std_gb <= 19.0 + 1e-9,
+                    "{}: mu {} sigma {}",
+                    j.class,
+                    p.mem_gb,
+                    p.mem_std_gb
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_for_each_matches_generate() {
+        let g = ScenarioGenerator::new(small_cfg(150));
+        let materialized = g.generate(0);
+        let mut streamed = Vec::new();
+        g.for_each(0, |j| streamed.push(j));
+        assert_eq!(materialized.len(), streamed.len());
+        for (a, b) in materialized.iter().zip(&streamed) {
+            assert_eq!(a.arrival, b.arrival);
+            assert_eq!(a.class, b.class);
+            assert_eq!(a.trp, b.trp);
+        }
+    }
+
+    #[test]
+    fn burst_episodes_compress_gaps() {
+        // With violent bursts, the gap distribution is more dispersed
+        // than the burst-free baseline (its CV exceeds the exponential's
+        // 1.0 because gaps mix two very different rates).
+        let mut cfg = small_cfg(4_000);
+        cfg.diurnal_period = 0;
+        cfg.burst_prob = 0.05;
+        cfg.burst_mult = 20.0;
+        cfg.burst_mean_len = 3_000;
+        let jobs = ScenarioGenerator::new(cfg).generate(0);
+        let gaps: Vec<f64> =
+            jobs.windows(2).map(|w| (w[1].arrival - w[0].arrival) as f64).collect();
+        let n = gaps.len() as f64;
+        let mean = gaps.iter().sum::<f64>() / n;
+        let var = gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / n;
+        let cv = var.sqrt() / mean;
+        assert!(cv > 1.15, "gap CV {cv} not over-dispersed");
+    }
+}

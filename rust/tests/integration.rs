@@ -490,3 +490,141 @@ fn duration_weighted_clearing_reduces_atomization() {
         plain.mean_subjobs().unwrap()
     );
 }
+
+// ---------------------------------------------------------------------
+// Production scenario harness (ISSUE 10).
+// ---------------------------------------------------------------------
+
+#[test]
+fn scenario_smoke_all_transports() {
+    // A small production-shaped trace — every fairness group present,
+    // the "light" adversity preset armed — must run to completion
+    // through every transport, and a streamed metrics file written
+    // alongside one engine run must parse line by line.
+    use jasda::config::TransportKind;
+    let mut c = SimConfig::default();
+    c.seed = 909;
+    c.cluster.layout = "heterogeneous".into();
+    let s = &mut c.jasda.scenario;
+    s.jobs = 12;
+    s.seed = 777;
+    s.tenants = 3;
+    s.work_cap = 4_000.0; // keep protocol rounds short
+    s.deadline_fraction = 0.5;
+    s.adversity = "light".into();
+    s.metrics_window = 2_000;
+    c.jasda.apply_scenario_adversity().unwrap();
+    c.validate().unwrap();
+    assert!(c.jasda.faults.crash > 0.0, "light preset must arm the fault plan");
+    let jobs =
+        jasda::workload::ScenarioGenerator::new(c.jasda.scenario.clone()).generate(c.seed);
+    let groups: std::collections::BTreeSet<&str> =
+        jobs.iter().filter_map(|j| j.class.split_once(':').map(|(g, _)| g)).collect();
+    assert_eq!(groups.len(), c.jasda.scenario.tenants, "all fairness groups present");
+
+    for transport in TransportKind::ALL {
+        #[cfg(not(unix))]
+        let transport = match transport {
+            TransportKind::Tcp | TransportKind::Unix => TransportKind::Framed,
+            t => t,
+        };
+        let mut tc = c.clone();
+        tc.jasda.transport = transport;
+        let out = jasda::coordinator::run_protocol(tc, jobs.clone(), 2_000_000);
+        assert_eq!(
+            out.completed_jobs,
+            out.total_jobs,
+            "{}: scenario smoke must complete: {out:?}",
+            transport.name()
+        );
+    }
+
+    // Engine pass with a real file sink: every emitted line is JSON and
+    // the stream terminates with the summary record.
+    use jasda::metrics::streaming::{StreamingMetrics, DEFAULT_REL_ACCURACY};
+    let path = std::env::temp_dir().join("jasda_scenario_smoke_metrics.jsonl");
+    let sink = std::io::BufWriter::new(std::fs::File::create(&path).unwrap());
+    let sm = StreamingMetrics::new(c.jasda.scenario.metrics_window, DEFAULT_REL_ACCURACY)
+        .with_sink(Box::new(sink));
+    let sched = Box::new(JasdaScheduler::new(c.jasda.clone()));
+    let out = SimEngine::new(c, sched).with_streaming(sm).run(jobs);
+    let sm = out.streaming.expect("streaming path");
+    assert_eq!(sm.sink_errors(), 0);
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len() as u64, sm.lines_emitted());
+    for line in &lines {
+        jasda::util::Json::parse(line).expect("streamed line parses as JSON");
+    }
+    let last = jasda::util::Json::parse(lines.last().unwrap()).unwrap();
+    assert_eq!(last.get("type").and_then(jasda::util::Json::as_str), Some("summary"));
+    assert_eq!(
+        last.get("schema").and_then(jasda::util::Json::as_str),
+        Some("jasda.stream_metrics.v1")
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn all_unfinished_trace_emits_no_nan_cells() {
+    // NaN audit regression: a trace where nothing ever completes (the
+    // job's footprint exceeds every slice) must still render a fully
+    // machine-parseable comparison row — `-` cells, never `NaN`/`inf`.
+    let mut c = SimConfig::default();
+    c.cluster.layout = "heterogeneous".into();
+    c.engine.max_time = 50_000;
+    let trp = jasda::trp::Trp {
+        phases: vec![jasda::trp::Phase::new(1_000.0, 30.0, 0.1, 0.1)],
+        duration_cv: 0.0,
+    };
+    let jobs = vec![jasda::job::Job::new(0, "big", 0, trp, None, 1.0, 100.0, 0.0)];
+    let jcfg = c.jasda.clone();
+    let out = SimEngine::new(c, Box::new(JasdaScheduler::new(jcfg))).run(jobs);
+    assert_eq!(out.metrics.unfinished, 1, "the job must not fit anywhere");
+    let row = jasda::report::comparison_row(&out.metrics);
+    for cell in &row {
+        // (The check is per cell: the *header* "unfinished" legitimately
+        // contains the substring "inf".)
+        assert!(!cell.contains("NaN") && !cell.contains("inf"), "leaked non-finite: {cell}");
+    }
+    let mut t = jasda::report::Table::new("t", &jasda::report::comparison_headers());
+    t.push_row(row);
+    assert!(!t.to_csv().contains("NaN"), "CSV leaked NaN");
+}
+
+#[test]
+fn million_job_trace_streams_in_log_bounded_memory() {
+    // ISSUE 10 acceptance: a 1M-job production trace flows through the
+    // streaming layer job by job — no per-job vectors anywhere — and the
+    // aggregator's distribution state stays O(buckets), three orders of
+    // magnitude below the job count.
+    use jasda::metrics::streaming::{StreamingMetrics, DEFAULT_REL_ACCURACY};
+    let mut s = jasda::config::ScenarioConfig::default();
+    s.jobs = 1_000_000;
+    s.seed = 99;
+    let gen = jasda::workload::ScenarioGenerator::new(s);
+    let mut sm = StreamingMetrics::new(50_000, DEFAULT_REL_ACCURACY)
+        .with_sink(Box::new(std::io::sink()));
+    let mut makespan = 0u64;
+    gen.for_each(0, |job| {
+        let work = job.trp.total_work();
+        let completed = job.arrival + (work * 1.5) as u64;
+        makespan = makespan.max(completed);
+        sm.record_completion(
+            &job.class,
+            job.weight,
+            job.arrival,
+            completed,
+            work,
+            (work / 100.0).ceil() as u32,
+            (work * 0.1) as u64,
+            job.deadline,
+        );
+    });
+    sm.finalize(0.9, 0.1, makespan);
+    assert_eq!(sm.completed(), 1_000_000);
+    assert!(sm.total_buckets() < 2_000, "buckets: {}", sm.total_buckets());
+    assert!(sm.lines_emitted() > 10, "windows must have rolled: {}", sm.lines_emitted());
+    assert!(sm.mean_jct().is_some());
+    assert!(sm.jct_percentile(0.99).is_some());
+}

@@ -1950,3 +1950,125 @@ fn prop_zero_budget_exact_is_decision_identical_to_greedy() {
     // vacuous — make sure the sweep produced multi-window exact rounds.
     assert!(consulted > 0, "sweep never produced a multi-window exact round");
 }
+
+// ---------------------------------------------------------------------
+// Production scenario harness + streaming metrics oracle (ISSUE 10).
+// ---------------------------------------------------------------------
+
+/// A randomized (but always valid) production scenario, small enough
+/// that full simulations of it stay cheap.
+fn random_scenario(rng: &mut Rng) -> jasda::config::ScenarioConfig {
+    let mut s = jasda::config::ScenarioConfig::default();
+    s.jobs = 20 + rng.index(40);
+    s.seed = if rng.chance(0.25) { 0 } else { 1 + rng.below(100_000) };
+    s.tenants = 1 + rng.index(4);
+    s.tenant_weight_ratio = [1.0, 1.5, 2.0][rng.index(3)];
+    s.work_alpha = 1.2 + rng.uniform();
+    s.work_cap = 20_000.0;
+    s.base_rate_per_sec = 1.0 + 4.0 * rng.uniform();
+    s.diurnal_amplitude = 0.9 * rng.uniform();
+    s.diurnal_period = if rng.chance(0.3) { 0 } else { 10_000 + rng.below(90_000) };
+    s.burst_prob = 0.1 * rng.uniform();
+    s.deadline_fraction = rng.uniform();
+    s.metrics_window = 500 + rng.below(5_000);
+    s
+}
+
+#[test]
+fn prop_streaming_metrics_match_exact_oracle() {
+    // ISSUE 10 invariant: on identical runs, the O(buckets) streaming
+    // layer agrees with the exact in-memory oracle — bit-identical on
+    // utilization/makespan/counts/max-starvation, ~exact on means
+    // (summation order differs), and within the sketch's relative
+    // accuracy (plus integer rounding) on percentiles.
+    use jasda::metrics::streaming::StreamingMetrics;
+    let mut rng = Rng::new(0x57AE);
+    for case in 0..6 {
+        let scenario = random_scenario(&mut rng);
+        let mut c = jasda::config::SimConfig::default();
+        c.seed = 40_000 + case as u64;
+        c.cluster.layout = "heterogeneous".into();
+        c.engine.max_time = 40_000_000;
+        c.jasda.fmp_bins = 16;
+        c.jasda.scenario = scenario.clone();
+        c.validate().expect("random scenario validates");
+        let jobs = jasda::workload::ScenarioGenerator::new(scenario).generate(c.seed);
+        let name = ["jasda", "fcfs", "sjf"][case % 3];
+
+        let sched = jasda::baselines::by_name(name, &c.jasda).unwrap();
+        let exact = jasda::sim::SimEngine::new(c.clone(), sched).run(jobs.clone());
+        let sched = jasda::baselines::by_name(name, &c.jasda).unwrap();
+        let sm = StreamingMetrics::new(c.jasda.scenario.metrics_window, 0.01);
+        let run = jasda::sim::SimEngine::new(c, sched).with_streaming(sm).run(jobs);
+        let sm = run.streaming.expect("streaming path");
+
+        let em = &exact.metrics;
+        assert!(
+            run.metrics.jobs.is_empty(),
+            "case {case} {name}: streaming run must not keep per-job vectors"
+        );
+        assert_eq!(em.utilization, sm.utilization(), "case {case} {name}: utilization");
+        assert_eq!(em.makespan, sm.makespan(), "case {case} {name}: makespan");
+        let exact_completed = em.jobs.iter().filter(|j| j.completed.is_some()).count();
+        assert_eq!(exact_completed as u64, sm.completed(), "case {case} {name}: completed");
+        assert_eq!(em.unfinished as u64, sm.unfinished(), "case {case} {name}: unfinished");
+        assert_eq!(
+            em.max_starvation(),
+            sm.max_starvation(),
+            "case {case} {name}: max starvation"
+        );
+        match (em.mean_jct(), sm.mean_jct()) {
+            (Some(e), Some(s)) => assert!(
+                (e - s).abs() <= 1e-9 * e.max(1.0),
+                "case {case} {name}: mean_jct exact {e} vs streaming {s}"
+            ),
+            (e, s) => assert_eq!(e.is_some(), s.is_some(), "case {case} {name}: mean_jct"),
+        }
+        for p in [0.5, 0.9, 0.99] {
+            if let (Some(e), Some(s)) = (em.jct_percentile(p), sm.jct_percentile(p)) {
+                assert!(
+                    (e - s).abs() <= e * 0.025 + 1.0,
+                    "case {case} {name}: p{p} jct exact {e} vs sketch {s}"
+                );
+            }
+        }
+        if let (Some(e), Some(s)) = (em.p95_wait(), sm.p95_wait()) {
+            assert!(
+                (e - s).abs() <= e * 0.025 + 1.0,
+                "case {case} {name}: p95 wait exact {e} vs sketch {s}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_scenario_generation_bit_reproducible() {
+    // ISSUE 10 invariant: a scenario trace is a pure function of its
+    // seed — regenerating from the same config yields bit-identical
+    // jobs, and an explicit scenario seed makes the run seed irrelevant.
+    let mut rng = Rng::new(0xB17);
+    for case in 0..20 {
+        let mut s = random_scenario(&mut rng);
+        s.jobs = 10 + rng.index(60);
+        let run_seed = rng.next_u64();
+        let a = jasda::workload::ScenarioGenerator::new(s.clone()).generate(run_seed);
+        let b = jasda::workload::ScenarioGenerator::new(s.clone()).generate(run_seed);
+        assert_eq!(a.len(), b.len(), "case {case}: length");
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id, "case {case}");
+            assert_eq!(x.arrival, y.arrival, "case {case}");
+            assert_eq!(x.class, y.class, "case {case}");
+            assert_eq!(x.weight.to_bits(), y.weight.to_bits(), "case {case}");
+            assert_eq!(x.deadline, y.deadline, "case {case}");
+            assert_eq!(x.trp, y.trp, "case {case}");
+            assert_eq!(x.atom_work.to_bits(), y.atom_work.to_bits(), "case {case}");
+        }
+        if s.seed != 0 {
+            let c2 = jasda::workload::ScenarioGenerator::new(s).generate(run_seed ^ 0x5555);
+            for (x, y) in a.iter().zip(&c2) {
+                assert_eq!(x.arrival, y.arrival, "case {case}: scenario seed must win");
+                assert_eq!(x.trp, y.trp, "case {case}: scenario seed must win");
+            }
+        }
+    }
+}
